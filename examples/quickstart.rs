@@ -1,0 +1,77 @@
+//! Quickstart: the 60-second tour of the CPSAA reproduction.
+//!
+//! 1. Build a chip with the paper's Table 2 configuration.
+//! 2. Generate a pruning mask with the golden model (eq. 4).
+//! 3. Run one batch through the Step 1–4 pipeline simulator.
+//! 4. Compare against the dense mode and two baselines.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (no artifacts needed — this example is simulator-only; see
+//! `bert_inference` for the PJRT path.)
+
+use cpsaa::attention::{self, Weights};
+use cpsaa::baselines::{pim, Platform};
+use cpsaa::config::SystemConfig;
+use cpsaa::sim::ChipSim;
+use cpsaa::tensor::SeededRng;
+use cpsaa::workload::BatchStats;
+
+fn main() {
+    let cfg = SystemConfig::paper();
+    println!("== CPSAA quickstart ==");
+    println!(
+        "chip: {} tiles / {}x{} crossbars / {} arrays",
+        cfg.hardware.tiles,
+        cfg.hardware.crossbar_size,
+        cfg.hardware.crossbar_size,
+        cfg.hardware.total_arrays()
+    );
+
+    // --- Step 1 (functional): generate a pruning mask ----------------------
+    let model = cpsaa::config::ModelConfig { seq_len: 128, d_model: 256, ..cfg.model.clone() };
+    let weights = Weights::synthetic(&model, 0);
+    let x = SeededRng::new(42).normal_matrix(model.seq_len, model.d_model, 1.0);
+    let mask = attention::generate_mask(&x, &weights.w_s, &model);
+    println!(
+        "pruning mask: {}x{} density {:.3} (paper regime ~0.1)",
+        mask.rows(),
+        mask.cols(),
+        mask.density()
+    );
+
+    // --- functional sparse attention vs dense ------------------------------
+    let z_sparse = attention::cpsaa_attention(&x, &weights.w_s, &weights.w_v, &mask, &model);
+    let z_dense = attention::dense_attention(&x, &weights.w_s, &weights.w_v, &model);
+    println!("output fidelity vs dense: rel err {:.4}", z_sparse.rel_err(&z_dense));
+
+    // --- cycle simulation ----------------------------------------------------
+    let sim = ChipSim::new(cfg.hardware.clone(), model.clone());
+    let sparse = sim.simulate_batch(&mask);
+    let dense = ChipSim::new(cfg.hardware.clone(), model.clone()).dense().simulate_batch(&mask);
+    println!("\n== simulated batch latency ==");
+    println!("CPSAA (sparse): {:>10.2} us  {:>8.0} GOPS", sparse.breakdown.total_ns / 1e3, sparse.gops);
+    println!("CPDAA (dense):  {:>10.2} us  {:>8.0} GOPS", dense.breakdown.total_ns / 1e3, dense.gops);
+
+    // --- two baselines --------------------------------------------------------
+    let stats = BatchStats {
+        seq_len: model.seq_len,
+        d_model: model.d_model,
+        mask_nnz: mask.nnz(),
+        mask_density: mask.density(),
+    };
+    println!("\n== baselines (same batch) ==");
+    for p in [
+        &pim::ReBert::new(cfg.hardware.clone()) as &dyn Platform,
+        &pim::ReTransformer::new(cfg.hardware.clone()),
+    ] {
+        let r = p.run_batch(&model, &stats);
+        println!(
+            "{:<14} {:>10.2} us  {:>8.0} GOPS  ({:.2}x slower than CPSAA)",
+            r.name,
+            r.total_ns / 1e3,
+            r.gops,
+            r.total_ns / sparse.breakdown.total_ns
+        );
+    }
+    println!("\nNext: `cargo run --release --example bert_inference` (end-to-end PJRT).");
+}

@@ -1,0 +1,7 @@
+"""Build-time compile path for the CPSAA reproduction.
+
+Everything under ``python/compile`` runs exactly once (``make artifacts``):
+it authors the Layer-2 JAX model and Layer-1 Pallas kernels, checks them
+against pure-jnp oracles, and AOT-lowers them to HLO text the rust Layer-3
+coordinator loads via PJRT. Nothing here is imported at serving time.
+"""

@@ -1,0 +1,196 @@
+"""AOT compile path: lower the L2 model to HLO text for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py.
+
+Outputs (under --out-dir, default ../artifacts):
+    mask_gen.hlo.txt          f(x, w_s)               -> (mask,)
+    attention.hlo.txt         f(x, w_s, w_v, mask)    -> (z,)
+    sparse_attention.hlo.txt  f(x, w_s, w_v)          -> (z, mask)
+    dense_attention.hlo.txt   f(x, w_s, w_v)          -> (z,)   [CPDAA]
+    encoder.hlo.txt           f(x, w_s, w_v, fc1, fc2)-> (out, mask)
+    weights.json              deterministic synthetic weights (seed 0)
+    fixtures.json             sample inputs + expected outputs for rust tests
+    manifest.json             shapes / parameter order per artifact
+
+Python runs ONCE here; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_graphs(cfg: M.ModelConfig):
+    """Named (fn, example_arg_specs) pairs, one per artifact."""
+    n, d, dk = cfg.seq_len, cfg.d_model, cfg.d_k
+
+    def mask_gen(x, w_s):
+        return (M.mask_gen(x, w_s, cfg),)
+
+    def attention(x, w_s, w_v, mask):
+        return (M.cpsaa_attention(x, w_s, w_v, mask, cfg),)
+
+    def sparse_attention(x, w_s, w_v):
+        z, mask = M.sparse_attention(x, w_s, w_v, cfg)
+        return (z, mask)
+
+    def dense_attention(x, w_s, w_v):
+        return (M.dense_attention(x, w_s, w_v, cfg),)
+
+    def encoder(x, w_s, w_v, w_fc1, w_fc2):
+        weights = {"w_s": w_s, "w_v": w_v, "w_fc1": w_fc1, "w_fc2": w_fc2}
+        out, mask = M.encoder_layer(x, weights, cfg)
+        return (out, mask)
+
+    x = _spec(n, d)
+    w_s = _spec(d, d)
+    w_v = _spec(d, d)
+    return {
+        "mask_gen": (mask_gen, (x, w_s)),
+        "attention": (attention, (x, w_s, w_v, _spec(n, n))),
+        "sparse_attention": (sparse_attention, (x, w_s, w_v)),
+        "dense_attention": (dense_attention, (x, w_s, w_v)),
+        "encoder": (
+            encoder,
+            (x, w_s, w_v, _spec(d, cfg.d_ff), _spec(cfg.d_ff, d)),
+        ),
+    }
+
+
+def _tolist(a) -> list:
+    return np.asarray(a, dtype=np.float32).reshape(-1).tolist()
+
+
+def _sha(text: str) -> str:
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def emit(cfg: M.ModelConfig, out_dir: str, seed: int = 0) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    graphs = build_graphs(cfg)
+    weights = M.init_weights(cfg, seed=seed)
+
+    manifest = {
+        "config": {
+            "seq_len": cfg.seq_len,
+            "d_model": cfg.d_model,
+            "d_k": cfg.d_k,
+            "d_ff": cfg.d_ff,
+            "gamma": cfg.gamma,
+            "quant_bits": cfg.quant_bits,
+            "theta": cfg.theta,
+            "block": cfg.block,
+            "seed": seed,
+        },
+        "artifacts": {},
+    }
+
+    for name, (fn, specs) in graphs.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "params": [list(s.shape) for s in specs],
+            "sha256_16": _sha(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "weights.json"), "w") as f:
+        json.dump(
+            {k: {"shape": list(v.shape), "data": _tolist(v)} for k, v in weights.items()},
+            f,
+        )
+
+    # Fixtures: concrete inputs + expected outputs so rust integration
+    # tests can assert numerics end-to-end through PJRT.
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (cfg.seq_len, cfg.d_model))
+    fix = {"x": {"shape": list(x.shape), "data": _tolist(x)}, "outputs": {}}
+    args = {
+        "mask_gen": (x, weights["w_s"]),
+        "sparse_attention": (x, weights["w_s"], weights["w_v"]),
+        "dense_attention": (x, weights["w_s"], weights["w_v"]),
+        "encoder": (
+            x,
+            weights["w_s"],
+            weights["w_v"],
+            weights["w_fc1"],
+            weights["w_fc2"],
+        ),
+    }
+    mask = None
+    for name, a in args.items():
+        fn, _ = graphs[name]
+        outs = jax.jit(fn)(*a)
+        fix["outputs"][name] = [
+            {"shape": list(o.shape), "data": _tolist(o)} for o in outs
+        ]
+        if name == "mask_gen":
+            mask = outs[0]
+    fn, _ = graphs["attention"]
+    outs = jax.jit(fn)(x, weights["w_s"], weights["w_v"], mask)
+    fix["outputs"]["attention"] = [
+        {"shape": list(o.shape), "data": _tolist(o)} for o in outs
+    ]
+
+    with open(os.path.join(out_dir, "fixtures.json"), "w") as f:
+        json.dump(fix, f)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest + weights + fixtures to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    p.add_argument("--seq-len", type=int, default=M.ModelConfig.seq_len)
+    p.add_argument("--d-model", type=int, default=M.ModelConfig.d_model)
+    p.add_argument("--d-k", type=int, default=M.ModelConfig.d_k)
+    p.add_argument("--d-ff", type=int, default=M.ModelConfig.d_ff)
+    p.add_argument("--gamma", type=float, default=M.ModelConfig.gamma)
+    p.add_argument("--theta", type=float, default=M.ModelConfig.theta)
+    p.add_argument("--block", type=int, default=M.ModelConfig.block)
+    p.add_argument("--seed", type=int, default=0)
+    a = p.parse_args()
+    cfg = M.ModelConfig(
+        seq_len=a.seq_len,
+        d_model=a.d_model,
+        d_k=a.d_k,
+        d_ff=a.d_ff,
+        gamma=a.gamma,
+        theta=a.theta,
+        block=a.block,
+    ).validate()
+    emit(cfg, a.out_dir, seed=a.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Layer-1 Pallas kernels for CPSAA sparse attention.
+
+Every kernel is authored for TPU-style tiling (32x32 blocks, mirroring the
+paper's 32x32 ReRAM crossbar arrays) but lowered with ``interpret=True`` so
+the resulting HLO runs on any PJRT backend, including the rust CPU client.
+
+The mask-gated block skipping in :mod:`sddmm` / :mod:`spmm` is the TPU
+analogue of the paper's ReCAM scheduler: the ReCAM row-search that dispatches
+only non-zero <alpha, beta_i> coordinates to crossbar input registers becomes
+a ``pl.when`` guard on per-block mask population counts.
+"""
+
+from .quant import quantize, dequantize, quant_roundtrip
+from .softmax import masked_softmax
+from .sddmm import masked_sddmm, block_mask_counts
+from .spmm import masked_spmm
+
+__all__ = [
+    "quantize",
+    "dequantize",
+    "quant_roundtrip",
+    "masked_softmax",
+    "masked_sddmm",
+    "block_mask_counts",
+    "masked_spmm",
+]

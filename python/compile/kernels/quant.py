@@ -1,0 +1,75 @@
+"""Quantization kernels: the paper's Q(x) = round(gamma * x) operator.
+
+SANGER-style prediction pruning (CPSAA eq. 4) computes the approximate score
+matrix in low precision. ``quantize`` maps f32 to a small signed integer grid
+(kept in f32 storage so the whole pruning graph stays a single HLO module);
+``dequantize`` is the inverse scaling Q^-1.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BITS = 4
+
+
+def _quant_kernel(x_ref, o_ref, *, gamma: float, lo: float, hi: float):
+    x = x_ref[...]
+    q = jnp.clip(jnp.round(x * gamma), lo, hi)
+    o_ref[...] = q
+
+
+def _dequant_kernel(x_ref, o_ref, *, gamma: float):
+    o_ref[...] = x_ref[...] / gamma
+
+
+def _grid_levels(bits: int) -> tuple[float, float]:
+    # Symmetric signed grid, e.g. 4-bit -> [-7, 7].
+    hi = float(2 ** (bits - 1) - 1)
+    return -hi, hi
+
+
+def quantize(x, gamma: float, bits: int = DEFAULT_BITS, block: int = 32):
+    """Q(x): round-and-clip ``x`` onto a ``bits``-bit integer grid.
+
+    Values stay f32 (the integer grid is a subset of f32) so that the
+    quantized pruning matmul lowers to ordinary dot ops.
+    """
+    lo, hi = _grid_levels(bits)
+    n, m = x.shape
+    bm = min(block, n)
+    bn = min(block, m)
+    assert n % bm == 0 and m % bn == 0, (x.shape, block)
+    kern = functools.partial(_quant_kernel, gamma=gamma, lo=lo, hi=hi)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        grid=(n // bm, m // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x)
+
+
+def dequantize(x, gamma: float, block: int = 32):
+    """Q^-1(x): undo the ``gamma`` scaling of :func:`quantize`."""
+    n, m = x.shape
+    bm = min(block, n)
+    bn = min(block, m)
+    assert n % bm == 0 and m % bn == 0, (x.shape, block)
+    kern = functools.partial(_dequant_kernel, gamma=gamma)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        grid=(n // bm, m // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x)
+
+
+def quant_roundtrip(x, gamma: float, bits: int = DEFAULT_BITS, block: int = 32):
+    """Q^-1(Q(x)) — the value actually seen by the pruning matmul."""
+    return dequantize(quantize(x, gamma, bits=bits, block=block), gamma, block=block)

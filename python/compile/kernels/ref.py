@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+No Pallas, no tiling, no skipping: just the mathematical definition each
+kernel must match bit-for-bit (up to float tolerance). pytest/hypothesis
+sweeps assert ``kernel(x) == ref(x)`` across shapes, dtypes, and sparsities.
+"""
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x, gamma: float, bits: int = 4):
+    hi = float(2 ** (bits - 1) - 1)
+    return jnp.clip(jnp.round(x * gamma), -hi, hi)
+
+
+def dequantize_ref(x, gamma: float):
+    return x / gamma
+
+
+def quant_roundtrip_ref(x, gamma: float, bits: int = 4):
+    return dequantize_ref(quantize_ref(x, gamma, bits), gamma)
+
+
+def masked_softmax_ref(s, mask):
+    neg = jnp.float32(-1e30)
+    gated = jnp.where(mask > 0, s, neg)
+    row_max = jnp.max(gated, axis=-1, keepdims=True)
+    safe = jnp.where(row_max <= neg / 2, 0.0, row_max)
+    e = jnp.exp(gated - safe) * (mask > 0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.where(denom > 0, e / denom, 0.0)
+
+
+def masked_sddmm_ref(a, b, mask):
+    return (a @ b) * (mask > 0)
+
+
+def masked_spmm_ref(s, v, mask):
+    # The mask only *describes* the sparsity of s; the product is s @ v.
+    # Zeroing s off-mask first makes the oracle insensitive to garbage
+    # values that a correct kernel would have skipped.
+    return jnp.where(mask > 0, s, 0.0) @ v
+
+
+def dense_attention_ref(x, w_q, w_k, w_v):
+    """Vanilla attention (Fig. 1a): softmax(Q K^T / sqrt(d)) V."""
+    q = x @ w_q
+    k = x @ w_k
+    v = x @ w_v
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v
+
+
+def cpsaa_attention_ref(x, w_s, w_v, mask, d_k: int):
+    """CPSAA calculation mode (eq. 3): S = X W_S X^T, masked softmax, @V."""
+    m = x @ w_s
+    s = (m @ x.T) / jnp.sqrt(jnp.float32(d_k))
+    p = masked_softmax_ref(s, mask)
+    v = x @ w_v
+    return p @ v
+
+
+def mask_gen_ref(x, w_s_q, gamma: float, d_k: int, theta: float, bits: int = 4):
+    """Pruning mask oracle (eq. 4), given pre-quantized Q(W_S)."""
+    qx = quantize_ref(x, gamma, bits)
+    s_hat = (qx @ w_s_q @ qx.T) / (gamma * gamma * gamma)
+    s_hat = s_hat / jnp.sqrt(jnp.float32(d_k))
+    p = masked_softmax_ref(s_hat, jnp.ones_like(s_hat))
+    return (p >= theta).astype(jnp.float32)

@@ -1,0 +1,67 @@
+"""Masked SDDMM Pallas kernel: S = mask . (M @ X^T)  (paper §4.3).
+
+Hardware mapping (DESIGN.md §Hardware-Adaptation): the paper stores each
+32-element K^T vector in one 32x32 crossbar and lets a ReCAM scheduler
+dispatch only the <alpha, beta_i> coordinates whose mask bit is 1. Here each
+(bm, bn) output tile is one "crossbar dispatch"; a per-tile population count
+(the ReCAM row-search result) gates the whole tile with ``pl.when`` so fully
+masked tiles cost no MXU work — the same irrelevant-token-pair skipping the
+ReCAM scheduler performs.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def block_mask_counts(mask, bm: int, bn: int):
+    """Per-tile nonzero counts of ``mask`` — the ReCAM scheduler summary.
+
+    Returns an (n//bm, m//bn) int32 array; entry (i, j) is the number of
+    active mask bits in tile (i, j). Computed once per mask (the ReCAM
+    row-search pass) and reused by every SDDMM/SpMM dispatch.
+    """
+    n, m = mask.shape
+    assert n % bm == 0 and m % bn == 0, (mask.shape, bm, bn)
+    t = mask.reshape(n // bm, bm, m // bn, bn)
+    return jnp.sum((t > 0).astype(jnp.int32), axis=(1, 3))
+
+
+def _sddmm_kernel(cnt_ref, a_ref, b_ref, mask_ref, o_ref):
+    # Zero first: skipped tiles must still produce defined output.
+    o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(cnt_ref[0, 0] > 0)
+    def _():
+        acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+        o_ref[...] = acc * (mask_ref[...] > 0)
+
+
+def masked_sddmm(a, b, mask, block: int = 32):
+    """Sampled dense-dense matmul: ``mask . (a @ b)`` with tile skipping.
+
+    a: (n, d)   — the M = X @ W_S matrix (rows of Q in the paper's Fig. 8b)
+    b: (d, m)   — X^T resident in the write-enable arrays
+    mask: (n, m) — binary mask from the pruning phase (ReCAM contents)
+    """
+    n, d = a.shape
+    d2, m = b.shape
+    assert d == d2, (a.shape, b.shape)
+    assert mask.shape == (n, m), (mask.shape, n, m)
+    bm = min(block, n)
+    bn = min(block, m)
+    assert n % bm == 0 and m % bn == 0, (n, m, block)
+    counts = block_mask_counts(mask, bm, bn)
+    return pl.pallas_call(
+        _sddmm_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        grid=(n // bm, m // bn),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),  # ReCAM tile summary
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),  # full-K row panel
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),  # full-K col panel
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(counts, a, b, mask)

@@ -1,0 +1,49 @@
+"""Masked row-softmax Pallas kernel.
+
+The paper's Softmax Unit (SU, Fig. 6b) normalizes each row of the sparse
+score matrix. Masked-out entries must not contribute probability mass, so
+they are driven to -inf before the exp; rows whose mask is entirely zero
+produce an all-zero row (the corresponding output token attends nowhere,
+matching the hardware behaviour of skipping the row entirely).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _masked_softmax_kernel(s_ref, m_ref, o_ref):
+    s = s_ref[...]
+    mask = m_ref[...]
+    gated = jnp.where(mask > 0, s, _NEG_INF)
+    row_max = jnp.max(gated, axis=-1, keepdims=True)
+    # Rows with no active entries: keep exp argument finite, zero them later.
+    safe = jnp.where(row_max <= _NEG_INF / 2, 0.0, row_max)
+    e = jnp.exp(gated - safe) * (mask > 0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.where(denom > 0, e / denom, 0.0)
+
+
+def masked_softmax(s, mask, block_rows: int = 32):
+    """Row-wise softmax of ``s`` restricted to positions where ``mask > 0``.
+
+    ``s`` and ``mask`` are (n, m); each grid step owns a full row-block so
+    the reduction never crosses blocks (the SU processes a row at a time).
+    """
+    n, m = s.shape
+    assert mask.shape == (n, m), (s.shape, mask.shape)
+    bm = min(block_rows, n)
+    assert n % bm == 0, (n, block_rows)
+    return pl.pallas_call(
+        _masked_softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), s.dtype),
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, m), lambda i: (i, 0)),
+            pl.BlockSpec((bm, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, m), lambda i: (i, 0)),
+        interpret=True,
+    )(s, mask)

@@ -1,0 +1,57 @@
+"""Masked SpMM Pallas kernel: Z = S @ V with S sparse (paper §4.4).
+
+The paper replicates V rows across crossbars according to the mask so each
+output row finishes in one VMM cycle. The TPU analogue: iterate reduction
+tiles (k) innermost and skip every k-tile whose mask tile (i, k) is empty —
+those are exactly the V rows the paper never maps into an input register.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sddmm import block_mask_counts
+
+
+def _spmm_kernel(cnt_ref, s_ref, v_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(cnt_ref[0, 0] > 0)
+    def _():
+        o_ref[...] += jnp.dot(
+            s_ref[...], v_ref[...], preferred_element_type=jnp.float32
+        )
+
+
+def masked_spmm(s, v, mask, block: int = 32):
+    """Sparse-dense matmul ``s @ v`` skipping reduction tiles masked empty.
+
+    s: (n, m) — the post-softmax sparse score matrix (zeros off-mask)
+    v: (m, dv) — dense value matrix resident in crossbars
+    mask: (n, m) — the same pruning mask that shaped ``s``
+    """
+    n, m = s.shape
+    m2, dv = v.shape
+    assert m == m2, (s.shape, v.shape)
+    assert mask.shape == (n, m), (mask.shape, n, m)
+    bm = min(block, n)
+    bk = min(block, m)
+    bn = min(block, dv)
+    assert n % bm == 0 and m % bk == 0 and dv % bn == 0, (n, m, dv, block)
+    counts = block_mask_counts(mask, bm, bk)
+    return pl.pallas_call(
+        _spmm_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, dv), jnp.float32),
+        grid=(n // bm, dv // bn, m // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, k)),  # mask tile summary
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        interpret=True,
+    )(counts, s, v)

@@ -1,0 +1,147 @@
+"""Layer-2 JAX model: CPSAA-mode sparse attention + encoder graphs.
+
+Implements the paper's calculation mode (§3, Fig. 4c):
+
+    W_S = W_Q @ W_K^T            (pre-folded offline, stored read-only)
+    M   = X @ W_S                (one VMM step instead of Q then R)
+    S   = mask . (M @ X^T) / sqrt(d_k)     <- SDDMM (L1 kernel)
+    P   = masked_softmax(S)                <- SU   (L1 kernel)
+    V   = X @ W_V
+    Z   = P @ V                            <- SpMM (L1 kernel)
+
+and the PIM pruning phase (§4.2 Step 1, eq. 4):
+
+    mask = Bina(Soft(Q^-1(Q(X) Q(W_S) Q(X^T)) / sqrt(d)))
+
+Every function is pure and jit-lowerable; aot.py turns each into an
+artifacts/*.hlo.txt module for the rust runtime.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    masked_sddmm,
+    masked_softmax,
+    masked_spmm,
+    quantize,
+)
+from .kernels import ref as kref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Shapes and pruning hyper-parameters of one attention layer.
+
+    Defaults follow the paper's evaluation setup: d_model = 512,
+    d_k = d_q = 64, batches of 320 embeddings (we default smaller for
+    artifact compile time; the rust side treats shapes as config).
+    """
+
+    seq_len: int = 128
+    d_model: int = 256
+    d_k: int = 64
+    d_ff: int = 512
+    gamma: float = 4.0  # quantization scale for Q(.)
+    quant_bits: int = 4
+    theta: float = 0.01  # binarization threshold (eq. 1)
+    sharpness: float = 4.0  # synthetic-weight attention-logit scale (see init_weights)
+    block: int = 32  # crossbar-analogue tile edge
+
+    def validate(self) -> "ModelConfig":
+        for name in ("seq_len", "d_model", "d_k", "d_ff"):
+            v = getattr(self, name)
+            if v % self.block != 0:
+                raise ValueError(f"{name}={v} not a multiple of block={self.block}")
+        if not 0.0 < self.theta < 1.0:
+            raise ValueError(f"theta={self.theta} outside (0, 1)")
+        return self
+
+
+def fold_ws(w_q, w_k):
+    """Offline pre-computation W_S = W_Q @ W_K^T (the paper's 4x space /
+    N-fold time trade, §3)."""
+    return w_q @ w_k.T
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0):
+    """Deterministic synthetic weights standing in for fine-tuned BERT
+    weights (see DESIGN.md substitutions).
+
+    ``cfg.sharpness`` scales W_Q so attention logits have std ~ sharpness:
+    trained attention is peaked (few relevant token pairs — the very premise
+    of sparse attention), whereas raw Gaussian weights would give near-flat
+    softmax rows where pruning is meaningless. sharpness=4 reproduces the
+    paper's ~0.1 mask density at the default theta.
+    """
+    k1, k2, k3, k4, k5 = jax.random.split(jax.random.PRNGKey(seed), 5)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.d_model))
+    w_q = jax.random.normal(k1, (cfg.d_model, cfg.d_k), jnp.float32) * scale * cfg.sharpness
+    w_k = jax.random.normal(k2, (cfg.d_model, cfg.d_k), jnp.float32) * scale
+    w_v = jax.random.normal(k3, (cfg.d_model, cfg.d_model), jnp.float32) * scale
+    w_fc1 = jax.random.normal(k4, (cfg.d_model, cfg.d_ff), jnp.float32) * scale
+    w_fc2 = jax.random.normal(k5, (cfg.d_ff, cfg.d_model), jnp.float32) * scale
+    return {
+        "w_q": w_q,
+        "w_k": w_k,
+        "w_v": w_v,
+        "w_s": fold_ws(w_q, w_k),
+        "w_fc1": w_fc1,
+        "w_fc2": w_fc2,
+    }
+
+
+def mask_gen(x, w_s, cfg: ModelConfig):
+    """Pruning phase (Step 1): low-precision score -> softmax -> binarize.
+
+    Uses quantized X and quantized W_S directly (no Q/K intermediates), the
+    property that lets Step 1 run concurrently with Step 2 on the hardware.
+    Returns the binary mask as f32 {0., 1.}.
+    """
+    g = cfg.gamma
+    qx = quantize(x, g, bits=cfg.quant_bits, block=cfg.block)
+    qws = kref.quantize_ref(w_s, g, cfg.quant_bits)  # offline constant
+    qxt = qx.T
+    # Three quantized factors -> de-quant divides by gamma^3 (Q^-1).
+    s_hat = (qx @ qws @ qxt) / (g * g * g)
+    s_hat = s_hat / jnp.sqrt(jnp.float32(cfg.d_k))
+    p = masked_softmax(s_hat, jnp.ones_like(s_hat), block_rows=cfg.block)
+    return (p >= cfg.theta).astype(jnp.float32)
+
+
+def cpsaa_attention(x, w_s, w_v, mask, cfg: ModelConfig):
+    """Attention calculation phase (Steps 2-4) under a given mask."""
+    m = x @ w_s  # Step 2: M = X W_S  (ROA VMM)
+    v = x @ w_v  # Step 2: V = X W_V  (runs concurrently on hardware)
+    s = masked_sddmm(m, x.T, mask, block=cfg.block)  # Step 3
+    s = s / jnp.sqrt(jnp.float32(cfg.d_k))
+    p = masked_softmax(s, mask, block_rows=cfg.block)
+    return masked_spmm(p, v, mask, block=cfg.block)  # Step 4
+
+
+def sparse_attention(x, w_s, w_v, cfg: ModelConfig):
+    """Full CPSAA layer: pruning + masked attention (Steps 1-4)."""
+    mask = mask_gen(x, w_s, cfg)
+    return cpsaa_attention(x, w_s, w_v, mask, cfg), mask
+
+
+def dense_attention(x, w_s, w_v, cfg: ModelConfig):
+    """CPDAA: the dense-version calculation mode (Fig. 4c without mask)."""
+    ones = jnp.ones((x.shape[0], x.shape[0]), jnp.float32)
+    return cpsaa_attention(x, w_s, w_v, ones, cfg)
+
+
+def encoder_layer(x, weights, cfg: ModelConfig):
+    """One BERT-style encoder: sparse attention + ISAAC-style FC block,
+    each wrapped in residual + RMS normalization (§4.5)."""
+    z, mask = sparse_attention(x, weights["w_s"], weights["w_v"], cfg)
+    h = _rms_norm(x + z)
+    ff = jax.nn.gelu(h @ weights["w_fc1"]) @ weights["w_fc2"]
+    return _rms_norm(h + ff), mask
+
+
+def _rms_norm(x, eps: float = 1e-6):
+    scale = jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return x * scale

@@ -1,0 +1,43 @@
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# Allow `pytest python/tests` from the repo root too.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed: int):
+    return jax.random.PRNGKey(seed)
+
+
+def randn(seed: int, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def rand_mask(seed: int, n: int, m: int, density: float):
+    u = jax.random.uniform(jax.random.PRNGKey(seed), (n, m))
+    return (u < density).astype(jnp.float32)
+
+
+def assert_close(a, b, rtol=1e-4, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    from compile.model import ModelConfig
+
+    return ModelConfig(seq_len=32, d_model=64, d_k=64, d_ff=128).validate()
+
+
+@pytest.fixture(scope="session")
+def small_cfg():
+    from compile.model import ModelConfig
+
+    return ModelConfig(seq_len=64, d_model=128, d_k=64, d_ff=256).validate()

@@ -1,0 +1,84 @@
+"""Dtype sweeps: the Pallas kernels must hold up in bf16 (the MXU-native
+dtype the DESIGN.md hardware adaptation targets) as well as f32."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import masked_sddmm, masked_softmax, masked_spmm
+from compile.kernels import ref as R
+
+from .conftest import rand_mask, randn
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-5)
+
+
+def _cast(x, dtype):
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sddmm_dtype(dtype):
+    a = _cast(randn(0, 64, 64), dtype)
+    b = _cast(randn(1, 64, 64), dtype)
+    mask = rand_mask(2, 64, 64, 0.2)
+    got = np.asarray(masked_sddmm(a, b, mask), np.float32)
+    want = np.asarray(
+        R.masked_sddmm_ref(a.astype(jnp.float32), b.astype(jnp.float32), mask), np.float32
+    )
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_softmax_dtype(dtype):
+    s = _cast(randn(3, 64, 64), dtype)
+    mask = rand_mask(4, 64, 64, 0.3)
+    got = np.asarray(masked_softmax(s, _cast(mask, dtype)), np.float32)
+    want = np.asarray(R.masked_softmax_ref(s.astype(jnp.float32), mask), np.float32)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+    # probability mass conserved regardless of dtype
+    active = np.asarray(mask).sum(axis=-1) > 0
+    np.testing.assert_allclose(got.sum(-1)[active], 1.0, rtol=2e-2)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_spmm_dtype(dtype):
+    mask = rand_mask(5, 64, 64, 0.15)
+    s = _cast(randn(6, 64, 64) * np.asarray(mask), dtype)
+    v = _cast(randn(7, 64, 32), dtype)
+    got = np.asarray(masked_spmm(s, v, mask), np.float32)
+    want = np.asarray(
+        R.masked_spmm_ref(s.astype(jnp.float32), v.astype(jnp.float32), mask), np.float32
+    )
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+def test_bf16_outputs_finite_at_scale():
+    # bf16's narrow mantissa must not overflow through the exp/normalize.
+    s = _cast(randn(8, 32, 128) * 30.0, jnp.bfloat16)
+    mask = rand_mask(9, 32, 128, 0.5)
+    p = np.asarray(masked_softmax(s, _cast(mask, jnp.bfloat16)), np.float32)
+    assert np.isfinite(p).all()
+
+
+def test_mixed_precision_pipeline():
+    # bf16 operands through the whole SDDMM -> softmax -> SpMM chain stay
+    # within a few percent of the f32 oracle chain.
+    n, d = 64, 64
+    m_mat = randn(10, n, d)
+    xt = randn(11, d, n)
+    v = randn(12, n, d)
+    mask = rand_mask(13, n, n, 0.2)
+    s16 = masked_sddmm(_cast(m_mat, jnp.bfloat16), _cast(xt, jnp.bfloat16), mask)
+    p16 = masked_softmax(s16 / jnp.sqrt(jnp.float32(d)), mask)
+    z16 = np.asarray(masked_spmm(p16, _cast(v, jnp.bfloat16), mask), np.float32)
+    s32 = R.masked_sddmm_ref(m_mat, xt, mask) / jnp.sqrt(jnp.float32(d))
+    p32 = R.masked_softmax_ref(s32, mask)
+    z32 = np.asarray(R.masked_spmm_ref(p32, v, mask), np.float32)
+    rel = np.linalg.norm(z16 - z32) / max(np.linalg.norm(z32), 1e-9)
+    assert rel < 0.05, rel

@@ -1,0 +1,141 @@
+"""L2 model tests: calculation-mode equivalence, mask quality, encoder."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref as R
+
+from .conftest import assert_close, randn
+
+
+def _x(cfg, seed=9):
+    return randn(seed, cfg.seq_len, cfg.d_model)
+
+
+class TestCalculationMode:
+    """Eq. (2) == Eq. (3): the W_S folding is exact."""
+
+    def test_ws_folding_matches_qk(self, tiny_cfg):
+        w = M.init_weights(tiny_cfg)
+        x = _x(tiny_cfg)
+        s_qk = (x @ w["w_q"]) @ (x @ w["w_k"]).T
+        s_ws = x @ w["w_s"] @ x.T
+        assert_close(s_qk, s_ws, rtol=1e-3, atol=1e-3)
+
+    def test_dense_mode_matches_vanilla_attention(self, tiny_cfg):
+        # CPDAA (all-ones mask) must equal Fig. 1a vanilla attention with
+        # the caveat that CPSAA scales by sqrt(d_k) like the paper.
+        w = M.init_weights(tiny_cfg)
+        x = _x(tiny_cfg)
+        z_cpdaa = M.dense_attention(x, w["w_s"], w["w_v"], tiny_cfg)
+        q, k, v = x @ w["w_q"], x @ w["w_k"], x @ w["w_v"]
+        s = q @ k.T / jnp.sqrt(jnp.float32(tiny_cfg.d_k))
+        p = jax.nn.softmax(s, axis=-1)
+        assert_close(z_cpdaa, p @ v, rtol=5e-3, atol=5e-4)
+
+    def test_attention_matches_oracle(self, tiny_cfg):
+        w = M.init_weights(tiny_cfg)
+        x = _x(tiny_cfg)
+        mask, _ = M.mask_gen(x, w["w_s"], tiny_cfg), None
+        z = M.cpsaa_attention(x, w["w_s"], w["w_v"], mask, tiny_cfg)
+        zr = R.cpsaa_attention_ref(x, w["w_s"], w["w_v"], mask, tiny_cfg.d_k)
+        assert_close(z, zr, rtol=1e-4, atol=1e-4)
+
+
+class TestMaskGen:
+    def test_mask_is_binary(self, tiny_cfg):
+        w = M.init_weights(tiny_cfg)
+        mask = np.asarray(M.mask_gen(_x(tiny_cfg), w["w_s"], tiny_cfg))
+        assert set(np.unique(mask)) <= {0.0, 1.0}
+
+    def test_matches_oracle(self, tiny_cfg):
+        w = M.init_weights(tiny_cfg)
+        x = _x(tiny_cfg)
+        mask = M.mask_gen(x, w["w_s"], tiny_cfg)
+        w_s_q = R.quantize_ref(w["w_s"], tiny_cfg.gamma, tiny_cfg.quant_bits)
+        ref = R.mask_gen_ref(
+            x, w_s_q, tiny_cfg.gamma, tiny_cfg.d_k, tiny_cfg.theta, tiny_cfg.quant_bits
+        )
+        assert_close(mask, ref, rtol=0, atol=0)
+
+    def test_mask_density_in_sparse_regime(self, small_cfg):
+        # Paper: attention sparsity around 0.1 (i.e., mask keeps ~10%).
+        w = M.init_weights(small_cfg)
+        mask = np.asarray(M.mask_gen(_x(small_cfg), w["w_s"], small_cfg))
+        assert 0.005 < mask.mean() < 0.6
+
+    def test_mask_keeps_largest_scores(self, tiny_cfg):
+        # Every kept entry's approximate probability >= every dropped one's,
+        # row-wise — binarization is a per-row threshold on one score.
+        w = M.init_weights(tiny_cfg)
+        x = _x(tiny_cfg)
+        mask = np.asarray(M.mask_gen(x, w["w_s"], tiny_cfg))
+        w_s_q = R.quantize_ref(w["w_s"], tiny_cfg.gamma, tiny_cfg.quant_bits)
+        qx = R.quantize_ref(x, tiny_cfg.gamma, tiny_cfg.quant_bits)
+        g3 = tiny_cfg.gamma**3
+        s_hat = np.asarray(
+            R.masked_softmax_ref(
+                (qx @ w_s_q @ qx.T) / g3 / np.sqrt(tiny_cfg.d_k),
+                jnp.ones((tiny_cfg.seq_len, tiny_cfg.seq_len)),
+            )
+        )
+        for i in range(tiny_cfg.seq_len):
+            kept = s_hat[i][mask[i] == 1]
+            dropped = s_hat[i][mask[i] == 0]
+            if kept.size and dropped.size:
+                assert kept.min() >= dropped.max()
+
+    def test_mask_output_fidelity(self, tiny_cfg):
+        # Fig. 16 "Accuracy": masked attention output stays close to the
+        # full-precision dense output (relative Frobenius error small).
+        w = M.init_weights(tiny_cfg)
+        x = _x(tiny_cfg)
+        z_sparse, _ = M.sparse_attention(x, w["w_s"], w["w_v"], tiny_cfg)
+        z_dense = M.dense_attention(x, w["w_s"], w["w_v"], tiny_cfg)
+        rel = float(
+            jnp.linalg.norm(z_sparse - z_dense) / jnp.linalg.norm(z_dense)
+        )
+        assert rel < 0.15, rel
+
+
+class TestEncoder:
+    def test_shapes(self, tiny_cfg):
+        w = M.init_weights(tiny_cfg)
+        out, mask = M.encoder_layer(_x(tiny_cfg), w, tiny_cfg)
+        assert out.shape == (tiny_cfg.seq_len, tiny_cfg.d_model)
+        assert mask.shape == (tiny_cfg.seq_len, tiny_cfg.seq_len)
+
+    def test_finite(self, tiny_cfg):
+        w = M.init_weights(tiny_cfg)
+        out, _ = M.encoder_layer(_x(tiny_cfg), w, tiny_cfg)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_deterministic(self, tiny_cfg):
+        w = M.init_weights(tiny_cfg)
+        a, _ = M.encoder_layer(_x(tiny_cfg), w, tiny_cfg)
+        b, _ = M.encoder_layer(_x(tiny_cfg), w, tiny_cfg)
+        assert_close(a, b, rtol=0, atol=0)
+
+    def test_stackable(self, tiny_cfg):
+        # Multi-encoder stacking (§4.5): output feeds next layer cleanly.
+        w = M.init_weights(tiny_cfg)
+        h = _x(tiny_cfg)
+        for _ in range(3):
+            h, _ = M.encoder_layer(h, w, tiny_cfg)
+        assert np.isfinite(np.asarray(h)).all()
+
+
+class TestConfig:
+    def test_validate_rejects_misaligned(self):
+        with pytest.raises(ValueError):
+            M.ModelConfig(seq_len=33).validate()
+
+    def test_validate_rejects_bad_theta(self):
+        with pytest.raises(ValueError):
+            M.ModelConfig(theta=1.5).validate()
+
+    def test_defaults_valid(self):
+        M.ModelConfig().validate()

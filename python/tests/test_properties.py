@@ -1,0 +1,110 @@
+"""Hypothesis sweeps: kernel == oracle over random shapes/densities/scales.
+
+These are the L1 property tests the architecture calls for — shapes and
+dtypes drawn by hypothesis, asserted allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    block_mask_counts,
+    masked_sddmm,
+    masked_softmax,
+    masked_spmm,
+    quant_roundtrip,
+)
+from compile.kernels import ref as R
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+dims = st.sampled_from([32, 64, 96, 128])
+small_dims = st.sampled_from([32, 64])
+densities = st.floats(min_value=0.0, max_value=1.0)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+gammas = st.floats(min_value=0.25, max_value=32.0)
+
+
+def _randn(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def _mask(rng, n, m, density):
+    return jnp.asarray(rng.random((n, m)) < density, jnp.float32)
+
+
+@given(n=dims, d=dims, m=dims, density=densities, seed=seeds)
+@settings(**SETTINGS)
+def test_sddmm_property(n, d, m, density, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _randn(rng, n, d), _randn(rng, d, m)
+    mask = _mask(rng, n, m, density)
+    np.testing.assert_allclose(
+        masked_sddmm(a, b, mask), R.masked_sddmm_ref(a, b, mask), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(n=dims, m=dims, dv=small_dims, density=densities, seed=seeds)
+@settings(**SETTINGS)
+def test_spmm_property(n, m, dv, density, seed):
+    rng = np.random.default_rng(seed)
+    mask = _mask(rng, n, m, density)
+    s = _randn(rng, n, m) * mask
+    v = _randn(rng, m, dv)
+    np.testing.assert_allclose(
+        masked_spmm(s, v, mask), R.masked_spmm_ref(s, v, mask), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(n=dims, m=dims, density=densities, seed=seeds, scale=st.floats(0.1, 100.0))
+@settings(**SETTINGS)
+def test_softmax_property(n, m, density, seed, scale):
+    rng = np.random.default_rng(seed)
+    s = _randn(rng, n, m) * scale
+    mask = _mask(rng, n, m, density)
+    got = np.asarray(masked_softmax(s, mask))
+    want = np.asarray(R.masked_softmax_ref(s, mask))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert np.isfinite(got).all()
+
+
+@given(n=dims, m=dims, gamma=gammas, seed=seeds, bits=st.sampled_from([2, 4, 8]))
+@settings(**SETTINGS)
+def test_quant_property(n, m, gamma, seed, bits):
+    rng = np.random.default_rng(seed)
+    x = _randn(rng, n, m)
+    np.testing.assert_allclose(
+        quant_roundtrip(x, gamma, bits=bits),
+        R.quant_roundtrip_ref(x, gamma, bits),
+        rtol=1e-6,
+        atol=1e-6,
+    )
+
+
+@given(n=dims, m=dims, density=densities, seed=seeds)
+@settings(**SETTINGS)
+def test_block_counts_conserve_mass(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    mask = _mask(rng, n, m, density)
+    c = block_mask_counts(mask, 32, 32)
+    assert int(np.asarray(c).sum()) == int(np.asarray(mask).sum())
+
+
+@given(n=small_dims, density=st.floats(0.01, 0.5), seed=seeds)
+@settings(**SETTINGS)
+def test_sparse_attention_composition(n, density, seed):
+    """SDDMM -> softmax -> SpMM composes to masked attention exactly."""
+    rng = np.random.default_rng(seed)
+    d = 64
+    m_mat = _randn(rng, n, d)
+    xt = _randn(rng, d, n)
+    v = _randn(rng, n, d)
+    mask = _mask(rng, n, n, density)
+    s = masked_sddmm(m_mat, xt, mask) / np.sqrt(d)
+    p = masked_softmax(s, mask)
+    z = masked_spmm(p, v, mask)
+    s_ref = R.masked_sddmm_ref(m_mat, xt, mask) / np.sqrt(d)
+    p_ref = R.masked_softmax_ref(s_ref, mask)
+    z_ref = R.masked_spmm_ref(p_ref, v, mask)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_ref), rtol=1e-4, atol=1e-4)

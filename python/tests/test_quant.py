@@ -1,0 +1,75 @@
+"""Quantization kernel vs oracle: grids, clipping, idempotence."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import quantize, dequantize, quant_roundtrip
+from compile.kernels import ref as R
+
+from .conftest import assert_close, randn
+
+
+@pytest.mark.parametrize("shape", [(32, 32), (64, 32), (32, 96), (128, 128)])
+@pytest.mark.parametrize("gamma", [1.0, 4.0, 16.0])
+def test_quantize_matches_ref(shape, gamma):
+    x = randn(0, *shape)
+    assert_close(quantize(x, gamma), R.quantize_ref(x, gamma), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 6, 8])
+def test_quantize_grid_bounds(bits):
+    x = randn(1, 64, 64) * 100.0
+    q = np.asarray(quantize(x, 4.0, bits=bits))
+    hi = 2 ** (bits - 1) - 1
+    assert q.max() <= hi and q.min() >= -hi
+
+
+def test_quantize_values_are_integers():
+    q = np.asarray(quantize(randn(2, 64, 64), 7.3))
+    np.testing.assert_array_equal(q, np.round(q))
+
+
+@pytest.mark.parametrize("gamma", [0.5, 2.0, 8.0])
+def test_dequantize_matches_ref(gamma):
+    x = randn(3, 64, 64)
+    assert_close(dequantize(x, gamma), R.dequantize_ref(x, gamma), rtol=1e-6)
+
+
+def test_roundtrip_matches_ref():
+    x = randn(4, 96, 64)
+    assert_close(quant_roundtrip(x, 4.0), R.quant_roundtrip_ref(x, 4.0), rtol=1e-6)
+
+
+def test_roundtrip_error_bounded():
+    # |Q^-1(Q(x)) - x| <= 0.5/gamma inside the representable range.
+    gamma = 8.0
+    # 4-bit grid at gamma=8 represents [-7/8, 7/8]; clip inputs inside it.
+    x = jnp.clip(randn(5, 64, 64) * 0.5, -0.8, 0.8)
+    err = np.abs(np.asarray(quant_roundtrip(x, gamma)) - np.asarray(x))
+    assert err.max() <= 0.5 / gamma + 1e-6
+
+
+def test_quantize_idempotent_on_grid():
+    x = randn(6, 64, 64)
+    q1 = quantize(x, 4.0)
+    # quantizing the de-quantized grid value reproduces the same grid point
+    q2 = quantize(dequantize(q1, 4.0), 4.0)
+    assert_close(q1, q2, rtol=0, atol=0)
+
+
+def test_quantize_zero_preserved():
+    z = jnp.zeros((32, 32), jnp.float32)
+    assert float(np.abs(np.asarray(quantize(z, 4.0))).max()) == 0.0
+
+
+def test_quantize_monotone():
+    # Rounding is monotone: x <= y  =>  Q(x) <= Q(y), elementwise over a ramp.
+    x = jnp.linspace(-3, 3, 32 * 32).reshape(32, 32)
+    q = np.asarray(quantize(x, 4.0)).reshape(-1)
+    assert (np.diff(q) >= 0).all()
+
+
+def test_quantize_rejects_misaligned():
+    with pytest.raises(AssertionError):
+        quantize(randn(7, 33, 32), 4.0)

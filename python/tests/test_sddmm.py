@@ -1,0 +1,84 @@
+"""Masked SDDMM kernel vs oracle, plus block-skipping semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import block_mask_counts, masked_sddmm
+from compile.kernels import ref as R
+
+from .conftest import assert_close, rand_mask, randn
+
+
+@pytest.mark.parametrize("n,d,m", [(32, 32, 32), (64, 96, 64), (32, 256, 128), (128, 64, 32)])
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.1, 0.5, 1.0])
+def test_matches_ref(n, d, m, density):
+    a = randn(0, n, d)
+    b = randn(1, d, m)
+    mask = rand_mask(2, n, m, density)
+    assert_close(masked_sddmm(a, b, mask), R.masked_sddmm_ref(a, b, mask), rtol=1e-4)
+
+
+def test_empty_mask_gives_zero():
+    a = randn(3, 64, 64)
+    b = randn(4, 64, 64)
+    z = np.asarray(masked_sddmm(a, b, jnp.zeros((64, 64), jnp.float32)))
+    assert (z == 0).all()
+
+
+def test_full_mask_equals_matmul():
+    a = randn(5, 64, 96)
+    b = randn(6, 96, 64)
+    assert_close(masked_sddmm(a, b, jnp.ones((64, 64), jnp.float32)), a @ b, rtol=1e-4)
+
+
+def test_off_mask_positions_exactly_zero():
+    a = randn(7, 64, 64)
+    b = randn(8, 64, 64)
+    mask = rand_mask(9, 64, 64, 0.2)
+    s = np.asarray(masked_sddmm(a, b, mask))
+    assert (s[np.asarray(mask) == 0] == 0).all()
+
+
+def test_block_diag_mask_only_diag_blocks():
+    # Blocks fully off the mask must be exactly 0 (skipped, not just gated).
+    n = 64
+    blk = 32
+    mask = jnp.zeros((n, n), jnp.float32)
+    mask = mask.at[:blk, :blk].set(1.0).at[blk:, blk:].set(1.0)
+    a = randn(10, n, 48)
+    b = randn(11, 48, n)
+    s = np.asarray(masked_sddmm(a, b, mask, block=blk))
+    assert (s[:blk, blk:] == 0).all() and (s[blk:, :blk] == 0).all()
+    assert_close(s[:blk, :blk], (a @ b)[:blk, :blk], rtol=1e-4)
+
+
+@pytest.mark.parametrize("block", [16, 32, 64])
+def test_block_size_invariance(block):
+    a = randn(12, 64, 64)
+    b = randn(13, 64, 64)
+    mask = rand_mask(14, 64, 64, 0.1)
+    assert_close(
+        masked_sddmm(a, b, mask, block=block), R.masked_sddmm_ref(a, b, mask), rtol=1e-4
+    )
+
+
+class TestBlockMaskCounts:
+    def test_counts_total(self):
+        mask = rand_mask(15, 64, 96, 0.3)
+        c = block_mask_counts(mask, 32, 32)
+        assert int(np.asarray(c).sum()) == int(np.asarray(mask).sum())
+
+    def test_counts_shape(self):
+        c = block_mask_counts(jnp.ones((64, 128)), 32, 32)
+        assert c.shape == (2, 4)
+        assert (np.asarray(c) == 32 * 32).all()
+
+    def test_zero_blocks_detected(self):
+        mask = jnp.zeros((64, 64), jnp.float32).at[:32, :32].set(1.0)
+        c = np.asarray(block_mask_counts(mask, 32, 32))
+        assert c[0, 0] == 1024 and c[0, 1] == 0 and c[1, 0] == 0 and c[1, 1] == 0
+
+    def test_rejects_misaligned(self):
+        with pytest.raises(AssertionError):
+            block_mask_counts(jnp.ones((33, 64)), 32, 32)

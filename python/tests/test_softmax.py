@@ -1,0 +1,79 @@
+"""Masked softmax kernel vs oracle: normalization, masking, stability."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import masked_softmax
+from compile.kernels import ref as R
+
+from .conftest import assert_close, rand_mask, randn
+
+
+@pytest.mark.parametrize("n,m", [(32, 32), (64, 64), (32, 128), (128, 64)])
+@pytest.mark.parametrize("density", [0.05, 0.1, 0.5, 1.0])
+def test_matches_ref(n, m, density):
+    s = randn(0, n, m)
+    mask = rand_mask(1, n, m, density)
+    assert_close(masked_softmax(s, mask), R.masked_softmax_ref(s, mask), rtol=1e-5)
+
+
+def test_rows_sum_to_one_or_zero():
+    s = randn(2, 64, 64)
+    mask = rand_mask(3, 64, 64, 0.1)
+    p = np.asarray(masked_softmax(s, mask))
+    sums = p.sum(axis=-1)
+    active = np.asarray(mask).sum(axis=-1) > 0
+    np.testing.assert_allclose(sums[active], 1.0, rtol=1e-5)
+    np.testing.assert_allclose(sums[~active], 0.0, atol=0)
+
+
+def test_masked_positions_zero():
+    s = randn(4, 64, 64)
+    mask = rand_mask(5, 64, 64, 0.2)
+    p = np.asarray(masked_softmax(s, mask))
+    assert (p[np.asarray(mask) == 0] == 0).all()
+
+
+def test_full_mask_equals_plain_softmax():
+    s = randn(6, 32, 64)
+    ones = jnp.ones_like(s)
+    p = masked_softmax(s, ones)
+    expect = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    expect = expect / jnp.sum(expect, -1, keepdims=True)
+    assert_close(p, expect, rtol=1e-5)
+
+
+def test_numerically_stable_large_values():
+    s = randn(7, 32, 32) * 1e4
+    mask = rand_mask(8, 32, 32, 0.3)
+    p = np.asarray(masked_softmax(s, mask))
+    assert np.isfinite(p).all()
+
+
+def test_single_active_entry_gets_full_mass():
+    n = 32
+    s = randn(9, n, n)
+    mask = jnp.zeros((n, n), jnp.float32).at[:, 5].set(1.0)
+    p = np.asarray(masked_softmax(s, mask))
+    np.testing.assert_allclose(p[:, 5], 1.0, rtol=1e-6)
+
+
+def test_invariant_to_row_shift():
+    # softmax(x + c) == softmax(x) per row
+    s = randn(10, 32, 64)
+    mask = rand_mask(11, 32, 64, 0.4)
+    p1 = masked_softmax(s, mask)
+    p2 = masked_softmax(s + 42.0, mask)
+    assert_close(p1, p2, rtol=1e-5)
+
+
+@pytest.mark.parametrize("block_rows", [8, 16, 32, 64])
+def test_block_rows_equivalent(block_rows):
+    s = randn(12, 64, 64)
+    mask = rand_mask(13, 64, 64, 0.15)
+    assert_close(
+        masked_softmax(s, mask, block_rows=block_rows),
+        R.masked_softmax_ref(s, mask),
+        rtol=1e-5,
+    )

@@ -1,0 +1,75 @@
+"""Masked SpMM kernel vs oracle, plus reduction-tile skipping semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import masked_spmm
+from compile.kernels import ref as R
+
+from .conftest import assert_close, rand_mask, randn
+
+
+def _sparse(seed, n, m, density):
+    s = randn(seed, n, m)
+    mask = rand_mask(seed + 100, n, m, density)
+    return s * mask, mask
+
+
+@pytest.mark.parametrize("n,m,dv", [(32, 32, 32), (64, 64, 64), (64, 128, 32), (128, 64, 96)])
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.1, 0.5, 1.0])
+def test_matches_ref(n, m, dv, density):
+    s, mask = _sparse(0, n, m, density)
+    v = randn(1, m, dv)
+    assert_close(masked_spmm(s, v, mask), R.masked_spmm_ref(s, v, mask), rtol=1e-4)
+
+
+def test_empty_mask_gives_zero():
+    s = randn(2, 64, 64)
+    v = randn(3, 64, 32)
+    z = np.asarray(masked_spmm(s, v, jnp.zeros((64, 64), jnp.float32)))
+    assert (z == 0).all()
+
+
+def test_full_mask_equals_matmul():
+    s = randn(4, 64, 64)
+    v = randn(5, 64, 64)
+    assert_close(masked_spmm(s, v, jnp.ones((64, 64), jnp.float32)), s @ v, rtol=1e-4)
+
+
+def test_skipped_tiles_do_not_contribute():
+    # Put garbage in s where the mask is 0: a correct kernel never reads it.
+    n = 64
+    mask = jnp.zeros((n, n), jnp.float32).at[:32, :32].set(1.0)
+    s = randn(6, n, n) + 1e6 * (1 - mask)  # huge garbage off-mask
+    v = randn(7, n, 32)
+    z = np.asarray(masked_spmm(s, v, mask))
+    expect = np.asarray(R.masked_spmm_ref(s, v, mask))
+    # rows >= 32 have empty mask rows -> exactly zero, garbage never touched
+    assert (z[32:] == 0).all()
+    np.testing.assert_allclose(z[:32], expect[:32], rtol=1e-4, atol=1e-4)
+
+
+def test_identity_sparse_matrix():
+    n = 64
+    eye = jnp.eye(n, dtype=jnp.float32)
+    v = randn(8, n, 64)
+    assert_close(masked_spmm(eye, v, eye), v, rtol=1e-6)
+
+
+@pytest.mark.parametrize("block", [16, 32, 64])
+def test_block_size_invariance(block):
+    s, mask = _sparse(9, 64, 64, 0.1)
+    v = randn(10, 64, 64)
+    assert_close(
+        masked_spmm(s, v, mask, block=block), R.masked_spmm_ref(s, v, mask), rtol=1e-4
+    )
+
+
+def test_linearity_in_v():
+    s, mask = _sparse(11, 64, 64, 0.2)
+    v1 = randn(12, 64, 32)
+    v2 = randn(13, 64, 32)
+    z = masked_spmm(s, v1 + 2.0 * v2, mask)
+    z12 = masked_spmm(s, v1, mask) + 2.0 * masked_spmm(s, v2, mask)
+    assert_close(z, z12, rtol=1e-4)

@@ -1,0 +1,13 @@
+//! Bench: Fig. 3 regeneration (SANGER/DOTA response-time breakdown).
+
+use cpsaa::bench_harness::fig03;
+use cpsaa::config::SystemConfig;
+use cpsaa::util::bench::Bencher;
+
+fn main() {
+    let cfg = SystemConfig::paper();
+    let mut b = Bencher::new("fig03");
+    b.run("sanger_dota_breakdown", || fig03::run(&cfg));
+    println!("{}", fig03::run(&cfg));
+    b.finish();
+}

@@ -1,0 +1,15 @@
+//! Bench: Figs. 11 & 12 regeneration (platform comparison, 9 datasets).
+
+use cpsaa::bench_harness::fig11_12;
+use cpsaa::config::SystemConfig;
+use cpsaa::util::bench::Bencher;
+
+fn main() {
+    let cfg = SystemConfig::paper();
+    let mut b = Bencher::new("fig11_12");
+    b.run("time_normalized", || fig11_12::run_time(&cfg));
+    b.run("energy_normalized", || fig11_12::run_energy(&cfg));
+    println!("{}", fig11_12::run_time(&cfg));
+    println!("{}", fig11_12::run_energy(&cfg));
+    b.finish();
+}

@@ -1,0 +1,17 @@
+//! Bench: Figs. 13–15 regeneration (calculation-mode studies).
+
+use cpsaa::bench_harness::fig13_15;
+use cpsaa::config::SystemConfig;
+use cpsaa::util::bench::Bencher;
+
+fn main() {
+    let cfg = SystemConfig::paper();
+    let mut b = Bencher::new("fig13_15");
+    b.run("fig13_hybrids", || fig13_15::run_fig13(&cfg));
+    b.run("fig14_cpdaa", || fig13_15::run_fig14(&cfg));
+    b.run("fig15_w4w_parallelism", || fig13_15::run_fig15(&cfg));
+    println!("{}", fig13_15::run_fig13(&cfg));
+    println!("{}", fig13_15::run_fig14(&cfg));
+    println!("{}", fig13_15::run_fig15(&cfg));
+    b.finish();
+}

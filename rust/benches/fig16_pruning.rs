@@ -1,0 +1,13 @@
+//! Bench: Fig. 16 regeneration (PIM pruning vs SANGER).
+
+use cpsaa::bench_harness::fig16;
+use cpsaa::config::SystemConfig;
+use cpsaa::util::bench::Bencher;
+
+fn main() {
+    let cfg = SystemConfig::paper();
+    let mut b = Bencher::new("fig16");
+    b.run("pruning_comparison", || fig16::run(&cfg));
+    println!("{}", fig16::run(&cfg));
+    b.finish();
+}

@@ -1,0 +1,17 @@
+//! Bench: Figs. 17 & 19 regeneration (SDDMM/SpMM engine studies).
+
+use cpsaa::bench_harness::{fig17, fig19};
+use cpsaa::config::SystemConfig;
+use cpsaa::util::bench::Bencher;
+
+fn main() {
+    let cfg = SystemConfig::paper();
+    let mut b = Bencher::new("fig17_19");
+    b.run("fig17_vs_ddmm", || fig17::run(&cfg));
+    b.run("fig19a_crossbar_sweep", || fig19::run_a(&cfg));
+    b.run("fig19b_spmm_tradeoff", || fig19::run_b(&cfg));
+    println!("{}", fig17::run(&cfg));
+    println!("{}", fig19::run_a(&cfg));
+    println!("{}", fig19::run_b(&cfg));
+    b.finish();
+}

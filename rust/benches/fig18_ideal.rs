@@ -1,0 +1,13 @@
+//! Bench: Fig. 18 regeneration (ideal-situation study).
+
+use cpsaa::bench_harness::fig18;
+use cpsaa::config::SystemConfig;
+use cpsaa::util::bench::Bencher;
+
+fn main() {
+    let cfg = SystemConfig::paper();
+    let mut b = Bencher::new("fig18");
+    b.run("ideal_knobs", || fig18::run(&cfg));
+    println!("{}", fig18::run(&cfg));
+    b.finish();
+}

@@ -1,0 +1,15 @@
+//! Bench: Fig. 20 regeneration (scalability studies).
+
+use cpsaa::bench_harness::fig20;
+use cpsaa::config::SystemConfig;
+use cpsaa::util::bench::Bencher;
+
+fn main() {
+    let cfg = SystemConfig::paper();
+    let mut b = Bencher::new("fig20");
+    b.run("fig20a_dataset_size", || fig20::run_a(&cfg));
+    b.run("fig20b_encoder_layers", || fig20::run_b(&cfg));
+    println!("{}", fig20::run_a(&cfg));
+    println!("{}", fig20::run_b(&cfg));
+    b.finish();
+}

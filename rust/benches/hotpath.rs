@@ -1,0 +1,69 @@
+//! Bench: L3 hot paths — the targets of the §Perf optimization pass.
+//!
+//! Measures the simulator primitives (mask scan, SDDMM/SpMM dispatch,
+//! full pipeline), the golden-model matmul, and — when artifacts exist —
+//! the PJRT execute path the coordinator runs per batch.
+
+use cpsaa::attention::{self, Weights};
+use cpsaa::config::{ModelConfig, SystemConfig};
+use cpsaa::runtime::{ArtifactSet, Engine};
+use cpsaa::sim::{sddmm, spmm, ChipSim};
+use cpsaa::sparse::MaskMatrix;
+use cpsaa::tensor::SeededRng;
+use cpsaa::util::bench::Bencher;
+
+fn main() {
+    let cfg = SystemConfig::paper();
+    let mut b = Bencher::new("hotpath");
+    let n = cfg.model.seq_len;
+    let mask = MaskMatrix::from_dense(&SeededRng::new(1).mask_matrix(n, n, 0.1));
+
+    // -- simulator primitives ------------------------------------------------
+    b.run("mask_row_coords_320", || {
+        let mut total = 0usize;
+        for i in 0..mask.rows() {
+            total += mask.row_coords(i).len();
+        }
+        total
+    });
+    b.run("mask_block_counts_320", || mask.block_counts(32, 32).nonzero_tiles());
+    b.run("sddmm_dispatch_320x512", || sddmm::simulate(&cfg.hardware, &mask, 512).cycles);
+    b.run("spmm_dispatch_320x512", || spmm::simulate(&cfg.hardware, &mask, 512).cycles);
+
+    let sim = ChipSim::new(cfg.hardware.clone(), cfg.model.clone());
+    b.run("pipeline_batch_sparse", || sim.simulate_batch(&mask).breakdown.total_ns);
+
+    // -- golden model ----------------------------------------------------------
+    let model = ModelConfig { seq_len: 128, d_model: 256, ..cfg.model.clone() };
+    let w = Weights::synthetic(&model, 0);
+    let x = SeededRng::new(2).normal_matrix(model.seq_len, model.d_model, 1.0);
+    b.run("golden_mask_gen_128x256", || attention::generate_mask(&x, &w.w_s, &model).nnz());
+    let gmask = attention::generate_mask(&x, &w.w_s, &model);
+    b.run("golden_sparse_attention_128x256", || {
+        attention::cpsaa_attention(&x, &w.w_s, &w.w_v, &gmask, &model).norm()
+    });
+    b.run("golden_dense_attention_128x256", || {
+        attention::dense_attention(&x, &w.w_s, &w.w_v, &model).norm()
+    });
+
+    // -- PJRT path (needs artifacts) --------------------------------------------
+    let dir = std::path::PathBuf::from("artifacts");
+    if let Ok(set) = ArtifactSet::open(&dir) {
+        let engine = Engine::load(&set).expect("engine");
+        let fix = set.fixtures().expect("fixtures");
+        let wj = Weights::from_json_file(&set.dir.join("weights.json")).expect("weights");
+        b.run("pjrt_mask_gen", || engine.execute("mask_gen", &[&fix.x, &wj.w_s]).unwrap().len());
+        b.run("pjrt_sparse_attention", || {
+            engine.execute("sparse_attention", &[&fix.x, &wj.w_s, &wj.w_v]).unwrap().len()
+        });
+        b.run("pjrt_encoder_layer", || {
+            engine
+                .execute("encoder", &[&fix.x, &wj.w_s, &wj.w_v, &wj.w_fc1, &wj.w_fc2])
+                .unwrap()
+                .len()
+        });
+    } else {
+        println!("(artifacts missing — skipping PJRT benches; run `make artifacts`)");
+    }
+    b.finish();
+}

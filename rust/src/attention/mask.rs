@@ -1,0 +1,99 @@
+//! Pruning-phase mask generation — Step 1 of the dataflow (eq. 4).
+
+use crate::config::ModelConfig;
+use crate::sparse::MaskMatrix;
+use crate::tensor::Matrix;
+
+use super::quant;
+use super::softmax;
+
+/// mask = Bina(Soft(Q⁻¹(Q(X)·Q(W_S)·Q(Xᵀ)) / √d)) — the PIM pruning
+/// algorithm. Uses only `X` and the pre-quantized `W_S`, never `Q`/`K`:
+/// that independence is what lets Step 1 run concurrently with Step 2.
+pub fn generate(x: &Matrix, w_s: &Matrix, cfg: &ModelConfig) -> MaskMatrix {
+    let g = cfg.gamma;
+    let qx = quant::quantize(x, g, cfg.quant_bits);
+    let qws = quant::quantize(w_s, g, cfg.quant_bits);
+    let qxt = qx.transpose();
+    // Three quantized factors ⇒ de-quantization divides by γ³.
+    let s_hat = qx.matmul(&qws).matmul(&qxt).scale(1.0 / (g * g * g));
+    let s_hat = s_hat.scale(1.0 / (cfg.d_k as f32).sqrt());
+    let p = softmax::softmax(&s_hat);
+    binarize(&p, cfg.theta)
+}
+
+/// Eq. 1: G[i,j] = 1 iff S̃[i,j] ≥ θ — the Binarization Unit.
+pub fn binarize(p: &Matrix, theta: f32) -> MaskMatrix {
+    let mut mask = MaskMatrix::zeros(p.rows(), p.cols());
+    for i in 0..p.rows() {
+        for j in 0..p.cols() {
+            if p.get(i, j) >= theta {
+                mask.set(i, j, true);
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Weights;
+    use crate::tensor::SeededRng;
+
+    fn setup() -> (Matrix, Weights, ModelConfig) {
+        let cfg = ModelConfig { seq_len: 64, d_model: 64, ..Default::default() };
+        let w = Weights::synthetic(&cfg, 0);
+        let x = SeededRng::new(9).normal_matrix(cfg.seq_len, cfg.d_model, 1.0);
+        (x, w, cfg)
+    }
+
+    #[test]
+    fn mask_shape_and_binary() {
+        let (x, w, cfg) = setup();
+        let mask = generate(&x, &w.w_s, &cfg);
+        assert_eq!((mask.rows(), mask.cols()), (64, 64));
+    }
+
+    #[test]
+    fn density_in_sparse_regime() {
+        // Paper evaluation regime: ~0.1 density. Synthetic weights with the
+        // default sharpness land near it.
+        let (x, w, cfg) = setup();
+        let d = generate(&x, &w.w_s, &cfg).density();
+        assert!(d > 0.01 && d < 0.6, "density {d}");
+    }
+
+    #[test]
+    fn theta_monotone() {
+        // Larger theta ⇒ sparser mask (binarization threshold, eq. 1).
+        let (x, w, cfg) = setup();
+        let loose = generate(&x, &w.w_s, &ModelConfig { theta: 0.005, ..cfg.clone() });
+        let tight = generate(&x, &w.w_s, &ModelConfig { theta: 0.05, ..cfg });
+        assert!(tight.nnz() <= loose.nnz());
+        // And tight ⊆ loose:
+        for i in 0..tight.rows() {
+            for j in tight.row_coords(i) {
+                assert!(loose.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn every_row_keeps_something_at_tiny_theta() {
+        // theta below 1/seq_len keeps at least the argmax of every row
+        // (softmax rows sum to 1 over seq_len entries).
+        let (x, w, cfg) = setup();
+        let mask = generate(&x, &w.w_s, &ModelConfig { theta: 1.0 / 64.0 / 2.0, ..cfg });
+        for i in 0..mask.rows() {
+            assert!(mask.row_nnz(i) >= 1, "row {i} empty");
+        }
+    }
+
+    #[test]
+    fn binarize_threshold_inclusive() {
+        let p = Matrix::from_vec(1, 3, vec![0.1, 0.2, 0.3]);
+        let m = binarize(&p, 0.2);
+        assert!(!m.get(0, 0) && m.get(0, 1) && m.get(0, 2));
+    }
+}

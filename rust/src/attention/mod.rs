@@ -1,0 +1,21 @@
+//! Functional golden model of the CPSAA dataflow, in pure rust.
+//!
+//! Mirrors `python/compile/model.py` op-for-op so the simulator and the
+//! coordinator can validate numerics without touching PJRT, and so the
+//! PJRT integration tests have a second, independent oracle. The paper's
+//! phases map to:
+//!
+//! * [`mask::generate`] — Step 1, eq. 4 (PIM pruning)
+//! * [`ops::cpsaa_attention`] — Steps 2–4, eq. 3 (SDDMM → softmax → SpMM)
+//! * [`ops::dense_attention`] — the CPDAA dense mode of Fig. 14
+//! * [`ops::vanilla_attention`] — Fig. 1a, used to prove eq. 2 ≡ eq. 3
+
+pub mod mask;
+pub mod ops;
+pub mod quant;
+pub mod softmax;
+pub mod weights;
+
+pub use mask::generate as generate_mask;
+pub use ops::{cpsaa_attention, dense_attention, vanilla_attention};
+pub use weights::Weights;

@@ -1,0 +1,178 @@
+//! Attention calculation phase — Steps 2–4 (eq. 3) plus reference modes.
+
+use crate::config::ModelConfig;
+use crate::sparse::{CsrMatrix, MaskMatrix};
+use crate::tensor::Matrix;
+
+use super::softmax;
+
+/// Masked SDDMM: `mask ⊙ (a @ b)` — Step 3's S = M·Xᵀ restricted to the
+/// mask. Computed sparsely: only masked coordinates are evaluated, exactly
+/// the work the crossbar SDDMM engine performs.
+pub fn masked_sddmm(a: &Matrix, b: &Matrix, mask: &MaskMatrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows());
+    assert_eq!((mask.rows(), mask.cols()), (a.rows(), b.cols()));
+    let k = a.cols();
+    let bt = b.transpose(); // stream b's columns as rows
+    let mut out = Matrix::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        let arow = a.row(i);
+        for j in mask.row_coords(i) {
+            let brow = bt.row(j);
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            out.set(i, j, acc);
+        }
+    }
+    out
+}
+
+/// CPSAA attention (Steps 2–4): M = X·W_S, V = X·W_V,
+/// S = mask ⊙ (M·Xᵀ)/√d_k, P = masked softmax, Z = P·V.
+pub fn cpsaa_attention(x: &Matrix, w_s: &Matrix, w_v: &Matrix, mask: &MaskMatrix, cfg: &ModelConfig) -> Matrix {
+    let m = x.matmul(w_s);
+    let v = x.matmul(w_v);
+    let s = masked_sddmm(&m, &x.transpose(), mask).scale(1.0 / (cfg.d_k as f32).sqrt());
+    let mut p = CsrMatrix::from_dense_masked(&s, mask);
+    p.softmax_rows();
+    p.spmm(&v)
+}
+
+/// CPDAA: the dense calculation mode (all-ones mask) of Fig. 14.
+pub fn dense_attention(x: &Matrix, w_s: &Matrix, w_v: &Matrix, cfg: &ModelConfig) -> Matrix {
+    let s = x.matmul(w_s).matmul(&x.transpose()).scale(1.0 / (cfg.d_k as f32).sqrt());
+    let p = softmax::softmax(&s);
+    p.matmul(&x.matmul(w_v))
+}
+
+/// Vanilla attention (Fig. 1a) via explicit Q and K — used by tests to
+/// prove the eq. 2 ≡ eq. 3 folding and by the ReBERT/ReTransformer
+/// baseline cost models for their operation counts.
+pub fn vanilla_attention(x: &Matrix, w_q: &Matrix, w_k: &Matrix, w_v: &Matrix, d_k: usize) -> Matrix {
+    let q = x.matmul(w_q);
+    let k = x.matmul(w_k);
+    let s = q.matmul(&k.transpose()).scale(1.0 / (d_k as f32).sqrt());
+    let p = softmax::softmax(&s);
+    p.matmul(&x.matmul(w_v))
+}
+
+/// One encoder layer (§4.5): sparse attention + FC block with residual +
+/// RMS norm, mirroring `model.encoder_layer`.
+pub fn encoder_layer(
+    x: &Matrix,
+    w: &super::Weights,
+    mask: &MaskMatrix,
+    cfg: &ModelConfig,
+) -> Matrix {
+    let z = cpsaa_attention(x, &w.w_s, &w.w_v, mask, cfg);
+    let h = rms_norm(&x.add(&z));
+    let ff = h.matmul(&w.w_fc1).map(gelu).matmul(&w.w_fc2);
+    rms_norm(&h.add(&ff))
+}
+
+fn gelu(x: f32) -> f32 {
+    // tanh approximation, matching jax.nn.gelu's default
+    let c = (2.0 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn rms_norm(x: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(x.rows(), x.cols());
+    let n = x.cols() as f32;
+    for i in 0..x.rows() {
+        let row = x.row(i);
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / n;
+        let scale = 1.0 / (ms + 1e-6).sqrt();
+        for (j, &v) in row.iter().enumerate() {
+            out.set(i, j, v * scale);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{generate_mask, Weights};
+    use crate::tensor::SeededRng;
+
+    fn setup(seq: usize, d: usize) -> (Matrix, Weights, ModelConfig) {
+        let cfg = ModelConfig { seq_len: seq, d_model: d, ..Default::default() };
+        let w = Weights::synthetic(&cfg, 0);
+        let x = SeededRng::new(9).normal_matrix(seq, d, 1.0);
+        (x, w, cfg)
+    }
+
+    #[test]
+    fn sddmm_matches_masked_matmul() {
+        let mut rng = SeededRng::new(1);
+        let a = rng.normal_matrix(16, 24, 1.0);
+        let b = rng.normal_matrix(24, 16, 1.0);
+        let mask = MaskMatrix::from_dense(&rng.mask_matrix(16, 16, 0.3));
+        let got = masked_sddmm(&a, &b, &mask);
+        let full = a.matmul(&b);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if mask.get(i, j) { full.get(i, j) } else { 0.0 };
+                assert!((got.get(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_mode_equals_full_mask_sparse_mode() {
+        let (x, w, cfg) = setup(32, 64);
+        let ones = MaskMatrix::ones(32, 32);
+        let zd = dense_attention(&x, &w.w_s, &w.w_v, &cfg);
+        let zs = cpsaa_attention(&x, &w.w_s, &w.w_v, &ones, &cfg);
+        assert!(zd.rel_err(&zs) < 1e-4, "{}", zd.rel_err(&zs));
+    }
+
+    #[test]
+    fn eq2_equals_eq3() {
+        // vanilla attention with (w_q, w_k) == CPSAA mode with w_s = w_q w_k^T
+        let cfg = ModelConfig { seq_len: 32, d_model: 48, d_k: 16, ..Default::default() };
+        let mut rng = SeededRng::new(2);
+        let w_q = rng.normal_matrix(48, 16, 0.3);
+        let w_k = rng.normal_matrix(48, 16, 0.3);
+        let w_v = rng.normal_matrix(48, 48, 0.3);
+        let x = rng.normal_matrix(32, 48, 1.0);
+        let w_s = w_q.matmul(&w_k.transpose());
+        let z2 = vanilla_attention(&x, &w_q, &w_k, &w_v, 16);
+        let z3 = dense_attention(&x, &w_s, &w_v, &cfg);
+        assert!(z2.rel_err(&z3) < 1e-3, "{}", z2.rel_err(&z3));
+    }
+
+    #[test]
+    fn sparse_close_to_dense_at_paper_sparsity() {
+        let (x, w, cfg) = setup(64, 128);
+        let mask = generate_mask(&x, &w.w_s, &cfg);
+        let zs = cpsaa_attention(&x, &w.w_s, &w.w_v, &mask, &cfg);
+        let zd = dense_attention(&x, &w.w_s, &w.w_v, &cfg);
+        let rel = zs.rel_err(&zd);
+        assert!(rel < 0.35, "mask fidelity {rel} (density {})", mask.density());
+    }
+
+    #[test]
+    fn encoder_layer_finite_and_stackable() {
+        let (x, w, cfg) = setup(32, 64);
+        let mask = generate_mask(&x, &w.w_s, &cfg);
+        let mut h = encoder_layer(&x, &w, &mask, &cfg);
+        for _ in 0..3 {
+            let m = generate_mask(&h, &w.w_s, &cfg);
+            h = encoder_layer(&h, &w, &m, &cfg);
+        }
+        assert!(h.all_finite());
+        assert_eq!(h.shape(), (32, 64));
+    }
+
+    #[test]
+    fn empty_mask_attention_is_zero() {
+        let (x, w, cfg) = setup(32, 64);
+        let empty = MaskMatrix::zeros(32, 32);
+        let z = cpsaa_attention(&x, &w.w_s, &w.w_v, &empty, &cfg);
+        assert_eq!(z.norm(), 0.0);
+    }
+}

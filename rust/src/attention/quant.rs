@@ -1,0 +1,69 @@
+//! The paper's quantization operator Q(x) = round(γx) and its inverse.
+
+use crate::tensor::Matrix;
+
+/// Symmetric grid bound for a signed `bits`-bit quantizer (e.g. 4 → ±7).
+pub fn grid_bound(bits: u32) -> f32 {
+    (2u32.pow(bits - 1) - 1) as f32
+}
+
+/// Q(x): round to the γ-scaled integer grid, clipped to `bits` bits.
+/// Values stay f32 — exactly the convention of the L1 kernel.
+pub fn quantize(x: &Matrix, gamma: f32, bits: u32) -> Matrix {
+    let hi = grid_bound(bits);
+    x.map(|v| (v * gamma).round_ties_even().clamp(-hi, hi))
+}
+
+/// Q⁻¹(x): undo the γ scaling.
+pub fn dequantize(x: &Matrix, gamma: f32) -> Matrix {
+    x.map(|v| v / gamma)
+}
+
+/// Q⁻¹(Q(x)) — the effective value entering the pruning matmul.
+pub fn roundtrip(x: &Matrix, gamma: f32, bits: u32) -> Matrix {
+    dequantize(&quantize(x, gamma, bits), gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    #[test]
+    fn grid_bounds() {
+        assert_eq!(grid_bound(4), 7.0);
+        assert_eq!(grid_bound(8), 127.0);
+        assert_eq!(grid_bound(2), 1.0);
+    }
+
+    #[test]
+    fn values_are_clipped_integers() {
+        let x = SeededRng::new(0).normal_matrix(32, 32, 10.0);
+        let q = quantize(&x, 4.0, 4);
+        for &v in q.data() {
+            assert_eq!(v, v.round());
+            assert!((-7.0..=7.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_in_range() {
+        let x = SeededRng::new(1).normal_matrix(32, 32, 0.1); // well inside range
+        let r = roundtrip(&x, 8.0, 4);
+        assert!(x.max_abs_diff(&r) <= 0.5 / 8.0 + 1e-6);
+    }
+
+    #[test]
+    fn zero_preserved() {
+        let z = Matrix::zeros(8, 8);
+        assert_eq!(quantize(&z, 4.0, 4), z);
+    }
+
+    #[test]
+    fn idempotent_on_grid() {
+        let x = SeededRng::new(2).normal_matrix(16, 16, 1.0);
+        let q1 = quantize(&x, 4.0, 4);
+        let q2 = quantize(&dequantize(&q1, 4.0), 4.0, 4);
+        assert_eq!(q1, q2);
+    }
+}

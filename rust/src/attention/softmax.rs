@@ -1,0 +1,85 @@
+//! Masked row softmax — the Softmax Unit (SU, Fig. 6b) semantics.
+
+use crate::sparse::MaskMatrix;
+use crate::tensor::Matrix;
+
+/// Row softmax restricted to positions where `mask` is set; rows with no
+/// active entry become all-zero (the SU skips them). Matches the L1
+/// `masked_softmax` kernel and `ref.masked_softmax_ref`.
+pub fn masked_softmax(s: &Matrix, mask: &MaskMatrix) -> Matrix {
+    assert_eq!((s.rows(), s.cols()), (mask.rows(), mask.cols()));
+    let mut out = Matrix::zeros(s.rows(), s.cols());
+    for i in 0..s.rows() {
+        let coords = mask.row_coords(i);
+        if coords.is_empty() {
+            continue;
+        }
+        let max = coords.iter().map(|&j| s.get(i, j)).fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0;
+        for &j in &coords {
+            let e = (s.get(i, j) - max).exp();
+            out.set(i, j, e);
+            denom += e;
+        }
+        for &j in &coords {
+            out.set(i, j, out.get(i, j) / denom);
+        }
+    }
+    out
+}
+
+/// Plain (unmasked) row softmax.
+pub fn softmax(s: &Matrix) -> Matrix {
+    masked_softmax(s, &MaskMatrix::ones(s.rows(), s.cols()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    #[test]
+    fn rows_sum_to_one_or_zero() {
+        let mut rng = SeededRng::new(0);
+        let s = rng.normal_matrix(16, 16, 2.0);
+        let mask = MaskMatrix::from_dense(&rng.mask_matrix(16, 16, 0.2));
+        let p = masked_softmax(&s, &mask);
+        for i in 0..16 {
+            let sum: f32 = p.row(i).iter().sum();
+            if mask.row_nnz(i) > 0 {
+                assert!((sum - 1.0).abs() < 1e-5);
+            } else {
+                assert_eq!(sum, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_positions_zero() {
+        let mut rng = SeededRng::new(1);
+        let s = rng.normal_matrix(8, 8, 1.0);
+        let mask = MaskMatrix::from_dense(&rng.mask_matrix(8, 8, 0.3));
+        let p = masked_softmax(&s, &mask);
+        for i in 0..8 {
+            for j in 0..8 {
+                if !mask.get(i, j) {
+                    assert_eq!(p.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stable_under_large_logits() {
+        let s = SeededRng::new(2).normal_matrix(8, 8, 1e4);
+        let p = softmax(&s);
+        assert!(p.all_finite());
+    }
+
+    #[test]
+    fn shift_invariant() {
+        let s = SeededRng::new(3).normal_matrix(8, 8, 1.0);
+        let shifted = s.map(|v| v + 42.0);
+        assert!(softmax(&s).max_abs_diff(&softmax(&shifted)) < 1e-5);
+    }
+}

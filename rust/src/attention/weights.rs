@@ -1,0 +1,109 @@
+//! Synthetic model weights mirroring `python/compile/model.py::init_weights`.
+//!
+//! Not bit-identical to the JAX weights (different RNG); numerical
+//! cross-checks against the python side go through `artifacts/weights.json`
+//! (see [`Weights::from_json_file`]). The seeded constructor exists so the
+//! simulator and benches can run without artifacts.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::{Matrix, SeededRng};
+use crate::util::json::Json;
+
+/// One attention layer's weights in the CPSAA storage layout:
+/// the *folded* `w_s = w_q @ w_k^T` plus `w_v` (ROA contents) and the
+/// FC block (the ISAAC-style encoder tail, §4.5).
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub w_s: Matrix,
+    pub w_v: Matrix,
+    pub w_fc1: Matrix,
+    pub w_fc2: Matrix,
+}
+
+impl Weights {
+    /// Deterministic synthetic weights (see ModelConfig::sharpness for why
+    /// the attention logits are scaled).
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Self {
+        let d = cfg.d_model;
+        let dk = cfg.d_k;
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut rng = SeededRng::new(seed);
+        let w_q = rng.normal_matrix(d, dk, scale * cfg.sharpness);
+        let w_k = rng.normal_matrix(d, dk, scale);
+        Self {
+            w_s: w_q.matmul(&w_k.transpose()),
+            w_v: rng.normal_matrix(d, d, scale),
+            w_fc1: rng.normal_matrix(d, cfg.d_ff, scale),
+            w_fc2: rng.normal_matrix(cfg.d_ff, d, scale),
+        }
+    }
+
+    /// Load the exact weights the AOT pass emitted (artifacts/weights.json)
+    /// so PJRT executions reproduce the python fixtures bit-for-bit.
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let raw = Json::parse(&text).context("parsing weights.json")?;
+        Ok(Self {
+            w_s: matrix_field(&raw, "w_s")?,
+            w_v: matrix_field(&raw, "w_v")?,
+            w_fc1: matrix_field(&raw, "w_fc1")?,
+            w_fc2: matrix_field(&raw, "w_fc2")?,
+        })
+    }
+}
+
+/// Parse one `{"shape": [r, c], "data": [...]}` entry.
+pub(crate) fn matrix_field(obj: &Json, name: &str) -> Result<Matrix> {
+    let a = obj.get(name).with_context(|| format!("weights.json missing {name}"))?;
+    json_matrix(a).with_context(|| format!("field {name}"))
+}
+
+/// Convert a `{"shape": [r, c], "data": [...]}` JSON object to a Matrix.
+pub(crate) fn json_matrix(a: &Json) -> Result<Matrix> {
+    let shape = a.get("shape")?.as_arr()?;
+    if shape.len() != 2 {
+        return Err(anyhow!("not 2-D: {shape:?}"));
+    }
+    let rows = shape[0].as_usize()?;
+    let cols = shape[1].as_usize()?;
+    Ok(Matrix::from_vec(rows, cols, a.get("data")?.as_f32_vec()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_shapes() {
+        let cfg = ModelConfig { seq_len: 32, d_model: 64, d_k: 16, d_ff: 128, ..Default::default() };
+        let w = Weights::synthetic(&cfg, 0);
+        assert_eq!(w.w_s.shape(), (64, 64));
+        assert_eq!(w.w_v.shape(), (64, 64));
+        assert_eq!(w.w_fc1.shape(), (64, 128));
+        assert_eq!(w.w_fc2.shape(), (128, 64));
+    }
+
+    #[test]
+    fn synthetic_deterministic() {
+        let cfg = ModelConfig::default();
+        let a = Weights::synthetic(&cfg, 5);
+        let b = Weights::synthetic(&cfg, 5);
+        assert_eq!(a.w_s, b.w_s);
+    }
+
+    #[test]
+    fn ws_rank_bounded_by_dk() {
+        // w_s = w_q @ w_k^T has rank <= d_k: column space dimension check
+        // via a cheap proxy — w_s columns are combinations of w_q columns.
+        let cfg = ModelConfig { d_model: 32, d_k: 4, ..Default::default() };
+        let w = Weights::synthetic(&cfg, 1);
+        assert_eq!(w.w_s.shape(), (32, 32));
+        // Frobenius norm of w_s must be finite and nonzero.
+        assert!(w.w_s.norm() > 0.0 && w.w_s.norm().is_finite());
+    }
+}

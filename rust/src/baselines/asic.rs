@@ -1,0 +1,235 @@
+//! SANGER and DOTA — ASIC sparse-attention accelerators (§2.4, Fig. 3).
+//!
+//! Both pair a software pruning phase (off-chip: Q/K fetched to the
+//! processor, score predicted, mask emitted) with an on-chip sparse
+//! attention engine. The models reproduce the paper's measured structure:
+//!
+//! * MA-GE ≈ 17.9% of response time for SANGER (14.3% DOTA), of which
+//!   ≈ 94.6% (92.7%) is memory time;
+//! * AT-CA memory share ≈ 71.2% (63.5%);
+//! * SANGER's split-and-pack reconfiguration charges control time per
+//!   scheduled row (the Fig. 16 CTRL-T gap vs. CPSAA's ReCAM scheduler).
+
+use crate::config::ModelConfig;
+use crate::workload::BatchStats;
+
+use super::{gops_from, Platform, PlatformReport};
+
+/// Shared ASIC substrate parameters.
+#[derive(Clone, Debug)]
+pub struct AsicParams {
+    /// Sustained MAC throughput of the PE array (GFLOPs).
+    pub pe_gflops: f64,
+    /// Effective DRAM bandwidth of the pruning phase (GB/s) — Q/K streamed
+    /// with quantization passes and row-granular access.
+    pub mage_eff_gbps: f64,
+    /// Effective DRAM bandwidth of the attention phase (GB/s) — the
+    /// unstructured sparse S gathers cut deep into the HBM peak.
+    pub atca_eff_gbps: f64,
+    /// Chip power (W).
+    pub power_w: f64,
+    /// Pruning arithmetic precision speedup (4-bit ⇒ up to 16×).
+    pub quant_speedup: f64,
+    /// Control/reconfiguration time per scheduled score row (ns).
+    pub ctrl_per_row_ns: f64,
+}
+
+/// SANGER [31]: prediction-based pruning + split-and-pack PEs.
+pub struct Sanger(pub AsicParams);
+
+impl Default for Sanger {
+    fn default() -> Self {
+        // Calibrated to the paper's measurements: 513 GOPS @ 22.4 GOPS/W,
+        // MA-GE 17.9% of response time (94.6% memory), AT-CA 71.2% memory.
+        Self(AsicParams {
+            pe_gflops: 1850.0,
+            mage_eff_gbps: 20.0,
+            atca_eff_gbps: 6.6,
+            power_w: 22.9,
+            quant_speedup: 16.0,
+            ctrl_per_row_ns: 180.0, // split-and-pack reconfiguration
+        })
+    }
+}
+
+/// DOTA [34]: weak-connection detector + lightweight scheduling.
+pub struct Dota(pub AsicParams);
+
+impl Default for Dota {
+    fn default() -> Self {
+        // Paper: MA-GE 14.3% (92.7% memory), AT-CA 63.5% memory.
+        Self(AsicParams {
+            pe_gflops: 2200.0,
+            mage_eff_gbps: 24.0,
+            atca_eff_gbps: 8.5,
+            power_w: 24.0,
+            quant_speedup: 16.0,
+            ctrl_per_row_ns: 60.0, // cheaper scheduler than split-and-pack
+        })
+    }
+}
+
+/// Structural cost model shared by both ASICs.
+pub(crate) fn asic_report(
+    name: &'static str,
+    p: &AsicParams,
+    model: &ModelConfig,
+    stats: &BatchStats,
+) -> PlatformReport {
+    let n = model.seq_len as f64;
+    let d = model.d_model as f64;
+
+    // ---- MA-GE: software pruning --------------------------------------------
+    // Q and K fetched from DRAM, low-precision score computed, mask stored.
+    let mage_bytes = (2.0 * n * d + n * n * 0.25 + 2.0 * d * d) * 4.0;
+    let mage_mem = mage_bytes / p.mage_eff_gbps;
+    // Low-precision prediction matmuls: Q·Kᵀ at quantized width,
+    // plus the Q/K generation the paper counts against SANGER (VMM-N).
+    let mage_flops = 2.0 * (n * d * d * 2.0 + n * n * d) / p.quant_speedup;
+    let mage_proc = mage_flops / p.pe_gflops;
+
+    // ---- AT-CA: sparse attention on the PE array -----------------------------
+    let kept = stats.mask_density;
+    // Useful flops: dense projections + masked score/context matmuls.
+    let atca_flops = 2.0 * (2.0 * n * d * d + 2.0 * kept * n * n * d);
+    let atca_proc = atca_flops / p.pe_gflops + n * p.ctrl_per_row_ns;
+    // All operands round-trip DRAM (Q, K, V, dense-scored S streamed out
+    // for packing + the packed sparse S back in with metadata, Z).
+    let atca_bytes = (3.0 * n * d + n * n + 2.0 * kept * n * n * 1.5 + 2.0 * n * d) * 4.0;
+    let atca_mem = atca_bytes / p.atca_eff_gbps;
+
+    // Pruning runs *serially before* attention on both ASICs (the paper's
+    // criticism); memory and compute within a phase overlap partially.
+    let phase = |mem: f64, proc: f64| mem.max(proc) + 0.4 * mem.min(proc);
+    let total_ns = phase(mage_mem, mage_proc) + phase(atca_mem, atca_proc);
+
+    let gops = gops_from(model, total_ns);
+    PlatformReport {
+        name,
+        total_ns,
+        energy_pj: p.power_w * total_ns * 1000.0,
+        gops,
+        gops_per_watt: gops / p.power_w,
+        wait_for_write_ns: 0.0,
+        peak_parallel_arrays: 0,
+        mage: (mage_mem, mage_proc),
+        atca: (atca_mem, atca_proc),
+    }
+}
+
+impl Platform for Sanger {
+    fn name(&self) -> &'static str {
+        "SANGER"
+    }
+
+    fn run_batch(&self, model: &ModelConfig, stats: &BatchStats) -> PlatformReport {
+        asic_report(self.name(), &self.0, model, stats)
+    }
+}
+
+impl Platform for Dota {
+    fn name(&self) -> &'static str {
+        "DOTA"
+    }
+
+    fn run_batch(&self, model: &ModelConfig, stats: &BatchStats) -> PlatformReport {
+        asic_report(self.name(), &self.0, model, stats)
+    }
+}
+
+/// SANGER pruning-phase detail for Fig. 16 (vs. CPSAA's PIM pruning).
+pub struct SangerPruningDetail {
+    pub pruning_ns: f64,
+    pub vmm_ops: u64,
+    pub ctrl_ns: f64,
+}
+
+impl Sanger {
+    pub fn pruning_detail(&self, model: &ModelConfig) -> SangerPruningDetail {
+        let n = model.seq_len as f64;
+        let d = model.d_model as f64;
+        let r = asic_report("SANGER", &self.0, model, &BatchStats {
+            seq_len: model.seq_len,
+            d_model: model.d_model,
+            mask_nnz: 0,
+            mask_density: 0.1,
+        });
+        // VMM operation count (Fig. 16 VMM-N): counted as *serial VMM
+        // dispatch rounds*. SANGER's PE dataflow streams one score row per
+        // round and must first generate Q and K row-by-row (3 passes over
+        // the n rows); CPSAA's eq. 4 needs only its two in-memory matmuls,
+        // whose dispatch rounds the pruning simulator reports.
+        let _ = d;
+        let vmm_ops = (3.0 * n) as u64;
+        SangerPruningDetail {
+            pruning_ns: r.mage.0 + r.mage.1,
+            vmm_ops,
+            ctrl_ns: n * self.0.ctrl_per_row_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(model: &ModelConfig, density: f64) -> BatchStats {
+        BatchStats {
+            seq_len: model.seq_len,
+            d_model: model.d_model,
+            mask_nnz: (density * (model.seq_len * model.seq_len) as f64) as usize,
+            mask_density: density,
+        }
+    }
+
+    #[test]
+    fn sanger_near_paper_average() {
+        let m = ModelConfig::paper();
+        let r = Sanger::default().run_batch(&m, &stats(&m, 0.1));
+        // Paper: 513 GOPS @ 22.4 GOPS/W.
+        assert!(r.gops > 150.0 && r.gops < 1500.0, "gops {}", r.gops);
+        assert!(r.gops_per_watt > 7.0 && r.gops_per_watt < 70.0, "gpw {}", r.gops_per_watt);
+    }
+
+    #[test]
+    fn fig3_structure_sanger() {
+        let m = ModelConfig::paper();
+        let r = Sanger::default().run_batch(&m, &stats(&m, 0.1));
+        let f = r.fig3_fractions();
+        let mage = f[0] + f[1];
+        // Paper: MA-GE ≈ 17.9%, memory-dominated (94.6%).
+        assert!(mage > 0.05 && mage < 0.40, "MA-GE share {mage}");
+        assert!(f[0] / mage > 0.7, "MA-GE memory share {}", f[0] / mage);
+        // AT-CA memory share ≈ 71.2% (allow slack).
+        let atca_mem_share = f[2] / (f[2] + f[3]);
+        assert!(atca_mem_share > 0.35, "AT-CA mem share {atca_mem_share}");
+    }
+
+    #[test]
+    fn dota_mage_share_smaller_than_sanger() {
+        let m = ModelConfig::paper();
+        let s = Sanger::default().run_batch(&m, &stats(&m, 0.1));
+        let d = Dota::default().run_batch(&m, &stats(&m, 0.1));
+        let share = |r: &PlatformReport| {
+            let f = r.fig3_fractions();
+            f[0] + f[1]
+        };
+        assert!(share(&d) < share(&s) + 0.02);
+    }
+
+    #[test]
+    fn sanger_beats_gpu() {
+        // Paper: SANGER ≈ 5.03× GPU.
+        let m = ModelConfig::paper();
+        let s = Sanger::default().run_batch(&m, &stats(&m, 0.1));
+        let g = super::super::device::Gpu::default().run_batch(&m, &stats(&m, 0.1));
+        let ratio = s.gops / g.gops;
+        assert!(ratio > 1.5 && ratio < 20.0, "SANGER/GPU {ratio}");
+    }
+
+    #[test]
+    fn pruning_detail_positive() {
+        let d = Sanger::default().pruning_detail(&ModelConfig::paper());
+        assert!(d.pruning_ns > 0.0 && d.vmm_ops > 0 && d.ctrl_ns > 0.0);
+    }
+}

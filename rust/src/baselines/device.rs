@@ -1,0 +1,213 @@
+//! GPU and FPGA baselines — von-Neumann platforms with off-chip weights.
+//!
+//! Both are roofline models: every operand round-trips DRAM, the
+//! attention matmuls are bandwidth-bound at these shapes, and sparse
+//! execution pays format-conversion overhead (the paper's cuSPARSE
+//! discussion, §5). Constants are the §5 platform specs; the calibration
+//! targets are the paper's measured averages (GPU ≈ 102 GOPS @ 0.63
+//! GOPS/W, FPGA ≈ 284 GOPS @ 8.6 GOPS/W).
+
+use crate::config::ModelConfig;
+use crate::workload::BatchStats;
+
+use super::{gops_from, Platform, PlatformReport};
+
+/// NVIDIA TITAN RTX running BigBird-style sparse attention.
+pub struct Gpu {
+    /// DRAM bandwidth (GB/s) — 672 for TITAN RTX.
+    pub dram_gbps: f64,
+    /// Sustained FP32 throughput on attention-shaped GEMMs (GFLOPs).
+    pub sustained_gflops: f64,
+    /// Board power (W).
+    pub tdp_w: f64,
+    /// Kernel-launch + framework overhead per phase (ns).
+    pub launch_ns: f64,
+}
+
+impl Default for Gpu {
+    fn default() -> Self {
+        Self {
+            // Effective bandwidth for attention-shaped access: BigBird's
+            // gather/scatter and short rows sustain ~10% of the 672 GB/s
+            // peak.
+            dram_gbps: 67.0,
+            // TITAN RTX peaks at 16.3 TFLOPs FP32; attention-shaped GEMMs
+            // at seq≈320 are occupancy/launch-bound and sustain ~1%
+            // (calibrated to the paper's measured 102 GOPS average).
+            sustained_gflops: 140.0,
+            tdp_w: 280.0,
+            launch_ns: 30_000.0,
+        }
+    }
+}
+
+impl Gpu {
+    /// Bytes moved off-chip for one batch: X in; Q,K,V materialized;
+    /// S (dense-scored then sparsified) out+in; Z out. BigBird's block
+    /// pattern saves some S traffic proportional to density.
+    fn bytes_moved(&self, model: &ModelConfig, stats: &BatchStats) -> f64 {
+        let n = model.seq_len as f64;
+        let d = model.d_model as f64;
+        let dense_s = n * n * 4.0;
+        let s_traffic = dense_s * (0.3 + stats.mask_density); // block pattern + metadata
+        let qkv = 3.0 * n * d * 4.0;
+        let x_z = 2.0 * n * d * 4.0;
+        let weights = 2.0 * d * d * 4.0; // streamed per batch window
+        x_z + qkv + 2.0 * s_traffic + weights
+    }
+}
+
+impl Platform for Gpu {
+    fn name(&self) -> &'static str {
+        "GPU"
+    }
+
+    fn run_batch(&self, model: &ModelConfig, stats: &BatchStats) -> PlatformReport {
+        let flops = model.attention_flops() as f64;
+        let compute_ns = flops / self.sustained_gflops; // GFLOP/s == flop/ns
+        let mem_ns = self.bytes_moved(model, stats) / self.dram_gbps;
+        // Memory and compute partially overlap (CUDA streams): the longer
+        // path dominates, the shorter contributes its non-overlapped 30%.
+        let (long, short) = if mem_ns > compute_ns { (mem_ns, compute_ns) } else { (compute_ns, mem_ns) };
+        let phase_ns = long + 0.3 * short;
+        // Pruning (BigBird pattern construction) is host-side: one pass
+        // over the score-shaped buffer plus launch overhead.
+        let mage_mem = (model.seq_len * model.seq_len) as f64 * 4.0 / self.dram_gbps * 2.0;
+        let mage_proc = self.launch_ns;
+        let total_ns = phase_ns + mage_mem + mage_proc + 2.0 * self.launch_ns;
+        let energy_pj = self.tdp_w * 0.6 * total_ns * 1000.0; // W×ns → pJ ×10³
+        let gops = gops_from(model, total_ns);
+        PlatformReport {
+            name: self.name(),
+            total_ns,
+            energy_pj,
+            gops,
+            gops_per_watt: gops / (self.tdp_w * 0.6),
+            wait_for_write_ns: 0.0,
+            peak_parallel_arrays: 0,
+            mage: (mage_mem, mage_proc),
+            atca: (mem_ns, compute_ns),
+        }
+    }
+}
+
+/// FPGA accelerator of Zhang et al. [58] (structural pruning co-design).
+pub struct Fpga {
+    /// DSP-sustained GFLOPs.
+    pub sustained_gflops: f64,
+    /// Off-chip bandwidth (GB/s) — DDR4 on the eval board.
+    pub dram_gbps: f64,
+    /// Board power (W).
+    pub power_w: f64,
+}
+
+impl Default for Fpga {
+    fn default() -> Self {
+        // Calibrated to [58]'s reported throughput class: ~284 GOPS at
+        // ~33 W on a DDR4-attached mid-range part.
+        Self { sustained_gflops: 190.0, dram_gbps: 19.2, power_w: 33.0 }
+    }
+}
+
+impl Platform for Fpga {
+    fn name(&self) -> &'static str {
+        "FPGA"
+    }
+
+    fn run_batch(&self, model: &ModelConfig, stats: &BatchStats) -> PlatformReport {
+        let n = model.seq_len as f64;
+        let d = model.d_model as f64;
+        // Static structured pruning ⇒ only the kept fraction computes, but
+        // coarse granularity keeps ~3× the mask density.
+        let kept = (3.0 * stats.mask_density).min(1.0);
+        let flops = model.attention_flops() as f64 * (0.5 + 0.5 * kept);
+        let compute_ns = flops / self.sustained_gflops;
+        let bytes = (2.0 * n * d + 2.0 * d * d + kept * n * n) * 4.0;
+        let mem_ns = bytes / self.dram_gbps;
+        // Weights stay on-chip (BRAM) after the first tile: traffic and
+        // compute pipeline tightly on FPGA dataflow designs.
+        let phase_ns = compute_ns.max(mem_ns) + 0.15 * compute_ns.min(mem_ns);
+        // Pruning is offline (static pattern): negligible MA-GE.
+        let mage = (0.01 * phase_ns, 0.01 * phase_ns);
+        let total_ns = phase_ns + mage.0 + mage.1;
+        let gops = gops_from(model, total_ns);
+        PlatformReport {
+            name: self.name(),
+            total_ns,
+            energy_pj: self.power_w * total_ns * 1000.0,
+            gops,
+            gops_per_watt: gops / self.power_w,
+            wait_for_write_ns: 0.0,
+            peak_parallel_arrays: 0,
+            mage,
+            atca: (mem_ns, compute_ns),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(model: &ModelConfig, density: f64) -> BatchStats {
+        BatchStats {
+            seq_len: model.seq_len,
+            d_model: model.d_model,
+            mask_nnz: (density * (model.seq_len * model.seq_len) as f64) as usize,
+            mask_density: density,
+        }
+    }
+
+    #[test]
+    fn gpu_near_paper_average() {
+        let m = ModelConfig::paper();
+        let r = Gpu::default().run_batch(&m, &stats(&m, 0.1));
+        // Paper: 102 GOPS, 0.63 GOPS/W — same order of magnitude.
+        assert!(r.gops > 30.0 && r.gops < 400.0, "gops {}", r.gops);
+        assert!(r.gops_per_watt > 0.1 && r.gops_per_watt < 3.0, "gpw {}", r.gops_per_watt);
+    }
+
+    #[test]
+    fn gpu_launch_and_compute_bound_at_short_sequences() {
+        // seq≈320 attention on a GPU is occupancy/launch bound, not
+        // bandwidth bound — that is exactly why its useful-op rate is two
+        // orders below peak.
+        let m = ModelConfig::paper();
+        let r = Gpu::default().run_batch(&m, &stats(&m, 0.1));
+        let (mem, proc) = r.atca;
+        assert!(proc > mem, "compute path should dominate: {proc} vs {mem}");
+    }
+
+    #[test]
+    fn fpga_near_paper_average() {
+        let m = ModelConfig::paper();
+        let r = Fpga::default().run_batch(&m, &stats(&m, 0.1));
+        // Paper: 284 GOPS, 8.6 GOPS/W.
+        assert!(r.gops > 80.0 && r.gops < 900.0, "gops {}", r.gops);
+        assert!(r.gops_per_watt > 2.0 && r.gops_per_watt < 30.0, "gpw {}", r.gops_per_watt);
+    }
+
+    #[test]
+    fn fpga_beats_gpu_in_efficiency() {
+        let m = ModelConfig::paper();
+        let g = Gpu::default().run_batch(&m, &stats(&m, 0.1));
+        let f = Fpga::default().run_batch(&m, &stats(&m, 0.1));
+        assert!(f.gops_per_watt > g.gops_per_watt);
+    }
+
+    #[test]
+    fn gpu_memory_time_nonzero() {
+        let m = ModelConfig::paper();
+        let r = Gpu::default().run_batch(&m, &stats(&m, 0.1));
+        let (mem, proc) = r.atca;
+        assert!(mem > 0.0 && proc > 0.0);
+    }
+
+    #[test]
+    fn denser_masks_slower() {
+        let m = ModelConfig::paper();
+        let lo = Gpu::default().run_batch(&m, &stats(&m, 0.05));
+        let hi = Gpu::default().run_batch(&m, &stats(&m, 0.5));
+        assert!(hi.total_ns > lo.total_ns);
+    }
+}

@@ -1,0 +1,87 @@
+//! Comparison platforms of the paper's evaluation (§5 / §6).
+//!
+//! Each baseline is a structural cost model exposing the same bottlenecks
+//! the paper attributes to it (DESIGN.md substitution table):
+//!
+//! | platform | module | modeled bottleneck |
+//! |---|---|---|
+//! | GPU (TITAN RTX + BigBird) | [`device::Gpu`] | off-chip bandwidth, sparse-format conversion |
+//! | FPGA [58] | [`device::Fpga`] | DSP peak, off-chip streaming |
+//! | SANGER (ASIC) | [`asic::Sanger`] | software pruning traffic, split-and-pack control |
+//! | DOTA (ASIC) | [`asic::Dota`] | detector pruning traffic |
+//! | ReBERT (PIM) | [`pim::ReBert`] | write-then-compute W4W |
+//! | ReTransformer (PIM) | [`pim::ReTransformer`] | serial dependency chain |
+//! | S-ReBERT / S-ReTransformer | [`pim`] hybrids | zero-gating SpMM (energy only) |
+//!
+//! All implement [`Platform`] so the bench harness sweeps them uniformly.
+
+pub mod asic;
+pub mod device;
+pub mod pim;
+
+use crate::config::ModelConfig;
+use crate::workload::BatchStats;
+
+/// Uniform per-batch result across platforms.
+#[derive(Clone, Debug)]
+pub struct PlatformReport {
+    pub name: &'static str,
+    /// End-to-end batch latency (ns).
+    pub total_ns: f64,
+    /// Energy (pJ).
+    pub energy_pj: f64,
+    /// Dense-equivalent throughput (GOPS).
+    pub gops: f64,
+    /// Energy efficiency (GOPS/W).
+    pub gops_per_watt: f64,
+    /// Time stalled waiting for ReRAM writes (PIM platforms; else 0).
+    pub wait_for_write_ns: f64,
+    /// Peak parallel VMM arrays (PIM platforms; else 0).
+    pub peak_parallel_arrays: u64,
+    /// Mask-generation (pruning) phase split: (memory ns, processor ns).
+    pub mage: (f64, f64),
+    /// Attention-calculation phase split: (memory ns, processor ns).
+    pub atca: (f64, f64),
+}
+
+impl PlatformReport {
+    /// Response-time fractions for Fig. 3: (MA-GE-M, MA-GE-P, AT-CA-M, AT-CA-P).
+    pub fn fig3_fractions(&self) -> [f64; 4] {
+        let total = (self.mage.0 + self.mage.1 + self.atca.0 + self.atca.1).max(1e-12);
+        [self.mage.0 / total, self.mage.1 / total, self.atca.0 / total, self.atca.1 / total]
+    }
+}
+
+/// A platform that can process one batch of the attention workload.
+pub trait Platform {
+    fn name(&self) -> &'static str;
+    /// Simulate one batch characterized by `stats` under `model` shapes.
+    fn run_batch(&self, model: &ModelConfig, stats: &BatchStats) -> PlatformReport;
+}
+
+pub(crate) fn gops_from(model: &ModelConfig, total_ns: f64) -> f64 {
+    model.attention_flops() as f64 / 1e9 / (total_ns * 1e-9).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_fractions_sum_to_one() {
+        let r = PlatformReport {
+            name: "x",
+            total_ns: 1.0,
+            energy_pj: 1.0,
+            gops: 1.0,
+            gops_per_watt: 1.0,
+            wait_for_write_ns: 0.0,
+            peak_parallel_arrays: 0,
+            mage: (10.0, 2.0),
+            atca: (60.0, 28.0),
+        };
+        let f = r.fig3_fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(f[0] > f[1]); // memory dominates pruning
+    }
+}

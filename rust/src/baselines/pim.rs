@@ -1,0 +1,263 @@
+//! ReBERT and ReTransformer — the PIM dense-attention baselines (§3).
+//!
+//! Both share CPSAA's crossbar substrate (same Table 2 arrays, "apple-to-
+//! apple", §5) but differ in **calculation mode** (Fig. 4):
+//!
+//! * **ReBERT** (write-then-calculate): Q, K, V computed concurrently
+//!   (max VMM parallelism) but S = Q·Kᵀ *waits for the full Kᵀ write* —
+//!   maximal W4W (Fig. 15: 1.94× ReTransformer).
+//! * **ReTransformer** (serial folding): Q → R = Q·Xᵀ → S → P → Z with no
+//!   K/V materialization — minimal writes but a strict dependency chain
+//!   that serializes every VMM (worst parallelism: Fig. 15 baseline).
+//!
+//! The `S-` hybrids append the zero-gating SpMM of Fig. 9 for Z = P·V:
+//! energy drops with density, cycles do not (Fig. 13).
+
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::sim::cost::{self, VmmOp};
+use crate::workload::BatchStats;
+
+use super::{gops_from, Platform, PlatformReport};
+
+/// Zero-gating SpMM option for the Z = P·V step (the `S-` variants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpmmKind {
+    /// Plain dense DDMM.
+    Dense,
+    /// Fig. 9 zero-gating: same cycles, energy scaled by density.
+    ZeroGated,
+}
+
+/// ReBERT [22].
+pub struct ReBert {
+    pub hw: HardwareConfig,
+    pub spmm: SpmmKind,
+}
+
+impl ReBert {
+    pub fn new(hw: HardwareConfig) -> Self {
+        Self { hw, spmm: SpmmKind::Dense }
+    }
+
+    /// The S-ReBERT hybrid of Fig. 13.
+    pub fn with_sparse_spmm(hw: HardwareConfig) -> Self {
+        Self { hw, spmm: SpmmKind::ZeroGated }
+    }
+}
+
+/// ReTransformer [52].
+pub struct ReTransformer {
+    pub hw: HardwareConfig,
+    pub spmm: SpmmKind,
+}
+
+impl ReTransformer {
+    pub fn new(hw: HardwareConfig) -> Self {
+        Self { hw, spmm: SpmmKind::Dense }
+    }
+
+    /// The S-ReTransformer hybrid of Fig. 13.
+    pub fn with_sparse_spmm(hw: HardwareConfig) -> Self {
+        Self { hw, spmm: SpmmKind::ZeroGated }
+    }
+}
+
+/// Convert accumulated VMM energy into a report, shared by both PIM modes.
+/// Adds the same static-power and on-chip-transfer shares the CPSAA
+/// [`ChipSim`](crate::sim::ChipSim) charges, so energy comparisons are
+/// apples-to-apples.
+fn pim_report(
+    name: &'static str,
+    hw: &HardwareConfig,
+    model: &ModelConfig,
+    total_ns: f64,
+    w4w_ns: f64,
+    vmm_energy_pj: f64,
+    peak_arrays: u64,
+) -> PlatformReport {
+    let gops = gops_from(model, total_ns);
+    let area = crate::sim::area::AreaModel::build(hw);
+    let n = model.seq_len;
+    let d = model.d_model;
+    let (_, xfer_pj) = cost::transfer(hw, ((n * d + n * model.d_k) * 4) as u64); // X in, Z out
+    let static_pj = area.chip_power_mw * cost::STATIC_SHARE * total_ns;
+    let energy_pj = vmm_energy_pj + xfer_pj + static_pj;
+    let watts = energy_pj * 1e-12 / (total_ns * 1e-9).max(1e-12) + area.chip_power_w() * 0.10;
+    PlatformReport {
+        name,
+        total_ns,
+        energy_pj,
+        gops,
+        gops_per_watt: gops / watts.max(1e-9),
+        wait_for_write_ns: w4w_ns,
+        peak_parallel_arrays: peak_arrays,
+        // PIM: no off-chip phases; mark all time as processor time.
+        mage: (0.0, 0.0),
+        atca: (0.0, total_ns),
+    }
+}
+
+impl Platform for ReBert {
+    fn name(&self) -> &'static str {
+        if self.spmm == SpmmKind::ZeroGated { "S-ReBERT" } else { "ReBERT" }
+    }
+
+    fn run_batch(&self, model: &ModelConfig, stats: &BatchStats) -> PlatformReport {
+        let hw = &self.hw;
+        let n = model.seq_len;
+        let d = model.d_model;
+        let dk = model.d_k;
+        let roa = cost::roa_arrays(hw);
+        let wea = cost::wea_arrays(hw);
+
+        // Q, K, V concurrently; ROA split proportionally to operand size.
+        // ReBERT maps each weight matrix exactly once — operand
+        // replication scheduling is a CPSAA (ReCAM/AIT) capability.
+        let layout = |k: usize, m: usize| m as u64 * cost::segments_per_column(hw, k);
+        let total_layout = 3 * layout(d, dk);
+        let share = |l: u64| (roa * l / total_layout).max(1);
+        let chain = |op, alloc| cost::vmm_cost_with_copies(hw, op, alloc, 1);
+        let q = chain(VmmOp { n, k: d, m: dk }, share(layout(d, dk)));
+        let k = chain(VmmOp { n, k: d, m: dk }, share(layout(d, dk)));
+        let v = chain(VmmOp { n, k: d, m: dk }, share(layout(d, dk)));
+        let t_qkv = q.ns.max(k.ns).max(v.ns);
+
+        // Write-then-calculate: S waits for the complete Kᵀ write; the V
+        // write follows on the same drivers before Z may run.
+        let w_kt = cost::write_matrix_ns(hw, dk, n);
+        let s = chain(VmmOp { n, k: dk, m: n }, wea / 2);
+        let softmax_ns = (n as f64 / hw.tiles as f64 + 4.0) * hw.cycle_ns;
+        let w_v = cost::write_matrix_ns(hw, n, dk);
+        let z = chain(VmmOp { n, k: n, m: dk }, wea / 2);
+
+        // Timeline: QKV → (wait Kᵀ write) → S → softmax → (wait V write) → Z.
+        let t1 = t_qkv + w_kt; // S start (write-then-calculate)
+        let t2 = t1 + s.ns + softmax_ns;
+        let v_ready = t_qkv + w_kt + w_v; // V queued behind Kᵀ on the drivers
+        let z_start = t2.max(v_ready);
+        let total = z_start + z.ns;
+        // Fig. 15 W4W: the write-then-calculate mode exposes both writes
+        // (computes are ordered strictly behind the writes they consume).
+        let w4w = w_kt + w_v;
+
+        let z_pj = match self.spmm {
+            SpmmKind::Dense => z.pj,
+            SpmmKind::ZeroGated => z.pj * stats.mask_density.max(0.02),
+        };
+        let write_pj = cost::write_matrix_pj(hw, dk, n) + cost::write_matrix_pj(hw, n, d);
+        let energy = q.pj + k.pj + v.pj + s.pj + z_pj + write_pj;
+
+        // Peak parallelism: three concurrent VMMs — Q, K, V together
+        // (Fig. 15: ≈2.88× ReTransformer's strictly serial chain).
+        pim_report(self.name(), hw, model, total, w4w, energy, 3)
+    }
+}
+
+impl Platform for ReTransformer {
+    fn name(&self) -> &'static str {
+        if self.spmm == SpmmKind::ZeroGated { "S-ReTransformer" } else { "ReTransformer" }
+    }
+
+    fn run_batch(&self, model: &ModelConfig, stats: &BatchStats) -> PlatformReport {
+        let hw = &self.hw;
+        let n = model.seq_len;
+        let d = model.d_model;
+        let dk = model.d_k;
+        let roa = cost::roa_arrays(hw);
+        let wea = cost::wea_arrays(hw);
+
+        // Serial chain (Fig. 4b): Q → R = Q·Xᵀ → softmax → P = S·X → Z = P·W_V.
+        // The strict dependency chain forbids replication/fan-out (each
+        // op's input streams from the previous op in row order): worst
+        // parallelism, minimal writes — exactly the paper's trade.
+        let chain = |op, alloc| cost::vmm_cost_with_copies(hw, op, alloc, 1);
+        let q = chain(VmmOp { n, k: d, m: dk }, roa);
+        let w_xt = cost::write_matrix_ns(hw, d, n); // overlaps Q compute
+        let r = chain(VmmOp { n, k: dk, m: n }, wea);
+        let softmax_ns = (n as f64 / hw.tiles as f64 + 4.0) * hw.cycle_ns;
+        let p = chain(VmmOp { n, k: n, m: d }, wea);
+        let z = chain(VmmOp { n, k: d, m: dk }, roa);
+
+        let w4w = (w_xt - q.ns).max(0.0); // only the overhang stalls
+        let total = q.ns.max(w_xt) + r.ns + softmax_ns + p.ns + z.ns;
+
+        let z_pj = match self.spmm {
+            SpmmKind::Dense => p.pj, // P = S·X is the sparse-able product here
+            SpmmKind::ZeroGated => p.pj * stats.mask_density.max(0.02),
+        };
+        let energy = q.pj + r.pj + z_pj + z.pj + cost::write_matrix_pj(hw, d, n);
+
+        // Peak parallelism: one VMM at a time (the Fig. 15 baseline = 1).
+        pim_report(self.name(), hw, model, total, w4w, energy, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (HardwareConfig, ModelConfig, BatchStats) {
+        let hw = HardwareConfig::paper();
+        let m = ModelConfig::paper();
+        let s = BatchStats { seq_len: m.seq_len, d_model: m.d_model, mask_nnz: 10240, mask_density: 0.1 };
+        (hw, m, s)
+    }
+
+    #[test]
+    fn rebert_w4w_exceeds_retransformer() {
+        // Fig. 15: ReBERT W4W ≈ 1.94× ReTransformer.
+        let (hw, m, s) = setup();
+        let rb = ReBert::new(hw.clone()).run_batch(&m, &s);
+        let rt = ReTransformer::new(hw).run_batch(&m, &s);
+        assert!(
+            rb.wait_for_write_ns > rt.wait_for_write_ns,
+            "rb {} rt {}",
+            rb.wait_for_write_ns,
+            rt.wait_for_write_ns
+        );
+    }
+
+    #[test]
+    fn rebert_parallelism_exceeds_retransformer() {
+        // Fig. 15: ReBERT parallelism ≈ 2.88× ReTransformer.
+        let (hw, m, s) = setup();
+        let rb = ReBert::new(hw.clone()).run_batch(&m, &s);
+        let rt = ReTransformer::new(hw).run_batch(&m, &s);
+        assert!(rb.peak_parallel_arrays > rt.peak_parallel_arrays);
+    }
+
+    #[test]
+    fn pim_beats_asic_and_gpu() {
+        // Fig. 11 ordering: ReBERT/ReTransformer ≫ SANGER ≫ GPU.
+        let (hw, m, s) = setup();
+        let rb = ReBert::new(hw.clone()).run_batch(&m, &s);
+        let sg = super::super::asic::Sanger::default().run_batch(&m, &s);
+        let gpu = super::super::device::Gpu::default().run_batch(&m, &s);
+        assert!(rb.gops > sg.gops, "rebert {} sanger {}", rb.gops, sg.gops);
+        assert!(sg.gops > gpu.gops);
+    }
+
+    #[test]
+    fn hybrids_save_energy_not_time() {
+        // Fig. 13: S-variants reduce energy but not latency.
+        let (hw, m, s) = setup();
+        let rb = ReBert::new(hw.clone()).run_batch(&m, &s);
+        let srb = ReBert::with_sparse_spmm(hw.clone()).run_batch(&m, &s);
+        assert!((srb.total_ns - rb.total_ns).abs() < 1e-9);
+        assert!(srb.energy_pj < rb.energy_pj);
+        let rt = ReTransformer::new(hw.clone()).run_batch(&m, &s);
+        let srt = ReTransformer::with_sparse_spmm(hw).run_batch(&m, &s);
+        assert!((srt.total_ns - rt.total_ns).abs() < 1e-9);
+        assert!(srt.energy_pj < rt.energy_pj);
+    }
+
+    #[test]
+    fn gops_in_paper_range() {
+        // Paper: ReBERT ≈ 2696 GOPS, ReTransformer ≈ 2381 GOPS.
+        let (hw, m, s) = setup();
+        let rb = ReBert::new(hw.clone()).run_batch(&m, &s);
+        let rt = ReTransformer::new(hw).run_batch(&m, &s);
+        assert!(rb.gops > 500.0 && rb.gops < 20_000.0, "rebert {}", rb.gops);
+        assert!(rt.gops > 500.0 && rt.gops < 20_000.0, "retransformer {}", rt.gops);
+    }
+}

@@ -1,0 +1,55 @@
+//! Fig. 3 — response-time breakdown of SANGER and DOTA (the motivation).
+//!
+//! Paper result: MA-GE ≈ 17.9% (SANGER) / 14.3% (DOTA) of response time,
+//! of which ≈ 94.6% / 92.7% is memory; AT-CA memory share ≈ 71.2% / 63.5%.
+
+use crate::baselines::{asic, Platform};
+use crate::config::SystemConfig;
+use crate::workload::TraceGenerator;
+
+use super::Table;
+
+pub fn run(cfg: &SystemConfig) -> Table {
+    let mut t = Table::new(
+        "fig3",
+        "SANGER/DOTA response-time breakdown (fractions)",
+        &["MA-GE-M", "MA-GE-P", "AT-CA-M", "AT-CA-P"],
+    );
+    let gen = TraceGenerator::new(cfg.model.clone(), cfg.workload.seed).with_max_batches(1);
+    let sanger = asic::Sanger::default();
+    let dota = asic::Dota::default();
+    for ds in cfg.workload.five() {
+        let trace = gen.generate(ds);
+        let stats = trace.batches[0].stats();
+        for (plat, tag) in [(&sanger as &dyn Platform, "SANGER"), (&dota, "DOTA")] {
+            let r = plat.run_batch(&cfg.model, &stats);
+            let f = r.fig3_fractions();
+            t.push(format!("{}/{}", tag, ds.name), f.to_vec());
+        }
+    }
+    t.note("paper: SANGER MA-GE 17.9% (94.6% mem), AT-CA 82.1% (71.2% mem); DOTA 14.3%/92.7%/63.5%");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum_to_one_per_row() {
+        let t = run(&SystemConfig::paper());
+        assert_eq!(t.rows.len(), 10); // 5 datasets × 2 platforms
+        for (label, vals) in &t.rows {
+            let s: f64 = vals.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "{label}: {s}");
+        }
+    }
+
+    #[test]
+    fn memory_dominates_mage() {
+        let t = run(&SystemConfig::paper());
+        for (label, vals) in &t.rows {
+            assert!(vals[0] > vals[1], "{label}: MA-GE should be memory-bound");
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Figs. 11 & 12 — execution time / energy across platforms, normalized
+//! to CPSAA, over the nine GLUE/SQuAD datasets.
+//!
+//! Paper headline: CPSAA is 89.6× / 32.2× / 17.8× / 3.39× / 3.84× faster
+//! than GPU / FPGA / SANGER / ReBERT / ReTransformer and saves 755.6× /
+//! 55.3× / 21.3× / 5.7× / 4.9× energy.
+
+use crate::baselines::{asic, device, pim, Platform};
+use crate::config::SystemConfig;
+use crate::sim::ChipSim;
+use crate::workload::TraceGenerator;
+
+use super::Table;
+
+pub(crate) struct PlatformRun {
+    pub dataset: String,
+    /// (name, total_ns, energy_pj) per platform; first entry is CPSAA.
+    pub results: Vec<(&'static str, f64, f64)>,
+}
+
+pub(crate) fn run_platforms(cfg: &SystemConfig) -> Vec<PlatformRun> {
+    let gen = TraceGenerator::new(cfg.model.clone(), cfg.workload.seed).with_max_batches(1);
+    let cpsaa = ChipSim::new(cfg.hardware.clone(), cfg.model.clone());
+    let platforms: Vec<Box<dyn Platform>> = vec![
+        Box::new(device::Gpu::default()),
+        Box::new(device::Fpga::default()),
+        Box::new(asic::Sanger::default()),
+        Box::new(pim::ReBert::new(cfg.hardware.clone())),
+        Box::new(pim::ReTransformer::new(cfg.hardware.clone())),
+    ];
+    cfg.workload
+        .datasets
+        .iter()
+        .map(|ds| {
+            let trace = gen.generate(ds);
+            let batch = &trace.batches[0];
+            let stats = batch.stats();
+            let c = cpsaa.simulate_batch(&batch.mask);
+            let mut results = vec![("CPSAA", c.breakdown.total_ns, c.energy_pj)];
+            for p in &platforms {
+                let r = p.run_batch(&cfg.model, &stats);
+                results.push((r.name, r.total_ns, r.energy_pj));
+            }
+            PlatformRun { dataset: ds.name.clone(), results }
+        })
+        .collect()
+}
+
+/// Fig. 11: execution time normalized to CPSAA (CPSAA = 1).
+pub fn run_time(cfg: &SystemConfig) -> Table {
+    build(cfg, "fig11", "execution time normalized to CPSAA", |ns, _| ns)
+}
+
+/// Fig. 12: consumed energy normalized to CPSAA (CPSAA = 1).
+pub fn run_energy(cfg: &SystemConfig) -> Table {
+    build(cfg, "fig12", "consumed energy normalized to CPSAA", |_, pj| pj)
+}
+
+fn build(cfg: &SystemConfig, id: &str, title: &str, metric: fn(f64, f64) -> f64) -> Table {
+    let runs = run_platforms(cfg);
+    let headers: Vec<&str> = runs[0].results.iter().map(|(n, _, _)| *n).collect();
+    let mut t = Table::new(id, title, &headers);
+    let mut means = vec![0.0; headers.len()];
+    for run in &runs {
+        let base = metric(run.results[0].1, run.results[0].2).max(1e-12);
+        let vals: Vec<f64> =
+            run.results.iter().map(|&(_, ns, pj)| metric(ns, pj) / base).collect();
+        for (m, v) in means.iter_mut().zip(&vals) {
+            *m += v / runs.len() as f64;
+        }
+        t.push(run.dataset.clone(), vals);
+    }
+    t.push("MEAN", means);
+    t.note(if id == "fig11" {
+        "paper means: GPU 89.6, FPGA 32.2, SANGER 17.8, ReBERT 3.39, ReTransformer 3.84"
+    } else {
+        "paper means: GPU 755.6, FPGA 55.3, SANGER 21.3, ReBERT 5.7, ReTransformer 4.9"
+    });
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpsaa_wins_everywhere() {
+        let cfg = SystemConfig::paper();
+        for table in [run_time(&cfg), run_energy(&cfg)] {
+            for (label, vals) in &table.rows {
+                assert!((vals[0] - 1.0).abs() < 1e-9, "{label}: CPSAA not 1.0");
+                for (h, v) in table.headers.iter().zip(vals).skip(1) {
+                    assert!(*v > 1.0, "{}: {h} = {v} should exceed CPSAA", label);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ordering_matches_paper() {
+        // GPU slowest, then FPGA, then SANGER, then the PIM platforms.
+        let t = run_time(&SystemConfig::paper());
+        let mean = |h: &str| t.get("MEAN", h).unwrap();
+        assert!(mean("GPU") > mean("FPGA"));
+        assert!(mean("FPGA") > mean("SANGER"));
+        assert!(mean("SANGER") > mean("ReBERT"));
+        assert!(mean("SANGER") > mean("ReTransformer"));
+    }
+
+    #[test]
+    fn factors_within_shape_tolerance() {
+        // "shape" reproduction: each platform's mean within ~4× of the
+        // paper's reported factor.
+        let t = run_time(&SystemConfig::paper());
+        for (h, want) in
+            [("GPU", 89.6), ("FPGA", 32.2), ("SANGER", 17.8), ("ReBERT", 3.39), ("ReTransformer", 3.84)]
+        {
+            let got = t.get("MEAN", h).unwrap();
+            assert!(got > want / 4.0 && got < want * 4.0, "{h}: {got} vs paper {want}");
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Fig. 18 — ideal-situation study.
+//!
+//! Paper: removing (a) write latency, (b) on-chip transfer latency,
+//! (c) ADC limits, (d) control latency improves throughput by 32.7%,
+//! 23.4%, 104.8%, 19.1% respectively.
+
+use crate::config::{IdealKnobs, SystemConfig};
+use crate::sim::ChipSim;
+use crate::workload::TraceGenerator;
+
+use super::Table;
+
+const KNOBS: [(&str, fn(&mut IdealKnobs)); 4] = [
+    ("no-write", |k| k.no_write_latency = true),
+    ("no-transfer", |k| k.no_transfer_latency = true),
+    ("infinite-ADC", |k| k.infinite_adcs = true),
+    ("no-ctrl", |k| k.no_ctrl_latency = true),
+];
+
+pub fn run(cfg: &SystemConfig) -> Table {
+    let mut t = Table::new(
+        "fig18",
+        "ideal situations: throughput improvement (%) over baseline CPSAA",
+        &["no-write", "no-transfer", "infinite-ADC", "no-ctrl"],
+    );
+    let gen = TraceGenerator::new(cfg.model.clone(), cfg.workload.seed).with_max_batches(1);
+    let base_sim = ChipSim::new(cfg.hardware.clone(), cfg.model.clone());
+
+    let datasets = cfg.workload.five();
+    let mut means = [0.0f64; 4];
+    for ds in &datasets {
+        let trace = gen.generate(ds);
+        let mask = &trace.batches[0].mask;
+        let base = base_sim.simulate_batch(mask).breakdown.total_ns;
+        let mut vals = [0.0f64; 4];
+        for (i, (_, set)) in KNOBS.iter().enumerate() {
+            let mut hw = cfg.hardware.clone();
+            set(&mut hw.ideal);
+            let ideal = ChipSim::new(hw, cfg.model.clone()).simulate_batch(mask);
+            vals[i] = 100.0 * (base / ideal.breakdown.total_ns - 1.0);
+            means[i] += vals[i] / datasets.len() as f64;
+        }
+        t.push(ds.name.clone(), vals.to_vec());
+    }
+    t.push("MEAN", means.to_vec());
+    t.note("paper: +32.7% (write), +23.4% (transfer), +104.8% (ADC), +19.1% (ctrl)");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_knobs_non_negative() {
+        let t = run(&SystemConfig::paper());
+        for h in ["no-write", "no-transfer", "infinite-ADC", "no-ctrl"] {
+            let v = t.get("MEAN", h).unwrap();
+            assert!(v >= -1e-9, "{h} = {v}");
+        }
+    }
+
+    #[test]
+    fn adc_is_the_biggest_lever() {
+        // Paper ordering: ADC (104.8%) dominates all other knobs.
+        let t = run(&SystemConfig::paper());
+        let adc = t.get("MEAN", "infinite-ADC").unwrap();
+        for h in ["no-write", "no-transfer", "no-ctrl"] {
+            assert!(adc >= t.get("MEAN", h).unwrap(), "ADC should dominate {h}");
+        }
+        assert!(adc > 20.0, "ADC improvement {adc} too small");
+    }
+}

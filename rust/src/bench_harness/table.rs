@@ -1,0 +1,125 @@
+//! Tabular result container with pretty-print and CSV export.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One regenerated figure/table: headers plus numeric rows keyed by label.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+    /// The paper's reference values for the same cells, when quoted.
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
+        Self {
+            id: id.into(),
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, label: impl Into<String>, values: Vec<f64>) {
+        let label = label.into();
+        debug_assert_eq!(values.len(), self.headers.len(), "row {label} arity");
+        self.rows.push((label, values));
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn get(&self, label: &str, header: &str) -> Option<f64> {
+        let col = self.headers.iter().position(|h| h == header)?;
+        let (_, vals) = self.rows.iter().find(|(l, _)| l == label)?;
+        vals.get(col).copied()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str("label");
+        for h in &self.headers {
+            s.push(',');
+            s.push_str(h);
+        }
+        s.push('\n');
+        for (label, vals) in &self.rows {
+            s.push_str(label);
+            for v in vals {
+                s.push_str(&format!(",{v:.6}"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save_csv(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir).context("creating results dir")?;
+        let path = dir.join(format!("{}.csv", self.id));
+        std::fs::write(&path, self.to_csv()).with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+impl fmt::Display for Table {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "== {} — {} ==", self.id, self.title)?;
+        let w = self.rows.iter().map(|(l, _)| l.len()).max().unwrap_or(5).max(5);
+        write!(f, "{:w$}", "", w = w + 2)?;
+        for h in &self.headers {
+            write!(f, "{h:>14}")?;
+        }
+        writeln!(f)?;
+        for (label, vals) in &self.rows {
+            write!(f, "{label:<w$}  ", w = w)?;
+            for v in vals {
+                if v.abs() >= 1000.0 {
+                    write!(f, "{v:>14.1}")?;
+                } else {
+                    write!(f, "{v:>14.4}")?;
+                }
+            }
+            writeln!(f)?;
+        }
+        for n in &self.notes {
+            writeln!(f, "  note: {n}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_lookup() {
+        let mut t = Table::new("figX", "demo", &["a", "b"]);
+        t.push("row1", vec![1.0, 2.0]);
+        assert_eq!(t.get("row1", "b"), Some(2.0));
+        assert_eq!(t.get("row1", "c"), None);
+        assert_eq!(t.get("nope", "a"), None);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut t = Table::new("figX", "demo", &["a"]);
+        t.push("r", vec![0.5]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("label,a\n"));
+        assert!(csv.contains("r,0.5"));
+    }
+
+    #[test]
+    fn display_contains_title() {
+        let t = Table::new("figX", "My Title", &["a"]);
+        assert!(format!("{t}").contains("My Title"));
+    }
+}

@@ -1,0 +1,53 @@
+//! Table 2 — CPSAA configuration: per-component area and power roll-up.
+
+use crate::config::SystemConfig;
+use crate::sim::area::AreaModel;
+
+use super::Table;
+
+pub fn run(cfg: &SystemConfig) -> Table {
+    let m = AreaModel::build(&cfg.hardware);
+    let mut t = Table::new(
+        "table2",
+        "CPSAA configuration (area mm^2, power mW)",
+        &["area_mm2", "power_mW", "count"],
+    );
+    for r in &m.pc_rows {
+        t.push(r.name, vec![r.total_area(), r.total_power(), r.count as f64]);
+    }
+    t.push("PC Total", vec![
+        m.pc_rows.iter().map(|r| r.total_area()).sum(),
+        m.pc_rows.iter().map(|r| r.total_power()).sum(),
+        1.0,
+    ]);
+    for r in &m.ag_rows {
+        t.push(format!("AG/{}", r.name), vec![r.total_area(), r.total_power(), r.count as f64]);
+    }
+    t.push("AG Total", vec![m.ag_area_mm2, m.ag_power_mw, 1.0]);
+    t.push("Tile", vec![m.tile_area_mm2, m.tile_power_mw, cfg.hardware.tiles as f64]);
+    t.push("CPSAA", vec![m.chip_area_mm2, m.chip_power_mw, 1.0]);
+    t.note("paper: PC 0.2235/132.62, AG 0.00252/4.623, chip 27.47 mm^2 / 28.83 W");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_totals_close_to_paper() {
+        let t = run(&SystemConfig::paper());
+        let area = t.get("CPSAA", "area_mm2").unwrap();
+        let power = t.get("CPSAA", "power_mW").unwrap();
+        assert!((area - 27.47).abs() / 27.47 < 0.15, "area {area}");
+        assert!((power - 28_830.0).abs() / 28_830.0 < 0.15, "power {power}");
+    }
+
+    #[test]
+    fn has_all_structural_rows() {
+        let t = run(&SystemConfig::paper());
+        for label in ["PC Total", "AG Total", "Tile", "CPSAA"] {
+            assert!(t.rows.iter().any(|(l, _)| l == label), "missing {label}");
+        }
+    }
+}

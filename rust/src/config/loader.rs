@@ -1,0 +1,126 @@
+//! Top-level config file: `[hardware]`, `[model]`, `[workload]` sections.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::tomlmini::{write_section, Doc};
+
+use super::{HardwareConfig, ModelConfig, WorkloadConfig};
+
+/// Combined system configuration — what one `cpsaa` invocation runs with.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SystemConfig {
+    pub hardware: HardwareConfig,
+    pub model: ModelConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl SystemConfig {
+    /// Paper evaluation defaults.
+    pub fn paper() -> Self {
+        Self {
+            hardware: HardwareConfig::paper(),
+            model: ModelConfig::paper(),
+            workload: WorkloadConfig::paper(),
+        }
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = Doc::parse(text).context("parsing TOML config")?;
+        let empty = Default::default();
+        let hardware = HardwareConfig::from_sections(
+            doc.section("hardware").unwrap_or(&empty),
+            doc.section("hardware.ideal"),
+        )?;
+        let model = ModelConfig::from_section(doc.section("model").unwrap_or(&empty))?;
+        let workload = WorkloadConfig::from_sections(
+            doc.section("workload"),
+            doc.arrays.get("workload.datasets").map(|v| v.as_slice()).unwrap_or(&[]),
+        )?;
+        let cfg = Self { hardware, model, workload };
+        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Serialize to the TOML subset `from_toml_str` reads.
+    pub fn to_toml_string(&self) -> String {
+        let mut s = String::new();
+        write_section(&mut s, "hardware", &self.hardware.to_entries());
+        write_section(&mut s, "hardware.ideal", &self.hardware.ideal_entries());
+        write_section(&mut s, "model", &self.model.to_entries());
+        write_section(
+            &mut s,
+            "workload",
+            &[
+                ("batch_size", crate::util::tomlmini::Value::Num(self.workload.batch_size as f64)),
+                ("seed", crate::util::tomlmini::Value::Num(self.workload.seed as f64)),
+            ],
+        );
+        for ds in &self.workload.datasets {
+            s.push_str("[[workload.datasets]]\n");
+            let mut body = String::new();
+            write_section(&mut body, "", &ds.to_entries());
+            s.push_str(&body);
+        }
+        s
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.hardware.validate()?;
+        self.model.validate()?;
+        if self.workload.batch_size == 0 {
+            return Err("batch_size must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_validates() {
+        SystemConfig::paper().validate().unwrap();
+    }
+
+    #[test]
+    fn partial_toml_fills_defaults() {
+        let cfg = SystemConfig::from_toml_str("[model]\nseq_len = 64\n").unwrap();
+        assert_eq!(cfg.model.seq_len, 64);
+        assert_eq!(cfg.model.d_model, ModelConfig::default().d_model);
+        assert_eq!(cfg.hardware, HardwareConfig::default());
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let mut cfg = SystemConfig::paper();
+        cfg.hardware.crossbar_size = 64;
+        cfg.model.theta = 0.02;
+        let text = cfg.to_toml_string();
+        let back = SystemConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let path = std::env::temp_dir().join(format!("cpsaa-cfg-{}.toml", std::process::id()));
+        std::fs::write(&path, SystemConfig::paper().to_toml_string()).unwrap();
+        let cfg = SystemConfig::from_toml_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(cfg, SystemConfig::paper());
+    }
+
+    #[test]
+    fn bad_file_errors() {
+        assert!(SystemConfig::from_toml_file(Path::new("/nonexistent.toml")).is_err());
+        assert!(SystemConfig::from_toml_str("[model]\ntheta = 9.0\n").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Typed configuration system: hardware (Table 2), model, and workload.
+//!
+//! Everything the simulator, baselines, and coordinator consume is plain
+//! data defined here, loadable from TOML (`configs/*.toml`) and overridable
+//! from the CLI. Defaults reproduce the paper's evaluation setup exactly.
+
+mod hardware;
+mod loader;
+mod model;
+mod workload;
+
+pub use hardware::{HardwareConfig, IdealKnobs};
+pub use loader::SystemConfig;
+pub use model::ModelConfig;
+pub use workload::{DatasetSpec, WorkloadConfig};

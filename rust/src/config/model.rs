@@ -1,0 +1,182 @@
+//! Model-side configuration, mirroring `python/compile/model.py::ModelConfig`.
+
+use anyhow::Result;
+
+use crate::util::tomlmini::{Section, Value};
+
+/// Shapes and pruning hyper-parameters of one attention layer.
+///
+/// Paper defaults: d_model = 512, d_k = d_q = 64, 320-embedding batches
+/// (Transformer/BERT/A³/SANGER settings, §5). The AOT artifacts default to
+/// a smaller (128, 256) head for compile time; the simulator accepts any
+/// shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Tokens per sequence batch processed in-memory at once.
+    pub seq_len: usize,
+    /// Embedding dimension d_model.
+    pub d_model: usize,
+    /// Per-head query/key dimension (scaling factor of the score matrix).
+    pub d_k: usize,
+    /// FC hidden dimension of the encoder tail.
+    pub d_ff: usize,
+    /// Number of encoder layers (BERT = 12).
+    pub layers: usize,
+    /// Attention heads per layer (BERT-base: 8 at d_model=512/d_k=64).
+    /// The chip-level figures model one head (the paper's setup); the
+    /// application-level simulator fans heads across tile groups.
+    pub heads: usize,
+    /// Quantization scale γ of Q(·).
+    pub gamma: f32,
+    /// Quantizer width in bits (SANGER-style low-precision pruning).
+    pub quant_bits: u32,
+    /// Binarization threshold θ of eq. 1.
+    pub theta: f32,
+    /// Synthetic-weight attention-logit scale (DESIGN.md substitution).
+    pub sharpness: f32,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            seq_len: 320,
+            d_model: 512,
+            d_k: 64,
+            d_ff: 2048,
+            layers: 12,
+            heads: 1,
+            gamma: 4.0,
+            quant_bits: 4,
+            theta: 0.01,
+            sharpness: 4.0,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Paper evaluation shape (§5): 320×512, 12 encoders.
+    pub fn paper() -> Self {
+        Self::default()
+    }
+
+    /// Shape matching the default AOT artifacts (python side defaults).
+    pub fn artifact_default() -> Self {
+        Self { seq_len: 128, d_model: 256, d_ff: 512, ..Self::default() }
+    }
+
+    /// Dense-equivalent FLOPs of one sparse-attention layer on one batch —
+    /// the paper's GOPS accounting is *useful operations per second*, so
+    /// throughput is measured in dense-equivalent ops (2·n·m·k per matmul).
+    pub fn attention_flops(&self) -> u64 {
+        let n = self.seq_len as u64;
+        let d = self.d_model as u64;
+        let dk = self.d_k as u64;
+        // One head: M = X W_S (n·d·d), V = X W_V (n·d·d_k),
+        // S = M X^T (n·n·d), Z = S V (n·n·d_k)
+        2 * (n * d * d + n * d * dk + n * n * d + n * n * dk)
+    }
+
+    /// FLOPs of the FC tail.
+    pub fn fc_flops(&self) -> u64 {
+        let n = self.seq_len as u64;
+        2 * n * self.d_model as u64 * self.d_ff as u64 * 2
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.seq_len == 0 || self.d_model == 0 || self.d_k == 0 {
+            return Err("zero dimension".into());
+        }
+        if self.heads == 0 || self.heads * self.d_k > self.d_model * 2 {
+            return Err(format!("heads {} implausible for d_model {}", self.heads, self.d_model));
+        }
+        if !(0.0..1.0).contains(&self.theta) || self.theta <= 0.0 {
+            return Err(format!("theta {} outside (0,1)", self.theta));
+        }
+        if !(1..=16).contains(&self.quant_bits) {
+            return Err(format!("quant_bits {} outside 1..=16", self.quant_bits));
+        }
+        Ok(())
+    }
+
+    /// Overlay values from a `[model]` TOML section onto defaults.
+    pub fn from_section(sec: &Section) -> Result<Self> {
+        let mut c = Self::default();
+        for (k, v) in sec {
+            match k.as_str() {
+                "seq_len" => c.seq_len = v.as_usize()?,
+                "d_model" => c.d_model = v.as_usize()?,
+                "d_k" => c.d_k = v.as_usize()?,
+                "d_ff" => c.d_ff = v.as_usize()?,
+                "layers" => c.layers = v.as_usize()?,
+                "heads" => c.heads = v.as_usize()?,
+                "gamma" => c.gamma = v.as_f64()? as f32,
+                "quant_bits" => c.quant_bits = v.as_usize()? as u32,
+                "theta" => c.theta = v.as_f64()? as f32,
+                "sharpness" => c.sharpness = v.as_f64()? as f32,
+                other => anyhow::bail!("unknown [model] key {other:?}"),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Serialize as a `[model]` section.
+    pub fn to_entries(&self) -> Vec<(&'static str, Value)> {
+        vec![
+            ("seq_len", Value::Num(self.seq_len as f64)),
+            ("d_model", Value::Num(self.d_model as f64)),
+            ("d_k", Value::Num(self.d_k as f64)),
+            ("d_ff", Value::Num(self.d_ff as f64)),
+            ("layers", Value::Num(self.layers as f64)),
+            ("heads", Value::Num(self.heads as f64)),
+            ("gamma", Value::Num(self.gamma as f64)),
+            ("quant_bits", Value::Num(self.quant_bits as f64)),
+            ("theta", Value::Num(self.theta as f64)),
+            ("sharpness", Value::Num(self.sharpness as f64)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tomlmini::{write_section, Doc};
+
+    #[test]
+    fn defaults_are_paper_setup() {
+        let c = ModelConfig::paper();
+        assert_eq!((c.seq_len, c.d_model, c.d_k, c.layers), (320, 512, 64, 12));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn flops_positive_and_scale_quadratically_in_seq() {
+        let a = ModelConfig { seq_len: 128, ..Default::default() };
+        let b = ModelConfig { seq_len: 256, ..Default::default() };
+        assert!(b.attention_flops() > a.attention_flops());
+        // the n² terms dominate growth
+        assert!(b.attention_flops() < 4 * a.attention_flops());
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        assert!(ModelConfig { theta: 0.0, ..Default::default() }.validate().is_err());
+        assert!(ModelConfig { seq_len: 0, ..Default::default() }.validate().is_err());
+        assert!(ModelConfig { quant_bits: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = ModelConfig { theta: 0.02, seq_len: 64, ..ModelConfig::paper() };
+        let mut s = String::new();
+        write_section(&mut s, "model", &c.to_entries());
+        let doc = Doc::parse(&s).unwrap();
+        let back = ModelConfig::from_section(doc.section("model").unwrap()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = Doc::parse("[model]\nbogus = 1\n").unwrap();
+        assert!(ModelConfig::from_section(doc.section("model").unwrap()).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Workload configuration: the paper's evaluation datasets, characterized.
+//!
+//! The paper runs eight GLUE tasks + SQuAD v2.0 through fine-tuned BERT.
+//! Token identity never enters the evaluation — only sequence counts,
+//! lengths, and the resulting attention sparsity — so each dataset is
+//! described by those statistics (DESIGN.md substitution table). Length
+//! statistics follow the published GLUE/SQuAD task descriptions.
+
+use anyhow::Result;
+
+use crate::util::tomlmini::{Section, Value};
+
+/// One evaluation dataset's shape statistics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetSpec {
+    pub name: String,
+    /// Number of evaluation sequences (drives batch count).
+    pub sequences: usize,
+    /// Mean token length of a sequence.
+    pub mean_len: usize,
+    /// Std-dev of token length.
+    pub std_len: usize,
+    /// Typical attention mask density for this task (paper: ≈ 0.1).
+    pub mask_density: f64,
+}
+
+impl DatasetSpec {
+    fn new(name: &str, sequences: usize, mean_len: usize, std_len: usize, mask_density: f64) -> Self {
+        Self { name: name.into(), sequences, mean_len, std_len, mask_density }
+    }
+}
+
+impl DatasetSpec {
+    /// Parse one `[[workload.datasets]]` entry.
+    pub fn from_section(sec: &Section) -> Result<Self> {
+        let mut d = Self::new("unnamed", 0, 32, 8, 0.1);
+        for (k, v) in sec {
+            match k.as_str() {
+                "name" => d.name = v.as_str()?.to_string(),
+                "sequences" => d.sequences = v.as_usize()?,
+                "mean_len" => d.mean_len = v.as_usize()?,
+                "std_len" => d.std_len = v.as_usize()?,
+                "mask_density" => d.mask_density = v.as_f64()?,
+                other => anyhow::bail!("unknown dataset key {other:?}"),
+            }
+        }
+        Ok(d)
+    }
+
+    pub fn to_entries(&self) -> Vec<(&'static str, Value)> {
+        vec![
+            ("name", Value::Str(self.name.clone())),
+            ("sequences", Value::Num(self.sequences as f64)),
+            ("mean_len", Value::Num(self.mean_len as f64)),
+            ("std_len", Value::Num(self.std_len as f64)),
+            ("mask_density", Value::Num(self.mask_density)),
+        ]
+    }
+}
+
+/// The evaluation suite (§5 Benchmarks).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    pub datasets: Vec<DatasetSpec>,
+    /// Embeddings per in-memory batch (§5: 320, as in BERT/A³).
+    pub batch_size: usize,
+    /// Seed for synthetic embedding generation.
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self { datasets: glue_suite(), batch_size: 320, seed: 0 }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn paper() -> Self {
+        Self::default()
+    }
+
+    pub fn dataset(&self, name: &str) -> Option<&DatasetSpec> {
+        self.datasets.iter().find(|d| d.name.eq_ignore_ascii_case(name))
+    }
+
+    /// The five-dataset subset used by the motivation/kernels figures
+    /// (Figs. 3, 17, 19b report five workloads).
+    pub fn five(&self) -> Vec<&DatasetSpec> {
+        ["CoLA", "SST-2", "MRPC", "QQP", "SQuAD"]
+            .iter()
+            .filter_map(|n| self.dataset(n))
+            .collect()
+    }
+
+    /// Overlay a `[workload]` section and `[[workload.datasets]]` entries.
+    pub fn from_sections(sec: Option<&Section>, datasets: &[Section]) -> Result<Self> {
+        let mut w = Self::default();
+        if let Some(sec) = sec {
+            for (k, v) in sec {
+                match k.as_str() {
+                    "batch_size" => w.batch_size = v.as_usize()?,
+                    "seed" => w.seed = v.as_usize()? as u64,
+                    other => anyhow::bail!("unknown [workload] key {other:?}"),
+                }
+            }
+        }
+        if !datasets.is_empty() {
+            w.datasets = datasets.iter().map(DatasetSpec::from_section).collect::<Result<_>>()?;
+        }
+        Ok(w)
+    }
+}
+
+/// GLUE + SQuAD task statistics. Sequence counts are the dev-set sizes;
+/// mean/std lengths follow the task descriptions (single sentences for
+/// CoLA/SST-2, sentence pairs for the rest, long paragraphs for SQuAD).
+pub fn glue_suite() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec::new("CoLA", 1043, 12, 5, 0.12),
+        DatasetSpec::new("SST-2", 872, 25, 9, 0.11),
+        DatasetSpec::new("MRPC", 408, 53, 15, 0.10),
+        DatasetSpec::new("STS-B", 1500, 27, 11, 0.11),
+        DatasetSpec::new("QQP", 40430, 30, 13, 0.10),
+        DatasetSpec::new("MNLI", 9815, 39, 17, 0.09),
+        DatasetSpec::new("WNLI", 71, 37, 12, 0.10),
+        DatasetSpec::new("RTE", 277, 64, 28, 0.09),
+        DatasetSpec::new("SQuAD", 11873, 152, 60, 0.08),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_nine_datasets() {
+        assert_eq!(glue_suite().len(), 9);
+    }
+
+    #[test]
+    fn lookup_case_insensitive() {
+        let w = WorkloadConfig::paper();
+        assert!(w.dataset("cola").is_some());
+        assert!(w.dataset("SQUAD").is_some());
+        assert!(w.dataset("nope").is_none());
+    }
+
+    #[test]
+    fn five_subset() {
+        assert_eq!(WorkloadConfig::paper().five().len(), 5);
+    }
+
+    #[test]
+    fn densities_in_paper_regime() {
+        for d in glue_suite() {
+            assert!(d.mask_density > 0.05 && d.mask_density < 0.2, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        use crate::util::tomlmini::{write_section, Doc};
+        let w = WorkloadConfig::paper();
+        let mut s = String::new();
+        write_section(
+            &mut s,
+            "workload",
+            &[("batch_size", crate::util::tomlmini::Value::Num(w.batch_size as f64))],
+        );
+        for ds in &w.datasets {
+            s.push_str("[[workload.datasets]]\n");
+            let mut body = String::new();
+            write_section(&mut body, "", &ds.to_entries());
+            s.push_str(&body);
+        }
+        let doc = Doc::parse(&s).unwrap();
+        let back = WorkloadConfig::from_sections(
+            doc.section("workload"),
+            doc.arrays.get("workload.datasets").map(|v| v.as_slice()).unwrap_or(&[]),
+        )
+        .unwrap();
+        assert_eq!(back, w);
+    }
+}

@@ -1,0 +1,140 @@
+//! Serving metrics: latency percentiles, throughput, batch accounting.
+
+use std::time::Duration;
+
+/// Fixed-bucket latency histogram (log-spaced, 1 µs … 100 s).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    bounds_ns: Vec<u64>,
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 1µs, 2µs, 5µs, 10µs, ... decade ladder up to 100s
+        let mut bounds = Vec::new();
+        let mut base: u64 = 1_000;
+        while base <= 100_000_000_000 {
+            for m in [1, 2, 5] {
+                bounds.push(base * m);
+            }
+            base *= 10;
+        }
+        Self { buckets: vec![0; bounds.len() + 1], bounds_ns: bounds, count: 0, sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        let idx = self.bounds_ns.partition_point(|&b| b < ns);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0 < q ≤ 1).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let ns = self.bounds_ns.get(i).copied().unwrap_or(self.max_ns);
+                return Duration::from_nanos(ns.min(self.max_ns.max(1)));
+            }
+        }
+        Duration::from_nanos(self.max_ns)
+    }
+}
+
+/// Aggregate serving counters.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub used_rows: u64,
+    pub latency: LatencyHistogram,
+    /// Simulated accelerator time (ns) across batches.
+    pub sim_ns: f64,
+    /// Simulated accelerator energy (pJ).
+    pub sim_pj: f64,
+}
+
+impl ServeMetrics {
+    pub fn batch_utilization(&self) -> f64 {
+        let total = self.used_rows + self.padded_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.used_rows as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for us in [10u64, 20, 30, 40, 50, 500, 5000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 7);
+        assert!(h.quantile(0.5) <= h.quantile(0.9));
+        assert!(h.quantile(0.9) <= h.quantile(1.0));
+        assert!(h.max() >= Duration::from_micros(5000));
+    }
+
+    #[test]
+    fn empty_histogram_zeroes() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn mean_reasonable() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_millis(1));
+        h.record(Duration::from_millis(3));
+        let m = h.mean();
+        assert!(m >= Duration::from_millis(1) && m <= Duration::from_millis(3));
+    }
+
+    #[test]
+    fn utilization() {
+        let m = ServeMetrics { used_rows: 60, padded_rows: 40, ..Default::default() };
+        assert!((m.batch_utilization() - 0.6).abs() < 1e-12);
+        assert_eq!(ServeMetrics::default().batch_utilization(), 0.0);
+    }
+}

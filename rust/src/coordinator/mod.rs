@@ -1,0 +1,19 @@
+//! Layer-3 coordinator: batching, the encoder pipeline, and the serving
+//! loop over the PJRT engine.
+//!
+//! CPSAA's system contribution is the in-memory dataflow; the coordinator
+//! is the thin-but-real host layer around it (the paper's DTC + CTRL role
+//! at application level, §4.5): it packs incoming sequences into
+//! 320-embedding batches, drives the per-layer artifact executions, tracks
+//! hardware-simulated cost alongside functional results, and reports
+//! serving metrics (latency percentiles, GOPS).
+
+mod batcher;
+mod metrics;
+mod pipeline;
+mod service;
+
+pub use batcher::{BatchPlan, Batcher, PackedRequest};
+pub use metrics::{LatencyHistogram, ServeMetrics};
+pub use pipeline::{EncoderStack, LayerOutput};
+pub use service::{InferenceResponse, Service, ServiceConfig};

@@ -1,0 +1,119 @@
+//! Encoder-stack pipeline: functional execution + hardware accounting.
+//!
+//! Each layer executes the `encoder` artifact through PJRT (functional
+//! result) and, in parallel bookkeeping, feeds the resulting mask into the
+//! cycle simulator so every served batch carries both the *numbers* (Z)
+//! and the *cost* the CPSAA chip would have incurred (ns, pJ) — the
+//! equivalent of the paper's per-benchmark GOPS accounting.
+
+use anyhow::Result;
+
+use crate::attention::Weights;
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::runtime::Engine;
+use crate::sim::ChipSim;
+use crate::sparse::MaskMatrix;
+use crate::tensor::Matrix;
+
+/// Output of one layer over one batch.
+#[derive(Clone, Debug)]
+pub struct LayerOutput {
+    pub hidden: Matrix,
+    pub mask_density: f64,
+    /// Simulated accelerator latency for this layer-batch (ns).
+    pub sim_ns: f64,
+    /// Simulated accelerator energy (pJ).
+    pub sim_pj: f64,
+}
+
+/// A stack of identical encoder layers (§4.5: encoders chain serially).
+pub struct EncoderStack<'e> {
+    engine: &'e Engine,
+    weights: Weights,
+    sim: ChipSim,
+    layers: usize,
+}
+
+impl<'e> EncoderStack<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        weights: Weights,
+        hw: HardwareConfig,
+        model: ModelConfig,
+        layers: usize,
+    ) -> Self {
+        let sim = ChipSim::new(hw, model);
+        Self { engine, weights, sim, layers }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Run one batch through every layer. Returns per-layer outputs
+    /// (last entry is the final hidden state).
+    pub fn forward(&self, x: &Matrix) -> Result<Vec<LayerOutput>> {
+        let mut h = x.clone();
+        let mut outs = Vec::with_capacity(self.layers);
+        for _ in 0..self.layers {
+            let res = self.engine.execute(
+                "encoder",
+                &[&h, &self.weights.w_s, &self.weights.w_v, &self.weights.w_fc1, &self.weights.w_fc2],
+            )?;
+            let hidden = res[0].clone();
+            let mask = MaskMatrix::from_dense(&res[1]);
+            let sim = self.sim.simulate_batch(&mask);
+            outs.push(LayerOutput {
+                hidden: hidden.clone(),
+                mask_density: mask.density(),
+                sim_ns: sim.breakdown.total_ns,
+                sim_pj: sim.energy_pj,
+            });
+            h = hidden;
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactSet;
+    use std::path::PathBuf;
+
+    fn setup() -> Option<(ArtifactSet, Engine)> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let set = ArtifactSet::open(&dir).ok()?;
+        let engine = Engine::load(&set).ok()?;
+        Some((set, engine))
+    }
+
+    #[test]
+    fn forward_two_layers() {
+        let Some((set, engine)) = setup() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let cfg = &set.manifest.config;
+        let model = ModelConfig {
+            seq_len: cfg.seq_len,
+            d_model: cfg.d_model,
+            d_k: cfg.d_k,
+            d_ff: cfg.d_ff,
+            ..ModelConfig::default()
+        };
+        let w = Weights::from_json_file(&set.dir.join("weights.json")).unwrap();
+        let stack = EncoderStack::new(&engine, w, HardwareConfig::paper(), model, 2);
+        let fix = set.fixtures().unwrap();
+        let outs = stack.forward(&fix.x).unwrap();
+        assert_eq!(outs.len(), 2);
+        for o in &outs {
+            assert!(o.hidden.all_finite());
+            assert!(o.sim_ns > 0.0 && o.sim_pj > 0.0);
+            assert!(o.mask_density > 0.0 && o.mask_density < 1.0);
+        }
+        // first layer must reproduce the encoder fixture exactly
+        let want = &fix.outputs["encoder"][0];
+        assert!(outs[0].hidden.rel_err(want) < 1e-4);
+    }
+}

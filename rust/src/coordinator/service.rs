@@ -1,0 +1,304 @@
+//! Serving loop: requests in, batched encoder executions out.
+//!
+//! The PJRT client (`xla::PjRtClient`) is `Rc`-based and therefore pinned
+//! to one thread — exactly like the physical CPSAA chip is one device. The
+//! service spawns a **leader thread** that owns the engine; callers submit
+//! requests over an mpsc channel and block on a reply channel. Dynamic
+//! batching happens in the leader: it drains whatever arrived within
+//! `max_wait` (or until a batch fills), packs with [`Batcher`], executes
+//! the encoder stack once per batch, and fans results back out.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::attention::Weights;
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::runtime::{ArtifactSet, Engine};
+use crate::tensor::Matrix;
+
+use super::batcher::Batcher;
+use super::metrics::ServeMetrics;
+use super::pipeline::EncoderStack;
+
+/// One inference request: token embeddings (rows ≤ seq_len).
+struct InferenceRequest {
+    id: u64,
+    x: Matrix,
+    reply: mpsc::Sender<Result<InferenceResponse>>,
+}
+
+/// The response: final hidden state rows for this request.
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub hidden: Matrix,
+    pub latency: Duration,
+    /// Mean pruning-mask density over the stack for this batch.
+    pub mask_density: f64,
+    /// Simulated accelerator time attributed to this request's batch (ns).
+    pub sim_ns: f64,
+}
+
+/// Serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub layers: usize,
+    /// Maximum time a request may wait for co-batching.
+    pub max_wait: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { layers: 2, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// The serving front end. Cloneable across caller threads.
+#[derive(Clone)]
+pub struct Service {
+    tx: mpsc::Sender<InferenceRequest>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+}
+
+impl Service {
+    /// Spawn the leader thread: it opens the artifacts and builds the
+    /// PJRT engine *on its own thread* (the client is not `Send`).
+    pub fn start(
+        artifact_dir: std::path::PathBuf,
+        hw: HardwareConfig,
+        model_overlay: ModelConfig,
+        cfg: ServiceConfig,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let metrics2 = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<ModelConfig>>();
+        std::thread::Builder::new()
+            .name("cpsaa-leader".into())
+            .spawn(move || leader_loop(artifact_dir, hw, model_overlay, cfg, rx, metrics2, ready_tx))
+            .context("spawning leader thread")?;
+        // Wait for the engine to come up (or fail fast).
+        match ready_rx.recv() {
+            Ok(Ok(_model)) => Ok(Self { tx, metrics }),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(anyhow!("leader thread died during startup")),
+        }
+    }
+
+    /// Submit a request and block until its response arrives.
+    pub fn infer(&self, id: u64, x: Matrix) -> Result<InferenceResponse> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(InferenceRequest { id, x, reply })
+            .map_err(|_| anyhow!("service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("request {id} dropped"))?
+    }
+
+    pub fn metrics(&self) -> ServeMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn leader_loop(
+    artifact_dir: std::path::PathBuf,
+    hw: HardwareConfig,
+    model_overlay: ModelConfig,
+    cfg: ServiceConfig,
+    rx: mpsc::Receiver<InferenceRequest>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    ready: mpsc::Sender<Result<ModelConfig>>,
+) {
+    // Build everything that must live on this thread.
+    let setup = (|| -> Result<(Engine, Weights, ModelConfig)> {
+        let set = ArtifactSet::open(&artifact_dir)?;
+        let c = &set.manifest.config;
+        let model = ModelConfig {
+            seq_len: c.seq_len,
+            d_model: c.d_model,
+            d_k: c.d_k,
+            d_ff: c.d_ff,
+            gamma: c.gamma,
+            quant_bits: c.quant_bits,
+            theta: c.theta,
+            ..model_overlay
+        };
+        let weights = Weights::from_json_file(&set.dir.join("weights.json"))?;
+        let engine = Engine::load(&set)?;
+        Ok((engine, weights, model))
+    })();
+    let (engine, weights, model) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(v.2.clone()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let stack = EncoderStack::new(&engine, weights, hw, model.clone(), cfg.layers);
+
+    while let Ok(first) = rx.recv() {
+        // Batching window.
+        let mut window = vec![first];
+        let mut rows = window[0].x.rows();
+        let deadline = Instant::now() + cfg.max_wait;
+        while rows < model.seq_len {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(remaining) {
+                Ok(req) => {
+                    rows += req.x.rows();
+                    window.push(req);
+                }
+                Err(_) => break,
+            }
+        }
+
+        let mut batcher = Batcher::new(model.seq_len, model.d_model);
+        let mut replies = std::collections::HashMap::new();
+        let arrival = Instant::now();
+        for req in window {
+            match batcher.push(req.id, req.x) {
+                Ok(()) => {
+                    replies.insert(req.id, req.reply);
+                }
+                Err(e) => {
+                    let _ = req.reply.send(Err(anyhow!("rejected: {e}")));
+                }
+            }
+        }
+
+        for plan in batcher.drain() {
+            match stack.forward(&plan.x) {
+                Ok(outs) => {
+                    let last = outs.last().expect("≥1 layer");
+                    let sim_ns: f64 = outs.iter().map(|o| o.sim_ns).sum();
+                    let sim_pj: f64 = outs.iter().map(|o| o.sim_pj).sum();
+                    let density =
+                        outs.iter().map(|o| o.mask_density).sum::<f64>() / outs.len() as f64;
+                    let mut m = metrics.lock().unwrap();
+                    m.batches += 1;
+                    m.used_rows += plan.used_rows as u64;
+                    m.padded_rows += (model.seq_len - plan.used_rows) as u64;
+                    m.sim_ns += sim_ns;
+                    m.sim_pj += sim_pj;
+                    for entry in &plan.entries {
+                        let hidden = plan.extract(&last.hidden, entry);
+                        let latency = arrival.elapsed();
+                        m.requests += 1;
+                        m.latency.record(latency);
+                        if let Some(reply) = replies.remove(&entry.id) {
+                            let _ = reply.send(Ok(InferenceResponse {
+                                id: entry.id,
+                                hidden,
+                                latency,
+                                mask_density: density,
+                                sim_ns,
+                            }));
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("batch failed: {e:#}");
+                    for entry in &plan.entries {
+                        if let Some(reply) = replies.remove(&entry.id) {
+                            let _ = reply.send(Err(anyhow!("{msg}")));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+    use std::path::PathBuf;
+
+    #[test]
+    fn serve_roundtrip() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let svc = Service::start(
+            dir,
+            HardwareConfig::paper(),
+            ModelConfig::paper(),
+            ServiceConfig { layers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let mut rng = SeededRng::new(3);
+        // d_model comes from the manifest; read it indirectly by probing a
+        // valid request shape (the artifact default is 256).
+        let x = rng.normal_matrix(24, 256, 1.0);
+        let resp = svc.infer(42, x).unwrap();
+        assert_eq!(resp.id, 42);
+        assert_eq!(resp.hidden.shape(), (24, 256));
+        assert!(resp.hidden.all_finite());
+        assert!(resp.sim_ns > 0.0);
+        let m = svc.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.batches, 1);
+    }
+
+    #[test]
+    fn concurrent_callers_batch_together() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let svc = Service::start(
+            dir,
+            HardwareConfig::paper(),
+            ModelConfig::paper(),
+            ServiceConfig { layers: 1, max_wait: Duration::from_millis(50) },
+        )
+        .unwrap();
+        let mut handles = Vec::new();
+        for id in 0..4u64 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = SeededRng::new(id);
+                let x = rng.normal_matrix(16, 256, 1.0);
+                svc.infer(id, x).unwrap()
+            }));
+        }
+        let mut ids: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap().id).collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        let m = svc.metrics();
+        assert_eq!(m.requests, 4);
+        // 4 × 16 = 64 rows fit in one 128-row batch if they co-arrived;
+        // allow up to 4 batches under scheduling jitter.
+        assert!(m.batches <= 4);
+    }
+
+    #[test]
+    fn malformed_request_rejected() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let svc = Service::start(
+            dir,
+            HardwareConfig::paper(),
+            ModelConfig::paper(),
+            ServiceConfig { layers: 1, ..Default::default() },
+        )
+        .unwrap();
+        // wrong d_model
+        let bad = Matrix::zeros(8, 7);
+        assert!(svc.infer(1, bad).is_err());
+    }
+}

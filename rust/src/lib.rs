@@ -1,0 +1,38 @@
+//! # CPSAA — crossbar-based PIM sparse attention accelerator (reproduction)
+//!
+//! Full-system reproduction of *CPSAA: Accelerating Sparse Attention using
+//! Crossbar-based Processing-In-Memory Architecture* (cs.AR 2022).
+//!
+//! The crate is the Layer-3 of a three-layer stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels (masked SDDMM,
+//!   SpMM, softmax, quantization) mirroring the paper's 32×32 crossbar
+//!   dispatch, lowered under `interpret=True`.
+//! * **L2** (`python/compile/model.py`) — the CPSAA calculation mode
+//!   (`W_S = W_Q·W_Kᵀ` folding, eq. 3) and PIM pruning (eq. 4) as JAX
+//!   graphs, AOT-lowered to HLO text artifacts.
+//! * **L3** (this crate) — the coordinator that loads those artifacts via
+//!   PJRT ([`runtime`]), the cycle-accurate CPSAA chip simulator ([`sim`]),
+//!   the comparison platforms ([`baselines`]), the workload system
+//!   ([`workload`]), and the bench harness that regenerates every table
+//!   and figure of the paper's evaluation ([`bench_harness`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `cpsaa` binary is self-contained.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod attention;
+pub mod baselines;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+pub use config::{HardwareConfig, ModelConfig, WorkloadConfig};

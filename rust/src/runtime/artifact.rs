@@ -1,0 +1,194 @@
+//! Artifact discovery: manifest.json, weights.json, fixtures.json.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::attention::weights::json_matrix;
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+
+/// `artifacts/manifest.json` — shapes and files per compiled graph.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ManifestConfig,
+    pub artifacts: HashMap<String, ArtifactEntry>,
+}
+
+/// The ModelConfig the artifacts were lowered with (python defaults).
+#[derive(Clone, Debug)]
+pub struct ManifestConfig {
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub d_k: usize,
+    pub d_ff: usize,
+    pub gamma: f32,
+    pub quant_bits: u32,
+    pub theta: f32,
+    pub block: usize,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub file: String,
+    /// Parameter shapes in call order.
+    pub params: Vec<Vec<usize>>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let raw = Json::parse(text).context("parsing manifest.json")?;
+        let c = raw.get("config")?;
+        let config = ManifestConfig {
+            seq_len: c.get("seq_len")?.as_usize()?,
+            d_model: c.get("d_model")?.as_usize()?,
+            d_k: c.get("d_k")?.as_usize()?,
+            d_ff: c.get("d_ff")?.as_usize()?,
+            gamma: c.get("gamma")?.as_f64()? as f32,
+            quant_bits: c.get("quant_bits")?.as_usize()? as u32,
+            theta: c.get("theta")?.as_f64()? as f32,
+            block: c.get("block")?.as_usize()?,
+            seed: c.get("seed")?.as_usize()? as u64,
+        };
+        let mut artifacts = HashMap::new();
+        for (name, entry) in raw.get("artifacts")?.as_obj()? {
+            let params = entry
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| p.as_arr()?.iter().map(Json::as_usize).collect())
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry { file: entry.get("file")?.as_str()?.to_string(), params },
+            );
+        }
+        Ok(Self { config, artifacts })
+    }
+}
+
+/// A located artifact directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactSet {
+    /// Load `dir/manifest.json` and validate the listed files exist.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("reading {} (run `make artifacts`)", manifest_path.display())
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        for (name, entry) in &manifest.artifacts {
+            let p = dir.join(&entry.file);
+            if !p.exists() {
+                return Err(anyhow!("artifact {name} missing file {}", p.display()));
+            }
+        }
+        Ok(Self { dir: dir.to_path_buf(), manifest })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let entry =
+            self.manifest.artifacts.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        Ok(self.dir.join(&entry.file))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.manifest.artifacts.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    pub fn fixtures(&self) -> Result<Fixtures> {
+        Fixtures::open(&self.dir.join("fixtures.json"))
+    }
+}
+
+/// `artifacts/fixtures.json` — the python-side sample input and expected
+/// outputs, used by integration tests to pin PJRT numerics to JAX.
+#[derive(Clone, Debug)]
+pub struct Fixtures {
+    pub x: Matrix,
+    /// Per-artifact expected output tuples.
+    pub outputs: HashMap<String, Vec<Matrix>>,
+}
+
+impl Fixtures {
+    pub fn open(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let raw = Json::parse(&text).context("parsing fixtures.json")?;
+        let x = json_matrix(raw.get("x")?)?;
+        let mut outputs = HashMap::new();
+        for (name, arrays) in raw.get("outputs")?.as_obj()? {
+            let mats: Result<Vec<Matrix>> = arrays.as_arr()?.iter().map(json_matrix).collect();
+            outputs.insert(name.clone(), mats?);
+        }
+        Ok(Self { x, outputs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_parse_minimal() {
+        let text = r#"{
+            "config": {"seq_len": 32, "d_model": 64, "d_k": 64, "d_ff": 128,
+                       "gamma": 4.0, "quant_bits": 4, "theta": 0.01, "block": 32, "seed": 0},
+            "artifacts": {"m": {"file": "m.hlo.txt", "params": [[32, 64]], "sha256_16": "x"}}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.config.seq_len, 32);
+        assert_eq!(m.artifacts["m"].params, vec![vec![32, 64]]);
+    }
+
+    #[test]
+    fn open_default_artifacts() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let set = ArtifactSet::open(&dir).unwrap();
+        for name in ["mask_gen", "attention", "sparse_attention", "dense_attention", "encoder"] {
+            assert!(set.manifest.artifacts.contains_key(name), "missing {name}");
+            assert!(set.hlo_path(name).unwrap().exists());
+        }
+        assert_eq!(set.manifest.config.d_k, 64);
+    }
+
+    #[test]
+    fn fixtures_consistent_with_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let set = ArtifactSet::open(&dir).unwrap();
+        let fix = set.fixtures().unwrap();
+        let cfg = &set.manifest.config;
+        assert_eq!(fix.x.shape(), (cfg.seq_len, cfg.d_model));
+        let z = &fix.outputs["sparse_attention"][0];
+        assert_eq!(z.shape(), (cfg.seq_len, cfg.d_model));
+        let mask = &fix.outputs["sparse_attention"][1];
+        assert_eq!(mask.shape(), (cfg.seq_len, cfg.seq_len));
+        // the fixture mask is binary
+        assert!(mask.data().iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactSet::open(Path::new("/nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! PJRT execution engine: compile once, execute many.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Matrix;
+
+use super::artifact::ArtifactSet;
+
+/// One compiled artifact plus its expected parameter shapes.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    params: Vec<Vec<usize>>,
+}
+
+/// Execution statistics of one engine lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub total_exec_ns: u64,
+}
+
+/// The PJRT engine: a CPU client with every artifact compiled ahead of
+/// time. `execute` is the only thing the request path calls.
+pub struct Engine {
+    client: xla::PjRtClient,
+    compiled: HashMap<String, Compiled>,
+    stats: std::cell::RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Compile every artifact in the set on the PJRT CPU client.
+    pub fn load(artifacts: &ArtifactSet) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let mut compiled = HashMap::new();
+        for name in artifacts.names() {
+            let path = artifacts.hlo_path(name)?;
+            let exe = Self::compile_file(&client, &path)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            let params = artifacts.manifest.artifacts[name].params.clone();
+            compiled.insert(name.to_string(), Compiled { exe, params });
+        }
+        Ok(Self { client, compiled, stats: Default::default() })
+    }
+
+    /// Load a single HLO text file (used by tools and tests).
+    pub fn load_single(path: &Path, params: Vec<Vec<usize>>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let exe = Self::compile_file(&client, path)?;
+        let mut compiled = HashMap::new();
+        let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("module").to_string();
+        compiled.insert(name, Compiled { exe, params });
+        Ok(Self { client, compiled, stats: Default::default() })
+    }
+
+    fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(|e| anyhow!("XLA compile: {e:?}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.compiled.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.borrow()
+    }
+
+    /// Execute artifact `name` with matrix inputs; returns the output
+    /// tuple as matrices (row-major f32).
+    pub fn execute(&self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        let c = self
+            .compiled
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name} (have: {:?})", self.names()))?;
+        if inputs.len() != c.params.len() {
+            return Err(anyhow!("{name}: {} inputs given, {} expected", inputs.len(), c.params.len()));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (m, want) in inputs.iter().zip(&c.params) {
+            let (r, cl) = m.shape();
+            if &vec![r, cl] != want {
+                return Err(anyhow!("{name}: input shape {:?} != expected {:?}", (r, cl), want));
+            }
+            let lit = xla::Literal::vec1(m.data())
+                .reshape(&[r as i64, cl as i64])
+                .map_err(|e| anyhow!("literal reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let start = Instant::now();
+        let out = c
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let root = out[0][0].to_literal_sync().map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.total_exec_ns += start.elapsed().as_nanos() as u64;
+        }
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> = match shape {
+                    xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+                    other => return Err(anyhow!("non-array output: {other:?}")),
+                };
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                match dims.len() {
+                    2 => Ok(Matrix::from_vec(dims[0], dims[1], data)),
+                    1 => Ok(Matrix::from_vec(1, dims[0], data)),
+                    _ => Err(anyhow!("unsupported output rank {dims:?}")),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<ArtifactSet> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        ArtifactSet::open(&dir).ok()
+    }
+
+    #[test]
+    fn load_and_execute_all_artifacts() {
+        let Some(set) = artifacts() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = Engine::load(&set).unwrap();
+        assert_eq!(engine.names().len(), 5);
+        let fix = set.fixtures().unwrap();
+        let cfg = &set.manifest.config;
+        let w = crate::attention::Weights::from_json_file(&set.dir.join("weights.json")).unwrap();
+
+        // sparse_attention(x, w_s, w_v) must reproduce the JAX fixture.
+        let out = engine.execute("sparse_attention", &[&fix.x, &w.w_s, &w.w_v]).unwrap();
+        assert_eq!(out.len(), 2);
+        let want = &fix.outputs["sparse_attention"];
+        assert!(out[0].rel_err(&want[0]) < 1e-4, "z err {}", out[0].rel_err(&want[0]));
+        assert_eq!(out[1].max_abs_diff(&want[1]), 0.0, "mask mismatch");
+        assert_eq!(out[0].shape(), (cfg.seq_len, cfg.d_model));
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        let Some(set) = artifacts() else { return };
+        let engine = Engine::load(&set).unwrap();
+        let bad = Matrix::zeros(3, 3);
+        assert!(engine.execute("mask_gen", &[&bad, &bad]).is_err());
+        assert!(engine.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let Some(set) = artifacts() else { return };
+        let engine = Engine::load(&set).unwrap();
+        let fix = set.fixtures().unwrap();
+        let w = crate::attention::Weights::from_json_file(&set.dir.join("weights.json")).unwrap();
+        assert_eq!(engine.stats().executions, 0);
+        engine.execute("mask_gen", &[&fix.x, &w.w_s]).unwrap();
+        assert_eq!(engine.stats().executions, 1);
+        assert!(engine.stats().total_exec_ns > 0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Application-level simulation (§4.5): encoders = attention + FC layer.
+//!
+//! Real NLP models chain encoders, each a CPSAA attention chip feeding an
+//! ISAAC-style ReRAM FC block; the DTC moves activations between
+//! encoders off-chip. This module costs the FC block and the full
+//! multi-encoder inference so the end-to-end example and the Fig. 20b
+//! sweep rest on the paper's application architecture rather than an
+//! attention-only extrapolation.
+
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::sparse::MaskMatrix;
+
+use super::chip::{ChipSim, SimReport};
+use super::cost::{self, VmmOp};
+
+/// Cost of the FC tail of one encoder (two dense VMMs on ROA-resident
+/// weights, ISAAC-style dot products).
+#[derive(Clone, Copy, Debug)]
+pub struct FcReport {
+    pub total_ns: f64,
+    pub energy_pj: f64,
+}
+
+/// FC block: h → GeLU(h·W1)·W2 with W1: d×d_ff, W2: d_ff×d.
+pub fn simulate_fc(hw: &HardwareConfig, model: &ModelConfig) -> FcReport {
+    let n = model.seq_len;
+    let d = model.d_model;
+    let ff = model.d_ff;
+    // The FC encoder is its own ReRAM block (the paper pairs one CPSAA
+    // chip with a ReRAM FC layer); give each matmul a chip-scale pool.
+    let pool = cost::roa_arrays(hw) + cost::wea_arrays(hw);
+    let fc1 = cost::vmm_cost(hw, VmmOp { n, k: d, m: ff }, pool / 2);
+    let fc2 = cost::vmm_cost(hw, VmmOp { n, k: ff, m: d }, pool / 2);
+    // GeLU unit: row-pipelined like the SU.
+    let act_ns = (n as f64 / hw.tiles as f64 + 4.0) * hw.cycle_ns;
+    FcReport { total_ns: fc1.ns + act_ns + fc2.ns, energy_pj: fc1.pj + fc2.pj }
+}
+
+/// One encoder = attention chip + FC block + DTC hop to the next encoder.
+#[derive(Clone, Debug)]
+pub struct EncoderReport {
+    pub attention: SimReport,
+    pub fc: FcReport,
+    /// Off-chip transfer to the next encoder (DTC), ns.
+    pub dtc_ns: f64,
+    pub total_ns: f64,
+    pub energy_pj: f64,
+}
+
+/// A full model inference: `layers` encoders in series (§4.5 dataflow).
+#[derive(Clone, Debug)]
+pub struct InferenceReport {
+    pub encoders: Vec<EncoderReport>,
+    pub total_ns: f64,
+    pub total_energy_pj: f64,
+    /// Dense-equivalent GOPS over attention + FC work.
+    pub gops: f64,
+}
+
+/// Simulate a whole inference with per-layer masks.
+///
+/// Multi-head handling (`model.heads`): heads run concurrently on
+/// disjoint tile groups (each head's mask drives its own ReCAM
+/// scheduler), so per-layer attention latency is one head's latency on a
+/// `tiles/heads` slice of the chip, and energy scales with head count.
+pub fn simulate_inference(
+    hw: &HardwareConfig,
+    model: &ModelConfig,
+    masks: &[MaskMatrix],
+) -> InferenceReport {
+    let heads = model.heads.max(1);
+    let head_hw = HardwareConfig { tiles: (hw.tiles / heads).max(1), ..hw.clone() };
+    let sim = ChipSim::new(head_hw, model.clone());
+    // DTC: activations leave the encoder at DDR-class bandwidth (the
+    // paper keeps inter-encoder traffic off-chip, managed by the DTC).
+    let dtc_bytes = (model.seq_len * model.d_model * 4) as u64;
+    let dtc_gbps = 32.0; // DDR4-class channel behind the DTC
+    let mut encoders = Vec::with_capacity(model.layers);
+    let mut total_ns = 0.0;
+    let mut total_pj = 0.0;
+    for l in 0..model.layers {
+        let mask = &masks[l % masks.len().max(1)];
+        let mut attention = sim.simulate_batch(mask);
+        // heads run in parallel: wall time is one head's, energy is all.
+        attention.energy_pj *= heads as f64;
+        let fc = simulate_fc(hw, model);
+        let dtc_ns = dtc_bytes as f64 / dtc_gbps;
+        let dtc_pj = dtc_bytes as f64 * 8.0 * hw.transfer_pj_per_bit;
+        let enc_ns = attention.breakdown.total_ns + fc.total_ns + dtc_ns;
+        let enc_pj = attention.energy_pj + fc.energy_pj + dtc_pj;
+        total_ns += enc_ns;
+        total_pj += enc_pj;
+        encoders.push(EncoderReport { attention, fc, dtc_ns, total_ns: enc_ns, energy_pj: enc_pj });
+    }
+    let flops = (model.attention_flops() * heads as u64 + model.fc_flops()) as f64
+        * model.layers as f64;
+    InferenceReport {
+        encoders,
+        total_ns,
+        total_energy_pj: total_pj,
+        gops: flops / 1e9 / (total_ns * 1e-9).max(1e-12),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    fn mask(density: f64) -> MaskMatrix {
+        MaskMatrix::from_dense(&SeededRng::new(1).mask_matrix(320, 320, density))
+    }
+
+    #[test]
+    fn fc_cost_positive_and_scales_with_dff() {
+        let hw = HardwareConfig::paper();
+        let m = ModelConfig::paper();
+        let small = simulate_fc(&hw, &ModelConfig { d_ff: 1024, ..m.clone() });
+        let big = simulate_fc(&hw, &ModelConfig { d_ff: 4096, ..m });
+        assert!(small.total_ns > 0.0);
+        assert!(big.total_ns > small.total_ns);
+        assert!(big.energy_pj > small.energy_pj);
+    }
+
+    #[test]
+    fn inference_chains_layers() {
+        let hw = HardwareConfig::paper();
+        let model = ModelConfig { layers: 4, ..ModelConfig::paper() };
+        let r = simulate_inference(&hw, &model, &[mask(0.1)]);
+        assert_eq!(r.encoders.len(), 4);
+        let sum: f64 = r.encoders.iter().map(|e| e.total_ns).sum();
+        assert!((sum - r.total_ns).abs() < 1e-6);
+        assert!(r.gops > 0.0);
+    }
+
+    #[test]
+    fn gops_stable_across_depth() {
+        // Fig. 20b at application level: per-encoder cost is constant, so
+        // GOPS stays flat with layer count.
+        let hw = HardwareConfig::paper();
+        let masks = [mask(0.1)];
+        let shallow =
+            simulate_inference(&hw, &ModelConfig { layers: 2, ..ModelConfig::paper() }, &masks);
+        let deep =
+            simulate_inference(&hw, &ModelConfig { layers: 32, ..ModelConfig::paper() }, &masks);
+        let ratio = deep.gops / shallow.gops;
+        assert!((0.9..1.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn multi_head_parallel_not_free() {
+        // 8 heads on tile slices: more useful flops, some GOPS gain from
+        // parallelism, but energy scales with head count.
+        let hw = HardwareConfig::paper();
+        let one = simulate_inference(
+            &hw,
+            &ModelConfig { layers: 2, heads: 1, ..ModelConfig::paper() },
+            &[mask(0.1)],
+        );
+        let eight = simulate_inference(
+            &hw,
+            &ModelConfig { layers: 2, heads: 8, ..ModelConfig::paper() },
+            &[mask(0.1)],
+        );
+        assert!(eight.total_energy_pj > one.total_energy_pj);
+        assert!(eight.gops > one.gops, "8 heads {} vs 1 head {}", eight.gops, one.gops);
+        // but not a free 8×: each head has 1/8 of the tiles
+        assert!(eight.gops < one.gops * 8.0);
+    }
+
+    #[test]
+    fn sparse_inference_cheaper_than_dense_masks() {
+        let hw = HardwareConfig::paper();
+        let model = ModelConfig { layers: 2, ..ModelConfig::paper() };
+        let sparse = simulate_inference(&hw, &model, &[mask(0.1)]);
+        let dense = simulate_inference(&hw, &model, &[MaskMatrix::ones(320, 320)]);
+        assert!(sparse.total_ns < dense.total_ns);
+    }
+}

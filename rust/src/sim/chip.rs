@@ -1,0 +1,182 @@
+//! Chip-level simulation: batches → traces → GOPS / GOPS/W.
+
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::sparse::MaskMatrix;
+use crate::workload::WorkloadTrace;
+
+use super::area::AreaModel;
+use super::pipeline::{self, Mode, PhaseBreakdown, PipelineReport};
+
+/// One batch's simulation outcome.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub breakdown: PhaseBreakdown,
+    pub energy_pj: f64,
+    pub mask_density: f64,
+    /// Dense-equivalent throughput over this batch (GOPS).
+    pub gops: f64,
+    /// Energy efficiency (GOPS/W) using dynamic energy + static power.
+    pub gops_per_watt: f64,
+}
+
+/// Aggregate over a whole dataset trace.
+#[derive(Clone, Debug)]
+pub struct TraceReport {
+    pub dataset: String,
+    pub batches: usize,
+    pub total_ns: f64,
+    pub total_energy_pj: f64,
+    pub mean_gops: f64,
+    pub mean_gops_per_watt: f64,
+    pub mean_density: f64,
+    pub breakdown: PhaseBreakdown,
+}
+
+/// The CPSAA chip simulator.
+#[derive(Clone, Debug)]
+pub struct ChipSim {
+    pub hw: HardwareConfig,
+    pub model: ModelConfig,
+    pub mode: Mode,
+    area: AreaModel,
+}
+
+impl ChipSim {
+    pub fn new(hw: HardwareConfig, model: ModelConfig) -> Self {
+        let area = AreaModel::build(&hw);
+        Self { hw, model, mode: Mode::Sparse, area }
+    }
+
+    pub fn dense(mut self) -> Self {
+        self.mode = Mode::Dense;
+        self
+    }
+
+    pub fn area(&self) -> &AreaModel {
+        &self.area
+    }
+
+    /// Simulate a single batch with the given pruning mask.
+    pub fn simulate_batch(&self, mask: &MaskMatrix) -> SimReport {
+        let r: PipelineReport = pipeline::simulate_batch(&self.hw, &self.model, mask, self.mode);
+        self.report_from(r)
+    }
+
+    fn report_from(&self, r: PipelineReport) -> SimReport {
+        let flops = self.model.attention_flops() as f64;
+        let seconds = r.breakdown.total_ns * 1e-9;
+        let gops = flops / 1e9 / seconds.max(1e-12);
+        // Power: dynamic energy over the window plus a static share of the
+        // chip budget (clock, buffers — 10% of TDP, matching the ISAAC
+        // accounting the paper inherits).
+        let dynamic_w = r.energy.total_pj() * 1e-12 / seconds.max(1e-12);
+        let static_w = self.area.chip_power_w() * 0.10;
+        let watts = dynamic_w + static_w;
+        SimReport {
+            breakdown: r.breakdown,
+            energy_pj: r.energy.total_pj(),
+            mask_density: r.mask_density,
+            gops,
+            gops_per_watt: gops / watts.max(1e-9),
+        }
+    }
+
+    /// Simulate a whole trace: batches run serially (§5 — embeddings in
+    /// different batches are processed in serial).
+    pub fn simulate_trace(&self, trace: &WorkloadTrace) -> TraceReport {
+        let mut total_ns = 0.0;
+        let mut total_pj = 0.0;
+        let mut gops = 0.0;
+        let mut gpw = 0.0;
+        let mut density = 0.0;
+        let mut agg = PhaseBreakdown::default();
+        for batch in &trace.batches {
+            let r = self.simulate_batch(&batch.mask);
+            total_ns += r.breakdown.total_ns;
+            total_pj += r.energy_pj;
+            gops += r.gops;
+            gpw += r.gops_per_watt;
+            density += r.mask_density;
+            agg.prune_ns += r.breakdown.prune_ns;
+            agg.step2_ns += r.breakdown.step2_ns;
+            agg.step3_ns += r.breakdown.step3_ns;
+            agg.softmax_ns += r.breakdown.softmax_ns;
+            agg.step4_ns += r.breakdown.step4_ns;
+            agg.wait_for_write_ns += r.breakdown.wait_for_write_ns;
+            agg.transfer_ns += r.breakdown.transfer_ns;
+            agg.ctrl_ns += r.breakdown.ctrl_ns;
+            agg.total_ns += r.breakdown.total_ns;
+            agg.peak_parallel_arrays = agg.peak_parallel_arrays.max(r.breakdown.peak_parallel_arrays);
+        }
+        let n = trace.batches.len().max(1) as f64;
+        TraceReport {
+            dataset: trace.dataset.clone(),
+            batches: trace.batches.len(),
+            total_ns,
+            total_energy_pj: total_pj,
+            mean_gops: gops / n,
+            mean_gops_per_watt: gpw / n,
+            mean_density: density / n,
+            breakdown: agg,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::tensor::SeededRng;
+    use crate::workload::TraceGenerator;
+
+    fn sim() -> ChipSim {
+        ChipSim::new(HardwareConfig::paper(), ModelConfig::paper())
+    }
+
+    fn mask(density: f64) -> MaskMatrix {
+        MaskMatrix::from_dense(&SeededRng::new(1).mask_matrix(320, 320, density))
+    }
+
+    #[test]
+    fn gops_in_plausible_range() {
+        // Paper: CPSAA ≈ 9142 GOPS average. Expect same order of magnitude.
+        let r = sim().simulate_batch(&mask(0.1));
+        assert!(r.gops > 1000.0 && r.gops < 100_000.0, "gops {}", r.gops);
+    }
+
+    #[test]
+    fn gops_per_watt_in_plausible_range() {
+        // Paper: 476 GOPS/W.
+        let r = sim().simulate_batch(&mask(0.1));
+        assert!(r.gops_per_watt > 20.0 && r.gops_per_watt < 10_000.0, "gpw {}", r.gops_per_watt);
+    }
+
+    #[test]
+    fn dense_mode_slower_lower_gops() {
+        let s = sim().simulate_batch(&mask(0.1));
+        let d = sim().dense().simulate_batch(&mask(0.1));
+        assert!(d.gops < s.gops);
+    }
+
+    #[test]
+    fn trace_aggregates() {
+        let gen = TraceGenerator::new(ModelConfig::paper(), 0).with_max_batches(2);
+        let w = WorkloadConfig::paper();
+        let trace = gen.generate(w.dataset("MRPC").unwrap());
+        let r = sim().simulate_trace(&trace);
+        assert_eq!(r.batches, 2);
+        assert!(r.total_ns > 0.0 && r.mean_gops > 0.0);
+    }
+
+    #[test]
+    fn throughput_stable_across_trace_size() {
+        // Fig. 20a: GOPS stays stable as dataset size grows (serial batches).
+        let w = WorkloadConfig::paper();
+        let gen1 = TraceGenerator::new(ModelConfig::paper(), 0).with_max_batches(1);
+        let gen4 = TraceGenerator::new(ModelConfig::paper(), 0).with_max_batches(4);
+        let small = sim().simulate_trace(&gen1.generate(w.dataset("QQP").unwrap()));
+        let large = sim().simulate_trace(&gen4.generate(w.dataset("QQP").unwrap()));
+        let ratio = large.mean_gops / small.mean_gops;
+        assert!(ratio > 0.7 && ratio < 1.3, "ratio {ratio}");
+    }
+}

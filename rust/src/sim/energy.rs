@@ -1,0 +1,136 @@
+//! Per-component energy accounting.
+
+use std::fmt;
+
+/// Energy consumers tracked by the simulator (match the Table 2 rows and
+//  the Fig. 12 discussion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Component {
+    Crossbar,
+    Adc,
+    Dac,
+    Write,
+    Transfer,
+    Recam,
+    Peripheral,
+    Static,
+}
+
+pub const ALL_COMPONENTS: [Component; 8] = [
+    Component::Crossbar,
+    Component::Adc,
+    Component::Dac,
+    Component::Write,
+    Component::Transfer,
+    Component::Recam,
+    Component::Peripheral,
+    Component::Static,
+];
+
+/// Accumulating energy meter (pJ per component).
+#[derive(Clone, Debug, Default)]
+pub struct EnergyMeter {
+    buckets: [f64; 8],
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn idx(c: Component) -> usize {
+        ALL_COMPONENTS.iter().position(|&x| x == c).unwrap()
+    }
+
+    pub fn add(&mut self, c: Component, pj: f64) {
+        debug_assert!(pj >= 0.0, "negative energy {pj} for {c:?}");
+        self.buckets[Self::idx(c)] += pj;
+    }
+
+    pub fn get(&self, c: Component) -> f64 {
+        self.buckets[Self::idx(c)]
+    }
+
+    /// Total energy in pJ.
+    pub fn total_pj(&self) -> f64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Total in millijoules.
+    pub fn total_mj(&self) -> f64 {
+        self.total_pj() * 1e-9
+    }
+
+    /// Merge another meter into this one.
+    pub fn merge(&mut self, other: &EnergyMeter) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+
+    /// (component, pJ, fraction) rows, largest first.
+    pub fn breakdown(&self) -> Vec<(Component, f64, f64)> {
+        let total = self.total_pj().max(f64::MIN_POSITIVE);
+        let mut rows: Vec<_> = ALL_COMPONENTS
+            .iter()
+            .map(|&c| (c, self.get(c), self.get(c) / total))
+            .collect();
+        rows.sort_by(|a, b| b.1.total_cmp(&a.1));
+        rows
+    }
+}
+
+impl fmt::Display for EnergyMeter {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (c, pj, frac) in self.breakdown() {
+            if pj > 0.0 {
+                writeln!(f, "{c:?}: {:.3e} pJ ({:.1}%)", pj, frac * 100.0)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_total() {
+        let mut m = EnergyMeter::new();
+        m.add(Component::Crossbar, 10.0);
+        m.add(Component::Adc, 5.0);
+        m.add(Component::Crossbar, 2.0);
+        assert_eq!(m.get(Component::Crossbar), 12.0);
+        assert_eq!(m.total_pj(), 17.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = EnergyMeter::new();
+        a.add(Component::Write, 3.0);
+        let mut b = EnergyMeter::new();
+        b.add(Component::Write, 4.0);
+        b.add(Component::Static, 1.0);
+        a.merge(&b);
+        assert_eq!(a.get(Component::Write), 7.0);
+        assert_eq!(a.total_pj(), 8.0);
+    }
+
+    #[test]
+    fn breakdown_sorted_and_normalized() {
+        let mut m = EnergyMeter::new();
+        m.add(Component::Adc, 30.0);
+        m.add(Component::Dac, 70.0);
+        let rows = m.breakdown();
+        assert_eq!(rows[0].0, Component::Dac);
+        assert!((rows[0].2 - 0.7).abs() < 1e-12);
+        let frac_sum: f64 = rows.iter().map(|r| r.2).sum();
+        assert!((frac_sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_meter_zero() {
+        assert_eq!(EnergyMeter::new().total_pj(), 0.0);
+    }
+}

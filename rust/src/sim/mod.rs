@@ -1,0 +1,38 @@
+//! Cycle-accurate CPSAA chip simulator — the paper's evaluation substrate.
+//!
+//! The paper evaluates CPSAA with "a Python cycle-accurate simulator"
+//! (§5) plus SPICE/CACTI constants (Table 2). This module re-implements
+//! that simulator in rust:
+//!
+//! * [`cost`] — the analytical crossbar cost primitives every engine
+//!   shares: VMM activation counts, ADC serialization, write scheduling,
+//!   on-chip transfers. All formulas live here, documented, so the
+//!   calibration/perf pass touches one file.
+//! * [`reram`] / [`recam`] — array-level models (VMM activations, ReCAM
+//!   row-search coordinate streams).
+//! * [`sddmm`] / [`spmm`] / [`pruning`] — the paper's three engine
+//!   contributions (§4.3, §4.4, §4.2-Step1) as dispatch simulators over
+//!   real masks.
+//! * [`pipeline`] — the Step1–4 dataflow with write/compute overlap and
+//!   the pruning ∥ attention parallelism (Fig. 7); produces per-phase
+//!   breakdowns and wait-for-write accounting (Figs. 14/15/18).
+//! * [`energy`] / [`area`] — Table 2 roll-ups and per-run energy meters.
+//! * [`chip`] — top level: simulate one batch / one trace, report GOPS,
+//!   GOPS/W, and component breakdowns.
+
+pub mod application;
+pub mod area;
+pub mod chip;
+pub mod cost;
+pub mod endurance;
+pub mod energy;
+pub mod pipeline;
+pub mod pruning;
+pub mod recam;
+pub mod reram;
+pub mod sddmm;
+pub mod spmm;
+
+pub use chip::{ChipSim, SimReport, TraceReport};
+pub use energy::EnergyMeter;
+pub use pipeline::PhaseBreakdown;

@@ -1,0 +1,142 @@
+//! PIM pruning engine — Step 1 of the dataflow (§4.2, eq. 4).
+//!
+//! mask = Bina(Soft(Q⁻¹( Q(X)·Q(W_S)·Q(Xᵀ) ) / √d))
+//!
+//! Everything runs in-memory: Q(W_S) is pre-stored in ROA, Q(Xᵀ) is
+//! written to WEA at quantized width, the two VMMs run at `quant_bits`
+//! precision (fewer bit-slices ⇒ proportionally fewer activations than
+//! the full-precision attention VMMs), and the QU→DQU→SU→BU chain is a
+//! per-row pipeline. The resulting mask is programmed into the ReCAM
+//! scheduler.
+//!
+//! The decisive property (vs. SANGER's pruning): **no Q/K intermediates
+//! and no off-chip traffic**, so Step 1 overlaps Step 2 entirely.
+
+use crate::config::{HardwareConfig, ModelConfig};
+
+use super::cost::{self, VmmOp};
+
+/// Timing/energy of one pruning pass over a batch.
+#[derive(Clone, Copy, Debug)]
+pub struct PruningReport {
+    /// Quantized-VMM latency (both matmuls), ns.
+    pub vmm_ns: f64,
+    /// Q(Xᵀ) write latency, ns.
+    pub write_ns: f64,
+    /// QU/DQU/SU/BU pipeline latency, ns.
+    pub unit_ns: f64,
+    /// ReCAM mask programming latency, ns.
+    pub recam_ns: f64,
+    /// Total latency of the phase (write overlaps the first VMM).
+    pub total_ns: f64,
+    /// Total energy (pJ).
+    pub energy_pj: f64,
+    /// VMM activations.
+    pub vmm_activations: u64,
+    /// Serial VMM dispatch rounds (the Fig. 16 "VMM-N" metric: how many
+    /// sequential crossbar invocations the pruning phase needs).
+    pub vmm_rounds: u64,
+}
+
+/// Simulate the pruning phase for a batch of `seq_len` embeddings.
+pub fn simulate(hw: &HardwareConfig, model: &ModelConfig) -> PruningReport {
+    let n = model.seq_len;
+    let d = model.d_model;
+
+    // Quantized VMMs use quant_bits-wide values: slices shrink.
+    let qhw = HardwareConfig { value_bits: model.quant_bits.max(hw.cell_bits), ..hw.clone() };
+
+    // VMM-1: Q(M) = Q(X)·Q(W_S)  (n×d×d) on ROA-resident Q(W_S).
+    let v1 = cost::vmm_cost(&qhw, VmmOp { n, k: d, m: d }, cost::roa_arrays(hw) / 2);
+    // VMM-2: Q(S) = Q(M)·Q(Xᵀ)  (n×d×n) on the WEA-resident Q(Xᵀ).
+    let v2 = cost::vmm_cost(&qhw, VmmOp { n, k: d, m: n }, cost::wea_arrays(hw) / 4);
+
+    // Q(Xᵀ) write (quantized width): overlaps VMM-1, which needs only
+    // Q(X) and the pre-stored Q(W_S).
+    let write_ns = cost::write_matrix_ns(&qhw, d, n);
+    let write_pj =
+        (d * n) as f64 * model.quant_bits as f64 * hw.write_pj_per_bit;
+
+    // QU + DQU + SU + BU: row-pipelined, one unit set per tile (score
+    // rows distribute across the 64 tiles).
+    let unit_ns = (n as f64 / hw.tiles as f64 + 4.0) * hw.cycle_ns;
+    let unit_pj = n as f64 * (1.134 + 0.121 + 0.382) * hw.cycle_ns; // SU+QU/DQU+CTRL mW
+
+    // Program the n×n mask into the ReCAM schedulers (recam_arrays per
+    // tile, each holding its tile's mask slice; rows write in parallel
+    // across schedulers).
+    let recam_rows = (n * n).div_ceil(hw.recam_size);
+    let schedulers = (hw.tiles * hw.recam_arrays).max(1);
+    let recam_ns = if hw.ideal.no_write_latency {
+        0.0
+    } else {
+        recam_rows.div_ceil(schedulers) as f64 * hw.write_row_ns() * hw.write_verify_factor
+    };
+    let recam_pj = (n * n) as f64 * hw.write_pj_per_bit;
+
+    // Phase critical path: VMM-2 needs both VMM-1 and the Q(Xᵀ) write.
+    let total_ns = v1.ns.max(write_ns) + v2.ns + unit_ns + recam_ns;
+
+    PruningReport {
+        vmm_ns: v1.ns + v2.ns,
+        write_ns,
+        unit_ns,
+        recam_ns,
+        total_ns,
+        energy_pj: v1.pj + v2.pj + write_pj + unit_pj + recam_pj,
+        vmm_activations: v1.activations + v2.activations,
+        vmm_rounds: v1.cycles + v2.cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (HardwareConfig, ModelConfig) {
+        (HardwareConfig::paper(), ModelConfig::paper())
+    }
+
+    #[test]
+    fn phase_has_positive_components() {
+        let (hw, m) = setup();
+        let r = simulate(&hw, &m);
+        assert!(r.vmm_ns > 0.0 && r.write_ns > 0.0 && r.unit_ns > 0.0 && r.recam_ns > 0.0);
+        assert!(r.total_ns >= r.vmm_ns.max(r.write_ns));
+        assert!(r.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn quantization_cheaper_than_full_precision() {
+        let (hw, m) = setup();
+        let quant = simulate(&hw, &m);
+        let full = simulate(&hw, &ModelConfig { quant_bits: 32, ..m });
+        assert!(quant.total_ns < full.total_ns);
+        assert!(quant.vmm_activations < full.vmm_activations);
+    }
+
+    #[test]
+    fn activations_scale_with_quant_bits() {
+        let (hw, m) = setup();
+        let b4 = simulate(&hw, &ModelConfig { quant_bits: 4, ..m.clone() });
+        let b8 = simulate(&hw, &ModelConfig { quant_bits: 8, ..m });
+        assert_eq!(b8.vmm_activations, 2 * b4.vmm_activations);
+    }
+
+    #[test]
+    fn ideal_write_removes_recam_and_write_latency() {
+        let (mut hw, m) = setup();
+        hw.ideal.no_write_latency = true;
+        let r = simulate(&hw, &m);
+        assert_eq!(r.write_ns, 0.0);
+        assert_eq!(r.recam_ns, 0.0);
+    }
+
+    #[test]
+    fn scales_with_sequence_length() {
+        let (hw, m) = setup();
+        let short = simulate(&hw, &ModelConfig { seq_len: 128, ..m.clone() });
+        let long = simulate(&hw, &ModelConfig { seq_len: 320, ..m });
+        assert!(long.total_ns > short.total_ns);
+    }
+}

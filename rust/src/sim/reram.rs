@@ -1,0 +1,111 @@
+//! ReRAM crossbar array model: resident weights + activation bookkeeping.
+//!
+//! A functional-plus-timing model of one crossbar (Fig. 2b): it stores a
+//! block of numbers, performs the analog VMM digitally (for functional
+//! checks), and counts activations/writes for the cost model. The engines
+//! operate on aggregate [`cost`](super::cost) formulas for speed; this
+//! per-array model backs the unit tests that pin those formulas to a
+//! concrete device.
+
+use crate::config::HardwareConfig;
+use crate::tensor::Matrix;
+
+/// One crossbar array holding a `rows×cols` block of values.
+#[derive(Clone, Debug)]
+pub struct CrossbarArray {
+    /// Resident weight block (numbers, not cells).
+    weights: Matrix,
+    /// Total VMM activations performed.
+    pub activations: u64,
+    /// Total row writes performed.
+    pub row_writes: u64,
+}
+
+impl CrossbarArray {
+    /// Program a weight block; counts the row writes (each number is one
+    /// array row at the paper's 32-bit/SLC point).
+    pub fn program(weights: Matrix) -> Self {
+        let row_writes = (weights.rows() * weights.cols()) as u64;
+        Self { weights, activations: 0, row_writes }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        self.weights.shape()
+    }
+
+    /// Re-program (runtime write, WEA only).
+    pub fn rewrite(&mut self, weights: Matrix) {
+        self.row_writes += (weights.rows() * weights.cols()) as u64;
+        self.weights = weights;
+    }
+
+    /// One VMM activation: input vector × resident block.
+    /// Kirchhoff current law summation, modeled exactly in f32.
+    pub fn vmm(&mut self, input: &[f32]) -> Vec<f32> {
+        assert_eq!(input.len(), self.weights.rows(), "input length mismatch");
+        self.activations += 1;
+        let (k, m) = self.weights.shape();
+        let mut out = vec![0.0f32; m];
+        for p in 0..k {
+            let x = input[p];
+            if x == 0.0 {
+                continue;
+            }
+            for (o, w) in out.iter_mut().zip(self.weights.row(p)) {
+                *o += x * w;
+            }
+        }
+        out
+    }
+
+    /// Latency of this array's lifetime activity under `hw` (ns): writes
+    /// serial per row, activations serialized on the local ADC share.
+    pub fn elapsed_ns(&self, hw: &HardwareConfig) -> f64 {
+        let act_cycles = self.activations * super::cost::adc_cycles_per_activation(hw);
+        self.row_writes as f64 * hw.write_row_ns() + act_cycles as f64 * hw.cycle_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    #[test]
+    fn vmm_matches_matmul() {
+        let w = SeededRng::new(0).normal_matrix(8, 8, 1.0);
+        let mut xb = CrossbarArray::program(w.clone());
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let y = xb.vmm(&x);
+        let want = Matrix::from_vec(1, 8, x).matmul(&w);
+        for (a, b) in y.iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        assert_eq!(xb.activations, 1);
+    }
+
+    #[test]
+    fn write_accounting() {
+        let w = Matrix::zeros(32, 1);
+        let mut xb = CrossbarArray::program(w.clone());
+        assert_eq!(xb.row_writes, 32);
+        xb.rewrite(w);
+        assert_eq!(xb.row_writes, 64);
+    }
+
+    #[test]
+    fn elapsed_reflects_ideal_write_knob() {
+        let mut hw = HardwareConfig::paper();
+        let xb = CrossbarArray::program(Matrix::zeros(32, 1));
+        let with_writes = xb.elapsed_ns(&hw);
+        hw.ideal.no_write_latency = true;
+        assert!(xb.elapsed_ns(&hw) < with_writes);
+    }
+
+    #[test]
+    fn zero_input_skips_rows() {
+        let mut xb = CrossbarArray::program(Matrix::full(4, 4, 1.0));
+        let y = xb.vmm(&[0.0, 0.0, 0.0, 0.0]);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

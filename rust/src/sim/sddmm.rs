@@ -1,0 +1,202 @@
+//! ReRAM SDDMM engine (§4.3): vector-wise mapping + ReCAM-driven dispatch.
+//!
+//! Mapping: every column j of the resident Xᵀ (the K-side operand) is a
+//! `d_model`-number vector stored across `d_model / 32` per-column
+//! segment arrays ("all bits of one vector into the same ReRAM array",
+//! Fig. 8c). The ReCAM row-search streams the mask's ⟨α, βᵢ⟩ coordinates;
+//! each masked element (i, j) enqueues row i of M into column j's input
+//! register. All column groups drain their queues in parallel, one
+//! activation per cycle — so latency is the **maximum column queue
+//! depth**, not the total element count (Fig. 8d: a 4×4 S at 0.5 density
+//! finishes in 2 cycles).
+//!
+//! Crossbar-size effect (Fig. 19a): a `c×c` array stores
+//! `c²/value_bits` numbers = `c²/(32·value_bits)` vector segments, so
+//! larger arrays colocate several *columns* behind one ADC and their
+//! queues serialize — vector-wise parallelism decays as c grows.
+
+use crate::config::HardwareConfig;
+use crate::sparse::MaskMatrix;
+
+use super::cost;
+use super::recam::RecamScheduler;
+
+/// Outcome of one SDDMM dispatch over a mask.
+#[derive(Clone, Copy, Debug)]
+pub struct SddmmReport {
+    /// Masked elements computed (the useful work).
+    pub elements: u64,
+    /// Crossbar activations (elements × per-column segments).
+    pub activations: u64,
+    /// Compute latency in ns (queue-bound).
+    pub compute_ns: f64,
+    /// ReCAM search + control-signal latency in ns.
+    pub schedule_ns: f64,
+    /// Dynamic energy in pJ (crossbar + ADC + DAC + ReCAM + CTRL).
+    pub energy_pj: f64,
+    /// Dense-equivalent cycle count (what a DDMM of the same shape costs),
+    /// for the Fig. 17 ratio.
+    pub dense_cycles: u64,
+    /// Actual cycle count.
+    pub cycles: u64,
+}
+
+/// Simulate `S = mask ⊙ (M · Xᵀ)` where M is n×d and Xᵀ is d×m.
+pub fn simulate(hw: &HardwareConfig, mask: &MaskMatrix, d_model: usize) -> SddmmReport {
+    let n = mask.rows();
+    let m = mask.cols();
+    let sched = RecamScheduler::new(mask);
+    let pass = sched.row_search(hw);
+
+    // --- dispatch: per-column queue depths --------------------------------
+    let mut col_nnz = vec![0u64; m];
+    for coords in &pass.coords {
+        for &j in coords {
+            col_nnz[j] += 1;
+        }
+    }
+    let elements: u64 = col_nnz.iter().sum();
+
+    // Segments (arrays) per column vector of d_model numbers (§4.3
+    // mapping: all bits of one vector in the same array).
+    let segs_per_col = cost::segments_per_column(hw, d_model);
+    // Columns colocated per array (queue merging at large c).
+    let coloc = (cost::numbers_per_array(hw) / 32).max(1) as usize;
+
+    // Queue depth per array group = sum of colocated column queues.
+    let mut max_queue = 0u64;
+    for group in col_nnz.chunks(coloc) {
+        max_queue = max_queue.max(group.iter().sum());
+    }
+
+    let activations = elements * segs_per_col;
+    let layout = (m as u64).div_ceil(coloc as u64) * segs_per_col;
+    let arrays_avail = cost::wea_arrays(hw);
+    // Layout exceeding the WEA pool serializes in rounds. The runtime-
+    // written Xᵀ is NOT replicated (replication is the §4.4 SpMM trick;
+    // here the ReCAM queues provide the parallelism).
+    let rounds = layout.div_ceil(arrays_avail).max(1);
+    let arrays = layout.min(arrays_avail);
+    let c = cost::activation_cost(hw, activations, max_queue * rounds, arrays);
+
+    // Dense comparison (the ReRAM DDMM of Fig. 17/19a): every (i, j)
+    // computed, but a dense pass amortizes one array activation over all
+    // `coloc` colocated columns — each input row visits each array once.
+    // The sparse dispatch pays a full activation per masked element (it
+    // reads the whole array for one useful vector); that asymmetry is why
+    // the SDDMM advantage decays as crossbars grow (Fig. 19a).
+    let dense_elements = (n * m) as u64;
+    let dense = cost::activation_cost(
+        hw,
+        dense_elements.div_ceil(coloc as u64) * segs_per_col,
+        n as u64 * rounds,
+        arrays,
+    );
+
+    // CTRL: one control batch per searched mask row.
+    let ctrl_ns = n as f64 * hw.ctrl_latency_ns();
+    let ctrl_pj = n as f64 * hw.ctrl_latency_ns() * 0.382; // CTRL power (Table 2, mW)
+
+    SddmmReport {
+        elements,
+        activations,
+        compute_ns: c.ns,
+        schedule_ns: pass.search_ns + ctrl_ns,
+        energy_pj: c.pj + pass.search_pj + ctrl_pj,
+        dense_cycles: dense.cycles,
+        cycles: c.cycles,
+    }
+}
+
+impl SddmmReport {
+    /// Latency ratio vs. the dense DDMM of the same shape (Fig. 17 metric).
+    pub fn latency_vs_dense(&self) -> f64 {
+        if self.dense_cycles == 0 {
+            return 1.0;
+        }
+        self.cycles as f64 / self.dense_cycles as f64
+    }
+
+    /// Total engine latency (schedule is pipelined with compute: the
+    /// ReCAM search of row i+1 overlaps the dispatch of row i, so only
+    /// the longer of the two paths binds).
+    pub fn total_ns(&self) -> f64 {
+        self.compute_ns.max(self.schedule_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    fn mask(n: usize, density: f64, seed: u64) -> MaskMatrix {
+        MaskMatrix::from_dense(&SeededRng::new(seed).mask_matrix(n, n, density))
+    }
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::paper()
+    }
+
+    #[test]
+    fn paper_fig8_example() {
+        // 4×4 mask, density 0.5 (the exact Fig. 8 mask): every column has
+        // queue depth 2 → two dispatch cycles × the residual ADC stall.
+        let mut m = MaskMatrix::zeros(4, 4);
+        for (i, j) in [(0, 0), (0, 2), (1, 1), (1, 3), (2, 0), (2, 1), (3, 2), (3, 3)] {
+            m.set(i, j, true);
+        }
+        let r = simulate(&hw(), &m, 128);
+        assert_eq!(r.elements, 8);
+        let stall = super::super::cost::adc_stall(&hw());
+        assert_eq!(r.cycles, (2.0 * stall).ceil() as u64);
+    }
+
+    #[test]
+    fn sparsity_reduces_cycles_proportionally() {
+        let full = simulate(&hw(), &MaskMatrix::ones(320, 320), 512);
+        let sparse = simulate(&hw(), &mask(320, 0.1, 1), 512);
+        let ratio = sparse.cycles as f64 / full.cycles as f64;
+        // ~10× saving at 0.1 density (§4.3 "save up to 10× latency"),
+        // slack for queue imbalance.
+        assert!(ratio < 0.25, "ratio {ratio}");
+        assert!(ratio > 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn latency_vs_dense_below_paper_point() {
+        // Fig. 17: SDDMM latency ≈ 17.5% of DDMM at ~0.1 density.
+        let r = simulate(&hw(), &mask(320, 0.1, 2), 512);
+        let f = r.latency_vs_dense();
+        assert!(f > 0.03 && f < 0.4, "fraction {f}");
+    }
+
+    #[test]
+    fn empty_mask_costs_schedule_only() {
+        let r = simulate(&hw(), &MaskMatrix::zeros(64, 64), 512);
+        assert_eq!(r.elements, 0);
+        assert_eq!(r.cycles, 0);
+        assert!(r.schedule_ns > 0.0);
+    }
+
+    #[test]
+    fn bigger_crossbars_lose_vector_parallelism() {
+        // Fig. 19a: speedup of SDDMM vs DDMM decays as crossbar grows.
+        let m = mask(320, 0.1, 3);
+        let mut prev_speedup = f64::INFINITY;
+        for c in [32usize, 64, 128] {
+            let h = HardwareConfig { crossbar_size: c, ..hw() };
+            let r = simulate(&h, &m, 512);
+            let speedup = 1.0 / r.latency_vs_dense();
+            assert!(speedup <= prev_speedup + 1e-9, "c={c}: {speedup} vs {prev_speedup}");
+            prev_speedup = speedup;
+        }
+    }
+
+    #[test]
+    fn activations_count_segments() {
+        let m = mask(64, 0.2, 4);
+        let r = simulate(&hw(), &m, 512);
+        assert_eq!(r.activations, r.elements * (512 / 32));
+    }
+}

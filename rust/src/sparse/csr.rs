@@ -1,0 +1,201 @@
+//! CSR sparse matrix — the runtime format of the sparse score matrix S.
+//!
+//! The paper's comparison platforms (GPU cuSPARSE discussion in §5, SANGER's
+//! split-and-pack) all reason about compressed formats; the baselines model
+//! their conversion overhead, and the golden model uses CSR for the sparse
+//! softmax/SpMM reference path.
+
+use crate::sparse::MaskMatrix;
+use crate::tensor::Matrix;
+
+/// Compressed sparse row f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Compress a dense matrix, keeping entries where `mask` is set.
+    pub fn from_dense_masked(m: &Matrix, mask: &MaskMatrix) -> Self {
+        assert_eq!((m.rows(), m.cols()), (mask.rows(), mask.cols()));
+        let mut row_ptr = Vec::with_capacity(m.rows() + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for i in 0..m.rows() {
+            for j in mask.row_coords(i) {
+                col_idx.push(j);
+                values.push(m.get(i, j));
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Self { rows: m.rows(), cols: m.cols(), row_ptr, col_idx, values }
+    }
+
+    /// Compress keeping all non-zero entries.
+    pub fn from_dense(m: &Matrix) -> Self {
+        Self::from_dense_masked(m, &MaskMatrix::from_dense(m))
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (column, value) pairs of row `i`.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        self.col_idx[lo..hi].iter().copied().zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Mutable values of row `i` (used by the sparse softmax).
+    fn row_values_mut(&mut self, i: usize) -> &mut [f32] {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        &mut self.values[lo..hi]
+    }
+
+    /// Row-wise softmax over the stored entries only — the SU applied to a
+    /// sparse S (masked-out entries carry no probability mass).
+    pub fn softmax_rows(&mut self) {
+        for i in 0..self.rows {
+            let vals = self.row_values_mut(i);
+            if vals.is_empty() {
+                continue;
+            }
+            let max = vals.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for v in vals.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            for v in vals.iter_mut() {
+                *v /= sum;
+            }
+        }
+    }
+
+    /// SpMM: `self @ dense` — the golden reference for the crossbar SpMM
+    /// engine (§4.4).
+    pub fn spmm(&self, dense: &Matrix) -> Matrix {
+        assert_eq!(self.cols, dense.rows());
+        let m = dense.cols();
+        let mut out = Matrix::zeros(self.rows, m);
+        for i in 0..self.rows {
+            // split borrows: write into a scratch row then copy
+            let mut acc = vec![0.0f32; m];
+            for (j, v) in self.row(i) {
+                let drow = dense.row(j);
+                for (a, d) in acc.iter_mut().zip(drow) {
+                    *a += v * d;
+                }
+            }
+            out.data_mut()[i * m..(i + 1) * m].copy_from_slice(&acc);
+        }
+        out
+    }
+
+    /// Back to dense (tests).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for (j, v) in self.row(i) {
+                out.set(i, j, v);
+            }
+        }
+        out
+    }
+
+    /// Density of stored entries.
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    fn sample(seed: u64, n: usize, m: usize, density: f64) -> (Matrix, MaskMatrix) {
+        let mut rng = SeededRng::new(seed);
+        let dense = rng.normal_matrix(n, m, 1.0);
+        let mask = MaskMatrix::from_dense(&rng.mask_matrix(n, m, density));
+        (dense, mask)
+    }
+
+    #[test]
+    fn roundtrip_masked() {
+        let (dense, mask) = sample(1, 16, 24, 0.3);
+        let csr = CsrMatrix::from_dense_masked(&dense, &mask);
+        let back = csr.to_dense();
+        for i in 0..16 {
+            for j in 0..24 {
+                let want = if mask.get(i, j) { dense.get(i, j) } else { 0.0 };
+                assert_eq!(back.get(i, j), want);
+            }
+        }
+    }
+
+    #[test]
+    fn nnz_matches_mask() {
+        let (dense, mask) = sample(2, 32, 32, 0.1);
+        let csr = CsrMatrix::from_dense_masked(&dense, &mask);
+        assert_eq!(csr.nnz(), mask.nnz());
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let (dense, mask) = sample(3, 16, 16, 0.4);
+        let csr = CsrMatrix::from_dense_masked(&dense, &mask);
+        let v = SeededRng::new(4).normal_matrix(16, 8, 1.0);
+        let got = csr.spmm(&v);
+        let want = csr.to_dense().matmul(&v);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn softmax_rows_normalize() {
+        let (dense, mask) = sample(5, 12, 12, 0.5);
+        let mut csr = CsrMatrix::from_dense_masked(&dense, &mask);
+        csr.softmax_rows();
+        for i in 0..12 {
+            let s: f32 = csr.row(i).map(|(_, v)| v).sum();
+            if mask.row_nnz(i) > 0 {
+                assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+            } else {
+                assert_eq!(s, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_empty_rows_ok() {
+        let mut csr = CsrMatrix::from_dense(&Matrix::zeros(4, 4));
+        csr.softmax_rows(); // no panic, nothing stored
+        assert_eq!(csr.nnz(), 0);
+    }
+
+    #[test]
+    fn spmm_identity() {
+        let (dense, _) = sample(6, 8, 8, 1.0);
+        let csr = CsrMatrix::from_dense(&dense);
+        let got = csr.spmm(&Matrix::eye(8));
+        assert!(got.max_abs_diff(&dense) < 1e-6);
+    }
+}

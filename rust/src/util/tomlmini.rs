@@ -1,0 +1,216 @@
+//! The TOML subset used by `configs/*.toml`: `[section]` / `[[array]]`
+//! headers, `key = value` with string / number / boolean values, `#`
+//! comments. No dotted keys, no inline tables, no multi-line strings.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            bail!("not a non-negative integer: {n}");
+        }
+        Ok(n as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("not a boolean: {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+}
+
+/// One `key = value` table.
+pub type Section = BTreeMap<String, Value>;
+
+/// A parsed document: top-level keys in `""`, `[name]` sections, and
+/// repeated `[[name]]` array-of-table entries.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, Section>,
+    pub arrays: BTreeMap<String, Vec<Section>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut doc = Doc::default();
+        enum Target {
+            Plain(String),
+            Array(String),
+        }
+        let mut current = Target::Plain(String::new());
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                doc.arrays.entry(name.clone()).or_default().push(Section::new());
+                current = Target::Array(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                current = Target::Plain(name.trim().to_string());
+            } else if let Some((key, val)) = line.split_once('=') {
+                let key = key.trim().to_string();
+                let value = parse_value(val.trim())
+                    .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+                match &current {
+                    Target::Plain(name) => {
+                        doc.sections.entry(name.clone()).or_default().insert(key, value);
+                    }
+                    Target::Array(name) => {
+                        doc.arrays
+                            .get_mut(name)
+                            .and_then(|v| v.last_mut())
+                            .expect("array entry exists")
+                            .insert(key, value);
+                    }
+                }
+            } else {
+                bail!("line {}: cannot parse {raw:?}", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.get(name)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(n) = s.parse::<f64>() {
+        return Ok(Value::Num(n));
+    }
+    bail!("bad value {s:?}")
+}
+
+/// Serializer helper: write one section.
+pub fn write_section(out: &mut String, name: &str, entries: &[(&str, Value)]) {
+    if !name.is_empty() {
+        out.push_str(&format!("[{name}]\n"));
+    }
+    for (k, v) in entries {
+        match v {
+            Value::Str(s) => out.push_str(&format!("{k} = \"{s}\"\n")),
+            Value::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    out.push_str(&format!("{k} = {}\n", *n as i64));
+                } else {
+                    out.push_str(&format!("{k} = {n}\n"));
+                }
+            }
+            Value::Bool(b) => out.push_str(&format!("{k} = {b}\n")),
+        }
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_arrays() {
+        let doc = Doc::parse(
+            r#"
+# comment
+top = 1
+
+[hardware]
+tiles = 64        # trailing comment
+cycle_ns = 25.0
+name = "paper"
+ideal = false
+
+[[workload.datasets]]
+name = "CoLA"
+sequences = 1043
+
+[[workload.datasets]]
+name = "SST-2"
+sequences = 872
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.section("").unwrap()["top"], Value::Num(1.0));
+        let hw = doc.section("hardware").unwrap();
+        assert_eq!(hw["tiles"].as_usize().unwrap(), 64);
+        assert_eq!(hw["cycle_ns"].as_f64().unwrap(), 25.0);
+        assert_eq!(hw["name"].as_str().unwrap(), "paper");
+        assert!(!hw["ideal"].as_bool().unwrap());
+        let ds = &doc.arrays["workload.datasets"];
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[1]["name"].as_str().unwrap(), "SST-2");
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Doc::parse("[s]\nk = \"a#b\"\n").unwrap();
+        assert_eq!(doc.section("s").unwrap()["k"].as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Doc::parse("[s]\nnonsense line\n").is_err());
+        assert!(Doc::parse("[s]\nk = @@\n").is_err());
+    }
+
+    #[test]
+    fn write_then_parse() {
+        let mut s = String::new();
+        write_section(
+            &mut s,
+            "model",
+            &[("seq_len", Value::Num(320.0)), ("theta", Value::Num(0.01)), ("name", Value::Str("x".into()))],
+        );
+        let doc = Doc::parse(&s).unwrap();
+        assert_eq!(doc.section("model").unwrap()["seq_len"].as_usize().unwrap(), 320);
+    }
+}

@@ -1,0 +1,64 @@
+//! One in-memory batch: the unit CPSAA processes without off-chip traffic.
+
+use crate::sparse::MaskMatrix;
+use crate::tensor::Matrix;
+
+/// A batch of embeddings plus its pruning mask.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Batch index within the trace.
+    pub id: usize,
+    /// Embedding matrix X (seq_len × d_model).
+    pub x: Matrix,
+    /// Pruning mask over token pairs (seq_len × seq_len).
+    pub mask: MaskMatrix,
+}
+
+impl Batch {
+    pub fn seq_len(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn stats(&self) -> BatchStats {
+        BatchStats {
+            seq_len: self.seq_len(),
+            d_model: self.d_model(),
+            mask_nnz: self.mask.nnz(),
+            mask_density: self.mask.density(),
+        }
+    }
+}
+
+/// Summary statistics of one batch (drives the simulators).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchStats {
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub mask_nnz: usize,
+    pub mask_density: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    #[test]
+    fn stats_consistent() {
+        let mut rng = SeededRng::new(0);
+        let b = Batch {
+            id: 0,
+            x: rng.normal_matrix(32, 64, 1.0),
+            mask: MaskMatrix::from_dense(&rng.mask_matrix(32, 32, 0.25)),
+        };
+        let s = b.stats();
+        assert_eq!(s.seq_len, 32);
+        assert_eq!(s.d_model, 64);
+        assert_eq!(s.mask_nnz, b.mask.nnz());
+        assert!((s.mask_density - s.mask_nnz as f64 / 1024.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,15 @@
+//! Workload system: GLUE/SQuAD-shaped synthetic traces.
+//!
+//! The paper batches each dataset into groups of 320 embeddings processed
+//! fully in-memory, with batches serialized behind small off-chip
+//! transfers (§5). [`TraceGenerator`] reproduces that structure: per-batch
+//! sequence lengths drawn from the dataset's length statistics, embeddings
+//! from the seeded RNG, and a pruning mask whose density matches the
+//! dataset's characterization (or, in `exact` mode, the mask the golden
+//! model actually generates).
+
+mod batch;
+mod trace;
+
+pub use batch::{Batch, BatchStats};
+pub use trace::{TraceGenerator, WorkloadTrace};

@@ -1,0 +1,217 @@
+//! Trace generation from dataset statistics.
+
+use crate::attention;
+use crate::config::{DatasetSpec, ModelConfig};
+use crate::sparse::MaskMatrix;
+use crate::tensor::{Matrix, SeededRng};
+
+use super::Batch;
+
+/// A full dataset trace: the ordered batches CPSAA processes serially.
+#[derive(Clone, Debug)]
+pub struct WorkloadTrace {
+    pub dataset: String,
+    pub batches: Vec<Batch>,
+    /// Total embeddings represented (== dataset.sequences when not capped).
+    pub total_sequences: usize,
+}
+
+impl WorkloadTrace {
+    pub fn total_mask_nnz(&self) -> usize {
+        self.batches.iter().map(|b| b.mask.nnz()).sum()
+    }
+
+    pub fn mean_density(&self) -> f64 {
+        if self.batches.is_empty() {
+            return 0.0;
+        }
+        self.batches.iter().map(|b| b.mask.density()).sum::<f64>() / self.batches.len() as f64
+    }
+}
+
+/// Builds [`WorkloadTrace`]s from [`DatasetSpec`]s.
+pub struct TraceGenerator {
+    model: ModelConfig,
+    seed: u64,
+    /// Cap on generated batches (figures need trace *shape*, not volume;
+    /// the simulator extrapolates per-batch results over the true count).
+    pub max_batches: usize,
+    /// When true, masks come from the golden pruning model on the actual
+    /// embeddings; when false, from the dataset's characterized density
+    /// (fast path for large sweeps).
+    pub exact_masks: bool,
+}
+
+impl TraceGenerator {
+    pub fn new(model: ModelConfig, seed: u64) -> Self {
+        Self { model, seed, max_batches: 4, exact_masks: false }
+    }
+
+    pub fn with_exact_masks(mut self, exact: bool) -> Self {
+        self.exact_masks = exact;
+        self
+    }
+
+    pub fn with_max_batches(mut self, n: usize) -> Self {
+        self.max_batches = n.max(1);
+        self
+    }
+
+    /// Generate the trace for one dataset. Results are memoized process-
+    /// wide (the figure harness re-requests identical traces dozens of
+    /// times; see EXPERIMENTS.md §Perf).
+    pub fn generate(&self, ds: &DatasetSpec) -> WorkloadTrace {
+        let key = format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}",
+            ds.name,
+            ds.sequences,
+            ds.mean_len,
+            ds.mask_density,
+            self.model.seq_len,
+            self.model.d_model,
+            self.seed,
+            self.max_batches,
+            self.exact_masks,
+        );
+        {
+            let cache = trace_cache().lock().unwrap();
+            if let Some(t) = cache.get(&key) {
+                return t.clone();
+            }
+        }
+        let t = self.generate_uncached(ds);
+        trace_cache().lock().unwrap().insert(key, t.clone());
+        t
+    }
+
+    fn generate_uncached(&self, ds: &DatasetSpec) -> WorkloadTrace {
+        let n = self.model.seq_len;
+        let d = self.model.d_model;
+        // Each batch holds `batch tokens / mean_len` sequences packed to
+        // seq_len tokens; batch count = ceil(sequences / per_batch).
+        let seqs_per_batch = (n / ds.mean_len.max(1)).max(1);
+        let num_batches = ds.sequences.div_ceil(seqs_per_batch).min(self.max_batches);
+
+        let mut rng = SeededRng::new(self.seed ^ fxhash(&ds.name));
+        // Weights are only needed for golden-model masks; synthesizing
+        // them costs a d×d matmul, so stay lazy on the fast path.
+        let weights = self
+            .exact_masks
+            .then(|| attention::Weights::synthetic(&self.model, self.seed));
+        let mut batches = Vec::with_capacity(num_batches);
+        for id in 0..num_batches {
+            let x = rng.normal_matrix(n, d, 1.0);
+            let mask = match &weights {
+                Some(w) => attention::generate_mask(&x, &w.w_s, &self.model),
+                None => characterized_mask(&mut rng, n, ds.mask_density),
+            };
+            batches.push(Batch { id, x, mask });
+        }
+        WorkloadTrace { dataset: ds.name.clone(), batches, total_sequences: ds.sequences }
+    }
+}
+
+fn trace_cache() -> &'static std::sync::Mutex<std::collections::HashMap<String, WorkloadTrace>> {
+    static CACHE: std::sync::OnceLock<
+        std::sync::Mutex<std::collections::HashMap<String, WorkloadTrace>>,
+    > = std::sync::OnceLock::new();
+    CACHE.get_or_init(Default::default)
+}
+
+/// Mask with the dataset's characterized density and attention-like
+/// structure: a guaranteed diagonal (tokens attend to themselves), plus
+/// random unstructured off-diagonal entries — the paper stresses that
+/// dynamic sparsity is *unstructured*, which is what breaks the vector-wise
+/// schedulers of DOTA/SANGER (§4.3).
+fn characterized_mask(rng: &mut SeededRng, n: usize, density: f64) -> MaskMatrix {
+    let mut dense = Matrix::zeros(n, n);
+    for i in 0..n {
+        dense.set(i, i, 1.0);
+    }
+    let extra = ((density * (n * n) as f64) as usize).saturating_sub(n);
+    for _ in 0..extra {
+        let i = rng.gen_range_usize(0, n);
+        let j = rng.gen_range_usize(0, n);
+        dense.set(i, j, 1.0);
+    }
+    MaskMatrix::from_dense(&dense)
+}
+
+fn fxhash(s: &str) -> u64 {
+    // Tiny deterministic string hash for per-dataset seeds.
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    fn gen() -> TraceGenerator {
+        TraceGenerator::new(ModelConfig { seq_len: 64, d_model: 64, ..Default::default() }, 0)
+    }
+
+    #[test]
+    fn trace_shapes() {
+        let w = WorkloadConfig::paper();
+        let t = gen().generate(w.dataset("MRPC").unwrap());
+        assert!(!t.batches.is_empty());
+        for b in &t.batches {
+            assert_eq!(b.x.shape(), (64, 64));
+            assert_eq!((b.mask.rows(), b.mask.cols()), (64, 64));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = WorkloadConfig::paper();
+        let a = gen().generate(w.dataset("CoLA").unwrap());
+        let b = gen().generate(w.dataset("CoLA").unwrap());
+        assert_eq!(a.batches[0].x, b.batches[0].x);
+        assert_eq!(a.batches[0].mask, b.batches[0].mask);
+    }
+
+    #[test]
+    fn datasets_get_distinct_data() {
+        let w = WorkloadConfig::paper();
+        let a = gen().generate(w.dataset("CoLA").unwrap());
+        let b = gen().generate(w.dataset("SST-2").unwrap());
+        assert!(a.batches[0].x.max_abs_diff(&b.batches[0].x) > 0.0);
+    }
+
+    #[test]
+    fn characterized_density_close() {
+        let w = WorkloadConfig::paper();
+        let ds = w.dataset("QQP").unwrap();
+        let t = gen().generate(ds);
+        let d = t.mean_density();
+        assert!((d - ds.mask_density).abs() < 0.05, "density {d} vs {}", ds.mask_density);
+    }
+
+    #[test]
+    fn diagonal_always_present() {
+        let w = WorkloadConfig::paper();
+        let t = gen().generate(w.dataset("RTE").unwrap());
+        for b in &t.batches {
+            for i in 0..b.mask.rows() {
+                assert!(b.mask.get(i, i));
+            }
+        }
+    }
+
+    #[test]
+    fn exact_masks_use_golden_model() {
+        let w = WorkloadConfig::paper();
+        let t = gen().with_exact_masks(true).with_max_batches(1).generate(w.dataset("WNLI").unwrap());
+        // exact masks are whatever the pruning model yields; just sanity-check density
+        let d = t.mean_density();
+        assert!(d > 0.0 && d < 1.0);
+    }
+
+    #[test]
+    fn max_batches_respected() {
+        let w = WorkloadConfig::paper();
+        let t = gen().with_max_batches(2).generate(w.dataset("QQP").unwrap());
+        assert!(t.batches.len() <= 2);
+    }
+}

@@ -1,0 +1,97 @@
+//! CLI smoke tests: every subcommand runs against the built binary.
+
+use std::process::Command;
+
+fn cpsaa(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_cpsaa"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn cpsaa");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn info_prints_table2_budget() {
+    let (ok, text) = cpsaa(&["info"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("64 tiles"), "{text}");
+    assert!(text.contains("Table 2"), "{text}");
+}
+
+#[test]
+fn simulate_one_dataset() {
+    let (ok, text) = cpsaa(&["simulate", "WNLI", "--batches", "1"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("WNLI"), "{text}");
+    assert!(text.contains("GOPS"), "{text}");
+}
+
+#[test]
+fn bench_figure_table2() {
+    let (ok, text) = cpsaa(&["bench-figure", "table2"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("CPSAA"), "{text}");
+    assert!(text.contains("PC Total"), "{text}");
+}
+
+#[test]
+fn bench_figure_unknown_fails() {
+    let (ok, text) = cpsaa(&["bench-figure", "fig99"]);
+    assert!(!ok);
+    assert!(text.contains("unknown figure"), "{text}");
+}
+
+#[test]
+fn sweep_crossbar() {
+    let (ok, text) = cpsaa(&["sweep", "crossbar_size", "32", "64"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("32") && text.contains("64"), "{text}");
+}
+
+#[test]
+fn sweep_rejects_bad_param() {
+    let (ok, text) = cpsaa(&["sweep", "bogus_knob", "1"]);
+    assert!(!ok);
+    assert!(text.contains("unknown sweep parameter"), "{text}");
+}
+
+#[test]
+fn inference_reports_endurance() {
+    let (ok, text) = cpsaa(&["inference", "CoLA", "--layers", "2"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("endurance"), "{text}");
+    assert!(text.contains("2-encoder"), "{text}");
+}
+
+#[test]
+fn unknown_command_shows_usage() {
+    let (ok, text) = cpsaa(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("USAGE"), "{text}");
+}
+
+#[test]
+fn config_file_round_trips_through_cli() {
+    let (ok, text) = cpsaa(&["--config", "configs/paper.toml", "info"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("32x32 crossbars"), "{text}");
+}
+
+#[test]
+fn check_verifies_artifacts_when_present() {
+    let has_artifacts =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists();
+    let (ok, text) = cpsaa(&["check"]);
+    if has_artifacts {
+        assert!(ok, "{text}");
+        assert!(text.contains("check OK"), "{text}");
+    } else {
+        assert!(!ok);
+    }
+}

@@ -1,0 +1,167 @@
+//! Cross-layer integration tests: PJRT artifacts × golden model ×
+//! simulator × coordinator. These are the "all layers compose" checks —
+//! they are skipped (with a notice) when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use cpsaa::attention::{self, Weights};
+use cpsaa::config::{HardwareConfig, ModelConfig, SystemConfig};
+use cpsaa::coordinator::{EncoderStack, Service, ServiceConfig};
+use cpsaa::runtime::{ArtifactSet, Engine};
+use cpsaa::sim::ChipSim;
+use cpsaa::sparse::MaskMatrix;
+use cpsaa::tensor::SeededRng;
+
+fn artifacts() -> Option<ArtifactSet> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactSet::open(&dir) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping integration test: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn model_of(set: &ArtifactSet) -> ModelConfig {
+    let c = &set.manifest.config;
+    ModelConfig {
+        seq_len: c.seq_len,
+        d_model: c.d_model,
+        d_k: c.d_k,
+        d_ff: c.d_ff,
+        gamma: c.gamma,
+        quant_bits: c.quant_bits,
+        theta: c.theta,
+        ..ModelConfig::default()
+    }
+}
+
+#[test]
+fn pjrt_matches_rust_golden_model() {
+    // The same computation three ways: JAX fixtures (via file), PJRT
+    // execution (via xla), and the pure-rust golden model. All must agree.
+    let Some(set) = artifacts() else { return };
+    let engine = Engine::load(&set).unwrap();
+    let weights = Weights::from_json_file(&set.dir.join("weights.json")).unwrap();
+    let fix = set.fixtures().unwrap();
+    let model = model_of(&set);
+
+    // PJRT mask == golden mask (binarization is exact, so identical).
+    let pjrt_mask = &engine.execute("mask_gen", &[&fix.x, &weights.w_s]).unwrap()[0];
+    let golden_mask = attention::generate_mask(&fix.x, &weights.w_s, &model);
+    assert_eq!(
+        MaskMatrix::from_dense(pjrt_mask),
+        golden_mask,
+        "PJRT and golden pruning masks disagree"
+    );
+
+    // PJRT attention == golden attention under the same mask.
+    let pjrt_z =
+        &engine.execute("attention", &[&fix.x, &weights.w_s, &weights.w_v, pjrt_mask]).unwrap()[0];
+    let golden_z =
+        attention::cpsaa_attention(&fix.x, &weights.w_s, &weights.w_v, &golden_mask, &model);
+    let err = pjrt_z.rel_err(&golden_z);
+    assert!(err < 1e-4, "PJRT vs golden attention rel err {err}");
+}
+
+#[test]
+fn dense_attention_artifact_matches_golden() {
+    let Some(set) = artifacts() else { return };
+    let engine = Engine::load(&set).unwrap();
+    let weights = Weights::from_json_file(&set.dir.join("weights.json")).unwrap();
+    let fix = set.fixtures().unwrap();
+    let model = model_of(&set);
+    let pjrt = &engine.execute("dense_attention", &[&fix.x, &weights.w_s, &weights.w_v]).unwrap()[0];
+    let golden = attention::dense_attention(&fix.x, &weights.w_s, &weights.w_v, &model);
+    let err = pjrt.rel_err(&golden);
+    assert!(err < 1e-4, "dense attention rel err {err}");
+}
+
+#[test]
+fn encoder_stack_simulates_while_executing() {
+    let Some(set) = artifacts() else { return };
+    let engine = Engine::load(&set).unwrap();
+    let weights = Weights::from_json_file(&set.dir.join("weights.json")).unwrap();
+    let model = model_of(&set);
+    let stack = EncoderStack::new(&engine, weights, HardwareConfig::paper(), model.clone(), 3);
+    let fix = set.fixtures().unwrap();
+    let outs = stack.forward(&fix.x).unwrap();
+    assert_eq!(outs.len(), 3);
+    // hardware accounting must be live for every layer, densities sane
+    for (i, o) in outs.iter().enumerate() {
+        assert!(o.sim_ns > 0.0 && o.sim_pj > 0.0, "layer {i} has no sim cost");
+        assert!(o.mask_density > 0.0 && o.mask_density < 1.0, "layer {i} density {}", o.mask_density);
+        assert!(o.hidden.all_finite());
+    }
+}
+
+#[test]
+fn service_end_to_end_with_simulated_cost() {
+    let Some(set) = artifacts() else { return };
+    let d_model = set.manifest.config.d_model;
+    drop(set);
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let svc = Service::start(
+        dir,
+        HardwareConfig::paper(),
+        ModelConfig::paper(),
+        ServiceConfig { layers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = SeededRng::new(77);
+    for id in 0..3u64 {
+        let rows = 8 + rng.gen_range_usize(0, 48);
+        let x = rng.normal_matrix(rows, d_model, 1.0);
+        let resp = svc.infer(id, x).unwrap();
+        assert_eq!(resp.hidden.rows(), rows);
+        assert!(resp.sim_ns > 0.0);
+        assert!(resp.mask_density > 0.0);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.requests, 3);
+    assert!(m.sim_pj > 0.0);
+    assert!(m.batch_utilization() > 0.0);
+}
+
+#[test]
+fn simulator_consistent_with_artifact_masks() {
+    // Use the real (JAX-produced) pruning mask to drive the cycle
+    // simulator: sparse must beat dense on the same mask, and the figure
+    // harness must run on the artifact-shaped config too.
+    let Some(set) = artifacts() else { return };
+    let fix = set.fixtures().unwrap();
+    let mask = MaskMatrix::from_dense(&fix.outputs["mask_gen"][0]);
+    let model = model_of(&set);
+    let sparse = ChipSim::new(HardwareConfig::paper(), model.clone()).simulate_batch(&mask);
+    let dense = ChipSim::new(HardwareConfig::paper(), model).dense().simulate_batch(&mask);
+    assert!(
+        sparse.breakdown.total_ns < dense.breakdown.total_ns,
+        "sparse {} >= dense {}",
+        sparse.breakdown.total_ns,
+        dense.breakdown.total_ns
+    );
+    assert!(sparse.gops > dense.gops);
+}
+
+#[test]
+fn figures_run_on_artifact_config() {
+    // Every figure harness must also run on a non-paper config (the
+    // artifact shape) without panicking — config generality check.
+    let cfg = SystemConfig {
+        model: ModelConfig::artifact_default(),
+        ..SystemConfig::paper()
+    };
+    for id in cpsaa::bench_harness::ALL_FIGURES {
+        let tables = cpsaa::bench_harness::run_figure(id, &cfg)
+            .unwrap_or_else(|| panic!("missing figure {id}"));
+        for t in tables {
+            assert!(!t.rows.is_empty(), "figure {id} empty");
+            for (label, vals) in &t.rows {
+                for v in vals {
+                    assert!(v.is_finite(), "figure {id} row {label} not finite");
+                }
+            }
+        }
+    }
+}

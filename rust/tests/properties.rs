@@ -1,0 +1,216 @@
+//! Property tests over the L3 substrates and simulator invariants
+//! (the in-tree `util::prop` driver replaces proptest in this offline
+//! build — N seeded cases per property, failing seed reported).
+
+use cpsaa::attention::{self, Weights};
+use cpsaa::config::{HardwareConfig, ModelConfig};
+use cpsaa::coordinator::Batcher;
+use cpsaa::prop_assert;
+use cpsaa::sim::{pipeline, sddmm, spmm};
+use cpsaa::sparse::{CsrMatrix, MaskMatrix};
+use cpsaa::tensor::{Matrix, SeededRng};
+use cpsaa::util::prop::{check, default_cases};
+
+fn rand_mask(rng: &mut SeededRng, n: usize) -> MaskMatrix {
+    let density = 0.02 + rng.uniform() as f64 * 0.5;
+    MaskMatrix::from_dense(&rng.mask_matrix(n, n, density))
+}
+
+#[test]
+fn prop_mask_roundtrip_and_counts() {
+    check("mask_roundtrip", default_cases(), |rng| {
+        let n = 8 + rng.gen_range_usize(0, 120);
+        let mask = rand_mask(rng, n);
+        let dense = mask.to_dense();
+        prop_assert!(MaskMatrix::from_dense(&dense) == mask, "roundtrip failed n={n}");
+        let total: usize = (0..n).map(|i| mask.row_coords(i).len()).sum();
+        prop_assert!(total == mask.nnz(), "coords {total} != nnz {}", mask.nnz());
+        let bc = mask.block_counts(32, 32);
+        prop_assert!(bc.total() == mask.nnz() as u64, "block counts lose mass");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_spmm_equals_dense() {
+    check("csr_spmm", default_cases(), |rng| {
+        let n = 8 + rng.gen_range_usize(0, 56);
+        let mask = rand_mask(rng, n);
+        let s = rng.normal_matrix(n, n, 1.0);
+        let v = rng.normal_matrix(n, 16, 1.0);
+        let csr = CsrMatrix::from_dense_masked(&s, &mask);
+        let got = csr.spmm(&v);
+        let want = csr.to_dense().matmul(&v);
+        prop_assert!(got.max_abs_diff(&want) < 1e-4, "spmm mismatch n={n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_masked_attention_equals_dense_under_full_mask() {
+    check("full_mask_dense", 24, |rng| {
+        let cfg = ModelConfig { seq_len: 32, d_model: 64, ..Default::default() };
+        let w = Weights::synthetic(&cfg, rng.gen_range_usize(0, 1000) as u64);
+        let x = rng.normal_matrix(32, 64, 1.0);
+        let ones = MaskMatrix::ones(32, 32);
+        let zs = attention::cpsaa_attention(&x, &w.w_s, &w.w_v, &ones, &cfg);
+        let zd = attention::dense_attention(&x, &w.w_s, &w.w_v, &cfg);
+        prop_assert!(zs.rel_err(&zd) < 1e-4, "rel err {}", zs.rel_err(&zd));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sddmm_cycles_never_exceed_dense() {
+    let hw = HardwareConfig::paper();
+    check("sddmm_vs_dense", default_cases(), |rng| {
+        let n = 32 + rng.gen_range_usize(0, 288);
+        let mask = rand_mask(rng, n);
+        let r = sddmm::simulate(&hw, &mask, 512);
+        prop_assert!(
+            r.cycles <= r.dense_cycles,
+            "sparse {} > dense {} (density {})",
+            r.cycles,
+            r.dense_cycles,
+            mask.density()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmm_beats_baseline_cycles() {
+    let hw = HardwareConfig::paper();
+    check("spmm_vs_baseline", default_cases(), |rng| {
+        let n = 32 + rng.gen_range_usize(0, 288);
+        let mask = rand_mask(rng, n);
+        let r = spmm::simulate(&hw, &mask, 64);
+        prop_assert!(
+            r.cycles <= r.baseline_cycles,
+            "replicated {} > baseline {}",
+            r.cycles,
+            r.baseline_cycles
+        );
+        prop_assert!(r.replication_factor >= 0.0, "negative replication");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipeline_monotone_in_density() {
+    // More mask density ⇒ no less total time and no less energy.
+    let hw = HardwareConfig::paper();
+    let model = ModelConfig { seq_len: 128, ..ModelConfig::paper() };
+    check("pipeline_monotone", 16, |rng| {
+        let seed = rng.gen_range_usize(0, 1 << 30) as u64;
+        let mut mk = |d: f64| {
+            MaskMatrix::from_dense(&SeededRng::new(seed).mask_matrix(128, 128, d))
+        };
+        let lo = pipeline::simulate_batch(&hw, &model, &mk(0.05), pipeline::Mode::Sparse);
+        let hi = pipeline::simulate_batch(&hw, &model, &mk(0.6), pipeline::Mode::Sparse);
+        prop_assert!(
+            hi.breakdown.total_ns >= lo.breakdown.total_ns * 0.99,
+            "density not monotone: {} vs {}",
+            hi.breakdown.total_ns,
+            lo.breakdown.total_ns
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipeline_phase_sums_bound_total() {
+    let hw = HardwareConfig::paper();
+    let model = ModelConfig::paper();
+    check("phase_bounds", 16, |rng| {
+        let mask = rand_mask(rng, model.seq_len);
+        let r = pipeline::simulate_batch(&hw, &model, &mask, pipeline::Mode::Sparse);
+        let b = r.breakdown;
+        let serial = b.prune_ns
+            + b.step2_ns
+            + b.step3_ns
+            + b.softmax_ns
+            + b.step4_ns
+            + b.wait_for_write_ns
+            + b.transfer_ns
+            + b.ctrl_ns;
+        prop_assert!(b.total_ns <= serial + 1.0, "total {} > serial {serial}", b.total_ns);
+        for (name, v) in [
+            ("prune", b.prune_ns),
+            ("step2", b.step2_ns),
+            ("step3", b.step3_ns),
+            ("step4", b.step4_ns),
+        ] {
+            prop_assert!(b.total_ns >= v, "{name} {v} exceeds total {}", b.total_ns);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_no_loss_no_overlap() {
+    check("batcher", default_cases(), |rng| {
+        let seq = 16 + rng.gen_range_usize(0, 112);
+        let d = 4;
+        let mut b = Batcher::new(seq, d);
+        let count = 1 + rng.gen_range_usize(0, 24);
+        let mut sizes = Vec::new();
+        for id in 0..count {
+            let rows = 1 + rng.gen_range_usize(0, seq);
+            sizes.push((id as u64, rows));
+            b.push(id as u64, Matrix::zeros(rows, d)).map_err(|e| e.to_string())?;
+        }
+        let plans = b.drain();
+        // every request appears exactly once with its size
+        let mut seen = std::collections::HashMap::new();
+        for p in &plans {
+            prop_assert!(p.used_rows <= seq, "overfull batch");
+            let mut cursor = 0usize;
+            for e in &p.entries {
+                prop_assert!(e.offset == cursor, "gap/overlap at {}", e.id);
+                cursor += e.rows;
+                prop_assert!(seen.insert(e.id, e.rows).is_none(), "dup {}", e.id);
+            }
+        }
+        for (id, rows) in sizes {
+            prop_assert!(seen.get(&id) == Some(&rows), "lost request {id}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_binarize_monotone_in_theta() {
+    check("binarize_monotone", default_cases(), |rng| {
+        let n = 8 + rng.gen_range_usize(0, 56);
+        let p = rng.normal_matrix(n, n, 1.0).map(|v| v.abs() / 4.0);
+        let t1 = 0.05 + rng.uniform() * 0.2;
+        let t2 = t1 + 0.1;
+        let loose = attention::mask::binarize(&p, t1);
+        let tight = attention::mask::binarize(&p, t2);
+        prop_assert!(tight.nnz() <= loose.nnz(), "not monotone");
+        for i in 0..n {
+            for j in tight.row_coords(i) {
+                prop_assert!(loose.get(i, j), "tight not subset at ({i},{j})");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_error_bounded() {
+    check("quant_bound", default_cases(), |rng| {
+        let x = rng.normal_matrix(16, 16, 0.2);
+        let gamma = 4.0 + rng.uniform() * 12.0;
+        let r = attention::quant::roundtrip(&x, gamma, 8);
+        let bound = 0.5 / gamma + 1e-5;
+        let in_range = attention::quant::grid_bound(8) / gamma;
+        for (a, b) in x.data().iter().zip(r.data()) {
+            if a.abs() < in_range {
+                prop_assert!((a - b).abs() <= bound, "err {} > {bound}", (a - b).abs());
+            }
+        }
+        Ok(())
+    });
+}
