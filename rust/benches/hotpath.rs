@@ -1,69 +1,91 @@
-//! Bench: L3 hot paths — the targets of the §Perf optimization pass.
+//! Bench: L3 hot paths — the targets of the perf optimization pass.
 //!
-//! Measures the simulator primitives (mask scan, SDDMM/SpMM dispatch,
-//! full pipeline), the golden-model matmul, and — when artifacts exist —
-//! the PJRT execute path the coordinator runs per batch.
+//! Centerpiece: the DispatchPlan economics. `plan_build` prices the one
+//! ReCAM scan; the `*_scan_per_call` / `*_plan_reuse` pairs show every
+//! consumer (attention kernel, SDDMM/SpMM dispatch simulators, full
+//! pipeline) with and without plan amortization on the paper workload
+//! (320×320 mask @ 0.1 density). Numbers land in `target/bench/hotpath.json`.
 
-use cpsaa::attention::{self, Weights};
-use cpsaa::config::{ModelConfig, SystemConfig};
-use cpsaa::runtime::{ArtifactSet, Engine};
-use cpsaa::sim::{sddmm, spmm, ChipSim};
-use cpsaa::sparse::MaskMatrix;
+use cpsaa::attention::{self, ops, Weights};
+use cpsaa::config::SystemConfig;
+use cpsaa::sim::{pipeline, sddmm, spmm, ChipSim};
+use cpsaa::sparse::{CsrMatrix, MaskMatrix};
 use cpsaa::tensor::SeededRng;
 use cpsaa::util::bench::Bencher;
 
 fn main() {
     let cfg = SystemConfig::paper();
     let mut b = Bencher::new("hotpath");
-    let n = cfg.model.seq_len;
+    let n = cfg.model.seq_len; // 320
+    let d = cfg.model.d_model; // 512
     let mask = MaskMatrix::from_dense(&SeededRng::new(1).mask_matrix(n, n, 0.1));
 
-    // -- simulator primitives ------------------------------------------------
-    b.run("mask_row_coords_320", || {
-        let mut total = 0usize;
-        for i in 0..mask.rows() {
-            total += mask.row_coords(i).len();
-        }
-        total
+    // -- the plan itself -----------------------------------------------------
+    b.run("plan_build_320", || mask.plan().nnz());
+    let plan = mask.plan();
+    b.run("plan_stats_read_320", || {
+        plan.grouped_max_queue(1) + plan.blocks().nonzero_tiles() as u64
     });
-    b.run("mask_block_counts_320", || mask.block_counts(32, 32).nonzero_tiles());
-    b.run("sddmm_dispatch_320x512", || sddmm::simulate(&cfg.hardware, &mask, 512).cycles);
-    b.run("spmm_dispatch_320x512", || spmm::simulate(&cfg.hardware, &mask, 512).cycles);
+
+    // -- simulator primitives: per-call scan vs. plan reuse ------------------
+    b.run("sddmm_dispatch_scan_per_call", || sddmm::simulate(&cfg.hardware, &mask, d).cycles);
+    b.run("sddmm_dispatch_plan_reuse", || sddmm::simulate_plan(&cfg.hardware, &plan, d).cycles);
+    b.run("spmm_dispatch_scan_per_call", || spmm::simulate(&cfg.hardware, &mask, d).cycles);
+    b.run("spmm_dispatch_plan_reuse", || spmm::simulate_plan(&cfg.hardware, &plan, d).cycles);
 
     let sim = ChipSim::new(cfg.hardware.clone(), cfg.model.clone());
-    b.run("pipeline_batch_sparse", || sim.simulate_batch(&mask).breakdown.total_ns);
+    b.run("pipeline_batch_scan_per_call", || sim.simulate_batch(&mask).breakdown.total_ns);
+    b.run("pipeline_batch_plan_reuse", || sim.simulate_batch_planned(&plan).breakdown.total_ns);
 
-    // -- golden model ----------------------------------------------------------
-    let model = ModelConfig { seq_len: 128, d_model: 256, ..cfg.model.clone() };
-    let w = Weights::synthetic(&model, 0);
-    let x = SeededRng::new(2).normal_matrix(model.seq_len, model.d_model, 1.0);
-    b.run("golden_mask_gen_128x256", || attention::generate_mask(&x, &w.w_s, &model).nnz());
-    let gmask = attention::generate_mask(&x, &w.w_s, &model);
-    b.run("golden_sparse_attention_128x256", || {
-        attention::cpsaa_attention(&x, &w.w_s, &w.w_v, &gmask, &model).norm()
+    // -- golden attention kernel on the paper workload -----------------------
+    // Three rungs of the same computation:
+    //   * per-call dense round-trip — the *shape* of the seed algorithm:
+    //     x-transpose copy, dense S buffer, dense scale, separate CSR
+    //     compression, and two throwaway plan builds standing in for the
+    //     seed's two per-call mask walks (the original scan code is gone);
+    //   * scan-per-call — today's kernel building its plan inside the call;
+    //   * plan-reuse — what the coordinator runs per layer after building
+    //     the batch plan once.
+    let w = Weights::synthetic(&cfg.model, 0);
+    let x = SeededRng::new(2).normal_matrix(n, d, 1.0);
+    let dense_roundtrip = || {
+        let m = x.matmul(&w.w_s);
+        let v = x.matmul(&w.w_v);
+        let s = ops::masked_sddmm(&m, &x.transpose(), &mask)
+            .scale(1.0 / (cfg.model.d_k as f32).sqrt());
+        let mut p = CsrMatrix::from_dense_masked(&s, &mask);
+        p.softmax_rows();
+        p.spmm(&v).norm()
+    };
+    let seed_shape = b.run("attention_320x512_per_call_dense_roundtrip", dense_roundtrip);
+    b.run("attention_320x512_scan_per_call", || {
+        attention::cpsaa_attention(&x, &w.w_s, &w.w_v, &mask, &cfg.model).norm()
     });
+    let reuse = b.run("attention_320x512_plan_reuse", || {
+        ops::cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg.model).norm()
+    });
+    println!(
+        "attention plan reuse vs seed-shaped per-call dense round-trip: {:.2}x",
+        seed_shape.as_secs_f64() / reuse.as_secs_f64().max(1e-12)
+    );
+    let m_for_csr = x.matmul(&w.w_s);
+    b.run("csr_from_plan_320", || CsrMatrix::from_plan(&plan, &m_for_csr).nnz());
+
+    // -- golden model end-to-end (pruning + attention) -----------------------
+    let model = cpsaa::config::ModelConfig { seq_len: 128, d_model: 256, ..cfg.model.clone() };
+    let wm = Weights::synthetic(&model, 0);
+    let xm = SeededRng::new(3).normal_matrix(model.seq_len, model.d_model, 1.0);
+    b.run("golden_mask_gen_128x256", || attention::generate_mask(&xm, &wm.w_s, &model).nnz());
     b.run("golden_dense_attention_128x256", || {
-        attention::dense_attention(&x, &w.w_s, &w.w_v, &model).norm()
+        attention::dense_attention(&xm, &wm.w_s, &wm.w_v, &model).norm()
     });
 
-    // -- PJRT path (needs artifacts) --------------------------------------------
-    let dir = std::path::PathBuf::from("artifacts");
-    if let Ok(set) = ArtifactSet::open(&dir) {
-        let engine = Engine::load(&set).expect("engine");
-        let fix = set.fixtures().expect("fixtures");
-        let wj = Weights::from_json_file(&set.dir.join("weights.json")).expect("weights");
-        b.run("pjrt_mask_gen", || engine.execute("mask_gen", &[&fix.x, &wj.w_s]).unwrap().len());
-        b.run("pjrt_sparse_attention", || {
-            engine.execute("sparse_attention", &[&fix.x, &wj.w_s, &wj.w_v]).unwrap().len()
-        });
-        b.run("pjrt_encoder_layer", || {
-            engine
-                .execute("encoder", &[&fix.x, &wj.w_s, &wj.w_v, &wj.w_fc1, &wj.w_fc2])
-                .unwrap()
-                .len()
-        });
-    } else {
-        println!("(artifacts missing — skipping PJRT benches; run `make artifacts`)");
-    }
+    // -- dense-mode pipeline sanity point ------------------------------------
+    b.run("pipeline_batch_dense_mode", || {
+        pipeline::simulate_batch(&cfg.hardware, &cfg.model, &mask, pipeline::Mode::Dense)
+            .breakdown
+            .total_ns
+    });
+
     b.finish();
 }

@@ -73,8 +73,10 @@ mod tests {
         assert!(tight.nnz() <= loose.nnz());
         // And tight ⊆ loose:
         for i in 0..tight.rows() {
-            for j in tight.row_coords(i) {
-                assert!(loose.get(i, j));
+            for j in 0..tight.cols() {
+                if tight.get(i, j) {
+                    assert!(loose.get(i, j));
+                }
             }
         }
     }

@@ -1,41 +1,105 @@
 //! Attention calculation phase — Steps 2–4 (eq. 3) plus reference modes.
+//!
+//! All sparse kernels run off a [`DispatchPlan`]: the mask is scanned
+//! once (by the caller, or implicitly by the compatibility wrappers) and
+//! the ⟨α, βᵢ⟩ topology drives every dot product, exactly as the ReCAM
+//! coordinate stream drives the crossbar SDDMM engine.
 
 use crate::config::ModelConfig;
-use crate::sparse::{CsrMatrix, MaskMatrix};
+use crate::sparse::{CsrMatrix, DispatchPlan, MaskMatrix};
 use crate::tensor::Matrix;
 
 use super::softmax;
 
-/// Masked SDDMM: `mask ⊙ (a @ b)` — Step 3's S = M·Xᵀ restricted to the
-/// mask. Computed sparsely: only masked coordinates are evaluated, exactly
-/// the work the crossbar SDDMM engine performs.
+/// Nonzeros below which parallel dispatch is not worth the thread spawns.
+const PARALLEL_NNZ_THRESHOLD: usize = 1 << 12;
+
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// Worker count for a kernel over `nnz` coordinates (std-only).
+fn workers_for(nnz: usize) -> usize {
+    if nnz < PARALLEL_NNZ_THRESHOLD {
+        return 1;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Plan-driven SDDMM straight into CSR: `S = plan ⊙ (A · B)` where `bt`
+/// is B **already transposed** (row j of `bt` = column j of B). Values
+/// land in plan order — no dense S round-trip. Row ranges are dispatched
+/// across `std::thread::scope` workers, balanced by nnz.
+pub fn sddmm_csr(a: &Matrix, bt: &Matrix, plan: &DispatchPlan) -> CsrMatrix {
+    assert_eq!(a.cols(), bt.cols(), "inner dims");
+    assert_eq!((plan.rows(), plan.cols()), (a.rows(), bt.rows()), "plan shape");
+    let mut values = vec![0.0f32; plan.nnz()];
+    let ranges = plan.partition_rows(workers_for(plan.nnz()));
+    if ranges.len() <= 1 {
+        for i in 0..plan.rows() {
+            let arow = a.row(i);
+            let base = plan.row_ptr()[i];
+            for (k, &j) in plan.row_cols(i).iter().enumerate() {
+                values[base + k] = dot(arow, bt.row(j));
+            }
+        }
+        return CsrMatrix::from_plan_values(plan, values);
+    }
+    std::thread::scope(|scope| {
+        let mut tail: &mut [f32] = &mut values;
+        let mut offset = 0usize;
+        for range in ranges {
+            let hi = plan.row_ptr()[range.end];
+            let (head, rest) = std::mem::take(&mut tail).split_at_mut(hi - offset);
+            tail = rest;
+            offset = hi;
+            scope.spawn(move || {
+                let base = plan.row_ptr()[range.start];
+                for i in range {
+                    let arow = a.row(i);
+                    let lo = plan.row_ptr()[i];
+                    for (k, &j) in plan.row_cols(i).iter().enumerate() {
+                        head[lo + k - base] = dot(arow, bt.row(j));
+                    }
+                }
+            });
+        }
+    });
+    CsrMatrix::from_plan_values(plan, values)
+}
+
+/// Masked SDDMM: `mask ⊙ (a @ b)` as a dense matrix — the reference-mode
+/// wrapper over [`sddmm_csr`] (builds a throwaway plan; hot paths use
+/// `sddmm_csr` with a shared plan).
 pub fn masked_sddmm(a: &Matrix, b: &Matrix, mask: &MaskMatrix) -> Matrix {
     assert_eq!(a.cols(), b.rows());
     assert_eq!((mask.rows(), mask.cols()), (a.rows(), b.cols()));
-    let k = a.cols();
-    let bt = b.transpose(); // stream b's columns as rows
-    let mut out = Matrix::zeros(a.rows(), b.cols());
-    for i in 0..a.rows() {
-        let arow = a.row(i);
-        for j in mask.row_coords(i) {
-            let brow = bt.row(j);
-            let mut acc = 0.0;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
-            }
-            out.set(i, j, acc);
-        }
-    }
-    out
+    sddmm_csr(a, &b.transpose(), &mask.plan()).to_dense()
 }
 
 /// CPSAA attention (Steps 2–4): M = X·W_S, V = X·W_V,
 /// S = mask ⊙ (M·Xᵀ)/√d_k, P = masked softmax, Z = P·V.
+/// Scans the mask once; callers holding a plan (the coordinator batch
+/// path) should use [`cpsaa_attention_planned`] to skip even that.
 pub fn cpsaa_attention(x: &Matrix, w_s: &Matrix, w_v: &Matrix, mask: &MaskMatrix, cfg: &ModelConfig) -> Matrix {
+    cpsaa_attention_planned(x, w_s, w_v, &mask.plan(), cfg)
+}
+
+/// [`cpsaa_attention`] over a prebuilt [`DispatchPlan`] — the plan-reuse
+/// hot path. The SDDMM writes straight into CSR values over the plan's
+/// topology; softmax and SpMM run on the same structure.
+pub fn cpsaa_attention_planned(
+    x: &Matrix,
+    w_s: &Matrix,
+    w_v: &Matrix,
+    plan: &DispatchPlan,
+    cfg: &ModelConfig,
+) -> Matrix {
     let m = x.matmul(w_s);
     let v = x.matmul(w_v);
-    let s = masked_sddmm(&m, &x.transpose(), mask).scale(1.0 / (cfg.d_k as f32).sqrt());
-    let mut p = CsrMatrix::from_dense_masked(&s, mask);
+    // S = M·Xᵀ: B = Xᵀ, so Bᵀ = X — no transpose materialized.
+    let mut p = sddmm_csr(&m, x, plan);
+    p.scale_values(1.0 / (cfg.d_k as f32).sqrt());
     p.softmax_rows();
     p.spmm(&v)
 }
@@ -66,7 +130,18 @@ pub fn encoder_layer(
     mask: &MaskMatrix,
     cfg: &ModelConfig,
 ) -> Matrix {
-    let z = cpsaa_attention(x, &w.w_s, &w.w_v, mask, cfg);
+    encoder_layer_planned(x, w, &mask.plan(), cfg)
+}
+
+/// [`encoder_layer`] over a prebuilt [`DispatchPlan`] — the coordinator
+/// builds the plan once per packed batch and reuses it across the stack.
+pub fn encoder_layer_planned(
+    x: &Matrix,
+    w: &super::Weights,
+    plan: &DispatchPlan,
+    cfg: &ModelConfig,
+) -> Matrix {
+    let z = cpsaa_attention_planned(x, &w.w_s, &w.w_v, plan, cfg);
     let h = rms_norm(&x.add(&z));
     let ff = h.matmul(&w.w_fc1).map(gelu).matmul(&w.w_fc2);
     rms_norm(&h.add(&ff))

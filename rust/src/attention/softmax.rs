@@ -8,20 +8,27 @@ use crate::tensor::Matrix;
 /// `masked_softmax` kernel and `ref.masked_softmax_ref`.
 pub fn masked_softmax(s: &Matrix, mask: &MaskMatrix) -> Matrix {
     assert_eq!((s.rows(), s.cols()), (mask.rows(), mask.cols()));
+    masked_softmax_planned(s, &mask.plan())
+}
+
+/// [`masked_softmax`] over a prebuilt dispatch plan (the SU walks the
+/// same ⟨α, βᵢ⟩ stream the other engines consume).
+pub fn masked_softmax_planned(s: &Matrix, plan: &crate::sparse::DispatchPlan) -> Matrix {
+    assert_eq!((s.rows(), s.cols()), (plan.rows(), plan.cols()));
     let mut out = Matrix::zeros(s.rows(), s.cols());
     for i in 0..s.rows() {
-        let coords = mask.row_coords(i);
+        let coords = plan.row_cols(i);
         if coords.is_empty() {
             continue;
         }
         let max = coords.iter().map(|&j| s.get(i, j)).fold(f32::NEG_INFINITY, f32::max);
         let mut denom = 0.0;
-        for &j in &coords {
+        for &j in coords {
             let e = (s.get(i, j) - max).exp();
             out.set(i, j, e);
             denom += e;
         }
-        for &j in &coords {
+        for &j in coords {
             out.set(i, j, out.get(i, j) / denom);
         }
     }

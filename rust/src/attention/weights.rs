@@ -7,7 +7,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 use crate::config::ModelConfig;
 use crate::tensor::{Matrix, SeededRng};

@@ -3,7 +3,7 @@
 use std::fmt;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 /// One regenerated figure/table: headers plus numeric rows keyed by label.
 #[derive(Clone, Debug)]

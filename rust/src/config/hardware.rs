@@ -4,7 +4,7 @@
 //! provenance cited, so the ideal-situation study (Fig. 18) and the
 //! crossbar-size sweep (Fig. 19a) are plain config edits.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::util::tomlmini::{Section, Value};
 
@@ -217,7 +217,7 @@ impl HardwareConfig {
                 "write_pj_per_bit" => c.write_pj_per_bit = v.as_f64()?,
                 "recam_pj_per_row" => c.recam_pj_per_row = v.as_f64()?,
                 "pc_mw" => c.pc_mw = v.as_f64()?,
-                other => anyhow::bail!("unknown [hardware] key {other:?}"),
+                other => crate::bail!("unknown [hardware] key {other:?}"),
             }
         }
         if let Some(sec) = ideal {
@@ -227,7 +227,7 @@ impl HardwareConfig {
                     "no_transfer_latency" => c.ideal.no_transfer_latency = v.as_bool()?,
                     "infinite_adcs" => c.ideal.infinite_adcs = v.as_bool()?,
                     "no_ctrl_latency" => c.ideal.no_ctrl_latency = v.as_bool()?,
-                    other => anyhow::bail!("unknown [hardware.ideal] key {other:?}"),
+                    other => crate::bail!("unknown [hardware.ideal] key {other:?}"),
                 }
             }
         }

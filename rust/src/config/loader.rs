@@ -2,7 +2,7 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::util::tomlmini::{write_section, Doc};
 
@@ -39,7 +39,7 @@ impl SystemConfig {
             doc.arrays.get("workload.datasets").map(|v| v.as_slice()).unwrap_or(&[]),
         )?;
         let cfg = Self { hardware, model, workload };
-        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        cfg.validate().map_err(|e| crate::anyhow!(e))?;
         Ok(cfg)
     }
 

@@ -1,6 +1,6 @@
 //! Model-side configuration, mirroring `python/compile/model.py::ModelConfig`.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::util::tomlmini::{Section, Value};
 
@@ -113,7 +113,7 @@ impl ModelConfig {
                 "quant_bits" => c.quant_bits = v.as_usize()? as u32,
                 "theta" => c.theta = v.as_f64()? as f32,
                 "sharpness" => c.sharpness = v.as_f64()? as f32,
-                other => anyhow::bail!("unknown [model] key {other:?}"),
+                other => crate::bail!("unknown [model] key {other:?}"),
             }
         }
         Ok(c)

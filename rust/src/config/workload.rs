@@ -6,7 +6,7 @@
 //! described by those statistics (DESIGN.md substitution table). Length
 //! statistics follow the published GLUE/SQuAD task descriptions.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::util::tomlmini::{Section, Value};
 
@@ -41,7 +41,7 @@ impl DatasetSpec {
                 "mean_len" => d.mean_len = v.as_usize()?,
                 "std_len" => d.std_len = v.as_usize()?,
                 "mask_density" => d.mask_density = v.as_f64()?,
-                other => anyhow::bail!("unknown dataset key {other:?}"),
+                other => crate::bail!("unknown dataset key {other:?}"),
             }
         }
         Ok(d)
@@ -100,7 +100,7 @@ impl WorkloadConfig {
                 match k.as_str() {
                     "batch_size" => w.batch_size = v.as_usize()?,
                     "seed" => w.seed = v.as_usize()? as u64,
-                    other => anyhow::bail!("unknown [workload] key {other:?}"),
+                    other => crate::bail!("unknown [workload] key {other:?}"),
                 }
             }
         }

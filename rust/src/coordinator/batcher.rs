@@ -7,6 +7,11 @@
 //! fairness), zero-padding the tail. Invariants (property-tested):
 //! every request lands in exactly one batch, offsets never overlap, and
 //! no batch exceeds capacity.
+//!
+//! Each packed batch downstream gets exactly one pruning mask and one
+//! [`DispatchPlan`][crate::sparse::DispatchPlan], built by
+//! [`EncoderStack::forward`][super::EncoderStack::forward] and shared
+//! across every encoder layer.
 
 use crate::tensor::Matrix;
 

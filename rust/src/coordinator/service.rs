@@ -1,18 +1,21 @@
 //! Serving loop: requests in, batched encoder executions out.
 //!
-//! The PJRT client (`xla::PjRtClient`) is `Rc`-based and therefore pinned
-//! to one thread — exactly like the physical CPSAA chip is one device. The
-//! service spawns a **leader thread** that owns the engine; callers submit
-//! requests over an mpsc channel and block on a reply channel. Dynamic
-//! batching happens in the leader: it drains whatever arrived within
-//! `max_wait` (or until a batch fills), packs with [`Batcher`], executes
-//! the encoder stack once per batch, and fans results back out.
+//! The engine is single-threaded by design (interior `RefCell` stats;
+//! with a PJRT backend the client is `Rc`-based too) — exactly like the
+//! physical CPSAA chip is one device. The service spawns a **leader
+//! thread** that owns the engine; callers submit requests over an mpsc
+//! channel and block on a reply channel. Dynamic batching happens in the
+//! leader: it drains whatever arrived within `max_wait` (or until a batch
+//! fills), packs with [`Batcher`], executes the encoder stack once per
+//! batch — one mask scan, one [`DispatchPlan`][crate::sparse::DispatchPlan]
+//! per batch, reused across all layers — and fans results back out.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 use crate::attention::Weights;
 use crate::config::{HardwareConfig, ModelConfig};

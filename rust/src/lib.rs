@@ -11,17 +11,22 @@
 //! * **L2** (`python/compile/model.py`) — the CPSAA calculation mode
 //!   (`W_S = W_Q·W_Kᵀ` folding, eq. 3) and PIM pruning (eq. 4) as JAX
 //!   graphs, AOT-lowered to HLO text artifacts.
-//! * **L3** (this crate) — the coordinator that loads those artifacts via
-//!   PJRT ([`runtime`]), the cycle-accurate CPSAA chip simulator ([`sim`]),
-//!   the comparison platforms ([`baselines`]), the workload system
-//!   ([`workload`]), and the bench harness that regenerates every table
-//!   and figure of the paper's evaluation ([`bench_harness`]).
+//! * **L3** (this crate) — the coordinator that loads and executes those
+//!   artifacts ([`runtime`]), the cycle-accurate CPSAA chip simulator
+//!   ([`sim`]), the comparison platforms ([`baselines`]), the workload
+//!   system ([`workload`]), and the bench harness that regenerates every
+//!   table and figure of the paper's evaluation ([`bench_harness`]).
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! `cpsaa` binary is self-contained.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! The hot-path spine of the crate is [`sparse::DispatchPlan`]: one ReCAM
+//! scan per pruning mask, whose topology and statistics drive the
+//! attention kernels, every simulator engine, and the coordinator's
+//! per-batch accounting.
+//!
+//! See `rust/DESIGN.md` for the layer contracts, the `DispatchPlan`
+//! dataflow, and the experiment index.
 
 pub mod attention;
 pub mod baselines;

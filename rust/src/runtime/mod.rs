@@ -1,13 +1,14 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Runtime: load AOT artifacts (manifest + HLO text) and execute them.
 //!
 //! The AOT bridge of the three-layer stack. `python/compile/aot.py`
-//! lowers every L2 graph to HLO **text** (xla_extension 0.5.1 rejects the
-//! 64-bit-id protos jax ≥ 0.5 serializes); [`Engine`] parses, compiles on
-//! the PJRT CPU client once at startup, and executes from the coordinator
-//! hot path with zero Python anywhere.
+//! lowers every L2 graph to HLO **text** plus a JSON manifest of shapes;
+//! [`Engine`] resolves each graph name against its native golden-model
+//! implementation at load time and executes from the coordinator hot path
+//! with zero Python anywhere. See `rust/DESIGN.md` §Runtime for the
+//! artifact contract and the PJRT-backend substitution note.
 
 mod artifact;
 mod engine;
 
 pub use artifact::{ArtifactSet, Fixtures, Manifest};
-pub use engine::Engine;
+pub use engine::{Engine, EngineStats};

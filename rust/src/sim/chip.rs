@@ -1,7 +1,7 @@
 //! Chip-level simulation: batches → traces → GOPS / GOPS/W.
 
 use crate::config::{HardwareConfig, ModelConfig};
-use crate::sparse::MaskMatrix;
+use crate::sparse::{DispatchPlan, MaskMatrix};
 use crate::workload::WorkloadTrace;
 
 use super::area::AreaModel;
@@ -59,6 +59,15 @@ impl ChipSim {
     /// Simulate a single batch with the given pruning mask.
     pub fn simulate_batch(&self, mask: &MaskMatrix) -> SimReport {
         let r: PipelineReport = pipeline::simulate_batch(&self.hw, &self.model, mask, self.mode);
+        self.report_from(r)
+    }
+
+    /// Simulate a single batch over a prebuilt [`DispatchPlan`] — the
+    /// coordinator's reuse path (one plan per packed batch, shared across
+    /// every encoder layer). The plan must describe the mode's effective
+    /// mask (for [`Mode::Dense`] that is the all-ones mask).
+    pub fn simulate_batch_planned(&self, plan: &DispatchPlan) -> SimReport {
+        let r = pipeline::simulate_batch_planned(&self.hw, &self.model, plan, self.mode);
         self.report_from(r)
     }
 

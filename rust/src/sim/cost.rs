@@ -1,7 +1,7 @@
 //! Shared analytical cost primitives of the crossbar substrate.
 //!
 //! Modeling conventions (calibrated against the paper's reported ratios,
-//! see EXPERIMENTS.md §Calibration):
+//! see rust/DESIGN.md §Substitutions):
 //!
 //! * A value is `value_bits` bits across `value_bits/cell_bits` SLC cells.
 //!   One array **row** stores `c·cell_bits/value_bits` numbers, so a `c×c`

@@ -15,7 +15,7 @@
 //! the wait-for-write accounting of Fig. 15.
 
 use crate::config::{HardwareConfig, ModelConfig};
-use crate::sparse::MaskMatrix;
+use crate::sparse::{DispatchPlan, MaskMatrix};
 
 use super::cost::{self, VmmOp};
 use super::energy::{Component, EnergyMeter};
@@ -64,11 +64,30 @@ pub struct PipelineReport {
     pub mask_density: f64,
 }
 
-/// Simulate one batch through the Step 1–4 pipeline.
+/// Simulate one batch through the Step 1–4 pipeline. Builds the
+/// effective mask's [`DispatchPlan`] once; callers already holding the
+/// batch plan (the coordinator) use [`simulate_batch_planned`].
 pub fn simulate_batch(
     hw: &HardwareConfig,
     model: &ModelConfig,
     mask: &MaskMatrix,
+    mode: Mode,
+) -> PipelineReport {
+    let plan = match mode {
+        Mode::Sparse => mask.plan(),
+        // CPDAA (Fig. 14): same calculation mode over an all-ones mask.
+        Mode::Dense => MaskMatrix::ones(mask.rows(), mask.cols()).plan(),
+    };
+    simulate_batch_planned(hw, model, &plan, mode)
+}
+
+/// Simulate one batch over a prebuilt plan. The plan must describe the
+/// *effective* mask of the mode (all-ones for [`Mode::Dense`]); every
+/// engine below reads its statistics from this one plan.
+pub fn simulate_batch_planned(
+    hw: &HardwareConfig,
+    model: &ModelConfig,
+    plan: &DispatchPlan,
     mode: Mode,
 ) -> PipelineReport {
     let n = model.seq_len;
@@ -79,15 +98,6 @@ pub fn simulate_batch(
     let dv = model.d_k;
     let mut energy = EnergyMeter::new();
 
-    let effective_mask;
-    let mask_ref = match mode {
-        Mode::Sparse => mask,
-        Mode::Dense => {
-            effective_mask = MaskMatrix::ones(n, n);
-            &effective_mask
-        }
-    };
-
     // ---- transfer in: X from the previous layer / DTC --------------------
     let (xfer_in_ns, xfer_in_pj) = cost::transfer(hw, (n * d * 4) as u64);
     energy.add(Component::Transfer, xfer_in_pj);
@@ -95,7 +105,7 @@ pub fn simulate_batch(
 
     // ---- Step 1: pruning (parallel with Step 2) ---------------------------
     let prune_end = if mode == Mode::Sparse {
-        let p = pruning::simulate(hw, model);
+        let p = pruning::simulate_planned(hw, model, plan);
         energy.add(Component::Crossbar, p.energy_pj * 0.6);
         energy.add(Component::Adc, p.energy_pj * 0.2);
         energy.add(Component::Write, p.energy_pj * 0.2);
@@ -127,7 +137,7 @@ pub fn simulate_batch(
     let (xfer_m_ns, xfer_m_pj) = cost::transfer(hw, (n * d * 4 / 8) as u64);
     energy.add(Component::Transfer, xfer_m_pj);
 
-    let sd = sddmm::simulate(hw, mask_ref, d);
+    let sd = sddmm::simulate_plan(hw, plan, d);
     energy.add(Component::Crossbar, sd.energy_pj * 0.55);
     energy.add(Component::Adc, sd.energy_pj * 0.3);
     energy.add(Component::Recam, sd.energy_pj * 0.15);
@@ -152,7 +162,7 @@ pub fn simulate_batch(
     // Dense mode degenerates to the resident-V streaming path (nothing to
     // select ⇒ replication buys nothing); sparse mode uses the §4.4
     // replicated mapping.
-    let sp = spmm::simulate(hw, mask_ref, dv);
+    let sp = spmm::simulate_plan(hw, plan, dv);
     let (sp_compute_ns, sp_schedule_ns, sp_pj) = match mode {
         Mode::Sparse => (sp.compute_ns, sp.schedule_ns, sp.energy_pj),
         Mode::Dense => (sp.baseline_cycles as f64 * hw.cycle_ns, 0.0, sp.baseline_pj),
@@ -208,7 +218,7 @@ pub fn simulate_batch(
             peak_parallel_arrays: peak,
         },
         energy,
-        mask_density: mask_ref.density(),
+        mask_density: plan.density(),
     }
 }
 

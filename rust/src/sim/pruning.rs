@@ -13,6 +13,7 @@
 //! and no off-chip traffic**, so Step 1 overlaps Step 2 entirely.
 
 use crate::config::{HardwareConfig, ModelConfig};
+use crate::sparse::DispatchPlan;
 
 use super::cost::{self, VmmOp};
 
@@ -38,8 +39,21 @@ pub struct PruningReport {
     pub vmm_rounds: u64,
 }
 
-/// Simulate the pruning phase for a batch of `seq_len` embeddings.
+/// Simulate the pruning phase for a batch of `seq_len` embeddings; the
+/// produced mask is assumed square at `seq_len` (the paper's setup).
 pub fn simulate(hw: &HardwareConfig, model: &ModelConfig) -> PruningReport {
+    simulate_mask_cells(hw, model, model.seq_len * model.seq_len)
+}
+
+/// [`simulate`] with the actual produced-mask shape taken from the batch's
+/// [`DispatchPlan`] — the ReCAM programming cost then reflects the true
+/// mask the pipeline dispatches (it can differ from `seq_len²` when the
+/// artifact shape and the model config diverge).
+pub fn simulate_planned(hw: &HardwareConfig, model: &ModelConfig, plan: &DispatchPlan) -> PruningReport {
+    simulate_mask_cells(hw, model, plan.rows() * plan.cols())
+}
+
+fn simulate_mask_cells(hw: &HardwareConfig, model: &ModelConfig, mask_cells: usize) -> PruningReport {
     let n = model.seq_len;
     let d = model.d_model;
 
@@ -62,17 +76,17 @@ pub fn simulate(hw: &HardwareConfig, model: &ModelConfig) -> PruningReport {
     let unit_ns = (n as f64 / hw.tiles as f64 + 4.0) * hw.cycle_ns;
     let unit_pj = n as f64 * (1.134 + 0.121 + 0.382) * hw.cycle_ns; // SU+QU/DQU+CTRL mW
 
-    // Program the n×n mask into the ReCAM schedulers (recam_arrays per
-    // tile, each holding its tile's mask slice; rows write in parallel
-    // across schedulers).
-    let recam_rows = (n * n).div_ceil(hw.recam_size);
+    // Program the produced mask into the ReCAM schedulers (recam_arrays
+    // per tile, each holding its tile's mask slice; rows write in
+    // parallel across schedulers).
+    let recam_rows = mask_cells.div_ceil(hw.recam_size);
     let schedulers = (hw.tiles * hw.recam_arrays).max(1);
     let recam_ns = if hw.ideal.no_write_latency {
         0.0
     } else {
         recam_rows.div_ceil(schedulers) as f64 * hw.write_row_ns() * hw.write_verify_factor
     };
-    let recam_pj = (n * n) as f64 * hw.write_pj_per_bit;
+    let recam_pj = mask_cells as f64 * hw.write_pj_per_bit;
 
     // Phase critical path: VMM-2 needs both VMM-1 and the Q(Xᵀ) write.
     let total_ns = v1.ns.max(write_ns) + v2.ns + unit_ns + recam_ns;
@@ -130,6 +144,23 @@ mod tests {
         let r = simulate(&hw, &m);
         assert_eq!(r.write_ns, 0.0);
         assert_eq!(r.recam_ns, 0.0);
+    }
+
+    #[test]
+    fn planned_variant_follows_mask_shape() {
+        use crate::sparse::MaskMatrix;
+        let (hw, m) = setup();
+        // A plan matching seq_len² reproduces the default exactly.
+        let square = MaskMatrix::ones(m.seq_len, m.seq_len).plan();
+        let a = simulate(&hw, &m);
+        let b = simulate_planned(&hw, &m, &square);
+        assert_eq!(a.recam_ns, b.recam_ns);
+        assert_eq!(a.total_ns, b.total_ns);
+        // A smaller mask programs fewer ReCAM cells.
+        let small = MaskMatrix::ones(64, 64).plan();
+        let c = simulate_planned(&hw, &m, &small);
+        assert!(c.recam_ns <= b.recam_ns);
+        assert!(c.energy_pj < b.energy_pj);
     }
 
     #[test]

@@ -2,18 +2,21 @@
 //!
 //! The ReCAM array stores the binary mask and performs row-parallel
 //! searches whose TAG matches stream out the ⟨α, βᵢ⟩ coordinates that
-//! drive SDDMM dispatch (§4.3) and SpMM V-row mapping (§4.4). The search
-//! itself costs one ReCAM clock per row scanned; every matched coordinate
-//! then costs control-signal time in the CTRL (modeled by the engines).
+//! drive SDDMM dispatch (§4.3) and SpMM V-row mapping (§4.4). That
+//! coordinate stream is materialized exactly once per mask as a
+//! [`DispatchPlan`]; the scheduler here is the *timing/energy* model of
+//! the search, layered over the shared plan rather than re-walking the
+//! mask bits. The search costs one ReCAM clock per row scanned; every
+//! matched coordinate then costs control-signal time in the CTRL
+//! (modeled by the engines).
 
 use crate::config::HardwareConfig;
-use crate::sparse::MaskMatrix;
+use crate::sparse::DispatchPlan;
 
-/// A scheduler pass over the mask: coordinates plus timing/energy.
-#[derive(Clone, Debug)]
+/// Timing/energy of one scheduler pass over the mask; the coordinates
+/// themselves live in the shared [`DispatchPlan`].
+#[derive(Clone, Copy, Debug)]
 pub struct SchedulePass {
-    /// Per-row matched column coordinates (the ⟨α, βᵢ⟩ stream).
-    pub coords: Vec<Vec<usize>>,
     /// Search latency (ns): row-by-row scan, rows searched in parallel
     /// across the ReCAM's width.
     pub search_ns: f64,
@@ -21,27 +24,27 @@ pub struct SchedulePass {
     pub search_pj: f64,
 }
 
-/// ReCAM scheduler over one (borrowed) mask matrix — the engines run a
-/// search pass per dispatch without copying the mask bits.
+/// ReCAM scheduler over one (borrowed) dispatch plan — the engines run a
+/// search pass per dispatch without copying mask bits or coordinates.
 #[derive(Clone, Debug)]
 pub struct RecamScheduler<'a> {
-    mask: &'a MaskMatrix,
+    plan: &'a DispatchPlan,
 }
 
 impl<'a> RecamScheduler<'a> {
-    pub fn new(mask: &'a MaskMatrix) -> Self {
-        Self { mask }
+    pub fn new(plan: &'a DispatchPlan) -> Self {
+        Self { plan }
     }
 
-    pub fn mask(&self) -> &MaskMatrix {
-        self.mask
+    pub fn plan(&self) -> &DispatchPlan {
+        self.plan
     }
 
     /// Capacity check: masks larger than the ReCAM fold across multiple
     /// logical passes — returns how many physical arrays one mask needs.
     pub fn arrays_needed(&self, hw: &HardwareConfig) -> usize {
         let per = hw.recam_size * hw.recam_size;
-        (self.mask.rows() * self.mask.cols()).div_ceil(per)
+        (self.plan.rows() * self.plan.cols()).div_ceil(per)
     }
 
     /// Latency (ns) to write the mask into the ReCAM (row-parallel).
@@ -51,19 +54,18 @@ impl<'a> RecamScheduler<'a> {
         }
         // One ReCAM row (recam_size bits) per write_row latency; the mask
         // occupies rows×cols/recam_size rows.
-        let rows = (self.mask.rows() * self.mask.cols()).div_ceil(hw.recam_size);
+        let rows = (self.plan.rows() * self.plan.cols()).div_ceil(hw.recam_size);
         rows as f64 * hw.write_row_ns()
     }
 
     /// Row-wise search pass (the colored arrows of Fig. 8a): one ReCAM
-    /// clock per mask row, energy per activated row.
+    /// clock per mask row, energy per activated row. Coordinates come
+    /// from the plan, paid for once at plan build.
     pub fn row_search(&self, hw: &HardwareConfig) -> SchedulePass {
-        let rows = self.mask.rows();
-        let coords: Vec<Vec<usize>> = (0..rows).map(|i| self.mask.row_coords(i)).collect();
+        let rows = self.plan.rows();
         SchedulePass {
             search_ns: rows as f64 * hw.recam_search_ns,
             search_pj: rows as f64 * hw.recam_pj_per_row,
-            coords,
         }
     }
 }
@@ -71,29 +73,35 @@ impl<'a> RecamScheduler<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::MaskMatrix;
     use crate::tensor::SeededRng;
 
-    fn mask_of(n: usize, density: f64) -> MaskMatrix {
-        MaskMatrix::from_dense(&SeededRng::new(1).mask_matrix(n, n, density))
+    fn plan_of(n: usize, density: f64) -> DispatchPlan {
+        MaskMatrix::from_dense(&SeededRng::new(1).mask_matrix(n, n, density)).plan()
     }
 
     #[test]
-    fn coords_match_mask() {
-        let m = mask_of(64, 0.2);
-        let s = RecamScheduler::new(&m);
-        let pass = s.row_search(&HardwareConfig::paper());
-        for (i, row) in pass.coords.iter().enumerate() {
-            assert_eq!(row, &s.mask().row_coords(i));
+    fn plan_coords_drive_scheduler() {
+        let m = MaskMatrix::from_dense(&SeededRng::new(2).mask_matrix(64, 64, 0.2));
+        let p = m.plan();
+        let s = RecamScheduler::new(&p);
+        // The scheduler exposes the shared plan, whose stream matches the
+        // mask bit-for-bit.
+        for i in 0..64 {
+            for &j in s.plan().row_cols(i) {
+                assert!(m.get(i, j));
+            }
+            assert_eq!(s.plan().row_nnz(i), m.row_nnz(i));
         }
     }
 
     #[test]
     fn search_latency_linear_in_rows() {
         let hw = HardwareConfig::paper();
-        let m64 = mask_of(64, 0.2);
-        let m128 = mask_of(128, 0.2);
-        let a = RecamScheduler::new(&m64).row_search(&hw);
-        let b = RecamScheduler::new(&m128).row_search(&hw);
+        let p64 = plan_of(64, 0.2);
+        let p128 = plan_of(128, 0.2);
+        let a = RecamScheduler::new(&p64).row_search(&hw);
+        let b = RecamScheduler::new(&p128).row_search(&hw);
         assert!((b.search_ns - 2.0 * a.search_ns).abs() < 1e-9);
     }
 
@@ -101,22 +109,22 @@ mod tests {
     fn paper_mask_fits_one_array() {
         // 320×320 mask in a 512×512 ReCAM: one array (§4.4 example).
         let hw = HardwareConfig::paper();
-        let m = mask_of(320, 0.1);
-        assert_eq!(RecamScheduler::new(&m).arrays_needed(&hw), 1);
+        let p = plan_of(320, 0.1);
+        assert_eq!(RecamScheduler::new(&p).arrays_needed(&hw), 1);
     }
 
     #[test]
     fn oversized_mask_folds() {
         let hw = HardwareConfig::paper();
-        let m = mask_of(1024, 0.1);
-        assert!(RecamScheduler::new(&m).arrays_needed(&hw) > 1);
+        let p = plan_of(1024, 0.1);
+        assert!(RecamScheduler::new(&p).arrays_needed(&hw) > 1);
     }
 
     #[test]
     fn program_cost_zero_when_ideal() {
         let mut hw = HardwareConfig::paper();
-        let m = mask_of(64, 0.2);
-        let s = RecamScheduler::new(&m);
+        let p = plan_of(64, 0.2);
+        let s = RecamScheduler::new(&p);
         assert!(s.program_ns(&hw) > 0.0);
         hw.ideal.no_write_latency = true;
         assert_eq!(s.program_ns(&hw), 0.0);

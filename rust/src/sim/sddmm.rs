@@ -16,7 +16,7 @@
 //! queues serialize — vector-wise parallelism decays as c grows.
 
 use crate::config::HardwareConfig;
-use crate::sparse::MaskMatrix;
+use crate::sparse::{DispatchPlan, MaskMatrix};
 
 use super::cost;
 use super::recam::RecamScheduler;
@@ -41,21 +41,22 @@ pub struct SddmmReport {
     pub cycles: u64,
 }
 
-/// Simulate `S = mask ⊙ (M · Xᵀ)` where M is n×d and Xᵀ is d×m.
+/// Simulate `S = mask ⊙ (M · Xᵀ)` — convenience wrapper that builds the
+/// mask's plan first; hot paths hold a [`DispatchPlan`] and call
+/// [`simulate_plan`].
 pub fn simulate(hw: &HardwareConfig, mask: &MaskMatrix, d_model: usize) -> SddmmReport {
-    let n = mask.rows();
-    let m = mask.cols();
-    let sched = RecamScheduler::new(mask);
+    simulate_plan(hw, &mask.plan(), d_model)
+}
+
+/// Simulate the SDDMM dispatch over a prebuilt plan: queue depths, block
+/// occupancy, and element counts are read from the plan, never recomputed.
+pub fn simulate_plan(hw: &HardwareConfig, plan: &DispatchPlan, d_model: usize) -> SddmmReport {
+    let n = plan.rows();
+    let m = plan.cols();
+    let sched = RecamScheduler::new(plan);
     let pass = sched.row_search(hw);
 
-    // --- dispatch: per-column queue depths --------------------------------
-    let mut col_nnz = vec![0u64; m];
-    for coords in &pass.coords {
-        for &j in coords {
-            col_nnz[j] += 1;
-        }
-    }
-    let elements: u64 = col_nnz.iter().sum();
+    let elements = plan.nnz() as u64;
 
     // Segments (arrays) per column vector of d_model numbers (§4.3
     // mapping: all bits of one vector in the same array).
@@ -63,11 +64,9 @@ pub fn simulate(hw: &HardwareConfig, mask: &MaskMatrix, d_model: usize) -> Sddmm
     // Columns colocated per array (queue merging at large c).
     let coloc = (cost::numbers_per_array(hw) / 32).max(1) as usize;
 
-    // Queue depth per array group = sum of colocated column queues.
-    let mut max_queue = 0u64;
-    for group in col_nnz.chunks(coloc) {
-        max_queue = max_queue.max(group.iter().sum());
-    }
+    // Queue depth per array group = sum of colocated column queues —
+    // the plan's per-column depths grouped by colocation (Fig. 8d bound).
+    let max_queue = plan.grouped_max_queue(coloc);
 
     let activations = elements * segs_per_col;
     let layout = (m as u64).div_ceil(coloc as u64) * segs_per_col;

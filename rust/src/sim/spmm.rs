@@ -9,7 +9,7 @@
 //! S rows serially (saving energy on zero inputs but no cycles).
 
 use crate::config::HardwareConfig;
-use crate::sparse::MaskMatrix;
+use crate::sparse::{DispatchPlan, MaskMatrix};
 
 use super::cost;
 use super::recam::RecamScheduler;
@@ -42,10 +42,17 @@ pub struct SpmmReport {
 }
 
 /// Simulate `Z = S · V` with S shaped by `mask` (n×m) and V dense (m×dv).
+/// Convenience wrapper over [`simulate_plan`] (builds a throwaway plan).
 pub fn simulate(hw: &HardwareConfig, mask: &MaskMatrix, dv: usize) -> SpmmReport {
-    let n = mask.rows();
-    let m = mask.cols();
-    let sched = RecamScheduler::new(mask);
+    simulate_plan(hw, &mask.plan(), dv)
+}
+
+/// Simulate the SpMM dispatch over a prebuilt plan: per-row nnz (the
+/// V-row replication factors) come from the plan's CSR topology.
+pub fn simulate_plan(hw: &HardwareConfig, plan: &DispatchPlan, dv: usize) -> SpmmReport {
+    let n = plan.rows();
+    let m = plan.cols();
+    let sched = RecamScheduler::new(plan);
     let pass = sched.row_search(hw);
 
     let per_array = cost::numbers_per_array(hw);
@@ -58,8 +65,8 @@ pub fn simulate(hw: &HardwareConfig, mask: &MaskMatrix, dv: usize) -> SpmmReport
     let mut total_arrays = 0u64;
     let mut activations = 0u64;
     let mut replicated_numbers = 0u64;
-    for coords in &pass.coords {
-        let nnz = coords.len();
+    for i in 0..n {
+        let nnz = plan.row_nnz(i);
         if nnz == 0 {
             continue;
         }
@@ -92,7 +99,7 @@ pub fn simulate(hw: &HardwareConfig, mask: &MaskMatrix, dv: usize) -> SpmmReport
     let baseline_activations = n as u64 * v_tiles;
     let baseline = cost::activation_cost(hw, baseline_activations, n as u64, v_tiles.min(avail));
     // Energy: only rows carrying non-zeros burn crossbar current.
-    let nnz_total: u64 = pass.coords.iter().map(|r| r.len() as u64).sum();
+    let nnz_total = plan.nnz() as u64;
     let active_fraction = if n * m == 0 { 0.0 } else { nnz_total as f64 / (n * m) as f64 };
     let baseline_pj = baseline.pj * active_fraction.max(1.0 / m as f64);
 

@@ -5,7 +5,7 @@
 //! their conversion overhead, and the golden model uses CSR for the sparse
 //! softmax/SpMM reference path.
 
-use crate::sparse::MaskMatrix;
+use crate::sparse::{DispatchPlan, MaskMatrix};
 use crate::tensor::Matrix;
 
 /// Compressed sparse row f32 matrix.
@@ -19,26 +19,50 @@ pub struct CsrMatrix {
 }
 
 impl CsrMatrix {
-    /// Compress a dense matrix, keeping entries where `mask` is set.
-    pub fn from_dense_masked(m: &Matrix, mask: &MaskMatrix) -> Self {
-        assert_eq!((m.rows(), m.cols()), (mask.rows(), mask.cols()));
-        let mut row_ptr = Vec::with_capacity(m.rows() + 1);
-        let mut col_idx = Vec::new();
-        let mut values = Vec::new();
-        row_ptr.push(0);
-        for i in 0..m.rows() {
-            for j in mask.row_coords(i) {
-                col_idx.push(j);
+    /// Adopt the plan's topology, gathering values from a dense matrix.
+    pub fn from_plan(plan: &DispatchPlan, m: &Matrix) -> Self {
+        assert_eq!((m.rows(), m.cols()), (plan.rows(), plan.cols()));
+        let mut values = Vec::with_capacity(plan.nnz());
+        for i in 0..plan.rows() {
+            for &j in plan.row_cols(i) {
                 values.push(m.get(i, j));
             }
-            row_ptr.push(col_idx.len());
         }
-        Self { rows: m.rows(), cols: m.cols(), row_ptr, col_idx, values }
+        Self::from_plan_values(plan, values)
+    }
+
+    /// Adopt the plan's topology with values supplied directly in plan
+    /// order (the SDDMM kernels write straight into this — no dense S
+    /// round-trip).
+    pub fn from_plan_values(plan: &DispatchPlan, values: Vec<f32>) -> Self {
+        assert_eq!(values.len(), plan.nnz(), "values do not match plan topology");
+        Self {
+            rows: plan.rows(),
+            cols: plan.cols(),
+            row_ptr: plan.row_ptr().to_vec(),
+            col_idx: plan.col_idx().to_vec(),
+            values,
+        }
+    }
+
+    /// Compress a dense matrix, keeping entries where `mask` is set.
+    /// (Convenience over [`CsrMatrix::from_plan`] — builds a throwaway
+    /// plan; callers on the hot path should build the plan once and
+    /// reuse it.)
+    pub fn from_dense_masked(m: &Matrix, mask: &MaskMatrix) -> Self {
+        Self::from_plan(&mask.plan(), m)
     }
 
     /// Compress keeping all non-zero entries.
     pub fn from_dense(m: &Matrix) -> Self {
         Self::from_dense_masked(m, &MaskMatrix::from_dense(m))
+    }
+
+    /// Scale every stored value (the 1/√d_k factor of the score matrix).
+    pub fn scale_values(&mut self, s: f32) {
+        for v in &mut self.values {
+            *v *= s;
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -189,6 +213,32 @@ mod tests {
         let mut csr = CsrMatrix::from_dense(&Matrix::zeros(4, 4));
         csr.softmax_rows(); // no panic, nothing stored
         assert_eq!(csr.nnz(), 0);
+    }
+
+    #[test]
+    fn from_plan_matches_from_dense_masked() {
+        let (dense, mask) = sample(7, 24, 40, 0.25);
+        let plan = mask.plan();
+        let a = CsrMatrix::from_plan(&plan, &dense);
+        let b = CsrMatrix::from_dense_masked(&dense, &mask);
+        assert_eq!(a, b);
+        let vals: Vec<f32> = (0..plan.nnz()).map(|k| k as f32).collect();
+        let c = CsrMatrix::from_plan_values(&plan, vals.clone());
+        assert_eq!(c.nnz(), plan.nnz());
+        let collected: Vec<f32> = (0..24).flat_map(|i| c.row(i).map(|(_, v)| v)).collect();
+        assert_eq!(collected, vals);
+    }
+
+    #[test]
+    fn scale_values_scales() {
+        let (dense, mask) = sample(8, 8, 8, 0.5);
+        let mut csr = CsrMatrix::from_dense_masked(&dense, &mask);
+        let before: Vec<f32> = csr.row(0).map(|(_, v)| v).collect();
+        csr.scale_values(2.0);
+        let after: Vec<f32> = csr.row(0).map(|(_, v)| v).collect();
+        for (b, a) in before.iter().zip(&after) {
+            assert_eq!(*a, 2.0 * *b);
+        }
     }
 
     #[test]

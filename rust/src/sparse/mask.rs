@@ -151,7 +151,7 @@ impl MaskMatrix {
 }
 
 /// Tile-level nonzero counts of a mask.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BlockCounts {
     pub tile_rows: usize,
     pub tile_cols: usize,

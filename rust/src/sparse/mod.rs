@@ -1,15 +1,20 @@
-//! Sparse-matrix substrate: the binary pruning mask and CSR score matrices.
+//! Sparse-matrix substrate: the pruning mask, its dispatch plan, and CSR
+//! score matrices.
 //!
 //! The mask is the central object of CPSAA — it lives in the ReCAM
 //! scheduler, drives the SDDMM dispatch (§4.3) and the SpMM V-row
 //! replication (§4.4), and its density determines every speedup in the
-//! evaluation. [`MaskMatrix`] stores it bit-packed per row with the access
-//! patterns the hardware needs: row-wise coordinate search (ReCAM
-//! row-search → ⟨α, βᵢ⟩ streams) and per-tile population counts (the block
-//! summary the Pallas kernels use).
+//! evaluation. [`MaskMatrix`] stores it bit-packed per row; its one-time
+//! ReCAM scan is materialized as a [`DispatchPlan`] (CSR topology,
+//! per-column queue depths, 32×32 tile occupancy, per-row nnz) that every
+//! kernel, simulator engine, and the coordinator consume instead of
+//! re-walking the mask. [`CsrMatrix`] carries the sparse score values over
+//! the plan's topology.
 
 mod csr;
 mod mask;
+mod plan;
 
 pub use csr::CsrMatrix;
 pub use mask::{BlockCounts, MaskMatrix};
+pub use plan::{DispatchPlan, DISPATCH_TILE};

@@ -1,0 +1,282 @@
+//! `DispatchPlan` — the single materialization of one ReCAM mask scan.
+//!
+//! CPSAA's architectural insight is that *one* ReCAM row-search over the
+//! pruning mask drives every downstream engine: the ⟨α, βᵢ⟩ coordinate
+//! stream schedules the SDDMM column queues (§4.3), selects the V rows the
+//! SpMM engine replicates (§4.4), and shapes the Step 1–4 pipeline. The
+//! plan is that search, performed once per mask and shared everywhere:
+//!
+//! * **CSR topology** (`row_ptr`/`col_idx`, no values) — the coordinate
+//!   stream itself; kernels write values straight into it.
+//! * **Per-column queue depths** — the SDDMM latency bound of Fig. 8d.
+//! * **32×32 tile occupancy** — the crossbar dispatch map of Fig. 19.
+//! * **Per-row nnz** — the SpMM V-row replication factor (implicit in
+//!   `row_ptr`).
+//!
+//! Every consumer (attention kernels, `sim::{sddmm, spmm, recam,
+//! pruning, pipeline}`, the coordinator) reads these statistics instead of
+//! re-walking the mask, so the scan cost is paid once per mask, not once
+//! per kernel per layer. New sparsity features (sharding, multi-head
+//! fan-out, structured patterns) hook in here.
+
+use super::mask::{BlockCounts, MaskMatrix};
+
+/// Crossbar tile edge of the dispatch fabric (Table 2: 32×32 arrays).
+pub const DISPATCH_TILE: usize = 32;
+
+/// The precomputed dispatch schedule of one pruning mask.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DispatchPlan {
+    rows: usize,
+    cols: usize,
+    /// CSR row pointers: row i's coordinates live at
+    /// `col_idx[row_ptr[i]..row_ptr[i+1]]`, ascending.
+    row_ptr: Vec<usize>,
+    /// Column indices of every '1' cell, row-major (the ⟨α, βᵢ⟩ stream).
+    col_idx: Vec<usize>,
+    /// Ones per column — the SDDMM per-column input-queue depths.
+    col_nnz: Vec<u32>,
+    /// Nonzeros per DISPATCH_TILE×DISPATCH_TILE tile.
+    blocks: BlockCounts,
+}
+
+impl DispatchPlan {
+    /// One scan over the mask builds every statistic.
+    pub fn build(mask: &MaskMatrix) -> Self {
+        let rows = mask.rows();
+        let cols = mask.cols();
+        let tile_rows = rows.div_ceil(DISPATCH_TILE).max(1);
+        let tile_cols = cols.div_ceil(DISPATCH_TILE).max(1);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(mask.nnz());
+        let mut col_nnz = vec![0u32; cols];
+        let mut counts = vec![0u32; tile_rows * tile_cols];
+        row_ptr.push(0);
+        for i in 0..rows {
+            let tile_row_base = (i / DISPATCH_TILE) * tile_cols;
+            for j in mask.row_coords(i) {
+                col_idx.push(j);
+                col_nnz[j] += 1;
+                counts[tile_row_base + j / DISPATCH_TILE] += 1;
+            }
+            row_ptr.push(col_idx.len());
+        }
+        let blocks = BlockCounts { tile_rows, tile_cols, counts };
+        Self { rows, cols, row_ptr, col_idx, col_nnz, blocks }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total masked coordinates.
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Fraction of ones.
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// CSR row pointers (len `rows + 1`).
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
+    /// Flat column-index stream (len `nnz`).
+    pub fn col_idx(&self) -> &[usize] {
+        &self.col_idx
+    }
+
+    /// Column coordinates of row `i` (one ReCAM row-match), ascending.
+    pub fn row_cols(&self, i: usize) -> &[usize] {
+        &self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    /// Ones in row `i` — the V-row replication count of output row i.
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// Per-column queue depths (the Fig. 8d latency bound).
+    pub fn col_queue_depths(&self) -> &[u32] {
+        &self.col_nnz
+    }
+
+    /// Deepest single-column queue.
+    pub fn max_col_queue(&self) -> u64 {
+        self.col_nnz.iter().copied().map(u64::from).max().unwrap_or(0)
+    }
+
+    /// Deepest queue when `group` adjacent columns colocate behind one
+    /// ADC (crossbar-size effect, Fig. 19a): colocated queues serialize,
+    /// so the bound is the max over groups of the group's summed depth.
+    pub fn grouped_max_queue(&self, group: usize) -> u64 {
+        let g = group.max(1);
+        self.col_nnz
+            .chunks(g)
+            .map(|c| c.iter().copied().map(u64::from).sum::<u64>())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Tile occupancy over the DISPATCH_TILE×DISPATCH_TILE grid.
+    pub fn blocks(&self) -> &BlockCounts {
+        &self.blocks
+    }
+
+    /// Columns used by any row — the V rows the SpMM method replicates.
+    pub fn used_columns(&self) -> Vec<usize> {
+        self.col_nnz
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(j, _)| j)
+            .collect()
+    }
+
+    /// Number of distinct used columns.
+    pub fn used_column_count(&self) -> usize {
+        self.col_nnz.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Split `0..rows` into at most `parts` contiguous ranges of roughly
+    /// equal nnz — the work partition for parallel kernel dispatch.
+    pub fn partition_rows(&self, parts: usize) -> Vec<std::ops::Range<usize>> {
+        let parts = parts.max(1);
+        let total = self.nnz();
+        if self.rows == 0 {
+            return Vec::new();
+        }
+        if parts == 1 || total == 0 {
+            return vec![0..self.rows];
+        }
+        let target = total.div_ceil(parts);
+        let mut out = Vec::with_capacity(parts);
+        let mut start = 0usize;
+        let mut budget = 0usize;
+        for i in 0..self.rows {
+            budget += self.row_nnz(i);
+            if budget >= target && i + 1 < self.rows && out.len() + 1 < parts {
+                out.push(start..i + 1);
+                start = i + 1;
+                budget = 0;
+            }
+        }
+        out.push(start..self.rows);
+        out
+    }
+}
+
+impl MaskMatrix {
+    /// Build this mask's [`DispatchPlan`] (one ReCAM scan, shared by every
+    /// engine).
+    pub fn plan(&self) -> DispatchPlan {
+        DispatchPlan::build(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    fn mask(n: usize, m: usize, density: f64, seed: u64) -> MaskMatrix {
+        MaskMatrix::from_dense(&SeededRng::new(seed).mask_matrix(n, m, density))
+    }
+
+    #[test]
+    fn topology_matches_mask() {
+        let m = mask(37, 65, 0.2, 1);
+        let p = m.plan();
+        assert_eq!((p.rows(), p.cols()), (37, 65));
+        assert_eq!(p.nnz(), m.nnz());
+        for i in 0..37 {
+            assert_eq!(p.row_nnz(i), m.row_nnz(i));
+            let cols = p.row_cols(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+            for &j in cols {
+                assert!(m.get(i, j), "({i},{j}) not set");
+            }
+        }
+    }
+
+    #[test]
+    fn column_queues_are_brute_force_counts() {
+        let m = mask(48, 48, 0.3, 2);
+        let p = m.plan();
+        for j in 0..48 {
+            let want = (0..48).filter(|&i| m.get(i, j)).count() as u32;
+            assert_eq!(p.col_queue_depths()[j], want, "column {j}");
+        }
+        assert_eq!(p.grouped_max_queue(1), p.max_col_queue());
+        assert_eq!(p.grouped_max_queue(48), p.nnz() as u64);
+    }
+
+    #[test]
+    fn blocks_conserve_mass() {
+        let m = mask(64, 64, 0.15, 3);
+        let p = m.plan();
+        assert_eq!(p.blocks().total(), m.nnz() as u64);
+        assert_eq!(p.blocks().counts, m.block_counts(DISPATCH_TILE, DISPATCH_TILE).counts);
+    }
+
+    #[test]
+    fn used_columns_match_mask() {
+        let mut m = MaskMatrix::zeros(4, 8);
+        m.set(0, 1, true);
+        m.set(3, 1, true);
+        m.set(2, 5, true);
+        let p = m.plan();
+        assert_eq!(p.used_columns(), vec![1, 5]);
+        assert_eq!(p.used_column_count(), 2);
+    }
+
+    #[test]
+    fn empty_and_full_masks() {
+        let empty = MaskMatrix::zeros(16, 16).plan();
+        assert_eq!(empty.nnz(), 0);
+        assert_eq!(empty.max_col_queue(), 0);
+        assert_eq!(empty.density(), 0.0);
+        let full = MaskMatrix::ones(16, 16).plan();
+        assert_eq!(full.nnz(), 256);
+        assert_eq!(full.max_col_queue(), 16);
+        assert_eq!(full.density(), 1.0);
+    }
+
+    #[test]
+    fn partition_covers_rows_contiguously() {
+        for (n, density, parts) in [(64, 0.2, 4), (33, 0.0, 3), (16, 1.0, 5), (8, 0.5, 1)] {
+            let p = mask(n, n, density, 7).plan();
+            let ranges = p.partition_rows(parts);
+            assert!(!ranges.is_empty());
+            assert!(ranges.len() <= parts.max(1));
+            let mut cursor = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, cursor);
+                assert!(r.end > r.start);
+                cursor = r.end;
+            }
+            assert_eq!(cursor, n);
+        }
+    }
+
+    #[test]
+    fn partition_balances_nnz() {
+        let p = mask(320, 320, 0.1, 9).plan();
+        let ranges = p.partition_rows(4);
+        let loads: Vec<usize> =
+            ranges.iter().map(|r| r.clone().map(|i| p.row_nnz(i)).sum()).collect();
+        let max = *loads.iter().max().unwrap();
+        let min = *loads.iter().min().unwrap();
+        assert!(max < 2 * min.max(1) + p.cols(), "imbalanced: {loads:?}");
+    }
+}

@@ -85,7 +85,7 @@ impl Matrix {
 
     /// `self @ other` — blocked ikj with 4-way k-unrolling so the inner
     /// loops stay in L1 and auto-vectorize (the hot path of the golden
-    /// model; before/after in EXPERIMENTS.md §Perf).
+    /// model; measured in benches/hotpath.rs).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul {:?} x {:?}", self.shape(), other.shape());
         let (n, k, m) = (self.rows, self.cols, other.cols);

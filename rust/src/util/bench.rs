@@ -1,10 +1,21 @@
 //! Bench timing harness (the `cargo bench` backend, criterion-style).
 //!
 //! Each `[[bench]]` target is a plain `main()` that calls [`Bencher::run`]
-//! per measurement: warm-up, N timed iterations, median/mean/min reporting,
-//! and a machine-readable line per benchmark for EXPERIMENTS.md capture.
+//! per measurement: warm-up, N timed iterations, median/mean/min reporting.
+//! [`Bencher::finish`] additionally dumps every measurement as JSON under
+//! `target/bench/<group>.json` (override the directory with `BENCH_JSON_DIR`)
+//! so CI and EXPERIMENTS-style capture can diff numbers across commits.
 
 use std::time::{Duration, Instant};
+
+/// One measurement's summary.
+#[derive(Clone, Debug)]
+struct Sample {
+    name: String,
+    median: Duration,
+    min: Duration,
+    max: Duration,
+}
 
 /// One benchmark group (one `[[bench]]` binary).
 pub struct Bencher {
@@ -13,7 +24,7 @@ pub struct Bencher {
     pub iters: usize,
     /// Warm-up iterations.
     pub warmup: usize,
-    results: Vec<(String, Duration)>,
+    results: Vec<Sample>,
 }
 
 impl Bencher {
@@ -46,13 +57,49 @@ impl Bencher {
             max,
             self.iters
         );
-        self.results.push((name.to_string(), median));
+        self.results.push(Sample { name: name.to_string(), median, min, max });
         median
     }
 
-    /// Summary footer (total + per-bench medians as CSV-ish lines).
+    /// Median of a previously run measurement (post-hoc comparisons).
+    pub fn median_of(&self, name: &str) -> Option<Duration> {
+        self.results.iter().find(|s| s.name == name).map(|s| s.median)
+    }
+
+    /// Summary footer plus the JSON dump.
     pub fn finish(&self) {
         println!("-- {} done: {} benchmarks --", self.group, self.results.len());
+        if let Err(e) = self.write_json() {
+            eprintln!("(bench JSON not written: {e})");
+        }
+    }
+
+    fn json_string(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"group\": {:?},\n", self.group));
+        s.push_str(&format!("  \"iters\": {},\n", self.iters));
+        s.push_str("  \"benchmarks\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": {:?}, \"median_ns\": {}, \"min_ns\": {}, \"max_ns\": {}}}{}\n",
+                r.name,
+                r.median.as_nanos(),
+                r.min.as_nanos(),
+                r.max.as_nanos(),
+                if i + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    fn write_json(&self) -> std::io::Result<()> {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| "target/bench".to_string());
+        std::fs::create_dir_all(&dir)?;
+        let path = std::path::Path::new(&dir).join(format!("{}.json", self.group));
+        std::fs::write(&path, self.json_string())?;
+        println!("bench JSON: {}", path.display());
+        Ok(())
     }
 }
 
@@ -73,7 +120,7 @@ mod tests {
             x
         });
         assert!(d > Duration::ZERO);
-        b.finish();
+        assert_eq!(b.median_of("spin"), Some(d));
     }
 
     #[test]
@@ -84,5 +131,20 @@ mod tests {
         b.run("a", || 1);
         b.run("b", || 2);
         assert_eq!(b.results.len(), 2);
+    }
+
+    #[test]
+    fn json_lists_every_benchmark() {
+        let mut b = Bencher::new("jsontest");
+        b.iters = 1;
+        b.warmup = 0;
+        b.run("first", || 1);
+        b.run("second", || 2);
+        let j = b.json_string();
+        assert!(j.contains("\"group\": \"jsontest\""), "{j}");
+        assert!(j.contains("\"first\"") && j.contains("\"second\""), "{j}");
+        assert!(j.contains("median_ns"), "{j}");
+        // valid for the in-tree JSON parser
+        crate::util::json::Json::parse(&j).unwrap();
     }
 }

@@ -1,0 +1,152 @@
+//! Minimal error plumbing — the in-tree replacement for `anyhow` in this
+//! offline, zero-dependency build.
+//!
+//! Provides the same surface the crate uses: a string-backed [`Error`], a
+//! defaulted [`Result`] alias, the [`Context`] extension trait for
+//! `Result`/`Option`, and the crate-root `anyhow!` / `bail!` macros.
+
+use std::fmt;
+
+/// A boxed-free, message-carrying error. Context wraps prepend their
+/// message, so chains render as `outer: inner` (the `{:#}` and `{}`
+/// renderings are identical).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    fn wrap(self, ctx: impl fmt::Display) -> Self {
+        Self { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Debug renders the message too, so `unwrap()` panics and `fn main() ->
+// Result<()>` exits stay readable.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Any std error converts via `?`. `Error` itself does not implement
+// `std::error::Error`, which is what keeps this blanket impl coherent
+// (the same trick anyhow uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, as `anyhow::Context` does.
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] (the `anyhow!` of this build). Accepts a format
+/// literal (with inline captures), a bare displayable expression, or a
+/// format string plus arguments — the same three shapes as `anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "), "{e}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = crate::anyhow!("bad value {}", 42);
+        assert_eq!(format!("{e}"), "bad value 42");
+        assert_eq!(format!("{e:?}"), "bad value 42");
+        let n = 5;
+        let captured = crate::anyhow!("n is {n}");
+        assert_eq!(captured.to_string(), "n is 5");
+        let plain = crate::anyhow!(String::from("plain message"));
+        assert_eq!(plain.to_string(), "plain message");
+        fn bails() -> Result<()> {
+            crate::bail!("nope {}", 7)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 7");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert!(e.to_string().starts_with("step 3: "));
+    }
+}

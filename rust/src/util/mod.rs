@@ -1,19 +1,22 @@
 //! In-tree replacements for the usual ecosystem crates.
 //!
-//! The build environment is fully offline (only the image-vendored crates
-//! resolve), so the small amounts of infrastructure the coordinator needs
-//! are implemented here:
+//! The build environment is fully offline (no crates.io), so the small
+//! amounts of infrastructure the coordinator needs are implemented here:
 //!
+//! * [`error`] — `anyhow`-shaped error/result plumbing (`Error`,
+//!   `Result`, `Context`, and the crate-root `anyhow!`/`bail!` macros).
 //! * [`json`] — minimal JSON parser/serializer for the artifact manifest,
 //!   weights, and fixtures (`aot.py` emits plain JSON).
 //! * [`tomlmini`] — the TOML subset the config files use (tables,
 //!   key = value scalars, inline arrays of tables are not needed).
 //! * [`bench`] — the timing harness behind `cargo bench` (median-of-runs
-//!   with warm-up, criterion-style output).
+//!   with warm-up, criterion-style output plus a machine-readable JSON
+//!   dump under `target/bench/`).
 //! * [`prop`] — a tiny property-testing driver over the deterministic RNG
 //!   (N random cases + failure seed reporting).
 
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod tomlmini;

@@ -4,7 +4,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 /// A scalar value.
 #[derive(Clone, Debug, PartialEq)]
@@ -78,7 +79,7 @@ impl Doc {
             } else if let Some((key, val)) = line.split_once('=') {
                 let key = key.trim().to_string();
                 let value = parse_value(val.trim())
-                    .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+                    .map_err(|e| crate::anyhow!("line {}: {e}", lineno + 1))?;
                 match &current {
                     Target::Plain(name) => {
                         doc.sections.entry(name.clone()).or_default().insert(key, value);

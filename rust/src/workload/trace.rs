@@ -59,7 +59,7 @@ impl TraceGenerator {
 
     /// Generate the trace for one dataset. Results are memoized process-
     /// wide (the figure harness re-requests identical traces dozens of
-    /// times; see EXPERIMENTS.md §Perf).
+    /// times; see rust/DESIGN.md).
     pub fn generate(&self, ds: &DatasetSpec) -> WorkloadTrace {
         let key = format!(
             "{}|{}|{}|{}|{}|{}|{}|{}|{}",

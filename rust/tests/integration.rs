@@ -40,7 +40,7 @@ fn model_of(set: &ArtifactSet) -> ModelConfig {
 #[test]
 fn pjrt_matches_rust_golden_model() {
     // The same computation three ways: JAX fixtures (via file), PJRT
-    // execution (via xla), and the pure-rust golden model. All must agree.
+    // execution (via the native engine), and the pure-rust golden model.
     let Some(set) = artifacts() else { return };
     let engine = Engine::load(&set).unwrap();
     let weights = Weights::from_json_file(&set.dir.join("weights.json")).unwrap();

@@ -2,7 +2,7 @@
 //! (the in-tree `util::prop` driver replaces proptest in this offline
 //! build — N seeded cases per property, failing seed reported).
 
-use cpsaa::attention::{self, Weights};
+use cpsaa::attention::{self, ops, Weights};
 use cpsaa::config::{HardwareConfig, ModelConfig};
 use cpsaa::coordinator::Batcher;
 use cpsaa::prop_assert;
@@ -16,6 +16,19 @@ fn rand_mask(rng: &mut SeededRng, n: usize) -> MaskMatrix {
     MaskMatrix::from_dense(&rng.mask_matrix(n, n, density))
 }
 
+/// Mask whose density sweeps the full 0.0–1.0 range, hitting the exact
+/// empty and full endpoints often (the plan's edge cases).
+fn full_range_mask(rng: &mut SeededRng, rows: usize, cols: usize) -> MaskMatrix {
+    match rng.gen_range_usize(0, 8) {
+        0 => MaskMatrix::zeros(rows, cols),
+        1 => MaskMatrix::ones(rows, cols),
+        _ => {
+            let density = rng.uniform() as f64;
+            MaskMatrix::from_dense(&rng.mask_matrix(rows, cols, density))
+        }
+    }
+}
+
 #[test]
 fn prop_mask_roundtrip_and_counts() {
     check("mask_roundtrip", default_cases(), |rng| {
@@ -23,10 +36,101 @@ fn prop_mask_roundtrip_and_counts() {
         let mask = rand_mask(rng, n);
         let dense = mask.to_dense();
         prop_assert!(MaskMatrix::from_dense(&dense) == mask, "roundtrip failed n={n}");
-        let total: usize = (0..n).map(|i| mask.row_coords(i).len()).sum();
-        prop_assert!(total == mask.nnz(), "coords {total} != nnz {}", mask.nnz());
+        let plan = mask.plan();
+        let total: usize = (0..n).map(|i| plan.row_nnz(i)).sum();
+        prop_assert!(total == mask.nnz(), "plan rows {total} != nnz {}", mask.nnz());
         let bc = mask.block_counts(32, 32);
         prop_assert!(bc.total() == mask.nnz() as u64, "block counts lose mass");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_sddmm_equals_dense_reference() {
+    // Plan-driven masked SDDMM ≡ dense `mask ⊙ (A·B)` across the whole
+    // density range, empty and full masks included.
+    check("plan_sddmm_vs_dense", default_cases(), |rng| {
+        let n = 4 + rng.gen_range_usize(0, 44);
+        let m = 4 + rng.gen_range_usize(0, 44);
+        let k = 4 + rng.gen_range_usize(0, 28);
+        let mask = full_range_mask(rng, n, m);
+        let a = rng.normal_matrix(n, k, 1.0);
+        let b = rng.normal_matrix(k, m, 1.0);
+        let plan = mask.plan();
+        let got = ops::sddmm_csr(&a, &b.transpose(), &plan).to_dense();
+        let full = a.matmul(&b);
+        for i in 0..n {
+            for j in 0..m {
+                let want = if mask.get(i, j) { full.get(i, j) } else { 0.0 };
+                prop_assert!(
+                    (got.get(i, j) - want).abs() < 1e-3,
+                    "({i},{j}): {} vs {want} (density {})",
+                    got.get(i, j),
+                    mask.density()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_from_plan_equals_from_dense_masked() {
+    check("csr_from_plan", default_cases(), |rng| {
+        let n = 4 + rng.gen_range_usize(0, 60);
+        let m = 4 + rng.gen_range_usize(0, 60);
+        let mask = full_range_mask(rng, n, m);
+        let dense = rng.normal_matrix(n, m, 1.0);
+        let plan = mask.plan();
+        let a = CsrMatrix::from_plan(&plan, &dense);
+        let b = CsrMatrix::from_dense_masked(&dense, &mask);
+        prop_assert!(a == b, "CSR-from-plan diverged (nnz {} vs {})", a.nnz(), b.nnz());
+        prop_assert!(a.nnz() == mask.nnz(), "nnz {} != mask {}", a.nnz(), mask.nnz());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_column_queues_match_brute_force() {
+    check("plan_col_queues", default_cases(), |rng| {
+        let n = 4 + rng.gen_range_usize(0, 92);
+        let m = 4 + rng.gen_range_usize(0, 92);
+        let mask = full_range_mask(rng, n, m);
+        let plan = mask.plan();
+        for j in 0..m {
+            let want = (0..n).filter(|&i| mask.get(i, j)).count() as u32;
+            prop_assert!(
+                plan.col_queue_depths()[j] == want,
+                "column {j}: plan {} vs brute-force {want}",
+                plan.col_queue_depths()[j]
+            );
+        }
+        let brute_max = (0..m)
+            .map(|j| (0..n).filter(|&i| mask.get(i, j)).count() as u64)
+            .max()
+            .unwrap_or(0);
+        prop_assert!(
+            plan.max_col_queue() == brute_max,
+            "max queue {} vs {brute_max}",
+            plan.max_col_queue()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_attention_planned_equals_unplanned() {
+    // The plan-reuse hot path computes exactly what the scan-per-call
+    // path does.
+    check("planned_attention", 16, |rng| {
+        let cfg = ModelConfig { seq_len: 24, d_model: 32, ..Default::default() };
+        let w = Weights::synthetic(&cfg, rng.gen_range_usize(0, 1000) as u64);
+        let x = rng.normal_matrix(24, 32, 1.0);
+        let mask = full_range_mask(rng, 24, 24);
+        let plan = mask.plan();
+        let a = attention::cpsaa_attention(&x, &w.w_s, &w.w_v, &mask, &cfg);
+        let b = ops::cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg);
+        prop_assert!(a.max_abs_diff(&b) < 1e-6, "planned path diverged");
         Ok(())
     });
 }
@@ -189,8 +293,9 @@ fn prop_binarize_monotone_in_theta() {
         let loose = attention::mask::binarize(&p, t1);
         let tight = attention::mask::binarize(&p, t2);
         prop_assert!(tight.nnz() <= loose.nnz(), "not monotone");
+        let tight_plan = tight.plan();
         for i in 0..n {
-            for j in tight.row_coords(i) {
+            for &j in tight_plan.row_cols(i) {
                 prop_assert!(loose.get(i, j), "tight not subset at ({i},{j})");
             }
         }
