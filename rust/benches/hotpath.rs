@@ -6,10 +6,10 @@
 //! pipeline) with and without plan amortization on the paper workload
 //! (320×320 mask @ 0.1 density). Numbers land in `target/bench/hotpath.json`.
 
-use cpsaa::attention::{self, ops, Weights};
-use cpsaa::config::SystemConfig;
+use cpsaa::attention::{self, ops, MultiHeadWeights, Weights};
+use cpsaa::config::{ModelConfig, SystemConfig};
 use cpsaa::sim::{pipeline, sddmm, spmm, ChipSim};
-use cpsaa::sparse::{CsrMatrix, MaskMatrix};
+use cpsaa::sparse::{CsrMatrix, MaskMatrix, PlanSet};
 use cpsaa::tensor::SeededRng;
 use cpsaa::util::bench::Bencher;
 
@@ -70,6 +70,28 @@ fn main() {
     );
     let m_for_csr = x.matmul(&w.w_s);
     b.run("csr_from_plan_320", || CsrMatrix::from_plan(&plan, &m_for_csr).nnz());
+
+    // -- multi-head fan-out (plan-reuse mode): 1 vs 8 heads ------------------
+    // Same paper workload; the 8-head rung runs 8 concurrent per-head
+    // kernels over a prebuilt PlanSet (one plan per head), the 1-head
+    // rung is the degenerate set. CI asserts both rungs exist in the
+    // JSON dump so head-fan-out regressions stay visible per-PR.
+    let cfg1 = ModelConfig { heads: 1, ..cfg.model.clone() };
+    let cfg8 = ModelConfig { heads: 8, ..cfg.model.clone() };
+    let mh1 = MultiHeadWeights::synthetic(&cfg1, 0);
+    let mh8 = MultiHeadWeights::synthetic(&cfg8, 0);
+    let plans1 = PlanSet::build(&attention::generate_head_masks(&x, &mh1, &cfg1));
+    let plans8 = PlanSet::build(&attention::generate_head_masks(&x, &mh8, &cfg8));
+    let t1 = b.run("attention_320x512_heads1_plan_reuse", || {
+        ops::multi_head_attention_planned(&x, &mh1, &plans1, &cfg1).norm()
+    });
+    let t8 = b.run("attention_320x512_heads8_plan_reuse", || {
+        ops::multi_head_attention_planned(&x, &mh8, &plans8, &cfg8).norm()
+    });
+    println!(
+        "8-head fan-out vs 1 head (8x the kernel work, concurrent heads): {:.2}x wall",
+        t8.as_secs_f64() / t1.as_secs_f64().max(1e-12)
+    );
 
     // -- golden model end-to-end (pruning + attention) -----------------------
     let model = cpsaa::config::ModelConfig { seq_len: 128, d_model: 256, ..cfg.model.clone() };

@@ -4,8 +4,11 @@ use crate::config::ModelConfig;
 use crate::sparse::MaskMatrix;
 use crate::tensor::Matrix;
 
+use crate::util::par::par_map;
+
 use super::quant;
 use super::softmax;
+use super::weights::MultiHeadWeights;
 
 /// mask = Bina(Soft(Q⁻¹(Q(X)·Q(W_S)·Q(Xᵀ)) / √d)) — the PIM pruning
 /// algorithm. Uses only `X` and the pre-quantized `W_S`, never `Q`/`K`:
@@ -20,6 +23,21 @@ pub fn generate(x: &Matrix, w_s: &Matrix, cfg: &ModelConfig) -> MaskMatrix {
     let s_hat = s_hat.scale(1.0 / (cfg.d_k as f32).sqrt());
     let p = softmax::softmax(&s_hat);
     binarize(&p, cfg.theta)
+}
+
+/// Per-head Step 1: one pruning mask per head from the head's folded
+/// `w_s`. Head prunes are independent (each head's ReCAM slice searches
+/// its own mask, §4.5), so they run concurrently — one
+/// [`par_map`][crate::util::par::par_map] worker per head, head order
+/// preserved.
+pub fn generate_heads(x: &Matrix, w: &MultiHeadWeights, cfg: &ModelConfig) -> Vec<MaskMatrix> {
+    // Replicated-W_S fan-out (a single-head weights file served with
+    // heads > 1) prunes identically per head: one quantized matmul
+    // chain instead of `heads`.
+    if w.shared_w_s() {
+        return vec![generate(x, &w.heads[0].w_s, cfg); w.heads.len()];
+    }
+    par_map(&w.heads, |h| generate(x, &h.w_s, cfg))
 }
 
 /// Eq. 1: G[i,j] = 1 iff S̃[i,j] ≥ θ — the Binarization Unit.
@@ -89,6 +107,30 @@ mod tests {
         let mask = generate(&x, &w.w_s, &ModelConfig { theta: 1.0 / 64.0 / 2.0, ..cfg });
         for i in 0..mask.rows() {
             assert!(mask.row_nnz(i) >= 1, "row {i} empty");
+        }
+    }
+
+    #[test]
+    fn head_masks_match_per_head_generation() {
+        use crate::attention::weights::MultiHeadWeights;
+        let cfg = ModelConfig { seq_len: 32, d_model: 64, d_k: 8, d_ff: 128, heads: 4, ..Default::default() };
+        let w = MultiHeadWeights::synthetic(&cfg, 5);
+        let x = SeededRng::new(6).normal_matrix(32, 64, 1.0);
+        let masks = generate_heads(&x, &w, &cfg);
+        assert_eq!(masks.len(), 4);
+        for (h, m) in masks.iter().enumerate() {
+            assert_eq!(m, &generate(&x, &w.heads[h].w_s, &cfg), "head {h} mask diverged");
+        }
+        // distinct per-head weights ⇒ masks genuinely differ
+        assert_ne!(masks[0], masks[1]);
+        // replicated-W_S fan-out (single-head file split N ways) takes
+        // the shared fast path and must equal per-head generation
+        let single = Weights::synthetic(&cfg, 5);
+        let split = MultiHeadWeights::split(&single, 4).unwrap();
+        let shared = generate_heads(&x, &split, &cfg);
+        assert_eq!(shared.len(), 4);
+        for m in &shared {
+            assert_eq!(m, &generate(&x, &single.w_s, &cfg));
         }
     }
 

@@ -7,6 +7,9 @@
 //!
 //! * [`mask::generate`] — Step 1, eq. 4 (PIM pruning)
 //! * [`ops::cpsaa_attention`] — Steps 2–4, eq. 3 (SDDMM → softmax → SpMM)
+//! * [`ops::multi_head_attention_planned`] — the §4.5 head fan-out:
+//!   per-head masks/plans, heads concurrent on disjoint tile slices,
+//!   concat + optional W_O
 //! * [`ops::dense_attention`] — the CPDAA dense mode of Fig. 14
 //! * [`ops::vanilla_attention`] — Fig. 1a, used to prove eq. 2 ≡ eq. 3
 
@@ -17,5 +20,6 @@ pub mod softmax;
 pub mod weights;
 
 pub use mask::generate as generate_mask;
+pub use mask::generate_heads as generate_head_masks;
 pub use ops::{cpsaa_attention, dense_attention, vanilla_attention};
-pub use weights::Weights;
+pub use weights::{HeadWeights, MultiHeadWeights, Weights};

@@ -6,10 +6,12 @@
 //! coordinate stream drives the crossbar SDDMM engine.
 
 use crate::config::ModelConfig;
-use crate::sparse::{CsrMatrix, DispatchPlan, MaskMatrix};
+use crate::sparse::{CsrMatrix, DispatchPlan, MaskMatrix, PlanSet};
 use crate::tensor::Matrix;
+use crate::util::par::par_map;
 
 use super::softmax;
+use super::weights::MultiHeadWeights;
 
 /// Nonzeros below which parallel dispatch is not worth the thread spawns.
 const PARALLEL_NNZ_THRESHOLD: usize = 1 << 12;
@@ -31,10 +33,19 @@ fn workers_for(nnz: usize) -> usize {
 /// land in plan order — no dense S round-trip. Row ranges are dispatched
 /// across `std::thread::scope` workers, balanced by nnz.
 pub fn sddmm_csr(a: &Matrix, bt: &Matrix, plan: &DispatchPlan) -> CsrMatrix {
+    sddmm_csr_workers(a, bt, plan, workers_for(plan.nnz()))
+}
+
+/// [`sddmm_csr`] with an explicit worker cap — the multi-head path
+/// divides the machine's worker budget across concurrent heads so
+/// `heads` sibling kernels do not oversubscribe the cores. The worker
+/// count never changes the values (every coordinate's dot product is
+/// independent), only the dispatch.
+fn sddmm_csr_workers(a: &Matrix, bt: &Matrix, plan: &DispatchPlan, workers: usize) -> CsrMatrix {
     assert_eq!(a.cols(), bt.cols(), "inner dims");
     assert_eq!((plan.rows(), plan.cols()), (a.rows(), bt.rows()), "plan shape");
     let mut values = vec![0.0f32; plan.nnz()];
-    let ranges = plan.partition_rows(workers_for(plan.nnz()));
+    let ranges = plan.partition_rows(workers.max(1));
     if ranges.len() <= 1 {
         for i in 0..plan.rows() {
             let arow = a.row(i);
@@ -95,13 +106,89 @@ pub fn cpsaa_attention_planned(
     plan: &DispatchPlan,
     cfg: &ModelConfig,
 ) -> Matrix {
+    cpsaa_attention_planned_budgeted(x, w_s, w_v, plan, cfg, 1)
+}
+
+/// One head's attention kernel under a shared machine: the SDDMM worker
+/// budget is divided by `concurrent_heads` (the number of sibling head
+/// kernels running in the same `par_map` fan-out). `concurrent_heads ==
+/// 1` is exactly [`cpsaa_attention_planned`]; the worker count never
+/// changes the computed values.
+fn cpsaa_attention_planned_budgeted(
+    x: &Matrix,
+    w_s: &Matrix,
+    w_v: &Matrix,
+    plan: &DispatchPlan,
+    cfg: &ModelConfig,
+    concurrent_heads: usize,
+) -> Matrix {
     let m = x.matmul(w_s);
     let v = x.matmul(w_v);
+    let workers = (workers_for(plan.nnz()) / concurrent_heads.max(1)).max(1);
     // S = M·Xᵀ: B = Xᵀ, so Bᵀ = X — no transpose materialized.
-    let mut p = sddmm_csr(&m, x, plan);
+    let mut p = sddmm_csr_workers(&m, x, plan, workers);
     p.scale_values(1.0 / (cfg.d_k as f32).sqrt());
     p.softmax_rows();
     p.spmm(&v)
+}
+
+/// Multi-head CPSAA attention over a prebuilt [`PlanSet`] — one plan
+/// per head, heads executed concurrently on disjoint tile slices (one
+/// [`par_map`][crate::util::par::par_map] worker per head; each head's
+/// SDDMM keeps its own
+/// nnz-balanced `partition_rows` dispatch). The per-head outputs
+/// concatenate column-wise in head order, then the optional output
+/// projection W_O applies. With one head and no W_O this computes
+/// bit-for-bit what [`cpsaa_attention_planned`] computes.
+pub fn multi_head_attention_planned(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    plans: &PlanSet,
+    cfg: &ModelConfig,
+) -> Matrix {
+    assert_eq!(w.heads.len(), plans.heads(), "one plan per head");
+    let heads = w.heads.len();
+    // Replicated-W_S fan-out (a single-head weights file split N ways):
+    // every head scores, prunes, and softmaxes identically, so compute
+    // the shared P once and fan only the per-head V-block SpMM. Each
+    // head's V and SpMM match the general path op-for-op, so the result
+    // is bit-identical to running the heads independently.
+    let shared_scores =
+        w.shared_w_s() && plans.plans().iter().skip(1).all(|p| p == plans.plan(0));
+    let zs: Vec<Matrix> = if shared_scores {
+        let m = x.matmul(&w.heads[0].w_s);
+        let mut p = sddmm_csr(&m, x, plans.plan(0));
+        p.scale_values(1.0 / (cfg.d_k as f32).sqrt());
+        p.softmax_rows();
+        par_map(&w.heads, |h| p.spmm(&x.matmul(&h.w_v)))
+    } else {
+        let pairs: Vec<(&super::weights::HeadWeights, &DispatchPlan)> =
+            w.heads.iter().zip(plans.plans()).collect();
+        par_map(&pairs, |&(h, p)| {
+            cpsaa_attention_planned_budgeted(x, &h.w_s, &h.w_v, p, cfg, heads)
+        })
+    };
+    let blocks: Vec<&Matrix> = zs.iter().collect();
+    let z = Matrix::concat_cols(&blocks);
+    match &w.w_o {
+        Some(o) => z.matmul(o),
+        None => z,
+    }
+}
+
+/// One encoder layer with multi-head fan-out: the multi-head attention
+/// over the plan set, then the same residual + RMS-norm + FC tail as
+/// [`encoder_layer_planned`].
+pub fn encoder_layer_heads(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    plans: &PlanSet,
+    cfg: &ModelConfig,
+) -> Matrix {
+    let z = multi_head_attention_planned(x, w, plans, cfg);
+    let h = rms_norm(&x.add(&z));
+    let ff = h.matmul(&w.w_fc1).map(gelu).matmul(&w.w_fc2);
+    rms_norm(&h.add(&ff))
 }
 
 /// CPDAA: the dense calculation mode (all-ones mask) of Fig. 14.
@@ -249,5 +336,49 @@ mod tests {
         let empty = MaskMatrix::zeros(32, 32);
         let z = cpsaa_attention(&x, &w.w_s, &w.w_v, &empty, &cfg);
         assert_eq!(z.norm(), 0.0);
+    }
+
+    #[test]
+    fn one_head_fanout_is_bit_identical() {
+        let (x, w, cfg) = setup(32, 64);
+        let mask = generate_mask(&x, &w.w_s, &cfg);
+        let plan = mask.plan();
+        let mh = MultiHeadWeights::from_single(&w);
+        let plans = PlanSet::single(plan.clone());
+        let a = cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg);
+        let b = multi_head_attention_planned(&x, &mh, &plans, &cfg);
+        assert_eq!(a, b, "1-head fan-out must not change a single bit");
+        let ea = encoder_layer_planned(&x, &w, &plan, &cfg);
+        let eb = encoder_layer_heads(&x, &mh, &plans, &cfg);
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn split_heads_concat_to_single_head_output() {
+        // Identical per-head masks (replicated W_S) + column-split W_V:
+        // the concat of head outputs equals the single-head output, and
+        // the accumulation order matches, so equality is exact.
+        let (x, w, cfg) = setup(32, 64);
+        let mask = generate_mask(&x, &w.w_s, &cfg);
+        let mh = MultiHeadWeights::split(&w, 4).unwrap();
+        let plans = PlanSet::from_plans(vec![mask.plan(); 4]);
+        let single = cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &mask.plan(), &cfg);
+        let fanned = multi_head_attention_planned(&x, &mh, &plans, &cfg);
+        assert_eq!(single, fanned);
+    }
+
+    #[test]
+    fn distinct_heads_finite_and_shaped() {
+        let cfg = ModelConfig { seq_len: 32, d_model: 64, d_k: 8, d_ff: 128, heads: 4, ..Default::default() };
+        let mh = MultiHeadWeights::synthetic(&cfg, 11);
+        let x = SeededRng::new(12).normal_matrix(32, 64, 1.0);
+        let masks = super::super::mask::generate_heads(&x, &mh, &cfg);
+        let plans = PlanSet::build(&masks);
+        let z = multi_head_attention_planned(&x, &mh, &plans, &cfg);
+        assert_eq!(z.shape(), (32, 64));
+        assert!(z.all_finite());
+        let h = encoder_layer_heads(&x, &mh, &plans, &cfg);
+        assert_eq!(h.shape(), (32, 64));
+        assert!(h.all_finite());
     }
 }

@@ -49,13 +49,296 @@ impl Weights {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         let raw = Json::parse(&text).context("parsing weights.json")?;
+        Self::from_json(&raw)
+    }
+
+    /// Extract the base fields from an already-parsed weights.json (so
+    /// multi-head loading parses the file once).
+    pub(crate) fn from_json(raw: &Json) -> Result<Self> {
         Ok(Self {
-            w_s: matrix_field(&raw, "w_s")?,
-            w_v: matrix_field(&raw, "w_v")?,
-            w_fc1: matrix_field(&raw, "w_fc1")?,
-            w_fc2: matrix_field(&raw, "w_fc2")?,
+            w_s: matrix_field(raw, "w_s")?,
+            w_v: matrix_field(raw, "w_v")?,
+            w_fc1: matrix_field(raw, "w_fc1")?,
+            w_fc2: matrix_field(raw, "w_fc2")?,
         })
     }
+}
+
+/// One attention head's slice of the ROA contents: the folded per-head
+/// score weights `w_s = w_q·w_kᵀ` (d×d) and the head's value projection
+/// `w_v` (d × d_head). Heads own disjoint crossbar-tile slices (§4.5),
+/// so each head's pair loads into its own slice.
+#[derive(Clone, Debug)]
+pub struct HeadWeights {
+    pub w_s: Matrix,
+    pub w_v: Matrix,
+}
+
+/// Multi-head layer weights: per-head Q/K/V projections (folded), an
+/// optional output projection over the concatenated head outputs, and
+/// the shared FC tail. The single-head layout ([`Weights`]) stays the
+/// artifact interchange format; this is the serving-path fan-out of it.
+#[derive(Clone, Debug)]
+pub struct MultiHeadWeights {
+    /// Head order matches the V-column blocks: head h's output lands in
+    /// columns `h·d_head .. (h+1)·d_head` of the concat.
+    pub heads: Vec<HeadWeights>,
+    /// Output projection W_O (d×d) applied after the concat. `None` is
+    /// the identity — the single-head layout has no W_O, and skipping
+    /// the matmul keeps the 1-head path bit-identical to [`Weights`].
+    pub w_o: Option<Matrix>,
+    pub w_fc1: Matrix,
+    pub w_fc2: Matrix,
+}
+
+impl MultiHeadWeights {
+    pub fn heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.heads[0].w_s.rows()
+    }
+
+    /// True when every head carries the same folded W_S (the
+    /// single-head-file fan-out): all heads then score and prune
+    /// identically, and the mask/kernel paths collapse the redundant
+    /// per-head work. O(heads·d²) equality probe, short-circuiting on
+    /// the first differing element — negligible against the matmuls it
+    /// saves, and the single definition keeps the two fast paths
+    /// (mask generation, attention kernel) agreeing.
+    pub fn shared_w_s(&self) -> bool {
+        self.heads.len() > 1 && self.heads.iter().skip(1).all(|h| h.w_s == self.heads[0].w_s)
+    }
+
+    /// Wrap a single-head layout as a 1-head set (no W_O): the fan-out
+    /// path then computes exactly what the single-head path computes.
+    pub fn from_single(w: &Weights) -> Self {
+        Self {
+            heads: vec![HeadWeights { w_s: w.w_s.clone(), w_v: w.w_v.clone() }],
+            w_o: None,
+            w_fc1: w.w_fc1.clone(),
+            w_fc2: w.w_fc2.clone(),
+        }
+    }
+
+    /// Fan a folded single-head layout out to `heads` heads: W_V splits
+    /// into column blocks; W_S replicates (the folded product cannot be
+    /// re-factored into per-head Q/K). With the replicated W_S every
+    /// head prunes identically, and the concat of the per-head outputs
+    /// equals the single-head output in exact arithmetic.
+    pub fn split(w: &Weights, heads: usize) -> Result<Self> {
+        if heads == 0 {
+            return Err(anyhow!("heads must be positive"));
+        }
+        if heads == 1 {
+            return Ok(Self::from_single(w));
+        }
+        let d = w.w_v.cols();
+        if d % heads != 0 {
+            return Err(anyhow!("heads {heads} does not divide d_model {d}"));
+        }
+        let dh = d / heads;
+        let heads_v = (0..heads)
+            .map(|h| HeadWeights {
+                w_s: w.w_s.clone(),
+                w_v: w.w_v.col_block(h * dh, (h + 1) * dh),
+            })
+            .collect();
+        Ok(Self { heads: heads_v, w_o: None, w_fc1: w.w_fc1.clone(), w_fc2: w.w_fc2.clone() })
+    }
+
+    /// Deterministic synthetic multi-head weights: distinct per-head
+    /// Q/K (folded) and V blocks plus an output projection. `cfg.heads
+    /// == 1` delegates to the single-head constructor so the two paths
+    /// share weights exactly.
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Self {
+        let heads = cfg.heads.max(1);
+        if heads == 1 {
+            return Self::from_single(&Weights::synthetic(cfg, seed));
+        }
+        let d = cfg.d_model;
+        assert_eq!(d % heads, 0, "heads {heads} must divide d_model {d}");
+        let dh = d / heads;
+        let dk = cfg.d_k;
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut rng = SeededRng::new(seed);
+        let heads_v = (0..heads)
+            .map(|_| {
+                let w_q = rng.normal_matrix(d, dk, scale * cfg.sharpness);
+                let w_k = rng.normal_matrix(d, dk, scale);
+                HeadWeights {
+                    w_s: w_q.matmul(&w_k.transpose()),
+                    w_v: rng.normal_matrix(d, dh, scale),
+                }
+            })
+            .collect();
+        Self {
+            heads: heads_v,
+            w_o: Some(rng.normal_matrix(d, d, scale)),
+            w_fc1: rng.normal_matrix(d, cfg.d_ff, scale),
+            w_fc2: rng.normal_matrix(cfg.d_ff, d, scale),
+        }
+    }
+
+    /// Load `heads` heads from a weights.json. Native multi-head files
+    /// carry the per-head score weights row-stacked under `w_s_heads`
+    /// (file_heads·d × d) plus an optional `w_o`, and must be loaded at
+    /// exactly their stored head count — silently dropping true
+    /// per-head W_S would serve a model that never existed. Single-head
+    /// files (the AOT format, no `w_s_heads`) fan out to any head
+    /// count via the [`MultiHeadWeights::split`] replication, which is
+    /// numerically exact. Per-head W_V is always the column blocks of
+    /// the stored full-width `w_v`; a stored `w_o` always applies.
+    pub fn load(path: &Path, heads: usize) -> Result<Self> {
+        if heads == 0 {
+            return Err(anyhow!("heads must be positive"));
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let raw = Json::parse(&text).context("parsing weights.json")?;
+        let base = Weights::from_json(&raw)?;
+        let d = base.w_v.cols();
+        if d == 0 || d % heads != 0 {
+            return Err(anyhow!("heads {heads} does not divide d_model {d}"));
+        }
+        let stacked = match raw.opt("w_s_heads") {
+            Some(v) => {
+                let m = json_matrix(v).context("field w_s_heads")?;
+                if m.cols() != d || m.rows() == 0 || m.rows() % d != 0 {
+                    return Err(anyhow!(
+                        "malformed w_s_heads: shape {:?} is not a (k*{d}, {d}) stack",
+                        m.shape()
+                    ));
+                }
+                if m.rows() != heads * d {
+                    return Err(anyhow!(
+                        "weights.json stores {} heads; requested {heads} \
+                         (refusing to silently drop per-head W_S)",
+                        m.rows() / d
+                    ));
+                }
+                Some(m)
+            }
+            None => None,
+        };
+        let w_o = match raw.opt("w_o") {
+            Some(v) => {
+                let m = json_matrix(v).context("field w_o")?;
+                if m.shape() != (d, d) {
+                    return Err(anyhow!("w_o shape {:?} != ({d}, {d})", m.shape()));
+                }
+                Some(m)
+            }
+            None => None,
+        };
+        let dh = d / heads;
+        let heads_v = (0..heads)
+            .map(|h| HeadWeights {
+                w_s: match &stacked {
+                    Some(s) => s.row_block(h * d, (h + 1) * d),
+                    None => base.w_s.clone(),
+                },
+                w_v: if heads == 1 {
+                    base.w_v.clone()
+                } else {
+                    base.w_v.col_block(h * dh, (h + 1) * dh)
+                },
+            })
+            .collect();
+        Ok(Self { heads: heads_v, w_o, w_fc1: base.w_fc1, w_fc2: base.w_fc2 })
+    }
+
+    /// Serialize to the weights.json layout [`MultiHeadWeights::load`]
+    /// reads: the base single-head fields (head 0's W_S, the concat W_V)
+    /// plus, for >1 head, `w_s_heads` and `w_o`.
+    pub fn to_json_string(&self) -> String {
+        let d = self.d_model();
+        let w_v_full = {
+            let blocks: Vec<&Matrix> = self.heads.iter().map(|h| &h.w_v).collect();
+            Matrix::concat_cols(&blocks)
+        };
+        let mut s = String::from("{\n");
+        write_matrix_field(&mut s, "w_s", &self.heads[0].w_s);
+        s.push_str(",\n");
+        write_matrix_field(&mut s, "w_v", &w_v_full);
+        s.push_str(",\n");
+        write_matrix_field(&mut s, "w_fc1", &self.w_fc1);
+        s.push_str(",\n");
+        write_matrix_field(&mut s, "w_fc2", &self.w_fc2);
+        if self.heads.len() > 1 {
+            let mut stacked = Matrix::zeros(self.heads.len() * d, d);
+            for (h, hw) in self.heads.iter().enumerate() {
+                let dst = h * d * d;
+                stacked.data_mut()[dst..dst + d * d].copy_from_slice(hw.w_s.data());
+            }
+            s.push_str(",\n");
+            write_matrix_field(&mut s, "w_s_heads", &stacked);
+        }
+        if let Some(o) = &self.w_o {
+            s.push_str(",\n");
+            write_matrix_field(&mut s, "w_o", o);
+        }
+        s.push_str("\n}\n");
+        s
+    }
+
+    /// Structural invariants: square per-head W_S over one d_model, V
+    /// blocks concatenating back to d_model, W_O square when present,
+    /// and an FC tail that composes (d → d_ff → d) — everything the
+    /// encoder layer would otherwise only catch as a matmul panic.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.heads.is_empty() {
+            return Err("no heads".into());
+        }
+        let d = self.heads[0].w_s.rows();
+        let mut dv = 0;
+        for (h, hw) in self.heads.iter().enumerate() {
+            if hw.w_s.shape() != (d, d) {
+                return Err(format!("head {h} w_s shape {:?} != ({d}, {d})", hw.w_s.shape()));
+            }
+            if hw.w_v.rows() != d {
+                return Err(format!("head {h} w_v rows {} != {d}", hw.w_v.rows()));
+            }
+            dv += hw.w_v.cols();
+        }
+        if dv != d {
+            return Err(format!("head V blocks concat to {dv}, want d_model {d}"));
+        }
+        if let Some(o) = &self.w_o {
+            if o.shape() != (d, d) {
+                return Err(format!("w_o shape {:?} != ({d}, {d})", o.shape()));
+            }
+        }
+        if self.w_fc1.rows() != d {
+            return Err(format!("w_fc1 rows {} != d_model {d}", self.w_fc1.rows()));
+        }
+        if self.w_fc2.rows() != self.w_fc1.cols() {
+            return Err(format!(
+                "FC tail does not compose: w_fc1 is {:?}, w_fc2 is {:?}",
+                self.w_fc1.shape(),
+                self.w_fc2.shape()
+            ));
+        }
+        if self.w_fc2.cols() != d {
+            return Err(format!("w_fc2 cols {} != d_model {d}", self.w_fc2.cols()));
+        }
+        Ok(())
+    }
+}
+
+/// Append `"name": {"shape": [r, c], "data": [...]}` with shortest
+/// round-trip float formatting (the `{:?}` repr re-parses exactly).
+fn write_matrix_field(out: &mut String, name: &str, m: &Matrix) {
+    use std::fmt::Write;
+    let _ = write!(out, "  \"{name}\": {{\"shape\": [{}, {}], \"data\": [", m.rows(), m.cols());
+    for (i, v) in m.data().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{v:?}");
+    }
+    out.push_str("]}");
 }
 
 /// Parse one `{"shape": [r, c], "data": [...]}` entry.
@@ -95,6 +378,114 @@ mod tests {
         let a = Weights::synthetic(&cfg, 5);
         let b = Weights::synthetic(&cfg, 5);
         assert_eq!(a.w_s, b.w_s);
+    }
+
+    #[test]
+    fn multihead_split_concat_identity() {
+        // Split W_V into head blocks and concat back: exact identity.
+        let cfg = ModelConfig { seq_len: 16, d_model: 32, d_k: 8, d_ff: 64, ..Default::default() };
+        let w = Weights::synthetic(&cfg, 2);
+        let mh = MultiHeadWeights::split(&w, 4).unwrap();
+        mh.validate().unwrap();
+        assert_eq!(mh.heads(), 4);
+        for h in &mh.heads {
+            assert_eq!(h.w_s, w.w_s, "split replicates the folded W_S");
+            assert_eq!(h.w_v.shape(), (32, 8));
+        }
+        let blocks: Vec<&Matrix> = mh.heads.iter().map(|h| &h.w_v).collect();
+        assert_eq!(Matrix::concat_cols(&blocks), w.w_v);
+        assert!(MultiHeadWeights::split(&w, 5).is_err(), "5 does not divide 32");
+        assert!(MultiHeadWeights::split(&w, 0).is_err());
+    }
+
+    #[test]
+    fn multihead_synthetic_heads_differ() {
+        let cfg = ModelConfig { seq_len: 16, d_model: 32, d_k: 8, d_ff: 64, heads: 4, ..Default::default() };
+        let mh = MultiHeadWeights::synthetic(&cfg, 3);
+        mh.validate().unwrap();
+        assert_eq!(mh.heads(), 4);
+        assert!(mh.w_o.is_some());
+        assert!(mh.heads[0].w_s.max_abs_diff(&mh.heads[1].w_s) > 0.0, "heads must differ");
+        // heads == 1 delegates to the single-head constructor exactly
+        let one = MultiHeadWeights::synthetic(&ModelConfig { heads: 1, ..cfg }, 3);
+        let single = Weights::synthetic(&ModelConfig { seq_len: 16, d_model: 32, d_k: 8, d_ff: 64, ..Default::default() }, 3);
+        assert_eq!(one.heads[0].w_s, single.w_s);
+        assert_eq!(one.heads[0].w_v, single.w_v);
+        assert!(one.w_o.is_none());
+    }
+
+    #[test]
+    fn multihead_json_roundtrip() {
+        let cfg = ModelConfig { seq_len: 16, d_model: 32, d_k: 8, d_ff: 64, heads: 4, ..Default::default() };
+        let mh = MultiHeadWeights::synthetic(&cfg, 7);
+        let path = std::env::temp_dir().join(format!("cpsaa-mhw-{}.json", std::process::id()));
+        std::fs::write(&path, mh.to_json_string()).unwrap();
+        let back = MultiHeadWeights::load(&path, 4).unwrap();
+        back.validate().unwrap();
+        for h in 0..4 {
+            assert_eq!(back.heads[h].w_s, mh.heads[h].w_s, "head {h} w_s");
+            assert_eq!(back.heads[h].w_v, mh.heads[h].w_v, "head {h} w_v");
+        }
+        assert_eq!(back.w_o.as_ref().unwrap(), mh.w_o.as_ref().unwrap());
+        assert_eq!(back.w_fc1, mh.w_fc1);
+        // a native multi-head file must be fanned at its stored head
+        // count — anything else would silently drop per-head W_S
+        let err = MultiHeadWeights::load(&path, 2).unwrap_err();
+        assert!(err.to_string().contains("stores 4 heads"), "{err}");
+        assert!(MultiHeadWeights::load(&path, 1).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn single_head_file_fans_to_any_count_and_keeps_w_o() {
+        // The AOT format (no w_s_heads) fans out by exact V-splitting;
+        // a stored w_o applies at every head count.
+        let cfg = ModelConfig { seq_len: 16, d_model: 32, d_k: 8, d_ff: 64, ..Default::default() };
+        let single = Weights::synthetic(&cfg, 9);
+        let w_o = SeededRng::new(10).normal_matrix(32, 32, 0.2);
+        let mut mh = MultiHeadWeights::from_single(&single);
+        mh.w_o = Some(w_o.clone());
+        let path = std::env::temp_dir().join(format!("cpsaa-mhw-1h-{}.json", std::process::id()));
+        std::fs::write(&path, mh.to_json_string()).unwrap();
+        for heads in [1usize, 2, 4] {
+            let fanned = MultiHeadWeights::load(&path, heads).unwrap();
+            fanned.validate().unwrap();
+            assert_eq!(fanned.heads(), heads);
+            assert_eq!(fanned.heads[0].w_s, single.w_s, "replicates the base w_s");
+            assert_eq!(fanned.w_o.as_ref().unwrap(), &w_o, "w_o applies at {heads} heads");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn malformed_w_s_heads_rejected() {
+        // A w_s_heads block that is not a (k·d × d) stack is corruption,
+        // not a head-count fallback: 24 rows at d = 16 is ragged.
+        let cfg = ModelConfig { seq_len: 8, d_model: 16, d_k: 4, d_ff: 32, heads: 2, ..Default::default() };
+        let mh = MultiHeadWeights::synthetic(&cfg, 1);
+        let mut s = String::from("{\n");
+        write_matrix_field(&mut s, "w_s", &mh.heads[0].w_s);
+        s.push_str(",\n");
+        let blocks: Vec<&Matrix> = mh.heads.iter().map(|h| &h.w_v).collect();
+        write_matrix_field(&mut s, "w_v", &Matrix::concat_cols(&blocks));
+        s.push_str(",\n");
+        write_matrix_field(&mut s, "w_fc1", &mh.w_fc1);
+        s.push_str(",\n");
+        write_matrix_field(&mut s, "w_fc2", &mh.w_fc2);
+        s.push_str(",\n");
+        write_matrix_field(&mut s, "w_s_heads", &Matrix::full(24, 16, 0.5));
+        s.push_str("\n}\n");
+        let path = std::env::temp_dir().join(format!("cpsaa-mhw-bad-{}.json", std::process::id()));
+        std::fs::write(&path, &s).unwrap();
+        let err = MultiHeadWeights::load(&path, 2).unwrap_err();
+        assert!(err.to_string().contains("w_s_heads"), "{err}");
+        // a well-formed stack with a *different* head count is a clean
+        // head-count error, not a silent fallback
+        let four = MultiHeadWeights::synthetic(&ModelConfig { heads: 4, ..cfg }, 2);
+        std::fs::write(&path, four.to_json_string()).unwrap();
+        let err = MultiHeadWeights::load(&path, 2).unwrap_err();
+        assert!(err.to_string().contains("stores 4 heads"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

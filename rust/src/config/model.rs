@@ -24,7 +24,12 @@ pub struct ModelConfig {
     pub layers: usize,
     /// Attention heads per layer (BERT-base: 8 at d_model=512/d_k=64).
     /// The chip-level figures model one head (the paper's setup); the
-    /// application-level simulator fans heads across tile groups.
+    /// serving path and the application-level simulator fan heads out
+    /// across disjoint `tiles/heads` crossbar slices, one mask and one
+    /// dispatch plan per head. The simulator accepts any head count;
+    /// *serving* additionally requires heads to divide d_model (head
+    /// outputs concat back to d_model), enforced when the weights fan
+    /// out ([`MultiHeadWeights`][crate::attention::MultiHeadWeights]).
     pub heads: usize,
     /// Quantization scale γ of Q(·).
     pub gamma: f32,
@@ -162,6 +167,11 @@ mod tests {
         assert!(ModelConfig { theta: 0.0, ..Default::default() }.validate().is_err());
         assert!(ModelConfig { seq_len: 0, ..Default::default() }.validate().is_err());
         assert!(ModelConfig { quant_bits: 0, ..Default::default() }.validate().is_err());
+        assert!(ModelConfig { heads: 0, ..Default::default() }.validate().is_err());
+        // non-dividing head counts are fine for the simulator (serving
+        // enforces divisibility at the weights fan-out instead)
+        ModelConfig { heads: 7, ..Default::default() }.validate().unwrap();
+        ModelConfig { heads: 8, ..Default::default() }.validate().unwrap();
     }
 
     #[test]

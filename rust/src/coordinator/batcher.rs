@@ -8,10 +8,12 @@
 //! every request lands in exactly one batch, offsets never overlap, and
 //! no batch exceeds capacity.
 //!
-//! Each packed batch downstream gets exactly one pruning mask and one
-//! [`DispatchPlan`][crate::sparse::DispatchPlan], built by
+//! Each packed batch downstream gets exactly one pruning mask **per
+//! head** and one [`PlanSet`][crate::sparse::PlanSet] (a
+//! [`DispatchPlan`][crate::sparse::DispatchPlan] per head), built by
 //! [`EncoderStack::forward`][super::EncoderStack::forward] and shared
-//! across every encoder layer.
+//! across every encoder layer; the packing itself is head-agnostic —
+//! all heads see the same packed X.
 
 use crate::tensor::Matrix;
 

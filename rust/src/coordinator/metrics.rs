@@ -74,6 +74,20 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-head serving accounting (index = head). Heads run concurrently
+/// on disjoint tile slices, so batch wall time is the max over heads
+/// while each head still burns its own energy — the per-head lines make
+/// head imbalance (one dense head stalling the batch) visible.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HeadMetrics {
+    /// Simulated per-head latency summed across batches (ns).
+    pub sim_ns: f64,
+    /// Simulated per-head energy summed across batches (pJ).
+    pub sim_pj: f64,
+    /// Sum of per-batch mask densities (divide by `batches` for mean).
+    pub density_sum: f64,
+}
+
 /// Aggregate serving counters.
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
@@ -82,10 +96,13 @@ pub struct ServeMetrics {
     pub padded_rows: u64,
     pub used_rows: u64,
     pub latency: LatencyHistogram,
-    /// Simulated accelerator time (ns) across batches.
+    /// Simulated accelerator time (ns) across batches (max over heads
+    /// per batch, summed over batches).
     pub sim_ns: f64,
-    /// Simulated accelerator energy (pJ).
+    /// Simulated accelerator energy (pJ), summed over heads and batches.
     pub sim_pj: f64,
+    /// Per-head accounting, head order; sized on first recorded batch.
+    pub heads: Vec<HeadMetrics>,
 }
 
 impl ServeMetrics {
@@ -96,6 +113,24 @@ impl ServeMetrics {
         } else {
             self.used_rows as f64 / total as f64
         }
+    }
+
+    /// Fold one batch's per-head lines in (slices share head order).
+    pub fn record_heads(&mut self, sim_ns: &[f64], sim_pj: &[f64], density: &[f64]) {
+        if self.heads.len() < sim_ns.len() {
+            self.heads.resize(sim_ns.len(), HeadMetrics::default());
+        }
+        for (h, m) in self.heads.iter_mut().enumerate() {
+            m.sim_ns += sim_ns.get(h).copied().unwrap_or(0.0);
+            m.sim_pj += sim_pj.get(h).copied().unwrap_or(0.0);
+            m.density_sum += density.get(h).copied().unwrap_or(0.0);
+        }
+    }
+
+    /// Mean per-head densities over the recorded batches.
+    pub fn head_mean_densities(&self) -> Vec<f64> {
+        let n = self.batches.max(1) as f64;
+        self.heads.iter().map(|h| h.density_sum / n).collect()
     }
 }
 
@@ -129,6 +164,20 @@ mod tests {
         h.record(Duration::from_millis(3));
         let m = h.mean();
         assert!(m >= Duration::from_millis(1) && m <= Duration::from_millis(3));
+    }
+
+    #[test]
+    fn head_metrics_accumulate() {
+        let mut m = ServeMetrics::default();
+        m.batches = 2;
+        m.record_heads(&[10.0, 20.0], &[1.0, 2.0], &[0.1, 0.3]);
+        m.record_heads(&[30.0, 40.0], &[3.0, 4.0], &[0.2, 0.4]);
+        assert_eq!(m.heads.len(), 2);
+        assert!((m.heads[0].sim_ns - 40.0).abs() < 1e-12);
+        assert!((m.heads[1].sim_pj - 6.0).abs() < 1e-12);
+        let means = m.head_mean_densities();
+        assert!((means[0] - 0.15).abs() < 1e-12);
+        assert!((means[1] - 0.35).abs() < 1e-12);
     }
 
     #[test]

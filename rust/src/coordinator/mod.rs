@@ -4,9 +4,11 @@
 //! CPSAA's system contribution is the in-memory dataflow; the coordinator
 //! is the thin-but-real host layer around it (the paper's DTC + CTRL role
 //! at application level, §4.5): it packs incoming sequences into
-//! 320-embedding batches, drives the per-layer artifact executions, tracks
-//! hardware-simulated cost alongside functional results, and reports
-//! serving metrics (latency percentiles, GOPS).
+//! 320-embedding batches, drives the per-layer multi-head executions
+//! (one [`PlanSet`][crate::sparse::PlanSet] per batch, heads concurrent
+//! on disjoint tile slices), tracks hardware-simulated cost alongside
+//! functional results — per head and per batch — and reports serving
+//! metrics (latency percentiles, GOPS, head imbalance).
 
 mod batcher;
 mod metrics;
@@ -14,6 +16,6 @@ mod pipeline;
 mod service;
 
 pub use batcher::{BatchPlan, Batcher, PackedRequest};
-pub use metrics::{LatencyHistogram, ServeMetrics};
+pub use metrics::{HeadMetrics, LatencyHistogram, ServeMetrics};
 pub use pipeline::{EncoderStack, LayerOutput};
 pub use service::{InferenceResponse, Service, ServiceConfig};

@@ -1,40 +1,51 @@
 //! Encoder-stack pipeline: functional execution + hardware accounting.
 //!
-//! Each layer executes the `encoder` artifact (functional result) and, in
-//! parallel bookkeeping, feeds the batch's pruning mask into the cycle
-//! simulator so every served batch carries both the *numbers* (Z) and the
-//! *cost* the CPSAA chip would have incurred (ns, pJ) — the equivalent of
-//! the paper's per-benchmark GOPS accounting.
+//! Each layer executes one multi-head encoder step on the engine
+//! (functional result) and, in parallel bookkeeping, feeds the batch's
+//! per-head dispatch plans into the cycle simulator so every served
+//! batch carries both the *numbers* (Z) and the *cost* the CPSAA chip
+//! would have incurred (ns, pJ) — the equivalent of the paper's
+//! per-benchmark GOPS accounting.
 //!
-//! The mask's [`DispatchPlan`] is built **once per packed batch**, from
-//! the first layer's pruning output, and shared by the simulator across
-//! every layer of the stack: the ReCAM scan cost is paid once per batch
-//! instead of once per kernel per layer (the CPSAA §4.2 design point).
+//! The batch's [`PlanSet`] — one [`DispatchPlan`][crate::sparse::DispatchPlan]
+//! per head, one ReCAM scan per head mask — is taken from the **first
+//! layer's** execution and shared by the simulator across every layer of
+//! the stack: the scan cost is paid once per batch instead of once per
+//! kernel per layer (the CPSAA §4.2 design point). Heads execute
+//! concurrently on disjoint `tiles/heads` slices (§4.5), so each layer
+//! is charged max-over-heads wall time and sum-over-heads energy.
 
 use crate::util::error::Result;
 
-use crate::attention::Weights;
+use crate::attention::MultiHeadWeights;
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::runtime::Engine;
 use crate::sim::ChipSim;
-use crate::sparse::MaskMatrix;
 use crate::tensor::Matrix;
 
 /// Output of one layer over one batch.
 #[derive(Clone, Debug)]
 pub struct LayerOutput {
     pub hidden: Matrix,
+    /// Mean pruning-mask density across heads.
     pub mask_density: f64,
-    /// Simulated accelerator latency for this layer-batch (ns).
+    /// Simulated accelerator latency for this layer-batch (ns) —
+    /// max over heads (heads run concurrently on tile slices).
     pub sim_ns: f64,
-    /// Simulated accelerator energy (pJ).
+    /// Simulated accelerator energy (pJ) — sum over heads.
     pub sim_pj: f64,
+    /// Per-head latency on a `tiles/heads` chip slice (ns), head order.
+    pub head_sim_ns: Vec<f64>,
+    /// Per-head energy (pJ), head order.
+    pub head_sim_pj: Vec<f64>,
+    /// Per-head pruning-mask density, head order.
+    pub head_density: Vec<f64>,
 }
 
 /// A stack of identical encoder layers (§4.5: encoders chain serially).
 pub struct EncoderStack<'e> {
     engine: &'e Engine,
-    weights: Weights,
+    weights: MultiHeadWeights,
     sim: ChipSim,
     layers: usize,
 }
@@ -42,11 +53,16 @@ pub struct EncoderStack<'e> {
 impl<'e> EncoderStack<'e> {
     pub fn new(
         engine: &'e Engine,
-        weights: Weights,
+        weights: MultiHeadWeights,
         hw: HardwareConfig,
         model: ModelConfig,
         layers: usize,
     ) -> Self {
+        assert_eq!(
+            weights.heads(),
+            model.heads.max(1),
+            "weights fan-out must match model.heads"
+        );
         let sim = ChipSim::new(hw, model);
         Self { engine, weights, sim, layers }
     }
@@ -55,34 +71,58 @@ impl<'e> EncoderStack<'e> {
         self.layers
     }
 
+    pub fn heads(&self) -> usize {
+        self.weights.heads()
+    }
+
     /// Run one batch through every layer. Returns per-layer outputs
     /// (last entry is the final hidden state).
     ///
-    /// The dispatch plan is built once, from the first layer's pruning
-    /// mask (derived from the packed batch input), and the per-layer
-    /// hardware accounting — a pure function of (hw, model, plan) — is
+    /// The per-head plan set is taken from the first layer's execution
+    /// (derived from the packed batch input), and the per-layer hardware
+    /// accounting — a pure function of (hw, model, plan set) — is
     /// simulated once and reused for every layer: the coordinator never
-    /// re-scans the mask or re-runs the pipeline model.
+    /// re-scans a mask or re-runs the pipeline model.
     pub fn forward(&self, x: &Matrix) -> Result<Vec<LayerOutput>> {
         let mut h = x.clone();
         let mut outs = Vec::with_capacity(self.layers);
-        let mut batch_cost: Option<(f64, f64, f64)> = None; // (density, ns, pj)
+        let mut batch_cost: Option<BatchCost> = None;
         for _ in 0..self.layers {
-            let res = self.engine.execute(
-                "encoder",
-                &[&h, &self.weights.w_s, &self.weights.w_v, &self.weights.w_fc1, &self.weights.w_fc2],
-            )?;
-            let hidden = res[0].clone();
-            let (mask_density, sim_ns, sim_pj) = *batch_cost.get_or_insert_with(|| {
-                let plan = MaskMatrix::from_dense(&res[1]).plan();
-                let sim = self.sim.simulate_batch_planned(&plan);
-                (plan.density(), sim.breakdown.total_ns, sim.energy_pj)
+            let exec = self.engine.execute_encoder_heads(&h, &self.weights)?;
+            let cost = batch_cost.get_or_insert_with(|| {
+                let hs = self.sim.simulate_heads_planned(&exec.plans);
+                BatchCost {
+                    density: hs.mean_density,
+                    ns: hs.total_ns,
+                    pj: hs.energy_pj,
+                    head_ns: hs.heads.iter().map(|r| r.breakdown.total_ns).collect(),
+                    head_pj: hs.heads.iter().map(|r| r.energy_pj).collect(),
+                    head_density: exec.plans.densities(),
+                }
             });
-            outs.push(LayerOutput { hidden: hidden.clone(), mask_density, sim_ns, sim_pj });
-            h = hidden;
+            outs.push(LayerOutput {
+                hidden: exec.hidden.clone(),
+                mask_density: cost.density,
+                sim_ns: cost.ns,
+                sim_pj: cost.pj,
+                head_sim_ns: cost.head_ns.clone(),
+                head_sim_pj: cost.head_pj.clone(),
+                head_density: cost.head_density.clone(),
+            });
+            h = exec.hidden;
         }
         Ok(outs)
     }
+}
+
+/// The first layer's simulated cost, reused across the stack.
+struct BatchCost {
+    density: f64,
+    ns: f64,
+    pj: f64,
+    head_ns: Vec<f64>,
+    head_pj: Vec<f64>,
+    head_density: Vec<f64>,
 }
 
 #[cfg(test)]
@@ -112,7 +152,7 @@ mod tests {
             d_ff: cfg.d_ff,
             ..ModelConfig::default()
         };
-        let w = Weights::from_json_file(&set.dir.join("weights.json")).unwrap();
+        let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 1).unwrap();
         let stack = EncoderStack::new(&engine, w, HardwareConfig::paper(), model, 2);
         let fix = set.fixtures().unwrap();
         let outs = stack.forward(&fix.x).unwrap();
@@ -121,9 +161,45 @@ mod tests {
             assert!(o.hidden.all_finite());
             assert!(o.sim_ns > 0.0 && o.sim_pj > 0.0);
             assert!(o.mask_density > 0.0 && o.mask_density < 1.0);
+            assert_eq!(o.head_sim_ns.len(), 1);
         }
         // first layer must reproduce the encoder fixture exactly
         let want = &fix.outputs["encoder"][0];
         assert!(outs[0].hidden.rel_err(want) < 1e-4);
+    }
+
+    #[test]
+    fn forward_heads_charges_max_ns_sum_pj() {
+        // Synthesized artifacts: runs with no `make artifacts`.
+        let dir =
+            std::env::temp_dir().join(format!("cpsaa-pipe-heads-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 32,
+            d_model: 64,
+            d_k: 8,
+            d_ff: 128,
+            heads: 4,
+            ..ModelConfig::default()
+        };
+        let set = ArtifactSet::synthesize(&dir, &model, 21).unwrap();
+        let engine = Engine::load(&set).unwrap();
+        let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 4).unwrap();
+        let stack = EncoderStack::new(&engine, w, HardwareConfig::paper(), model, 2);
+        let x = crate::tensor::SeededRng::new(3).normal_matrix(32, 64, 1.0);
+        let outs = stack.forward(&x).unwrap();
+        assert_eq!(outs.len(), 2);
+        for o in &outs {
+            assert_eq!(o.head_sim_ns.len(), 4);
+            assert_eq!(o.head_sim_pj.len(), 4);
+            assert_eq!(o.head_density.len(), 4);
+            let max_ns = o.head_sim_ns.iter().copied().fold(0.0, f64::max);
+            let sum_pj: f64 = o.head_sim_pj.iter().sum();
+            assert_eq!(o.sim_ns, max_ns, "layer latency is max over heads");
+            assert!((o.sim_pj - sum_pj).abs() < 1e-6, "layer energy sums over heads");
+            let mean: f64 = o.head_density.iter().sum::<f64>() / 4.0;
+            assert!((o.mask_density - mean).abs() < 1e-12);
+            assert!(o.hidden.all_finite());
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

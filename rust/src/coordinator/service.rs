@@ -1,4 +1,4 @@
-//! Serving loop: requests in, batched encoder executions out.
+//! Serving loop: requests in, batched multi-head encoder executions out.
 //!
 //! The engine is single-threaded by design (interior `RefCell` stats;
 //! with a PJRT backend the client is `Rc`-based too) — exactly like the
@@ -7,8 +7,11 @@
 //! channel and block on a reply channel. Dynamic batching happens in the
 //! leader: it drains whatever arrived within `max_wait` (or until a batch
 //! fills), packs with [`Batcher`], executes the encoder stack once per
-//! batch — one mask scan, one [`DispatchPlan`][crate::sparse::DispatchPlan]
-//! per batch, reused across all layers — and fans results back out.
+//! batch — one [`PlanSet`][crate::sparse::PlanSet] per batch (one ReCAM
+//! scan per head mask), reused across all layers — and fans results back
+//! out. `model.heads > 1` fans each layer across concurrent per-head
+//! workers inside the stack (§4.5 tile slices); responses and metrics
+//! carry the per-head latency/energy/density lines.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -17,7 +20,7 @@ use std::time::{Duration, Instant};
 use crate::anyhow;
 use crate::util::error::{Context, Result};
 
-use crate::attention::Weights;
+use crate::attention::MultiHeadWeights;
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::runtime::{ArtifactSet, Engine};
 use crate::tensor::Matrix;
@@ -39,10 +42,29 @@ pub struct InferenceResponse {
     pub id: u64,
     pub hidden: Matrix,
     pub latency: Duration,
-    /// Mean pruning-mask density over the stack for this batch.
+    /// Mean pruning-mask density over heads for this request's batch.
     pub mask_density: f64,
-    /// Simulated accelerator time attributed to this request's batch (ns).
+    /// Simulated accelerator time attributed to this request's batch
+    /// (ns): per layer the max over concurrent heads, summed over layers.
     pub sim_ns: f64,
+    /// Simulated accelerator energy for the batch (pJ), summed over
+    /// heads and layers.
+    pub sim_pj: f64,
+    /// Per-head simulated time across the stack (ns), head order;
+    /// `sim_ns` is its max.
+    pub head_sim_ns: Vec<f64>,
+    /// Per-head simulated energy across the stack (pJ), head order;
+    /// `sim_pj` is its sum.
+    pub head_sim_pj: Vec<f64>,
+    /// Per-head pruning-mask density, head order.
+    pub head_density: Vec<f64>,
+}
+
+impl InferenceResponse {
+    /// Heads the serving stack fanned this batch across.
+    pub fn heads(&self) -> usize {
+        self.head_sim_ns.len()
+    }
 }
 
 /// Serving configuration.
@@ -116,9 +138,11 @@ fn leader_loop(
     ready: mpsc::Sender<Result<ModelConfig>>,
 ) {
     // Build everything that must live on this thread.
-    let setup = (|| -> Result<(Engine, Weights, ModelConfig)> {
+    let setup = (|| -> Result<(Engine, MultiHeadWeights, ModelConfig)> {
         let set = ArtifactSet::open(&artifact_dir)?;
         let c = &set.manifest.config;
+        // Shapes come from the artifacts; heads/layers/sharpness from the
+        // caller's overlay (the manifest predates multi-head serving).
         let model = ModelConfig {
             seq_len: c.seq_len,
             d_model: c.d_model,
@@ -129,7 +153,12 @@ fn leader_loop(
             theta: c.theta,
             ..model_overlay
         };
-        let weights = Weights::from_json_file(&set.dir.join("weights.json"))?;
+        model.validate().map_err(|e| anyhow!("invalid serving model config: {e}"))?;
+        if cfg.layers == 0 {
+            return Err(anyhow!("layers must be >= 1"));
+        }
+        let weights = MultiHeadWeights::load(&set.dir.join("weights.json"), model.heads)?;
+        weights.validate().map_err(|e| anyhow!("bad weights for {} heads: {e}", model.heads))?;
         let engine = Engine::load(&set)?;
         Ok((engine, weights, model))
     })();
@@ -186,12 +215,29 @@ fn leader_loop(
                     let sim_pj: f64 = outs.iter().map(|o| o.sim_pj).sum();
                     let density =
                         outs.iter().map(|o| o.mask_density).sum::<f64>() / outs.len() as f64;
+                    // Per-head lines across the whole stack, summed per
+                    // layer exactly like sim_ns so sim_ns == max(head_ns)
+                    // holds to the bit (sim_pj == Σ head_pj up to
+                    // summation-order rounding).
+                    let heads_n = outs[0].head_sim_ns.len();
+                    let mut head_ns = vec![0.0f64; heads_n];
+                    let mut head_pj = vec![0.0f64; heads_n];
+                    for o in &outs {
+                        for (acc, v) in head_ns.iter_mut().zip(&o.head_sim_ns) {
+                            *acc += v;
+                        }
+                        for (acc, v) in head_pj.iter_mut().zip(&o.head_sim_pj) {
+                            *acc += v;
+                        }
+                    }
+                    let head_density = outs[0].head_density.clone();
                     let mut m = metrics.lock().unwrap();
                     m.batches += 1;
                     m.used_rows += plan.used_rows as u64;
                     m.padded_rows += (model.seq_len - plan.used_rows) as u64;
                     m.sim_ns += sim_ns;
                     m.sim_pj += sim_pj;
+                    m.record_heads(&head_ns, &head_pj, &head_density);
                     for entry in &plan.entries {
                         let hidden = plan.extract(&last.hidden, entry);
                         let latency = arrival.elapsed();
@@ -204,6 +250,10 @@ fn leader_loop(
                                 latency,
                                 mask_density: density,
                                 sim_ns,
+                                sim_pj,
+                                head_sim_ns: head_ns.clone(),
+                                head_sim_pj: head_pj.clone(),
+                                head_density: head_density.clone(),
                             }));
                         }
                     }

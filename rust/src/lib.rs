@@ -23,7 +23,9 @@
 //! The hot-path spine of the crate is [`sparse::DispatchPlan`]: one ReCAM
 //! scan per pruning mask, whose topology and statistics drive the
 //! attention kernels, every simulator engine, and the coordinator's
-//! per-batch accounting.
+//! per-batch accounting. Multi-head batches scale that spine to a
+//! [`sparse::PlanSet`] — one plan per head, heads executed and costed
+//! concurrently on disjoint crossbar-tile slices (§4.5).
 //!
 //! See `rust/DESIGN.md` for the layer contracts, the `DispatchPlan`
 //! dataflow, and the experiment index.

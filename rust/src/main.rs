@@ -36,7 +36,9 @@ COMMANDS:
                                     cycle-simulate GLUE/SQuAD traces (default: all)
   bench-figure ID [--out-dir DIR]   regenerate a paper figure/table
                                     (fig3, table2, fig11..fig18, fig19a/b, fig20a/b, all)
-  serve [--requests N] [--layers N] demo serving loop over the artifact engine
+  serve [--requests N] [--layers N] [--heads N]
+                                    demo serving loop over the artifact engine
+                                    (multi-head fan-out across tile slices)
   inference [DATASET] [--layers N] [--heads N]
                                     application-level sim: encoders = attention
                                     + FC (+ DTC hops) + endurance estimate
@@ -132,7 +134,11 @@ fn main() -> Result<()> {
                 .map(|s| s.parse::<usize>())
                 .transpose()?
                 .unwrap_or(2);
-            serve(&cfg, &args.artifacts, requests, layers)
+            let heads = take_flag(&mut cmd, "--heads")
+                .map(|s| s.parse::<usize>())
+                .transpose()?
+                .unwrap_or(cfg.model.heads);
+            serve(&cfg, &args.artifacts, requests, layers, heads)
         }
         "inference" => {
             let layers = take_flag(&mut cmd, "--layers")
@@ -237,7 +243,13 @@ fn bench_figure(cfg: &SystemConfig, id: &str, out_dir: Option<&std::path::Path>)
     Ok(())
 }
 
-fn serve(cfg: &SystemConfig, artifacts: &PathBuf, requests: usize, layers: usize) -> Result<()> {
+fn serve(
+    cfg: &SystemConfig,
+    artifacts: &PathBuf,
+    requests: usize,
+    layers: usize,
+    heads: usize,
+) -> Result<()> {
     // Probe the manifest for the artifact shapes before spawning.
     let set = ArtifactSet::open(artifacts)?;
     let d_model = set.manifest.config.d_model;
@@ -247,10 +259,10 @@ fn serve(cfg: &SystemConfig, artifacts: &PathBuf, requests: usize, layers: usize
     let svc = Service::start(
         artifacts.clone(),
         cfg.hardware.clone(),
-        cfg.model.clone(),
+        ModelConfig { heads, ..cfg.model.clone() },
         ServiceConfig { layers, ..Default::default() },
     )?;
-    println!("service up (artifact shape {seq_len}x{d_model}, {layers} layers)");
+    println!("service up (artifact shape {seq_len}x{d_model}, {layers} layers, {heads} heads)");
 
     let start = std::time::Instant::now();
     let mut handles = Vec::new();
@@ -288,6 +300,17 @@ fn serve(cfg: &SystemConfig, artifacts: &PathBuf, requests: usize, layers: usize
         m.sim_ns / 1e6,
         m.sim_pj * 1e-9
     );
+    if m.heads.len() > 1 {
+        let dens = m.head_mean_densities();
+        for (h, hm) in m.heads.iter().enumerate() {
+            println!(
+                "  head {h}: {:.3} ms, {:.3} mJ, mean density {:.3}",
+                hm.sim_ns / 1e6,
+                hm.sim_pj * 1e-9,
+                dens[h]
+            );
+        }
+    }
     Ok(())
 }
 
@@ -298,6 +321,7 @@ fn inference(cfg: &SystemConfig, dataset: &str, layers: usize, heads: usize) -> 
         .dataset(dataset)
         .ok_or_else(|| anyhow!("unknown dataset {dataset}"))?;
     let model = cpsaa::config::ModelConfig { layers, heads, ..cfg.model.clone() };
+    model.validate().map_err(|e| anyhow!(e))?;
     let gen = TraceGenerator::new(model.clone(), cfg.workload.seed).with_max_batches(1);
     let trace = gen.generate(ds);
     let masks: Vec<_> = trace.batches.iter().map(|b| b.mask.clone()).collect();

@@ -7,6 +7,8 @@ use crate::anyhow;
 use crate::util::error::{Context, Result};
 
 use crate::attention::weights::json_matrix;
+use crate::attention::MultiHeadWeights;
+use crate::config::ModelConfig;
 use crate::tensor::Matrix;
 use crate::util::json::Json;
 
@@ -109,6 +111,64 @@ impl ArtifactSet {
     pub fn fixtures(&self) -> Result<Fixtures> {
         Fixtures::open(&self.dir.join("fixtures.json"))
     }
+
+    /// Write a complete artifact directory for the native interpreter —
+    /// manifest, synthetic weights (per-head when `model.heads > 1`),
+    /// and HLO placeholder files — so the serving stack and its tests
+    /// run without the python AOT step. The native engine executes from
+    /// the manifest alone; the placeholders only satisfy the
+    /// file-existence check that real AOT artifacts also pass.
+    pub fn synthesize(dir: &Path, model: &ModelConfig, seed: u64) -> Result<ArtifactSet> {
+        model.validate().map_err(|e| anyhow!(e))?;
+        // Serving artifacts fan V across heads, so the serving-side
+        // divisibility requirement applies here (the sim alone doesn't
+        // need it, which is why ModelConfig::validate doesn't check).
+        if model.d_model % model.heads.max(1) != 0 {
+            return Err(anyhow!(
+                "heads {} does not divide d_model {} (required to fan the serving weights)",
+                model.heads,
+                model.d_model
+            ));
+        }
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let (n, d, dk, dff) = (model.seq_len, model.d_model, model.d_k, model.d_ff);
+        let graphs: [(&str, String); 5] = [
+            ("mask_gen", format!("[[{n}, {d}], [{d}, {d}]]")),
+            ("attention", format!("[[{n}, {d}], [{d}, {d}], [{d}, {d}], [{n}, {n}]]")),
+            ("sparse_attention", format!("[[{n}, {d}], [{d}, {d}], [{d}, {d}]]")),
+            ("dense_attention", format!("[[{n}, {d}], [{d}, {d}], [{d}, {d}]]")),
+            (
+                "encoder",
+                format!("[[{n}, {d}], [{d}, {d}], [{d}, {d}], [{d}, {dff}], [{dff}, {d}]]"),
+            ),
+        ];
+        let mut manifest = String::from("{\n  \"config\": {");
+        manifest.push_str(&format!(
+            "\"seq_len\": {n}, \"d_model\": {d}, \"d_k\": {dk}, \"d_ff\": {dff}, \
+             \"gamma\": {:?}, \"quant_bits\": {}, \"theta\": {:?}, \"block\": 32, \
+             \"seed\": {seed}}},\n  \"artifacts\": {{\n",
+            model.gamma, model.quant_bits, model.theta
+        ));
+        for (i, (name, params)) in graphs.iter().enumerate() {
+            let file = format!("{name}.hlo.txt");
+            std::fs::write(
+                dir.join(&file),
+                "; synthesized placeholder — the native interpreter executes from the manifest\n",
+            )
+            .with_context(|| format!("writing {file}"))?;
+            manifest.push_str(&format!(
+                "    \"{name}\": {{\"file\": \"{file}\", \"params\": {params}}}{}\n",
+                if i + 1 < graphs.len() { "," } else { "" }
+            ));
+        }
+        manifest.push_str("  }\n}\n");
+        std::fs::write(dir.join("manifest.json"), manifest).context("writing manifest.json")?;
+        let weights = MultiHeadWeights::synthetic(model, seed);
+        std::fs::write(dir.join("weights.json"), weights.to_json_string())
+            .context("writing weights.json")?;
+        Self::open(dir)
+    }
 }
 
 /// `artifacts/fixtures.json` — the python-side sample input and expected
@@ -191,5 +251,33 @@ mod tests {
     #[test]
     fn missing_dir_errors() {
         assert!(ArtifactSet::open(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn synthesize_roundtrips_through_open_and_engine() {
+        use crate::attention::MultiHeadWeights;
+        use crate::config::ModelConfig;
+        let dir = std::env::temp_dir().join(format!("cpsaa-synth-art-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 16,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            heads: 4,
+            ..ModelConfig::default()
+        };
+        let set = ArtifactSet::synthesize(&dir, &model, 5).unwrap();
+        assert_eq!(set.manifest.config.seq_len, 16);
+        assert_eq!(set.manifest.config.d_model, 32);
+        assert_eq!(set.names().len(), 5);
+        // the written weights load back with the synthesized head count
+        let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 4).unwrap();
+        w.validate().unwrap();
+        assert_eq!(w.heads(), 4);
+        assert_eq!(w.heads[0].w_s, MultiHeadWeights::synthetic(&model, 5).heads[0].w_s);
+        // and the native engine loads the set
+        let engine = crate::runtime::Engine::load(&set).unwrap();
+        assert_eq!(engine.model().seq_len, 16);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -12,9 +12,9 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::anyhow;
-use crate::attention::{self, Weights};
+use crate::attention::{self, MultiHeadWeights, Weights};
 use crate::config::ModelConfig;
-use crate::sparse::MaskMatrix;
+use crate::sparse::{MaskMatrix, PlanSet};
 use crate::tensor::Matrix;
 use crate::util::error::Result;
 
@@ -23,6 +23,15 @@ use super::artifact::ArtifactSet;
 /// Graph names the native interpreter implements.
 const KNOWN_GRAPHS: [&str; 5] =
     ["mask_gen", "attention", "sparse_attention", "dense_attention", "encoder"];
+
+/// One multi-head encoder-layer execution: the functional hidden state
+/// plus the per-head dispatch plans (one ReCAM scan per head mask) that
+/// drove the kernels — the coordinator reuses the first layer's set for
+/// the batch's hardware accounting instead of re-scanning.
+pub struct EncoderHeadsExec {
+    pub hidden: Matrix,
+    pub plans: PlanSet,
+}
 
 /// Execution statistics of one engine lifetime.
 #[derive(Clone, Copy, Debug, Default)]
@@ -107,6 +116,41 @@ impl Engine {
         s.executions += 1;
         s.total_exec_ns += start.elapsed().as_nanos() as u64;
         Ok(out)
+    }
+
+    /// Execute one encoder layer with multi-head fan-out: per-head
+    /// pruning masks (concurrent, §4.5), one [`PlanSet`] scan, per-head
+    /// attention kernels on the plan set, concat + optional W_O + FC
+    /// tail. This is the native-interpreter generalization of the
+    /// `encoder` graph — with one head it computes the same bits; a
+    /// future PJRT backend lowers it as `heads` parallel `encoder`
+    /// slices pinned by the same fixtures.
+    pub fn execute_encoder_heads(
+        &self,
+        x: &Matrix,
+        w: &MultiHeadWeights,
+    ) -> Result<EncoderHeadsExec> {
+        let cfg = &self.model;
+        if x.shape() != (cfg.seq_len, cfg.d_model) {
+            return Err(anyhow!(
+                "encoder input shape {:?} != ({}, {})",
+                x.shape(),
+                cfg.seq_len,
+                cfg.d_model
+            ));
+        }
+        w.validate().map_err(|e| anyhow!("bad multi-head weights: {e}"))?;
+        if w.d_model() != cfg.d_model {
+            return Err(anyhow!("weights d_model {} != artifact {}", w.d_model(), cfg.d_model));
+        }
+        let start = Instant::now();
+        let masks = attention::generate_head_masks(x, w, cfg);
+        let plans = PlanSet::build(&masks);
+        let hidden = attention::ops::encoder_layer_heads(x, w, &plans, cfg);
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.total_exec_ns += start.elapsed().as_nanos() as u64;
+        Ok(EncoderHeadsExec { hidden, plans })
     }
 
     fn run_graph(&self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
@@ -197,6 +241,49 @@ mod tests {
         assert_eq!(out.len(), 2);
         let golden_z = attention::cpsaa_attention(&x, &w.w_s, &w.w_v, &golden_mask, &cfg);
         assert!(out[0].rel_err(&golden_z) < 1e-5);
+    }
+
+    #[test]
+    fn encoder_heads_one_head_matches_encoder_graph() {
+        let engine = Engine::load(&synthetic_set()).unwrap();
+        let cfg = small_model();
+        let w = Weights::synthetic(&cfg, 3);
+        let x = crate::tensor::SeededRng::new(11).normal_matrix(16, 32, 1.0);
+        let graph = engine
+            .execute("encoder", &[&x, &w.w_s, &w.w_v, &w.w_fc1, &w.w_fc2])
+            .unwrap();
+        let mh = MultiHeadWeights::from_single(&w);
+        let fanout = engine.execute_encoder_heads(&x, &mh).unwrap();
+        assert_eq!(fanout.hidden, graph[0], "1-head fan-out != encoder graph");
+        assert_eq!(fanout.plans.heads(), 1);
+        assert_eq!(
+            fanout.plans.plan(0).nnz(),
+            MaskMatrix::from_dense(&graph[1]).nnz(),
+            "plan must describe the same pruning mask"
+        );
+    }
+
+    #[test]
+    fn encoder_heads_validates_inputs() {
+        let engine = Engine::load(&synthetic_set()).unwrap();
+        let cfg = small_model();
+        let mh = MultiHeadWeights::synthetic(&ModelConfig { heads: 4, ..cfg.clone() }, 0);
+        // wrong input shape
+        assert!(engine.execute_encoder_heads(&Matrix::zeros(3, 3), &mh).is_err());
+        // wrong d_model
+        let other = MultiHeadWeights::synthetic(
+            &ModelConfig { d_model: 64, d_k: 8, heads: 4, ..ModelConfig::default() },
+            0,
+        );
+        assert!(engine.execute_encoder_heads(&Matrix::zeros(16, 32), &other).is_err());
+        // valid 4-head execution runs and counts stats
+        let x = crate::tensor::SeededRng::new(2).normal_matrix(16, 32, 1.0);
+        let before = engine.stats().executions;
+        let out = engine.execute_encoder_heads(&x, &mh).unwrap();
+        assert_eq!(out.hidden.shape(), (16, 32));
+        assert!(out.hidden.all_finite());
+        assert_eq!(out.plans.heads(), 4);
+        assert_eq!(engine.stats().executions, before + 1);
     }
 
     #[test]

@@ -11,4 +11,4 @@ mod artifact;
 mod engine;
 
 pub use artifact::{ArtifactSet, Fixtures, Manifest};
-pub use engine::{Engine, EngineStats};
+pub use engine::{EncoderHeadsExec, Engine, EngineStats};

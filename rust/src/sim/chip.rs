@@ -1,7 +1,7 @@
 //! Chip-level simulation: batches → traces → GOPS / GOPS/W.
 
 use crate::config::{HardwareConfig, ModelConfig};
-use crate::sparse::{DispatchPlan, MaskMatrix};
+use crate::sparse::{DispatchPlan, MaskMatrix, PlanSet};
 use crate::workload::WorkloadTrace;
 
 use super::area::AreaModel;
@@ -17,6 +17,30 @@ pub struct SimReport {
     pub gops: f64,
     /// Energy efficiency (GOPS/W) using dynamic energy + static power.
     pub gops_per_watt: f64,
+}
+
+/// Multi-head cost attribution of one batch over a shared [`PlanSet`]
+/// (§4.5): each head runs on a disjoint `tiles/heads` slice of the chip,
+/// so wall time is the slowest head and energy is the sum over heads.
+#[derive(Clone, Debug)]
+pub struct HeadsSimReport {
+    /// One per-slice report per head, head order.
+    pub heads: Vec<SimReport>,
+    /// Wall-clock of the batch: max over heads (heads run concurrently).
+    pub total_ns: f64,
+    /// Energy of the batch: sum over heads.
+    pub energy_pj: f64,
+    /// Mean mask density across heads.
+    pub mean_density: f64,
+}
+
+/// Fold per-head slice reports into the batch view: max-ns, sum-pJ.
+fn aggregate_heads(reports: Vec<SimReport>) -> HeadsSimReport {
+    let total_ns = reports.iter().map(|r| r.breakdown.total_ns).fold(0.0, f64::max);
+    let energy_pj: f64 = reports.iter().map(|r| r.energy_pj).sum();
+    let mean_density =
+        reports.iter().map(|r| r.mask_density).sum::<f64>() / reports.len().max(1) as f64;
+    HeadsSimReport { heads: reports, total_ns, energy_pj, mean_density }
 }
 
 /// Aggregate over a whole dataset trace.
@@ -69,6 +93,37 @@ impl ChipSim {
     pub fn simulate_batch_planned(&self, plan: &DispatchPlan) -> SimReport {
         let r = pipeline::simulate_batch_planned(&self.hw, &self.model, plan, self.mode);
         self.report_from(r)
+    }
+
+    /// Simulate one batch with multi-head fan-out over a shared
+    /// [`PlanSet`]: each head's plan is charged against a `tiles/heads`
+    /// chip slice; wall time is max-over-heads, energy sum-over-heads
+    /// (matching `sim::application`'s head accounting). One head over
+    /// the full chip degenerates to [`ChipSim::simulate_batch_planned`].
+    pub fn simulate_heads_planned(&self, plans: &PlanSet) -> HeadsSimReport {
+        let head_sim = self.head_slice_sim(plans.heads());
+        let reports: Vec<SimReport> =
+            plans.plans().iter().map(|p| head_sim.simulate_batch_planned(p)).collect();
+        aggregate_heads(reports)
+    }
+
+    /// [`ChipSim::simulate_heads_planned`] for `heads` heads that all
+    /// share one plan (e.g. the application sim replicating a layer
+    /// mask): the simulation is a pure function of the plan, so the
+    /// `tiles/heads` slice is simulated once and the report replicated.
+    pub fn simulate_heads_shared(&self, plan: &DispatchPlan, heads: usize) -> HeadsSimReport {
+        let heads = heads.max(1);
+        let head_sim = self.head_slice_sim(heads);
+        aggregate_heads(vec![head_sim.simulate_batch_planned(plan); heads])
+    }
+
+    /// A simulator for one head's `tiles/heads` chip slice.
+    fn head_slice_sim(&self, heads: usize) -> ChipSim {
+        let head_hw =
+            HardwareConfig { tiles: (self.hw.tiles / heads.max(1)).max(1), ..self.hw.clone() };
+        let mut head_sim = ChipSim::new(head_hw, self.model.clone());
+        head_sim.mode = self.mode;
+        head_sim
     }
 
     fn report_from(&self, r: PipelineReport) -> SimReport {
@@ -165,6 +220,46 @@ mod tests {
         let s = sim().simulate_batch(&mask(0.1));
         let d = sim().dense().simulate_batch(&mask(0.1));
         assert!(d.gops < s.gops);
+    }
+
+    #[test]
+    fn heads_report_is_max_ns_sum_pj() {
+        let mut rng = SeededRng::new(4);
+        let masks: Vec<MaskMatrix> = (0..4)
+            .map(|h| MaskMatrix::from_dense(&rng.mask_matrix(320, 320, 0.05 + 0.1 * h as f64)))
+            .collect();
+        let plans = PlanSet::build(&masks);
+        let r = sim().simulate_heads_planned(&plans);
+        assert_eq!(r.heads.len(), 4);
+        let max_ns = r.heads.iter().map(|h| h.breakdown.total_ns).fold(0.0, f64::max);
+        let sum_pj: f64 = r.heads.iter().map(|h| h.energy_pj).sum();
+        assert_eq!(r.total_ns, max_ns, "wall time is the slowest head");
+        assert!((r.energy_pj - sum_pj).abs() < 1e-6, "energy sums over heads");
+        // distinct densities ⇒ per-head costs genuinely differ
+        let fastest = r.heads.iter().map(|h| h.breakdown.total_ns).fold(f64::INFINITY, f64::min);
+        assert!(max_ns > fastest, "heads with different masks cost differently");
+    }
+
+    #[test]
+    fn one_head_set_matches_planned_batch() {
+        let m = mask(0.1);
+        let plan = m.plan();
+        let single = sim().simulate_batch_planned(&plan);
+        let set = sim().simulate_heads_planned(&PlanSet::single(plan));
+        assert_eq!(set.heads.len(), 1);
+        assert_eq!(set.total_ns, single.breakdown.total_ns);
+        assert_eq!(set.energy_pj, single.energy_pj);
+    }
+
+    #[test]
+    fn shared_plan_heads_match_replicated_set() {
+        let plan = mask(0.1).plan();
+        let a = sim().simulate_heads_shared(&plan, 4);
+        let b = sim().simulate_heads_planned(&PlanSet::from_plans(vec![plan; 4]));
+        assert_eq!(a.heads.len(), 4);
+        assert_eq!(a.total_ns, b.total_ns);
+        assert_eq!(a.energy_pj, b.energy_pj);
+        assert_eq!(a.mean_density, b.mean_density);
     }
 
     #[test]

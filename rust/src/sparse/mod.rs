@@ -9,12 +9,17 @@
 //! per-column queue depths, 32×32 tile occupancy, per-row nnz) that every
 //! kernel, simulator engine, and the coordinator consume instead of
 //! re-walking the mask. [`CsrMatrix`] carries the sparse score values over
-//! the plan's topology.
+//! the plan's topology. Multi-head batches generalize the plan to a
+//! [`PlanSet`] — one scan per head mask, heads scanned concurrently —
+//! consumed the same way (per-head kernels, per-head tile-slice costing,
+//! per-head serving metrics).
 
 mod csr;
 mod mask;
 mod plan;
+mod planset;
 
 pub use csr::CsrMatrix;
 pub use mask::{BlockCounts, MaskMatrix};
 pub use plan::{DispatchPlan, DISPATCH_TILE};
+pub use planset::PlanSet;

@@ -1,0 +1,179 @@
+//! `PlanSet` — one [`DispatchPlan`] per attention head.
+//!
+//! CPSAA runs attention heads concurrently on disjoint crossbar-tile
+//! slices (§4.5): each head owns `tiles/heads` of the chip, and each
+//! head's pruning mask drives its *own* ReCAM scheduler. The plan set is
+//! the multi-head generalization of the single plan: one scan per head
+//! mask, performed once per packed batch, shared by the attention
+//! kernels (per-head SDDMM/SpMM dispatch), the simulator (per-head cost
+//! attribution on a tile slice), and the coordinator (per-head metrics).
+//!
+//! Like the single-plan path, no consumer re-walks a mask: everything
+//! downstream reads the per-head plans built here.
+
+use crate::util::par::par_map;
+
+use super::mask::MaskMatrix;
+use super::plan::DispatchPlan;
+
+/// Masks below this cell count scan faster serially than a thread spawn.
+const PARALLEL_SCAN_CELLS: usize = 1 << 12;
+
+/// Per-head dispatch plans of one packed batch (index = head).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanSet {
+    plans: Vec<DispatchPlan>,
+}
+
+impl PlanSet {
+    /// One ReCAM scan per head mask. Head scans are independent (each
+    /// head's ReCAM slice searches its own mask), so large masks scan in
+    /// parallel via `std::thread::scope`.
+    pub fn build(masks: &[MaskMatrix]) -> Self {
+        assert!(!masks.is_empty(), "PlanSet needs at least one head mask");
+        let shape = (masks[0].rows(), masks[0].cols());
+        for m in masks {
+            assert_eq!((m.rows(), m.cols()), shape, "head masks must share one shape");
+        }
+        // Identical head masks (the replicated single-head fan-out) need
+        // one scan, not `heads` — the bit-packed equality probe is
+        // O(cells/64) against O(nnz) scans.
+        if masks.len() > 1 && masks.iter().skip(1).all(|m| m == &masks[0]) {
+            return Self { plans: vec![masks[0].plan(); masks.len()] };
+        }
+        let plans = if shape.0 * shape.1 >= PARALLEL_SCAN_CELLS {
+            par_map(masks, |m| m.plan())
+        } else {
+            masks.iter().map(|m| m.plan()).collect()
+        };
+        Self { plans }
+    }
+
+    /// Adopt prebuilt plans (e.g. one plan replicated across heads that
+    /// share a mask — the application-level sim's shortcut).
+    pub fn from_plans(plans: Vec<DispatchPlan>) -> Self {
+        assert!(!plans.is_empty(), "PlanSet needs at least one plan");
+        Self { plans }
+    }
+
+    /// A single-head set.
+    pub fn single(plan: DispatchPlan) -> Self {
+        Self { plans: vec![plan] }
+    }
+
+    /// Number of heads.
+    pub fn heads(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Head `h`'s plan.
+    pub fn plan(&self, h: usize) -> &DispatchPlan {
+        &self.plans[h]
+    }
+
+    /// All plans, head order.
+    pub fn plans(&self) -> &[DispatchPlan] {
+        &self.plans
+    }
+
+    /// Masked coordinates summed over heads.
+    pub fn total_nnz(&self) -> usize {
+        self.plans.iter().map(DispatchPlan::nnz).sum()
+    }
+
+    /// Per-head densities, head order.
+    pub fn densities(&self) -> Vec<f64> {
+        self.plans.iter().map(DispatchPlan::density).collect()
+    }
+
+    /// Mean density across heads.
+    pub fn mean_density(&self) -> f64 {
+        self.densities().iter().sum::<f64>() / self.plans.len() as f64
+    }
+
+    /// Deepest single-column queue over any head — the serialization
+    /// bound of the slowest head's SDDMM dispatch.
+    pub fn max_col_queue(&self) -> u64 {
+        self.plans.iter().map(DispatchPlan::max_col_queue).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    fn masks(heads: usize, n: usize, seed: u64) -> Vec<MaskMatrix> {
+        let mut rng = SeededRng::new(seed);
+        (0..heads)
+            .map(|h| {
+                let density = 0.05 + 0.1 * h as f64;
+                MaskMatrix::from_dense(&rng.mask_matrix(n, n, density))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn build_matches_per_mask_plans() {
+        let ms = masks(4, 96, 1);
+        let set = PlanSet::build(&ms);
+        assert_eq!(set.heads(), 4);
+        for (h, m) in ms.iter().enumerate() {
+            assert_eq!(set.plan(h), &m.plan(), "head {h} diverged");
+        }
+        assert_eq!(set.total_nnz(), ms.iter().map(MaskMatrix::nnz).sum::<usize>());
+    }
+
+    #[test]
+    fn densities_in_head_order() {
+        let ms = masks(3, 64, 2);
+        let set = PlanSet::build(&ms);
+        let d = set.densities();
+        assert_eq!(d.len(), 3);
+        for (h, m) in ms.iter().enumerate() {
+            assert!((d[h] - m.density()).abs() < 1e-12, "head {h}");
+        }
+        let mean = set.mean_density();
+        assert!((mean - d.iter().sum::<f64>() / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_and_from_plans() {
+        let m = masks(1, 32, 3).remove(0);
+        let set = PlanSet::single(m.plan());
+        assert_eq!(set.heads(), 1);
+        assert_eq!(set.plan(0).nnz(), m.nnz());
+        let rep = PlanSet::from_plans(vec![m.plan(); 8]);
+        assert_eq!(rep.heads(), 8);
+        assert_eq!(rep.total_nnz(), 8 * m.nnz());
+        assert_eq!(rep.max_col_queue(), m.plan().max_col_queue());
+    }
+
+    #[test]
+    #[should_panic(expected = "share one shape")]
+    fn shape_mismatch_rejected() {
+        let a = MaskMatrix::zeros(8, 8);
+        let b = MaskMatrix::zeros(8, 9);
+        PlanSet::build(&[a, b]);
+    }
+
+    #[test]
+    fn identical_masks_share_one_scan() {
+        let m = masks(1, 64, 5).remove(0);
+        let set = PlanSet::build(&vec![m.clone(); 4]);
+        assert_eq!(set.heads(), 4);
+        let want = m.plan();
+        for h in 0..4 {
+            assert_eq!(set.plan(h), &want, "head {h}");
+        }
+    }
+
+    #[test]
+    fn small_masks_scan_serially_same_result() {
+        // Below the parallel threshold the serial path must agree.
+        let ms = masks(2, 16, 4);
+        let set = PlanSet::build(&ms);
+        assert_eq!(set.plan(0), &ms[0].plan());
+        assert_eq!(set.plan(1), &ms[1].plan());
+    }
+}

@@ -130,6 +130,42 @@ impl Matrix {
         out
     }
 
+    /// Columns `[lo, hi)` as a new matrix (the per-head V slice).
+    pub fn col_block(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo < hi && hi <= self.cols, "col_block {lo}..{hi} of {} cols", self.cols);
+        let w = hi - lo;
+        let mut out = Matrix::zeros(self.rows, w);
+        for i in 0..self.rows {
+            out.data[i * w..(i + 1) * w].copy_from_slice(&self.row(i)[lo..hi]);
+        }
+        out
+    }
+
+    /// Rows `[lo, hi)` as a new matrix (contiguous copy).
+    pub fn row_block(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo < hi && hi <= self.rows, "row_block {lo}..{hi} of {} rows", self.rows);
+        Matrix::from_vec(hi - lo, self.cols, self.data[lo * self.cols..hi * self.cols].to_vec())
+    }
+
+    /// Horizontal concatenation, left to right (the multi-head output
+    /// concat); panics on row-count mismatch or an empty block list.
+    pub fn concat_cols(blocks: &[&Matrix]) -> Matrix {
+        assert!(!blocks.is_empty(), "concat of no blocks");
+        let rows = blocks[0].rows;
+        let cols: usize = blocks.iter().map(|b| b.cols).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        let mut off = 0;
+        for b in blocks {
+            assert_eq!(b.rows, rows, "concat row mismatch");
+            for i in 0..rows {
+                let dst = i * cols + off;
+                out.data[dst..dst + b.cols].copy_from_slice(b.row(i));
+            }
+            off += b.cols;
+        }
+        out
+    }
+
     /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
@@ -256,6 +292,19 @@ mod tests {
         let lhs = a.matmul(&b).transpose();
         let rhs = b.transpose().matmul(&a.transpose());
         assert!(lhs.max_abs_diff(&rhs) < 1e-6);
+    }
+
+    #[test]
+    fn blocks_and_concat_roundtrip() {
+        let m = Matrix::from_vec(2, 4, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let left = m.col_block(0, 2);
+        let right = m.col_block(2, 4);
+        assert_eq!(left.data(), &[1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(right.data(), &[3.0, 4.0, 7.0, 8.0]);
+        assert_eq!(Matrix::concat_cols(&[&left, &right]), m);
+        let top = m.row_block(0, 1);
+        assert_eq!(top.data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.row_block(1, 2).data(), &[5.0, 6.0, 7.0, 8.0]);
     }
 
     #[test]

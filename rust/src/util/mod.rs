@@ -14,9 +14,12 @@
 //!   dump under `target/bench/`).
 //! * [`prop`] — a tiny property-testing driver over the deterministic RNG
 //!   (N random cases + failure seed reporting).
+//! * [`par`] — scoped parallel map (one worker per item) shared by the
+//!   per-head fan-out paths.
 
 pub mod bench;
 pub mod error;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod tomlmini;

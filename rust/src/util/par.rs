@@ -1,0 +1,53 @@
+//! Scoped parallel map — the one fan-out primitive the head-parallel
+//! paths share (per-head mask scans, per-head pruning, per-head
+//! attention kernels).
+//!
+//! One scoped worker per item, order-preserving. A single item runs on
+//! the calling thread, so 1-item maps are bit- and schedule-identical
+//! to a plain serial call — the invariant the heads = 1 equivalence
+//! tests rely on. Item counts here are head counts (≤ ~16), so one
+//! thread per item is the right granularity; the kernels inside each
+//! worker do their own nnz-balanced splitting.
+
+/// Map `f` over `items` with one scoped thread per item (serial when
+/// `items.len() <= 1`), preserving order. Propagates worker panics.
+pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    if items.len() <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = items.iter().map(|it| scope.spawn(move || f(it))).collect();
+        handles.into_iter().map(|h| h.join().expect("par_map worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_values() {
+        let items: Vec<usize> = (0..8).collect();
+        let out = par_map(&items, |&x| x * x);
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+    }
+
+    #[test]
+    fn single_item_runs_serially() {
+        let out = par_map(&[7usize], |&x| x + 1);
+        assert_eq!(out, vec![8]);
+    }
+
+    #[test]
+    fn empty_is_empty() {
+        let items: [u32; 0] = [];
+        assert!(par_map(&items, |&x| x).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "par_map worker panicked")]
+    fn worker_panic_propagates() {
+        par_map(&[1, 2], |_| panic!("boom"));
+    }
+}

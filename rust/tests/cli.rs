@@ -83,6 +83,108 @@ fn config_file_round_trips_through_cli() {
     assert!(text.contains("32x32 crossbars"), "{text}");
 }
 
+/// Synthesize a small multi-head artifact directory for serve tests.
+fn synth_artifacts(tag: &str, heads: usize) -> std::path::PathBuf {
+    use cpsaa::config::ModelConfig;
+    use cpsaa::runtime::ArtifactSet;
+    let dir = std::env::temp_dir().join(format!("cpsaa-cli-{tag}-{}", std::process::id()));
+    let model = ModelConfig {
+        seq_len: 32,
+        d_model: 64,
+        d_k: 8,
+        d_ff: 128,
+        heads,
+        ..ModelConfig::default()
+    };
+    ArtifactSet::synthesize(&dir, &model, 3).unwrap();
+    dir
+}
+
+#[test]
+fn serve_heads_from_config_file_end_to_end() {
+    // Config-loader path: [model] heads flows from the TOML through
+    // SystemConfig into the served stack.
+    let art = synth_artifacts("cfg", 2);
+    let cfg_path = std::env::temp_dir()
+        .join(format!("cpsaa-cli-heads-{}.toml", std::process::id()));
+    std::fs::write(
+        &cfg_path,
+        "[model]\nseq_len = 32\nd_model = 64\nd_k = 8\nd_ff = 128\nheads = 2\n",
+    )
+    .unwrap();
+    let (ok, text) = cpsaa(&[
+        "--config",
+        cfg_path.to_str().unwrap(),
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "2",
+        "--layers",
+        "1",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("2 heads"), "{text}");
+    assert!(text.contains("served 2 requests"), "{text}");
+    std::fs::remove_file(&cfg_path).ok();
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn serve_heads_flag_overrides_config() {
+    let art = synth_artifacts("flag", 8);
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "2",
+        "--layers",
+        "1",
+        "--heads",
+        "8",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("8 heads"), "{text}");
+    // per-head accounting is printed for multi-head serving
+    assert!(text.contains("head 0:"), "{text}");
+    assert!(text.contains("head 7:"), "{text}");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn serve_heads_invalid_value_errors() {
+    let art = synth_artifacts("bad", 2);
+    // heads = 0 is rejected by config validation before serving starts
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "1",
+        "--heads",
+        "0",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("heads"), "{text}");
+    // heads = 5 does not divide d_model = 64
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "1",
+        "--heads",
+        "5",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("divide"), "{text}");
+    // non-numeric values fail flag parsing
+    let (ok, text) = cpsaa(&["--artifacts", art.to_str().unwrap(), "serve", "--heads", "many"]);
+    assert!(!ok, "{text}");
+    std::fs::remove_dir_all(&art).ok();
+}
+
 #[test]
 fn check_verifies_artifacts_when_present() {
     let has_artifacts =

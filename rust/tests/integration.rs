@@ -3,14 +3,15 @@
 //! they are skipped (with a notice) when `make artifacts` has not run.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
-use cpsaa::attention::{self, Weights};
+use cpsaa::attention::{self, MultiHeadWeights, Weights};
 use cpsaa::config::{HardwareConfig, ModelConfig, SystemConfig};
 use cpsaa::coordinator::{EncoderStack, Service, ServiceConfig};
 use cpsaa::runtime::{ArtifactSet, Engine};
 use cpsaa::sim::ChipSim;
-use cpsaa::sparse::MaskMatrix;
-use cpsaa::tensor::SeededRng;
+use cpsaa::sparse::{MaskMatrix, PlanSet};
+use cpsaa::tensor::{Matrix, SeededRng};
 
 fn artifacts() -> Option<ArtifactSet> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -82,7 +83,7 @@ fn dense_attention_artifact_matches_golden() {
 fn encoder_stack_simulates_while_executing() {
     let Some(set) = artifacts() else { return };
     let engine = Engine::load(&set).unwrap();
-    let weights = Weights::from_json_file(&set.dir.join("weights.json")).unwrap();
+    let weights = MultiHeadWeights::load(&set.dir.join("weights.json"), 1).unwrap();
     let model = model_of(&set);
     let stack = EncoderStack::new(&engine, weights, HardwareConfig::paper(), model.clone(), 3);
     let fix = set.fixtures().unwrap();
@@ -122,6 +123,161 @@ fn service_end_to_end_with_simulated_cost() {
     assert_eq!(m.requests, 3);
     assert!(m.sim_pj > 0.0);
     assert!(m.batch_utilization() > 0.0);
+}
+
+/// Small 8-head model every multi-head integration test shares.
+fn heads8_model() -> ModelConfig {
+    ModelConfig {
+        seq_len: 32,
+        d_model: 64,
+        d_k: 8,
+        d_ff: 128,
+        heads: 8,
+        ..ModelConfig::default()
+    }
+}
+
+#[test]
+fn served_heads8_matches_golden_multihead_reference() {
+    // Acceptance: a served request with heads = 8 must produce the same
+    // hidden states as the golden model's multi-head reference, and its
+    // simulated cost must be max-over-heads latency / sum-over-heads
+    // energy. Artifacts are synthesized, so this runs everywhere.
+    let dir = std::env::temp_dir()
+        .join(format!("cpsaa-it-heads8-golden-{}", std::process::id()));
+    let model = heads8_model();
+    ArtifactSet::synthesize(&dir, &model, 42).unwrap();
+    let layers = 2usize;
+    let svc = Service::start(
+        dir.clone(),
+        HardwareConfig::paper(),
+        model.clone(),
+        ServiceConfig { layers, ..Default::default() },
+    )
+    .unwrap();
+    let rows = 20usize;
+    let x = SeededRng::new(99).normal_matrix(rows, model.d_model, 1.0);
+    let resp = svc.infer(7, x.clone()).unwrap();
+    assert_eq!(resp.id, 7);
+    assert_eq!(resp.hidden.shape(), (rows, model.d_model));
+    assert_eq!(resp.heads(), 8);
+
+    // Golden multi-head reference over the same padded batch.
+    let w = MultiHeadWeights::load(&dir.join("weights.json"), 8).unwrap();
+    let mut h = Matrix::zeros(model.seq_len, model.d_model);
+    h.data_mut()[..rows * model.d_model].copy_from_slice(x.data());
+    for _ in 0..layers {
+        let masks = attention::generate_head_masks(&h, &w, &model);
+        let plans = PlanSet::build(&masks);
+        h = attention::ops::encoder_layer_heads(&h, &w, &plans, &model);
+    }
+    let want = Matrix::from_vec(
+        rows,
+        model.d_model,
+        h.data()[..rows * model.d_model].to_vec(),
+    );
+    // Same code path on both sides ⇒ the served result is bit-identical.
+    assert_eq!(resp.hidden, want, "served hidden != golden multi-head reference");
+
+    // Cost attribution: latency is the slowest head, energy sums.
+    assert_eq!(resp.head_sim_ns.len(), 8);
+    let max_head = resp.head_sim_ns.iter().copied().fold(0.0, f64::max);
+    assert_eq!(resp.sim_ns, max_head, "sim latency must be max over heads");
+    assert!(resp.head_sim_ns.iter().all(|&v| v > 0.0));
+    let resp_pj_sum: f64 = resp.head_sim_pj.iter().sum();
+    assert!(
+        (resp_pj_sum - resp.sim_pj).abs() < 1e-6 * resp.sim_pj.max(1.0),
+        "response energy must sum over heads: {resp_pj_sum} vs {}",
+        resp.sim_pj
+    );
+    let m = svc.metrics();
+    assert_eq!(m.heads.len(), 8);
+    let head_pj_sum: f64 = m.heads.iter().map(|h| h.sim_pj).sum();
+    assert!(
+        (head_pj_sum - m.sim_pj).abs() < 1e-6 * m.sim_pj.max(1.0),
+        "sim energy must sum over heads: {head_pj_sum} vs {}",
+        m.sim_pj
+    );
+    // per-head densities are finite and sane
+    for &d in &resp.head_density {
+        assert!(d.is_finite() && (0.0..=1.0).contains(&d), "density {d}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn service_rejects_zero_layers_at_startup() {
+    let dir = std::env::temp_dir()
+        .join(format!("cpsaa-it-layers0-{}", std::process::id()));
+    let model = heads8_model();
+    ArtifactSet::synthesize(&dir, &model, 5).unwrap();
+    // (Service is not Debug, so no unwrap_err.)
+    let err = match Service::start(
+        dir.clone(),
+        HardwareConfig::paper(),
+        model,
+        ServiceConfig { layers: 0, ..Default::default() },
+    ) {
+        Ok(_) => panic!("layers = 0 must be rejected at startup"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("layers"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn service_concurrent_mixed_lengths_heads8() {
+    // N client threads × mixed-length requests against an 8-head stack:
+    // every reply arrives, ids and shapes match, densities are finite.
+    let dir = std::env::temp_dir()
+        .join(format!("cpsaa-it-heads8-conc-{}", std::process::id()));
+    let model = heads8_model();
+    ArtifactSet::synthesize(&dir, &model, 17).unwrap();
+    let svc = Service::start(
+        dir.clone(),
+        HardwareConfig::paper(),
+        model.clone(),
+        ServiceConfig { layers: 1, max_wait: Duration::from_millis(5) },
+    )
+    .unwrap();
+    const CLIENTS: u64 = 6;
+    const PER_CLIENT: u64 = 3;
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let svc = svc.clone();
+        let d_model = model.d_model;
+        let seq_len = model.seq_len;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SeededRng::new(1000 + c);
+            let mut got = Vec::new();
+            for r in 0..PER_CLIENT {
+                let id = c * PER_CLIENT + r;
+                let rows = 1 + rng.gen_range_usize(0, seq_len);
+                let x = rng.normal_matrix(rows, d_model, 1.0);
+                let resp = svc.infer(id, x).expect("infer failed");
+                assert_eq!(resp.id, id, "reply routed to the wrong caller");
+                assert_eq!(resp.hidden.shape(), (rows, d_model));
+                assert!(resp.hidden.all_finite());
+                assert!(resp.mask_density.is_finite());
+                assert_eq!(resp.heads(), 8);
+                assert!(resp.head_density.iter().all(|d| d.is_finite()));
+                let max_head = resp.head_sim_ns.iter().copied().fold(0.0, f64::max);
+                assert_eq!(resp.sim_ns, max_head);
+                got.push(id);
+            }
+            got
+        }));
+    }
+    let mut ids: Vec<u64> =
+        handles.into_iter().flat_map(|h| h.join().expect("client panicked")).collect();
+    ids.sort();
+    assert_eq!(ids, (0..CLIENTS * PER_CLIENT).collect::<Vec<u64>>(), "lost replies");
+    let m = svc.metrics();
+    assert_eq!(m.requests, CLIENTS * PER_CLIENT);
+    assert!(m.batches >= 1 && m.batches <= m.requests);
+    assert_eq!(m.heads.len(), 8);
+    assert!(m.head_mean_densities().iter().all(|d| d.is_finite()));
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -2,12 +2,12 @@
 //! (the in-tree `util::prop` driver replaces proptest in this offline
 //! build — N seeded cases per property, failing seed reported).
 
-use cpsaa::attention::{self, ops, Weights};
+use cpsaa::attention::{self, ops, MultiHeadWeights, Weights};
 use cpsaa::config::{HardwareConfig, ModelConfig};
 use cpsaa::coordinator::Batcher;
 use cpsaa::prop_assert;
 use cpsaa::sim::{pipeline, sddmm, spmm};
-use cpsaa::sparse::{CsrMatrix, MaskMatrix};
+use cpsaa::sparse::{CsrMatrix, DispatchPlan, MaskMatrix, PlanSet};
 use cpsaa::tensor::{Matrix, SeededRng};
 use cpsaa::util::prop::{check, default_cases};
 
@@ -131,6 +131,67 @@ fn prop_attention_planned_equals_unplanned() {
         let a = attention::cpsaa_attention(&x, &w.w_s, &w.w_v, &mask, &cfg);
         let b = ops::cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg);
         prop_assert!(a.max_abs_diff(&b) < 1e-6, "planned path diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_one_head_fanout_bit_identical_to_single_head() {
+    // The multi-head serving path with heads = 1 must be *bit-identical*
+    // to the single-head path — attention and full encoder layer — across
+    // the whole 0.0–1.0 density range, empty and full masks included.
+    check("one_head_fanout", 32, |rng| {
+        let cfg = ModelConfig { seq_len: 24, d_model: 32, ..Default::default() };
+        let w = Weights::synthetic(&cfg, rng.gen_range_usize(0, 1000) as u64);
+        let mh = MultiHeadWeights::from_single(&w);
+        let x = rng.normal_matrix(24, 32, 1.0);
+        let mask = full_range_mask(rng, 24, 24);
+        let plan = mask.plan();
+        let plans = PlanSet::single(plan.clone());
+        let za = ops::cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg);
+        let zb = ops::multi_head_attention_planned(&x, &mh, &plans, &cfg);
+        prop_assert!(za == zb, "attention diverged at density {}", mask.density());
+        let ea = ops::encoder_layer_planned(&x, &w, &plan, &cfg);
+        let eb = ops::encoder_layer_heads(&x, &mh, &plans, &cfg);
+        prop_assert!(ea == eb, "encoder layer diverged at density {}", mask.density());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planset_stats_match_independent_plans() {
+    // Per-head PlanSet statistics (nnz, queue depths, block counts, CSR
+    // topology) must match a DispatchPlan built independently from each
+    // head's mask, across the full density range.
+    check("planset_stats", default_cases(), |rng| {
+        let heads = 1 + rng.gen_range_usize(0, 8);
+        let n = 4 + rng.gen_range_usize(0, 60);
+        let m = 4 + rng.gen_range_usize(0, 60);
+        let masks: Vec<MaskMatrix> = (0..heads).map(|_| full_range_mask(rng, n, m)).collect();
+        let set = PlanSet::build(&masks);
+        prop_assert!(set.heads() == heads, "head count {}", set.heads());
+        let mut total = 0usize;
+        for (h, mask) in masks.iter().enumerate() {
+            let independent = DispatchPlan::build(mask);
+            let p = set.plan(h);
+            prop_assert!(p.nnz() == independent.nnz(), "head {h} nnz");
+            prop_assert!(
+                p.col_queue_depths() == independent.col_queue_depths(),
+                "head {h} queue depths"
+            );
+            prop_assert!(
+                p.blocks().counts == independent.blocks().counts,
+                "head {h} block counts"
+            );
+            prop_assert!(p.row_ptr() == independent.row_ptr(), "head {h} row_ptr");
+            prop_assert!(p.col_idx() == independent.col_idx(), "head {h} col_idx");
+            prop_assert!(
+                p.max_col_queue() == independent.max_col_queue(),
+                "head {h} max queue"
+            );
+            total += independent.nnz();
+        }
+        prop_assert!(set.total_nnz() == total, "total nnz {}", set.total_nnz());
         Ok(())
     });
 }
