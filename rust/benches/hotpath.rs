@@ -93,6 +93,26 @@ fn main() {
         t8.as_secs_f64() / t1.as_secs_f64().max(1e-12)
     );
 
+    // -- batch-parallel sharding (plan-reuse mode): 1 vs 4 logical chips -----
+    // Same paper workload and plan set; the shards4 rung partitions the
+    // 320 batch rows into 4 nnz-balanced slices (PlanSet::shard) and
+    // runs them concurrently against the full keys — the serving
+    // layer's `--shards` fan-out. The shards1 rung is the degenerate
+    // single-chip partition. CI asserts both rungs exist in the JSON
+    // dump so batch-parallel regressions stay visible per-PR.
+    let sharded1 = plans1.shard(1);
+    let sharded4 = plans1.shard(4);
+    let s1 = b.run("attention_320x512_shards1_plan_reuse", || {
+        ops::multi_head_attention_sharded(&x, &mh1, &sharded1, &cfg1).norm()
+    });
+    let s4 = b.run("attention_320x512_shards4_plan_reuse", || {
+        ops::multi_head_attention_sharded(&x, &mh1, &sharded4, &cfg1).norm()
+    });
+    println!(
+        "4-shard batch parallelism vs 1 shard (same work, 4 concurrent row slices): {:.2}x wall",
+        s4.as_secs_f64() / s1.as_secs_f64().max(1e-12)
+    );
+
     // -- golden model end-to-end (pruning + attention) -----------------------
     let model = cpsaa::config::ModelConfig { seq_len: 128, d_model: 256, ..cfg.model.clone() };
     let wm = Weights::synthetic(&model, 0);

@@ -122,11 +122,32 @@ fn cpsaa_attention_planned_budgeted(
     cfg: &ModelConfig,
     concurrent_heads: usize,
 ) -> Matrix {
-    let m = x.matmul(w_s);
-    let v = x.matmul(w_v);
-    let workers = (workers_for(plan.nnz()) / concurrent_heads.max(1)).max(1);
+    cpsaa_attention_rows_budgeted(x, x, w_s, w_v, plan, cfg, concurrent_heads)
+}
+
+/// One head's attention for a Q-row block: `q_rows` is a contiguous row
+/// slice of the packed batch, `kv` the full batch (scores and values
+/// attend over every key row), and `plan` the head plan sliced to the
+/// same rows (`plan.rows() == q_rows.rows()`, `plan.cols() ==
+/// kv.rows()`). Every op — the per-row matmul, the per-coordinate SDDMM
+/// dots, the row softmax, the row SpMM — touches only its own row, so
+/// with `q_rows == kv` (the full range) this computes bit-for-bit what
+/// [`cpsaa_attention_planned`] computes; over a partition of the rows
+/// the concatenated blocks are bit-identical to the unsharded output.
+fn cpsaa_attention_rows_budgeted(
+    q_rows: &Matrix,
+    kv: &Matrix,
+    w_s: &Matrix,
+    w_v: &Matrix,
+    plan: &DispatchPlan,
+    cfg: &ModelConfig,
+    budget_share: usize,
+) -> Matrix {
+    let m = q_rows.matmul(w_s);
+    let v = kv.matmul(w_v);
+    let workers = (workers_for(plan.nnz()) / budget_share.max(1)).max(1);
     // S = M·Xᵀ: B = Xᵀ, so Bᵀ = X — no transpose materialized.
-    let mut p = sddmm_csr_workers(&m, x, plan, workers);
+    let mut p = sddmm_csr_workers(&m, kv, plan, workers);
     p.scale_values(1.0 / (cfg.d_k as f32).sqrt());
     p.softmax_rows();
     p.spmm(&v)
@@ -146,34 +167,10 @@ pub fn multi_head_attention_planned(
     plans: &PlanSet,
     cfg: &ModelConfig,
 ) -> Matrix {
-    assert_eq!(w.heads.len(), plans.heads(), "one plan per head");
-    let heads = w.heads.len();
-    // Replicated-W_S fan-out (a single-head weights file split N ways):
-    // every head scores, prunes, and softmaxes identically, so compute
-    // the shared P once and fan only the per-head V-block SpMM. Each
-    // head's V and SpMM match the general path op-for-op, so the result
-    // is bit-identical to running the heads independently.
-    let shared_scores =
-        w.shared_w_s() && plans.plans().iter().skip(1).all(|p| p == plans.plan(0));
-    let zs: Vec<Matrix> = if shared_scores {
-        let m = x.matmul(&w.heads[0].w_s);
-        let mut p = sddmm_csr(&m, x, plans.plan(0));
-        p.scale_values(1.0 / (cfg.d_k as f32).sqrt());
-        p.softmax_rows();
-        par_map(&w.heads, |h| p.spmm(&x.matmul(&h.w_v)))
-    } else {
-        let pairs: Vec<(&super::weights::HeadWeights, &DispatchPlan)> =
-            w.heads.iter().zip(plans.plans()).collect();
-        par_map(&pairs, |&(h, p)| {
-            cpsaa_attention_planned_budgeted(x, &h.w_s, &h.w_v, p, cfg, heads)
-        })
-    };
-    let blocks: Vec<&Matrix> = zs.iter().collect();
-    let z = Matrix::concat_cols(&blocks);
-    match &w.w_o {
-        Some(o) => z.matmul(o),
-        None => z,
-    }
+    // The single-shard instance of the shard kernel: Q rows = all rows,
+    // full worker budget. One definition keeps the sharded/unsharded
+    // bit-equivalence structural rather than maintained by hand.
+    multi_head_attention_shard(x, x, w, plans, cfg, 1)
 }
 
 /// One encoder layer with multi-head fan-out: the multi-head attention
@@ -189,6 +186,123 @@ pub fn encoder_layer_heads(
     let h = rms_norm(&x.add(&z));
     let ff = h.matmul(&w.w_fc1).map(gelu).matmul(&w.w_fc2);
     rms_norm(&h.add(&ff))
+}
+
+/// One shard's multi-head attention: Q rows `x_rows` (a contiguous row
+/// slice of the packed batch `x`, or `x` itself for the full range)
+/// against the full keys/values, over the matching (sliced) plan set.
+/// Heads run one [`par_map`] worker each; the replicated-W_S fan-out (a
+/// single-head weights file split N ways) scores, prunes, and
+/// softmaxes identically per head, so the shared P is computed once and
+/// only the per-head V-block SpMM fans out — bit-identical to running
+/// the heads independently. Every row-wise op touches only the shard's
+/// rows, so the assembled shard blocks are bit-identical to the
+/// full-range kernel.
+fn multi_head_attention_shard(
+    x: &Matrix,
+    x_rows: &Matrix,
+    w: &MultiHeadWeights,
+    plans: &PlanSet,
+    cfg: &ModelConfig,
+    concurrent_shards: usize,
+) -> Matrix {
+    assert_eq!(w.heads.len(), plans.heads(), "one plan per head");
+    let heads = w.heads.len();
+    let shared_scores =
+        w.shared_w_s() && plans.plans().iter().skip(1).all(|p| p == plans.plan(0));
+    let zs: Vec<Matrix> = if shared_scores {
+        let m = x_rows.matmul(&w.heads[0].w_s);
+        let workers =
+            (workers_for(plans.plan(0).nnz()) / concurrent_shards.max(1)).max(1);
+        let mut p = sddmm_csr_workers(&m, x, plans.plan(0), workers);
+        p.scale_values(1.0 / (cfg.d_k as f32).sqrt());
+        p.softmax_rows();
+        par_map(&w.heads, |h| p.spmm(&x.matmul(&h.w_v)))
+    } else {
+        let pairs: Vec<(&super::weights::HeadWeights, &DispatchPlan)> =
+            w.heads.iter().zip(plans.plans()).collect();
+        par_map(&pairs, |&(h, p)| {
+            cpsaa_attention_rows_budgeted(
+                x_rows,
+                x,
+                &h.w_s,
+                &h.w_v,
+                p,
+                cfg,
+                heads * concurrent_shards.max(1),
+            )
+        })
+    };
+    let blocks: Vec<&Matrix> = zs.iter().collect();
+    let z = Matrix::concat_cols(&blocks);
+    match &w.w_o {
+        Some(o) => z.matmul(o),
+        None => z,
+    }
+}
+
+/// Batch-parallel multi-head attention over a sharded plan set: shard
+/// `s` computes output rows `shards.range(s)` against the full keys (K
+/// logical chips, one [`par_map`] worker per shard), and the blocks
+/// assemble back in row order. Row-separability of every op makes the
+/// result bit-identical to [`multi_head_attention_planned`] over the
+/// unsliced set, at any shard count.
+pub fn multi_head_attention_sharded(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    shards: &crate::sparse::ShardedPlans,
+    cfg: &ModelConfig,
+) -> Matrix {
+    let k = shards.count();
+    assert!(k > 0, "sharded attention needs at least one shard");
+    let idx: Vec<usize> = (0..k).collect();
+    let blocks = par_map(&idx, |&s| {
+        let r = shards.range(s);
+        let x_rows = x.row_block(r.start, r.end);
+        multi_head_attention_shard(x, &x_rows, w, shards.set(s), cfg, k)
+    });
+    assemble_row_blocks(x.rows(), &blocks, shards)
+}
+
+/// Batch-parallel encoder layer: each shard runs its row slice of the
+/// multi-head attention *and* the row-local residual + RMS-norm + FC
+/// tail on its own worker, so the whole layer scales across the K
+/// logical chips. Bit-identical to [`encoder_layer_heads`] over the
+/// unsliced plan set.
+pub fn encoder_layer_heads_sharded(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    shards: &crate::sparse::ShardedPlans,
+    cfg: &ModelConfig,
+) -> Matrix {
+    let k = shards.count();
+    assert!(k > 0, "sharded encoder layer needs at least one shard");
+    let idx: Vec<usize> = (0..k).collect();
+    let blocks = par_map(&idx, |&s| {
+        let r = shards.range(s);
+        let x_rows = x.row_block(r.start, r.end);
+        let z = multi_head_attention_shard(x, &x_rows, w, shards.set(s), cfg, k);
+        let h = rms_norm(&x_rows.add(&z));
+        let ff = h.matmul(&w.w_fc1).map(gelu).matmul(&w.w_fc2);
+        rms_norm(&h.add(&ff))
+    });
+    assemble_row_blocks(x.rows(), &blocks, shards)
+}
+
+/// Stitch per-shard row blocks back into one batch-shaped matrix.
+fn assemble_row_blocks(
+    rows: usize,
+    blocks: &[Matrix],
+    shards: &crate::sparse::ShardedPlans,
+) -> Matrix {
+    let cols = blocks[0].cols();
+    let mut out = Matrix::zeros(rows, cols);
+    for (s, block) in blocks.iter().enumerate() {
+        let r = shards.range(s);
+        assert_eq!(block.shape(), (r.len(), cols), "shard {s} block shape");
+        out.data_mut()[r.start * cols..r.end * cols].copy_from_slice(block.data());
+    }
+    out
 }
 
 /// CPDAA: the dense calculation mode (all-ones mask) of Fig. 14.
@@ -365,6 +479,54 @@ mod tests {
         let single = cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &mask.plan(), &cfg);
         let fanned = multi_head_attention_planned(&x, &mh, &plans, &cfg);
         assert_eq!(single, fanned);
+    }
+
+    #[test]
+    fn sharded_attention_bit_identical_to_unsharded() {
+        // Distinct per-head masks, several shard counts (including more
+        // shards than fit): the assembled sharded output must not
+        // differ in a single bit.
+        let cfg = ModelConfig { seq_len: 32, d_model: 64, d_k: 8, d_ff: 128, heads: 4, ..Default::default() };
+        let mh = MultiHeadWeights::synthetic(&cfg, 21);
+        let x = SeededRng::new(22).normal_matrix(32, 64, 1.0);
+        let masks = super::super::mask::generate_heads(&x, &mh, &cfg);
+        let plans = PlanSet::build(&masks);
+        let want_z = multi_head_attention_planned(&x, &mh, &plans, &cfg);
+        let want_h = encoder_layer_heads(&x, &mh, &plans, &cfg);
+        for shards in [1, 2, 3, 4, 7] {
+            let sharded = plans.shard(shards);
+            let z = multi_head_attention_sharded(&x, &mh, &sharded, &cfg);
+            assert_eq!(z, want_z, "attention diverged at {shards} shards");
+            let h = encoder_layer_heads_sharded(&x, &mh, &sharded, &cfg);
+            assert_eq!(h, want_h, "encoder layer diverged at {shards} shards");
+        }
+    }
+
+    #[test]
+    fn sharded_shared_scores_path_bit_identical() {
+        // Replicated-W_S fan-out (single-head file split 4 ways) takes
+        // the shared-scores fast path on both sides.
+        let (x, w, cfg) = setup(32, 64);
+        let mask = generate_mask(&x, &w.w_s, &cfg);
+        let mh = MultiHeadWeights::split(&w, 4).unwrap();
+        let plans = PlanSet::from_plans(vec![mask.plan(); 4]);
+        let want = multi_head_attention_planned(&x, &mh, &plans, &cfg);
+        let got = multi_head_attention_sharded(&x, &mh, &plans.shard(3), &cfg);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sharded_empty_mask_is_zero_attention() {
+        let cfg = ModelConfig { seq_len: 16, d_model: 32, ..Default::default() };
+        let w = Weights::synthetic(&cfg, 5);
+        let mh = MultiHeadWeights::from_single(&w);
+        let x = SeededRng::new(6).normal_matrix(16, 32, 1.0);
+        let plans = PlanSet::single(MaskMatrix::zeros(16, 16).plan());
+        // empty mask ⇒ one shard range covering everything
+        let sharded = plans.shard(4);
+        assert_eq!(sharded.count(), 1);
+        let z = multi_head_attention_sharded(&x, &mh, &sharded, &cfg);
+        assert_eq!(z.norm(), 0.0);
     }
 
     #[test]

@@ -30,6 +30,10 @@ pub struct PackedRequest {
 /// One planned batch: the packed X matrix plus request placements.
 #[derive(Clone, Debug)]
 pub struct BatchPlan {
+    /// Monotonic id assigned at seal time, unique for the batcher's
+    /// lifetime — the key that makes interleaved per-head/per-shard
+    /// metric lines attributable when several batches are in flight.
+    pub batch: u64,
     pub x: Matrix,
     pub entries: Vec<PackedRequest>,
     /// Rows actually occupied.
@@ -41,11 +45,13 @@ pub struct Batcher {
     seq_len: usize,
     d_model: usize,
     queue: Vec<(u64, Matrix)>,
+    /// Batches sealed so far — the next batch id.
+    sealed: u64,
 }
 
 impl Batcher {
     pub fn new(seq_len: usize, d_model: usize) -> Self {
-        Self { seq_len, d_model, queue: Vec::new() }
+        Self { seq_len, d_model, queue: Vec::new(), sealed: 0 }
     }
 
     /// Enqueue one request. Returns `Err` if the request alone exceeds a
@@ -69,7 +75,8 @@ impl Batcher {
     }
 
     /// Drain the queue into batch plans (FIFO; a batch closes when the
-    /// next request no longer fits).
+    /// next request no longer fits). Each plan carries the next
+    /// monotonic batch id.
     pub fn drain(&mut self) -> Vec<BatchPlan> {
         let mut plans = Vec::new();
         let mut current: Vec<(u64, Matrix)> = Vec::new();
@@ -91,7 +98,7 @@ impl Batcher {
         plans
     }
 
-    fn seal(&self, items: Vec<(u64, Matrix)>) -> BatchPlan {
+    fn seal(&mut self, items: Vec<(u64, Matrix)>) -> BatchPlan {
         let mut x = Matrix::zeros(self.seq_len, self.d_model);
         let mut entries = Vec::with_capacity(items.len());
         let mut offset = 0;
@@ -104,7 +111,9 @@ impl Batcher {
             entries.push(PackedRequest { id, offset, rows });
             offset += rows;
         }
-        BatchPlan { x, entries, used_rows: offset }
+        let batch = self.sealed;
+        self.sealed += 1;
+        BatchPlan { batch, x, entries, used_rows: offset }
     }
 }
 
@@ -195,5 +204,20 @@ mod tests {
         assert_eq!(plans.len(), 2);
         assert_eq!(plans[0].used_rows, 8);
         assert_eq!(plans[1].used_rows, 1);
+    }
+
+    #[test]
+    fn batch_ids_monotonic_across_drains() {
+        let mut b = Batcher::new(8, 2);
+        b.push(0, Matrix::zeros(8, 2)).unwrap();
+        b.push(1, Matrix::zeros(8, 2)).unwrap();
+        let first = b.drain();
+        assert_eq!(first.iter().map(|p| p.batch).collect::<Vec<u64>>(), vec![0, 1]);
+        b.push(2, Matrix::zeros(3, 2)).unwrap();
+        let second = b.drain();
+        assert_eq!(second.len(), 1);
+        // ids keep counting across windows — the attribution key never
+        // repeats for this batcher's lifetime
+        assert_eq!(second[0].batch, 2);
     }
 }

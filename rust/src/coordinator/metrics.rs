@@ -88,6 +88,51 @@ pub struct HeadMetrics {
     pub density_sum: f64,
 }
 
+/// Per-shard serving accounting (index = shard / logical chip). Shards
+/// process disjoint row slices of each batch concurrently, so batch
+/// wall time is the slowest chip — the per-shard lines make shard
+/// imbalance (one nnz-heavy slice stalling the batch) visible.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardMetrics {
+    /// Simulated per-shard latency summed across batches (ns).
+    pub sim_ns: f64,
+    /// Simulated per-shard energy summed across batches (pJ).
+    pub sim_pj: f64,
+    /// Batch rows this shard owned, summed across batches.
+    pub rows: u64,
+    /// Masked coordinates this shard dispatched, summed across batches.
+    pub nnz: u64,
+}
+
+/// One batch's per-head attribution line. Carries the batch id so that
+/// when several packed batches are in flight (multi-leader serving,
+/// interleaved logs) every head line remains attributable to exactly
+/// one batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HeadLine {
+    pub batch: u64,
+    pub head: usize,
+    pub sim_ns: f64,
+    pub sim_pj: f64,
+    pub density: f64,
+}
+
+/// One batch's per-shard attribution line (batch id carried for the
+/// same reason as [`HeadLine`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardLine {
+    pub batch: u64,
+    pub shard: usize,
+    pub rows: usize,
+    pub nnz: usize,
+    pub sim_ns: f64,
+    pub sim_pj: f64,
+}
+
+/// Attribution lines kept per log; oldest drop first so a long-running
+/// service holds bounded memory while recent batches stay inspectable.
+const LINE_LOG_CAP: usize = 4096;
+
 /// Aggregate serving counters.
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
@@ -96,13 +141,21 @@ pub struct ServeMetrics {
     pub padded_rows: u64,
     pub used_rows: u64,
     pub latency: LatencyHistogram,
-    /// Simulated accelerator time (ns) across batches (max over heads
-    /// per batch, summed over batches).
+    /// Simulated accelerator time (ns) across batches (max over
+    /// shards/heads per batch, summed over batches).
     pub sim_ns: f64,
-    /// Simulated accelerator energy (pJ), summed over heads and batches.
+    /// Simulated accelerator energy (pJ), summed over shards, heads and
+    /// batches.
     pub sim_pj: f64,
     /// Per-head accounting, head order; sized on first recorded batch.
     pub heads: Vec<HeadMetrics>,
+    /// Per-shard accounting, shard order; sized on first sharded batch
+    /// (empty under unsharded serving).
+    pub shards: Vec<ShardMetrics>,
+    /// Recent per-batch head lines, each carrying its batch id.
+    pub head_lines: Vec<HeadLine>,
+    /// Recent per-batch shard lines, each carrying its batch id.
+    pub shard_lines: Vec<ShardLine>,
 }
 
 impl ServeMetrics {
@@ -116,7 +169,9 @@ impl ServeMetrics {
     }
 
     /// Fold one batch's per-head lines in (slices share head order).
-    pub fn record_heads(&mut self, sim_ns: &[f64], sim_pj: &[f64], density: &[f64]) {
+    /// `batch` is the leader-assigned packed-batch id the lines are
+    /// attributed to.
+    pub fn record_heads(&mut self, batch: u64, sim_ns: &[f64], sim_pj: &[f64], density: &[f64]) {
         if self.heads.len() < sim_ns.len() {
             self.heads.resize(sim_ns.len(), HeadMetrics::default());
         }
@@ -125,12 +180,61 @@ impl ServeMetrics {
             m.sim_pj += sim_pj.get(h).copied().unwrap_or(0.0);
             m.density_sum += density.get(h).copied().unwrap_or(0.0);
         }
+        for h in 0..sim_ns.len() {
+            self.head_lines.push(HeadLine {
+                batch,
+                head: h,
+                sim_ns: sim_ns[h],
+                sim_pj: sim_pj.get(h).copied().unwrap_or(0.0),
+                density: density.get(h).copied().unwrap_or(0.0),
+            });
+        }
+        trim_log(&mut self.head_lines);
+    }
+
+    /// Fold one batch's per-shard lines in (`rows`/`nnz`/`sim_ns`/
+    /// `sim_pj` share shard order), attributed to `batch`.
+    pub fn record_shards(
+        &mut self,
+        batch: u64,
+        rows: &[usize],
+        nnz: &[usize],
+        sim_ns: &[f64],
+        sim_pj: &[f64],
+    ) {
+        if self.shards.len() < sim_ns.len() {
+            self.shards.resize(sim_ns.len(), ShardMetrics::default());
+        }
+        for (s, m) in self.shards.iter_mut().enumerate() {
+            m.sim_ns += sim_ns.get(s).copied().unwrap_or(0.0);
+            m.sim_pj += sim_pj.get(s).copied().unwrap_or(0.0);
+            m.rows += rows.get(s).copied().unwrap_or(0) as u64;
+            m.nnz += nnz.get(s).copied().unwrap_or(0) as u64;
+        }
+        for s in 0..sim_ns.len() {
+            self.shard_lines.push(ShardLine {
+                batch,
+                shard: s,
+                rows: rows.get(s).copied().unwrap_or(0),
+                nnz: nnz.get(s).copied().unwrap_or(0),
+                sim_ns: sim_ns[s],
+                sim_pj: sim_pj.get(s).copied().unwrap_or(0.0),
+            });
+        }
+        trim_log(&mut self.shard_lines);
     }
 
     /// Mean per-head densities over the recorded batches.
     pub fn head_mean_densities(&self) -> Vec<f64> {
         let n = self.batches.max(1) as f64;
         self.heads.iter().map(|h| h.density_sum / n).collect()
+    }
+}
+
+/// Drop oldest lines beyond [`LINE_LOG_CAP`].
+fn trim_log<T>(log: &mut Vec<T>) {
+    if log.len() > LINE_LOG_CAP {
+        log.drain(..log.len() - LINE_LOG_CAP);
     }
 }
 
@@ -168,16 +272,61 @@ mod tests {
 
     #[test]
     fn head_metrics_accumulate() {
-        let mut m = ServeMetrics::default();
-        m.batches = 2;
-        m.record_heads(&[10.0, 20.0], &[1.0, 2.0], &[0.1, 0.3]);
-        m.record_heads(&[30.0, 40.0], &[3.0, 4.0], &[0.2, 0.4]);
+        let mut m = ServeMetrics { batches: 2, ..Default::default() };
+        m.record_heads(0, &[10.0, 20.0], &[1.0, 2.0], &[0.1, 0.3]);
+        m.record_heads(1, &[30.0, 40.0], &[3.0, 4.0], &[0.2, 0.4]);
         assert_eq!(m.heads.len(), 2);
         assert!((m.heads[0].sim_ns - 40.0).abs() < 1e-12);
         assert!((m.heads[1].sim_pj - 6.0).abs() < 1e-12);
         let means = m.head_mean_densities();
         assert!((means[0] - 0.15).abs() < 1e-12);
         assert!((means[1] - 0.35).abs() < 1e-12);
+    }
+
+    #[test]
+    fn head_lines_carry_batch_ids() {
+        // Two batches interleaved in one log: every line still names its
+        // batch, so per-batch attribution survives concurrency.
+        let mut m = ServeMetrics::default();
+        m.record_heads(7, &[10.0, 20.0], &[1.0, 2.0], &[0.1, 0.3]);
+        m.record_heads(9, &[30.0, 40.0], &[3.0, 4.0], &[0.2, 0.4]);
+        assert_eq!(m.head_lines.len(), 4);
+        let batch7: Vec<_> = m.head_lines.iter().filter(|l| l.batch == 7).collect();
+        let batch9: Vec<_> = m.head_lines.iter().filter(|l| l.batch == 9).collect();
+        assert_eq!(batch7.len(), 2);
+        assert_eq!(batch9.len(), 2);
+        assert_eq!((batch7[0].head, batch7[1].head), (0, 1));
+        assert!((batch7[1].sim_ns - 20.0).abs() < 1e-12);
+        assert!((batch9[0].sim_ns - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_metrics_accumulate_with_lines() {
+        let mut m = ServeMetrics::default();
+        m.record_shards(0, &[80, 80], &[1000, 900], &[5.0, 4.0], &[0.5, 0.4]);
+        m.record_shards(1, &[70, 90], &[800, 1100], &[3.0, 6.0], &[0.3, 0.6]);
+        assert_eq!(m.shards.len(), 2);
+        assert!((m.shards[0].sim_ns - 8.0).abs() < 1e-12);
+        assert!((m.shards[1].sim_pj - 1.0).abs() < 1e-12);
+        assert_eq!(m.shards[0].rows, 150);
+        assert_eq!(m.shards[1].nnz, 2000);
+        assert_eq!(m.shard_lines.len(), 4);
+        assert_eq!(
+            m.shard_lines[3],
+            ShardLine { batch: 1, shard: 1, rows: 90, nnz: 1100, sim_ns: 6.0, sim_pj: 0.6 }
+        );
+    }
+
+    #[test]
+    fn line_logs_stay_bounded() {
+        let mut m = ServeMetrics::default();
+        for b in 0..3000u64 {
+            m.record_heads(b, &[1.0, 2.0], &[0.1, 0.2], &[0.5, 0.5]);
+        }
+        assert_eq!(m.head_lines.len(), 4096);
+        // oldest dropped first: the newest batch is still present
+        assert_eq!(m.head_lines.last().unwrap().batch, 2999);
+        assert!(m.head_lines.first().unwrap().batch > 0);
     }
 
     #[test]

@@ -6,16 +6,21 @@
 //! at application level, §4.5): it packs incoming sequences into
 //! 320-embedding batches, drives the per-layer multi-head executions
 //! (one [`PlanSet`][crate::sparse::PlanSet] per batch, heads concurrent
-//! on disjoint tile slices), tracks hardware-simulated cost alongside
-//! functional results — per head and per batch — and reports serving
-//! metrics (latency percentiles, GOPS, head imbalance).
+//! on disjoint tile slices), fans each batch across K logical chips when
+//! sharded ([`shard`]: nnz-balanced row partition from the plan set, one
+//! sliced plan set per shard, max-ns/sum-pJ merge), tracks
+//! hardware-simulated cost alongside functional results — per head, per
+//! shard, and per batch — and reports serving metrics (latency
+//! percentiles, GOPS, head/shard imbalance, batch-attributed lines).
 
 mod batcher;
 mod metrics;
 mod pipeline;
 mod service;
+pub mod shard;
 
 pub use batcher::{BatchPlan, Batcher, PackedRequest};
-pub use metrics::{HeadMetrics, LatencyHistogram, ServeMetrics};
+pub use metrics::{HeadLine, HeadMetrics, LatencyHistogram, ServeMetrics, ShardLine, ShardMetrics};
 pub use pipeline::{EncoderStack, LayerOutput};
 pub use service::{InferenceResponse, Service, ServiceConfig};
+pub use shard::{ShardCost, ShardedBatchCost};

@@ -14,6 +14,13 @@
 //! kernel per layer (the CPSAA §4.2 design point). Heads execute
 //! concurrently on disjoint `tiles/heads` slices (§4.5), so each layer
 //! is charged max-over-heads wall time and sum-over-heads energy.
+//!
+//! With `shards > 1` the stack runs batch-parallel: every layer's rows
+//! are partitioned across K logical chips by per-row nnz from the plan
+//! set ([`PlanSet::shard`][crate::sparse::PlanSet::shard]), executed
+//! concurrently, and charged max-over-shards wall time / sum-over-shards
+//! energy ([`shard::attribute`][super::shard::attribute]). `shards == 1`
+//! runs the exact unsharded code path.
 
 use crate::util::error::Result;
 
@@ -23,6 +30,8 @@ use crate::runtime::Engine;
 use crate::sim::ChipSim;
 use crate::tensor::Matrix;
 
+use super::shard;
+
 /// Output of one layer over one batch.
 #[derive(Clone, Debug)]
 pub struct LayerOutput {
@@ -30,9 +39,10 @@ pub struct LayerOutput {
     /// Mean pruning-mask density across heads.
     pub mask_density: f64,
     /// Simulated accelerator latency for this layer-batch (ns) —
-    /// max over heads (heads run concurrently on tile slices).
+    /// max over heads (heads run concurrently on tile slices); under
+    /// sharding, max over shards (chips run concurrently).
     pub sim_ns: f64,
-    /// Simulated accelerator energy (pJ) — sum over heads.
+    /// Simulated accelerator energy (pJ) — sum over heads (and shards).
     pub sim_pj: f64,
     /// Per-head latency on a `tiles/heads` chip slice (ns), head order.
     pub head_sim_ns: Vec<f64>,
@@ -40,6 +50,16 @@ pub struct LayerOutput {
     pub head_sim_pj: Vec<f64>,
     /// Per-head pruning-mask density, head order.
     pub head_density: Vec<f64>,
+    /// Per-shard latency (ns), shard order; empty under unsharded
+    /// serving.
+    pub shard_sim_ns: Vec<f64>,
+    /// Per-shard energy (pJ), shard order; empty when unsharded.
+    pub shard_sim_pj: Vec<f64>,
+    /// Rows each shard owned (nnz-balanced partition); empty when
+    /// unsharded.
+    pub shard_rows: Vec<usize>,
+    /// Masked coordinates each shard dispatched; empty when unsharded.
+    pub shard_nnz: Vec<usize>,
 }
 
 /// A stack of identical encoder layers (§4.5: encoders chain serially).
@@ -48,6 +68,7 @@ pub struct EncoderStack<'e> {
     weights: MultiHeadWeights,
     sim: ChipSim,
     layers: usize,
+    shards: usize,
 }
 
 impl<'e> EncoderStack<'e> {
@@ -64,7 +85,14 @@ impl<'e> EncoderStack<'e> {
             "weights fan-out must match model.heads"
         );
         let sim = ChipSim::new(hw, model);
-        Self { engine, weights, sim, layers }
+        Self { engine, weights, sim, layers, shards: 1 }
+    }
+
+    /// Fan every batch out across `shards` logical chips (≥ 1). One
+    /// shard keeps the exact unsharded path.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
     }
 
     pub fn layers(&self) -> usize {
@@ -73,6 +101,10 @@ impl<'e> EncoderStack<'e> {
 
     pub fn heads(&self) -> usize {
         self.weights.heads()
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     /// Run one batch through every layer. Returns per-layer outputs
@@ -88,16 +120,43 @@ impl<'e> EncoderStack<'e> {
         let mut outs = Vec::with_capacity(self.layers);
         let mut batch_cost: Option<BatchCost> = None;
         for _ in 0..self.layers {
-            let exec = self.engine.execute_encoder_heads(&h, &self.weights)?;
+            let exec = self.engine.execute_encoder_heads_sharded(&h, &self.weights, self.shards)?;
             let cost = batch_cost.get_or_insert_with(|| {
-                let hs = self.sim.simulate_heads_planned(&exec.plans);
-                BatchCost {
-                    density: hs.mean_density,
-                    ns: hs.total_ns,
-                    pj: hs.energy_pj,
-                    head_ns: hs.heads.iter().map(|r| r.breakdown.total_ns).collect(),
-                    head_pj: hs.heads.iter().map(|r| r.energy_pj).collect(),
-                    head_density: exec.plans.densities(),
+                if self.shards <= 1 {
+                    let hs = self.sim.simulate_heads_planned(&exec.plans);
+                    BatchCost {
+                        density: hs.mean_density,
+                        ns: hs.total_ns,
+                        pj: hs.energy_pj,
+                        head_ns: hs.heads.iter().map(|r| r.breakdown.total_ns).collect(),
+                        head_pj: hs.heads.iter().map(|r| r.energy_pj).collect(),
+                        head_density: exec.plans.densities(),
+                        shard_ns: Vec::new(),
+                        shard_pj: Vec::new(),
+                        shard_rows: Vec::new(),
+                        shard_nnz: Vec::new(),
+                    }
+                } else {
+                    // Cost the partition the engine actually executed.
+                    let sharded = exec
+                        .sharded
+                        .as_ref()
+                        .expect("sharded execution must carry its partition");
+                    let sc = shard::attribute(&self.sim, sharded);
+                    BatchCost {
+                        // Batch density stays the full plan set's (the
+                        // mask is a batch property, not a shard's).
+                        density: exec.plans.mean_density(),
+                        ns: sc.sim_ns,
+                        pj: sc.sim_pj,
+                        head_ns: sc.head_ns,
+                        head_pj: sc.head_pj,
+                        head_density: exec.plans.densities(),
+                        shard_ns: sc.shards.iter().map(|s| s.sim_ns).collect(),
+                        shard_pj: sc.shards.iter().map(|s| s.sim_pj).collect(),
+                        shard_rows: sc.shards.iter().map(|s| s.rows).collect(),
+                        shard_nnz: sc.shards.iter().map(|s| s.nnz).collect(),
+                    }
                 }
             });
             outs.push(LayerOutput {
@@ -108,6 +167,10 @@ impl<'e> EncoderStack<'e> {
                 head_sim_ns: cost.head_ns.clone(),
                 head_sim_pj: cost.head_pj.clone(),
                 head_density: cost.head_density.clone(),
+                shard_sim_ns: cost.shard_ns.clone(),
+                shard_sim_pj: cost.shard_pj.clone(),
+                shard_rows: cost.shard_rows.clone(),
+                shard_nnz: cost.shard_nnz.clone(),
             });
             h = exec.hidden;
         }
@@ -123,6 +186,10 @@ struct BatchCost {
     head_ns: Vec<f64>,
     head_pj: Vec<f64>,
     head_density: Vec<f64>,
+    shard_ns: Vec<f64>,
+    shard_pj: Vec<f64>,
+    shard_rows: Vec<usize>,
+    shard_nnz: Vec<usize>,
 }
 
 #[cfg(test)]
@@ -166,6 +233,51 @@ mod tests {
         // first layer must reproduce the encoder fixture exactly
         let want = &fix.outputs["encoder"][0];
         assert!(outs[0].hidden.rel_err(want) < 1e-4);
+    }
+
+    #[test]
+    fn sharded_stack_bit_identical_with_shard_cost_lines() {
+        let dir =
+            std::env::temp_dir().join(format!("cpsaa-pipe-shards-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 32,
+            d_model: 64,
+            d_k: 8,
+            d_ff: 128,
+            heads: 4,
+            ..ModelConfig::default()
+        };
+        let set = ArtifactSet::synthesize(&dir, &model, 33).unwrap();
+        let engine = Engine::load(&set).unwrap();
+        let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 4).unwrap();
+        let x = crate::tensor::SeededRng::new(5).normal_matrix(32, 64, 1.0);
+        let plain = EncoderStack::new(&engine, w.clone(), HardwareConfig::paper(), model.clone(), 2);
+        let sharded =
+            EncoderStack::new(&engine, w, HardwareConfig::paper(), model, 2).with_shards(4);
+        assert_eq!(sharded.shards(), 4);
+        let a = plain.forward(&x).unwrap();
+        let b = sharded.forward(&x).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (la, lb) in a.iter().zip(&b) {
+            // functional output must not differ in a single bit
+            assert_eq!(la.hidden, lb.hidden, "sharded hidden state diverged");
+            // unsharded layers carry no shard lines; sharded ones do
+            assert!(la.shard_sim_ns.is_empty());
+            assert!(!lb.shard_sim_ns.is_empty() && lb.shard_sim_ns.len() <= 4);
+            assert_eq!(lb.shard_sim_ns.len(), lb.shard_rows.len());
+            assert_eq!(lb.shard_rows.iter().sum::<usize>(), 32, "shards must tile the batch");
+            // batch cost = slowest chip; per-head lines still roll up
+            let max_shard = lb.shard_sim_ns.iter().copied().fold(0.0, f64::max);
+            assert_eq!(lb.sim_ns, max_shard);
+            let max_head = lb.head_sim_ns.iter().copied().fold(0.0, f64::max);
+            assert_eq!(lb.sim_ns, max_head);
+            let shard_pj: f64 = lb.shard_sim_pj.iter().sum();
+            assert!((lb.sim_pj - shard_pj).abs() < 1e-6 * lb.sim_pj.max(1.0));
+            // densities are batch properties — identical across modes
+            assert_eq!(la.head_density, lb.head_density);
+            assert!((la.mask_density - lb.mask_density).abs() < 1e-12);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -12,6 +12,15 @@
 //! out. `model.heads > 1` fans each layer across concurrent per-head
 //! workers inside the stack (§4.5 tile slices); responses and metrics
 //! carry the per-head latency/energy/density lines.
+//!
+//! `shards > 1` additionally fans each packed batch across K logical
+//! chips: rows are partitioned by per-row nnz from the batch's plan set,
+//! each shard runs its slice (own sliced `PlanSet`, own simulated chip)
+//! concurrently, and costs merge as max-ns across chips / sum-pJ.
+//! Responses and metrics gain per-shard lines; every per-head and
+//! per-shard metric line carries its batch id so interleaved lines stay
+//! attributable when several batches are in flight. `shards == 1` is
+//! bit-identical to unsharded serving.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -58,12 +67,26 @@ pub struct InferenceResponse {
     pub head_sim_pj: Vec<f64>,
     /// Per-head pruning-mask density, head order.
     pub head_density: Vec<f64>,
+    /// Per-shard simulated time across the stack (ns), shard order;
+    /// empty under unsharded serving, else `sim_ns` is its max.
+    pub shard_sim_ns: Vec<f64>,
+    /// Per-shard simulated energy across the stack (pJ), shard order;
+    /// empty when unsharded, else `sim_pj` is its sum.
+    pub shard_sim_pj: Vec<f64>,
+    /// Rows each shard owned of this request's batch (nnz-balanced);
+    /// empty when unsharded.
+    pub shard_rows: Vec<usize>,
 }
 
 impl InferenceResponse {
     /// Heads the serving stack fanned this batch across.
     pub fn heads(&self) -> usize {
         self.head_sim_ns.len()
+    }
+
+    /// Logical chips this request's batch ran on (1 when unsharded).
+    pub fn shards(&self) -> usize {
+        self.shard_sim_ns.len().max(1)
     }
 }
 
@@ -73,11 +96,14 @@ pub struct ServiceConfig {
     pub layers: usize,
     /// Maximum time a request may wait for co-batching.
     pub max_wait: Duration,
+    /// Logical chips each packed batch fans out across (≥ 1; 1 =
+    /// unsharded, bit-identical to the single-chip path).
+    pub shards: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { layers: 2, max_wait: Duration::from_millis(2) }
+        Self { layers: 2, max_wait: Duration::from_millis(2), shards: 1 }
     }
 }
 
@@ -157,6 +183,9 @@ fn leader_loop(
         if cfg.layers == 0 {
             return Err(anyhow!("layers must be >= 1"));
         }
+        if cfg.shards == 0 {
+            return Err(anyhow!("shards must be >= 1"));
+        }
         let weights = MultiHeadWeights::load(&set.dir.join("weights.json"), model.heads)?;
         weights.validate().map_err(|e| anyhow!("bad weights for {} heads: {e}", model.heads))?;
         let engine = Engine::load(&set)?;
@@ -172,7 +201,11 @@ fn leader_loop(
             return;
         }
     };
-    let stack = EncoderStack::new(&engine, weights, hw, model.clone(), cfg.layers);
+    let stack = EncoderStack::new(&engine, weights, hw, model.clone(), cfg.layers)
+        .with_shards(cfg.shards);
+    // One batcher for the leader's lifetime: its monotonic batch ids key
+    // every per-head/per-shard metric line.
+    let mut batcher = Batcher::new(model.seq_len, model.d_model);
 
     while let Ok(first) = rx.recv() {
         // Batching window.
@@ -193,7 +226,6 @@ fn leader_loop(
             }
         }
 
-        let mut batcher = Batcher::new(model.seq_len, model.d_model);
         let mut replies = std::collections::HashMap::new();
         let arrival = Instant::now();
         for req in window {
@@ -215,13 +247,17 @@ fn leader_loop(
                     let sim_pj: f64 = outs.iter().map(|o| o.sim_pj).sum();
                     let density =
                         outs.iter().map(|o| o.mask_density).sum::<f64>() / outs.len() as f64;
-                    // Per-head lines across the whole stack, summed per
-                    // layer exactly like sim_ns so sim_ns == max(head_ns)
-                    // holds to the bit (sim_pj == Σ head_pj up to
-                    // summation-order rounding).
+                    // Per-head and per-shard lines across the whole
+                    // stack, summed per layer exactly like sim_ns so
+                    // sim_ns == max(head_ns) == max(shard_ns) holds to
+                    // the bit (sim_pj == Σ lines up to summation-order
+                    // rounding).
                     let heads_n = outs[0].head_sim_ns.len();
                     let mut head_ns = vec![0.0f64; heads_n];
                     let mut head_pj = vec![0.0f64; heads_n];
+                    let shards_n = outs[0].shard_sim_ns.len();
+                    let mut shard_ns = vec![0.0f64; shards_n];
+                    let mut shard_pj = vec![0.0f64; shards_n];
                     for o in &outs {
                         for (acc, v) in head_ns.iter_mut().zip(&o.head_sim_ns) {
                             *acc += v;
@@ -229,15 +265,28 @@ fn leader_loop(
                         for (acc, v) in head_pj.iter_mut().zip(&o.head_sim_pj) {
                             *acc += v;
                         }
+                        for (acc, v) in shard_ns.iter_mut().zip(&o.shard_sim_ns) {
+                            *acc += v;
+                        }
+                        for (acc, v) in shard_pj.iter_mut().zip(&o.shard_sim_pj) {
+                            *acc += v;
+                        }
                     }
                     let head_density = outs[0].head_density.clone();
+                    // Shard row/nnz ownership comes from the first
+                    // layer's partition (the batch's plan set).
+                    let shard_rows = outs[0].shard_rows.clone();
+                    let shard_nnz = outs[0].shard_nnz.clone();
                     let mut m = metrics.lock().unwrap();
                     m.batches += 1;
                     m.used_rows += plan.used_rows as u64;
                     m.padded_rows += (model.seq_len - plan.used_rows) as u64;
                     m.sim_ns += sim_ns;
                     m.sim_pj += sim_pj;
-                    m.record_heads(&head_ns, &head_pj, &head_density);
+                    m.record_heads(plan.batch, &head_ns, &head_pj, &head_density);
+                    if !shard_ns.is_empty() {
+                        m.record_shards(plan.batch, &shard_rows, &shard_nnz, &shard_ns, &shard_pj);
+                    }
                     for entry in &plan.entries {
                         let hidden = plan.extract(&last.hidden, entry);
                         let latency = arrival.elapsed();
@@ -254,6 +303,9 @@ fn leader_loop(
                                 head_sim_ns: head_ns.clone(),
                                 head_sim_pj: head_pj.clone(),
                                 head_density: head_density.clone(),
+                                shard_sim_ns: shard_ns.clone(),
+                                shard_sim_pj: shard_pj.clone(),
+                                shard_rows: shard_rows.clone(),
                             }));
                         }
                     }
@@ -315,7 +367,7 @@ mod tests {
             dir,
             HardwareConfig::paper(),
             ModelConfig::paper(),
-            ServiceConfig { layers: 1, max_wait: Duration::from_millis(50) },
+            ServiceConfig { layers: 1, max_wait: Duration::from_millis(50), ..Default::default() },
         )
         .unwrap();
         let mut handles = Vec::new();
@@ -335,6 +387,31 @@ mod tests {
         // 4 × 16 = 64 rows fit in one 128-row batch if they co-arrived;
         // allow up to 4 batches under scheduling jitter.
         assert!(m.batches <= 4);
+    }
+
+    #[test]
+    fn zero_shards_rejected_at_startup() {
+        let dir = std::env::temp_dir()
+            .join(format!("cpsaa-svc-shards0-{}", std::process::id()));
+        let model = crate::config::ModelConfig {
+            seq_len: 16,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            ..crate::config::ModelConfig::default()
+        };
+        crate::runtime::ArtifactSet::synthesize(&dir, &model, 2).unwrap();
+        let err = match Service::start(
+            dir.clone(),
+            HardwareConfig::paper(),
+            model,
+            ServiceConfig { shards: 0, ..Default::default() },
+        ) {
+            Ok(_) => panic!("shards = 0 must be rejected at startup"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("shards"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

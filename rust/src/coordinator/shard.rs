@@ -1,0 +1,128 @@
+//! Batch-parallel shard accounting: K logical chips per packed batch.
+//!
+//! The serving tentpole of the heavy-traffic north star: one packed
+//! batch is partitioned across `shards` logical chips along the
+//! sparsity structure — contiguous row ranges balanced by per-row nnz
+//! from the batch's [`PlanSet`] (summed over heads), not by naive row
+//! counts — and every shard gets its own sliced plan set
+//! ([`PlanSet::shard`]). The functional fan-out lives in
+//! [`ops::encoder_layer_heads_sharded`][crate::attention::ops::encoder_layer_heads_sharded]
+//! (one [`par_map`][crate::util::par::par_map] worker per shard,
+//! bit-identical assembly); this module owns the *cost and metrics*
+//! side: simulate each shard's chip, merge max-ns / sum-pJ across
+//! chips, and attribute per-shard and per-head lines back to one batch.
+
+use crate::sim::ChipSim;
+use crate::sparse::{PlanSet, ShardedPlans};
+
+/// One shard's cost line for a served batch.
+#[derive(Clone, Debug)]
+pub struct ShardCost {
+    /// Batch rows this shard owns (contiguous, nnz-balanced).
+    pub rows: usize,
+    /// Masked coordinates this shard dispatches (summed over heads).
+    pub nnz: usize,
+    /// Simulated latency of this shard's chip (ns).
+    pub sim_ns: f64,
+    /// Simulated energy of this shard's chip (pJ).
+    pub sim_pj: f64,
+}
+
+/// The merged multi-chip accounting of one batch: per-shard lines plus
+/// the batch roll-up (max-ns over concurrent chips, sum-pJ) and the
+/// per-head lines re-aggregated across shards (head latency = max over
+/// shards, head energy = sum over shards) so head imbalance stays
+/// visible under sharding.
+#[derive(Clone, Debug)]
+pub struct ShardedBatchCost {
+    pub shards: Vec<ShardCost>,
+    /// Batch latency: max over shards (== max over heads' `head_ns`).
+    pub sim_ns: f64,
+    /// Batch energy: sum over shards.
+    pub sim_pj: f64,
+    /// Per-head latency across shards (ns), head order.
+    pub head_ns: Vec<f64>,
+    /// Per-head energy across shards (pJ), head order.
+    pub head_pj: Vec<f64>,
+}
+
+/// Simulate each shard of a prebuilt partition (normally the one the
+/// engine executed, via
+/// [`EncoderHeadsExec::sharded`][crate::runtime::EncoderHeadsExec]) and
+/// merge — the coordinator's one-call bridge from a batch's shard
+/// partition to its serving cost lines. Build a partition explicitly
+/// with [`PlanSet::shard`] when no executed one is at hand.
+pub fn attribute(sim: &ChipSim, sharded: &ShardedPlans) -> ShardedBatchCost {
+    let report = sim.simulate_sharded(sharded);
+    let heads = sharded.sets().first().map(PlanSet::heads).unwrap_or(0);
+    let shard_costs = report
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(s, r)| ShardCost {
+            rows: sharded.range(s).len(),
+            nnz: sharded.set(s).total_nnz(),
+            sim_ns: r.total_ns,
+            sim_pj: r.energy_pj,
+        })
+        .collect();
+    ShardedBatchCost {
+        shards: shard_costs,
+        sim_ns: report.total_ns,
+        sim_pj: report.energy_pj,
+        head_ns: (0..heads).map(|h| report.head_ns(h)).collect(),
+        head_pj: (0..heads).map(|h| report.head_pj(h)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, ModelConfig};
+    use crate::sparse::MaskMatrix;
+    use crate::tensor::SeededRng;
+
+    fn plans(heads: usize, n: usize, seed: u64) -> PlanSet {
+        let mut rng = SeededRng::new(seed);
+        let masks: Vec<MaskMatrix> = (0..heads)
+            .map(|h| MaskMatrix::from_dense(&rng.mask_matrix(n, n, 0.08 + 0.06 * h as f64)))
+            .collect();
+        PlanSet::build(&masks)
+    }
+
+    #[test]
+    fn attribution_invariants() {
+        let sim = ChipSim::new(HardwareConfig::paper(), ModelConfig::paper());
+        let set = plans(4, 320, 3);
+        let cost = attribute(&sim, &set.shard(4));
+        assert!(!cost.shards.is_empty() && cost.shards.len() <= 4);
+        // shard rows/nnz tile the batch
+        assert_eq!(cost.shards.iter().map(|s| s.rows).sum::<usize>(), 320);
+        assert_eq!(cost.shards.iter().map(|s| s.nnz).sum::<usize>(), set.total_nnz());
+        // batch latency = slowest chip = slowest head line
+        let max_shard = cost.shards.iter().map(|s| s.sim_ns).fold(0.0, f64::max);
+        assert_eq!(cost.sim_ns, max_shard);
+        let max_head = cost.head_ns.iter().copied().fold(0.0, f64::max);
+        assert_eq!(cost.sim_ns, max_head);
+        // batch energy sums both ways
+        let shard_pj: f64 = cost.shards.iter().map(|s| s.sim_pj).sum();
+        assert!((cost.sim_pj - shard_pj).abs() < 1e-6 * cost.sim_pj.max(1.0));
+        let head_pj: f64 = cost.head_pj.iter().sum();
+        assert!((cost.sim_pj - head_pj).abs() < 1e-6 * cost.sim_pj.max(1.0));
+    }
+
+    #[test]
+    fn one_shard_matches_heads_accounting() {
+        let sim = ChipSim::new(HardwareConfig::paper(), ModelConfig::paper());
+        let set = plans(2, 320, 4);
+        let cost = attribute(&sim, &set.shard(1));
+        let hs = sim.simulate_heads_planned(&set);
+        assert_eq!(cost.shards.len(), 1);
+        assert_eq!(cost.sim_ns, hs.total_ns);
+        assert_eq!(cost.sim_pj, hs.energy_pj);
+        for h in 0..2 {
+            assert_eq!(cost.head_ns[h], hs.heads[h].breakdown.total_ns, "head {h}");
+            assert_eq!(cost.head_pj[h], hs.heads[h].energy_pj, "head {h}");
+        }
+    }
+}

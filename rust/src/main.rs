@@ -10,7 +10,7 @@
 //! Argument parsing is hand-rolled (offline build, no clap): global flags
 //! `--config <toml>` and `--artifacts <dir>` precede the subcommand.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use cpsaa::util::error::Result;
 use cpsaa::{anyhow, bail};
@@ -36,15 +36,21 @@ COMMANDS:
                                     cycle-simulate GLUE/SQuAD traces (default: all)
   bench-figure ID [--out-dir DIR]   regenerate a paper figure/table
                                     (fig3, table2, fig11..fig18, fig19a/b, fig20a/b, all)
-  serve [--requests N] [--layers N] [--heads N]
+  serve [--requests N] [--layers N] [--heads N] [--shards N]
                                     demo serving loop over the artifact engine
-                                    (multi-head fan-out across tile slices)
+                                    (multi-head fan-out across tile slices;
+                                    --shards N fans each batch across N logical
+                                    chips, rows nnz-balanced from the plan set)
   inference [DATASET] [--layers N] [--heads N]
                                     application-level sim: encoders = attention
                                     + FC (+ DTC hops) + endurance estimate
   sweep PARAM V1 V2 ...             sweep one hardware knob over `simulate`
                                     (crossbar_size | tiles | adcs_per_ag | wea_per_tile)
   check                             verify artifacts reproduce the JAX fixtures
+  bench-compare BASELINE CURRENT [--tolerance R]
+                                    compare two bench JSON dumps by per-rung
+                                    median; exit nonzero on > R regression
+                                    (default 1.25; the CI regression gate)
 ";
 
 struct Args {
@@ -138,7 +144,11 @@ fn main() -> Result<()> {
                 .map(|s| s.parse::<usize>())
                 .transpose()?
                 .unwrap_or(cfg.model.heads);
-            serve(&cfg, &args.artifacts, requests, layers, heads)
+            let shards = take_flag(&mut cmd, "--shards")
+                .map(|s| s.parse::<usize>())
+                .transpose()?
+                .unwrap_or(1);
+            serve(&cfg, &args.artifacts, requests, layers, heads, shards)
         }
         "inference" => {
             let layers = take_flag(&mut cmd, "--layers")
@@ -162,6 +172,16 @@ fn main() -> Result<()> {
             sweep(&cfg, &param, &values)
         }
         "check" => check(&args.artifacts),
+        "bench-compare" => {
+            let tolerance = take_flag(&mut cmd, "--tolerance")
+                .map(|s| s.parse::<f64>())
+                .transpose()?
+                .unwrap_or(1.25);
+            if cmd.len() != 2 {
+                bail!("bench-compare needs BASELINE and CURRENT json paths");
+            }
+            bench_compare(&PathBuf::from(&cmd[0]), &PathBuf::from(&cmd[1]), tolerance)
+        }
         other => {
             print!("{USAGE}");
             bail!("unknown command {other:?}")
@@ -169,7 +189,7 @@ fn main() -> Result<()> {
     }
 }
 
-fn info(cfg: &SystemConfig, artifacts: &PathBuf) -> Result<()> {
+fn info(cfg: &SystemConfig, artifacts: &Path) -> Result<()> {
     let hw = &cfg.hardware;
     println!(
         "CPSAA chip: {} tiles, {} ROA + {} WEA AGs/tile, {}x{} crossbars",
@@ -245,10 +265,11 @@ fn bench_figure(cfg: &SystemConfig, id: &str, out_dir: Option<&std::path::Path>)
 
 fn serve(
     cfg: &SystemConfig,
-    artifacts: &PathBuf,
+    artifacts: &Path,
     requests: usize,
     layers: usize,
     heads: usize,
+    shards: usize,
 ) -> Result<()> {
     // Probe the manifest for the artifact shapes before spawning.
     let set = ArtifactSet::open(artifacts)?;
@@ -257,12 +278,14 @@ fn serve(
     drop(set);
 
     let svc = Service::start(
-        artifacts.clone(),
+        artifacts.to_path_buf(),
         cfg.hardware.clone(),
         ModelConfig { heads, ..cfg.model.clone() },
-        ServiceConfig { layers, ..Default::default() },
+        ServiceConfig { layers, shards, ..Default::default() },
     )?;
-    println!("service up (artifact shape {seq_len}x{d_model}, {layers} layers, {heads} heads)");
+    println!(
+        "service up (artifact shape {seq_len}x{d_model}, {layers} layers, {heads} heads, {shards} shards)"
+    );
 
     let start = std::time::Instant::now();
     let mut handles = Vec::new();
@@ -311,6 +334,54 @@ fn serve(
             );
         }
     }
+    if !m.shards.is_empty() {
+        for (s, sm) in m.shards.iter().enumerate() {
+            println!(
+                "  shard {s}: {:.3} ms, {:.3} mJ, {} rows, {} nnz",
+                sm.sim_ns / 1e6,
+                sm.sim_pj * 1e-9,
+                sm.rows,
+                sm.nnz
+            );
+        }
+        // The last batch's attributed lines: window by the trailing
+        // batch id, not a fixed width — the final batch may have cut
+        // fewer shards than earlier ones.
+        let last_batch = m.shard_lines.last().map(|l| l.batch);
+        for line in m.shard_lines.iter().filter(|l| Some(l.batch) == last_batch) {
+            println!(
+                "  batch {} shard {}: {:.3} ms, {} rows, {} nnz",
+                line.batch,
+                line.shard,
+                line.sim_ns / 1e6,
+                line.rows,
+                line.nnz
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Compare two bench JSON dumps (the CI regression gate): per-rung
+/// current-vs-baseline median ratio, markdown table to stdout, nonzero
+/// exit when any rung regresses beyond the tolerance.
+fn bench_compare(baseline: &Path, current: &Path, tolerance: f64) -> Result<()> {
+    let cmp = cpsaa::util::bench::BenchComparison::from_files(baseline, current, tolerance)?;
+    print!("{}", cmp.markdown());
+    let regressions = cmp.regressions();
+    if !regressions.is_empty() {
+        let names: Vec<&str> = regressions.iter().map(|d| d.name.as_str()).collect();
+        bail!(
+            "{} rung(s) regressed beyond {tolerance}x: {}",
+            names.len(),
+            names.join(", ")
+        );
+    }
+    println!(
+        "bench-compare OK: {} rungs checked against {} (tolerance {tolerance}x)",
+        cmp.deltas.len(),
+        baseline.display()
+    );
     Ok(())
 }
 
@@ -377,7 +448,7 @@ fn sweep(cfg: &SystemConfig, param: &str, values: &[usize]) -> Result<()> {
     Ok(())
 }
 
-fn check(artifacts: &PathBuf) -> Result<()> {
+fn check(artifacts: &Path) -> Result<()> {
     let set = ArtifactSet::open(artifacts)?;
     let engine = Engine::load(&set)?;
     let fix = set.fixtures()?;

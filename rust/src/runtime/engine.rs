@@ -14,7 +14,7 @@ use std::time::Instant;
 use crate::anyhow;
 use crate::attention::{self, MultiHeadWeights, Weights};
 use crate::config::ModelConfig;
-use crate::sparse::{MaskMatrix, PlanSet};
+use crate::sparse::{MaskMatrix, PlanSet, ShardedPlans};
 use crate::tensor::Matrix;
 use crate::util::error::Result;
 
@@ -31,6 +31,10 @@ const KNOWN_GRAPHS: [&str; 5] =
 pub struct EncoderHeadsExec {
     pub hidden: Matrix,
     pub plans: PlanSet,
+    /// The shard partition that drove a sharded execution (`None` on
+    /// the unsharded path) — the coordinator reuses it for the batch's
+    /// multi-chip cost attribution instead of re-partitioning.
+    pub sharded: Option<ShardedPlans>,
 }
 
 /// Execution statistics of one engine lifetime.
@@ -130,6 +134,44 @@ impl Engine {
         x: &Matrix,
         w: &MultiHeadWeights,
     ) -> Result<EncoderHeadsExec> {
+        self.execute_encoder_heads_sharded(x, w, 1)
+    }
+
+    /// [`Engine::execute_encoder_heads`] with batch-parallel sharding:
+    /// the per-head plan set is still built once (one ReCAM scan per
+    /// head mask), then partitioned into at most `shards` nnz-balanced
+    /// row ranges and sliced per shard; each shard executes its Q-row
+    /// slice against the full keys/values on its own worker (K logical
+    /// chips). `shards <= 1` runs the unsharded kernel — same code,
+    /// same schedule as before sharding existed — and any shard count
+    /// produces bit-identical hidden states (row-separable kernels;
+    /// property-tested). Sharded executions return their partition in
+    /// [`EncoderHeadsExec::sharded`] for cost-attribution reuse.
+    pub fn execute_encoder_heads_sharded(
+        &self,
+        x: &Matrix,
+        w: &MultiHeadWeights,
+        shards: usize,
+    ) -> Result<EncoderHeadsExec> {
+        let cfg = &self.model;
+        self.validate_encoder_heads_input(x, w)?;
+        let start = Instant::now();
+        let masks = attention::generate_head_masks(x, w, cfg);
+        let plans = PlanSet::build(&masks);
+        let (hidden, sharded) = if shards <= 1 {
+            (attention::ops::encoder_layer_heads(x, w, &plans, cfg), None)
+        } else {
+            let sharded = plans.shard(shards);
+            let hidden = attention::ops::encoder_layer_heads_sharded(x, w, &sharded, cfg);
+            (hidden, Some(sharded))
+        };
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.total_exec_ns += start.elapsed().as_nanos() as u64;
+        Ok(EncoderHeadsExec { hidden, plans, sharded })
+    }
+
+    fn validate_encoder_heads_input(&self, x: &Matrix, w: &MultiHeadWeights) -> Result<()> {
         let cfg = &self.model;
         if x.shape() != (cfg.seq_len, cfg.d_model) {
             return Err(anyhow!(
@@ -143,14 +185,7 @@ impl Engine {
         if w.d_model() != cfg.d_model {
             return Err(anyhow!("weights d_model {} != artifact {}", w.d_model(), cfg.d_model));
         }
-        let start = Instant::now();
-        let masks = attention::generate_head_masks(x, w, cfg);
-        let plans = PlanSet::build(&masks);
-        let hidden = attention::ops::encoder_layer_heads(x, w, &plans, cfg);
-        let mut s = self.stats.borrow_mut();
-        s.executions += 1;
-        s.total_exec_ns += start.elapsed().as_nanos() as u64;
-        Ok(EncoderHeadsExec { hidden, plans })
+        Ok(())
     }
 
     fn run_graph(&self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
@@ -284,6 +319,24 @@ mod tests {
         assert!(out.hidden.all_finite());
         assert_eq!(out.plans.heads(), 4);
         assert_eq!(engine.stats().executions, before + 1);
+    }
+
+    #[test]
+    fn encoder_heads_sharded_bit_identical_any_shard_count() {
+        let engine = Engine::load(&synthetic_set()).unwrap();
+        let cfg = ModelConfig { heads: 4, ..small_model() };
+        let mh = MultiHeadWeights::synthetic(&cfg, 8);
+        let x = crate::tensor::SeededRng::new(14).normal_matrix(16, 32, 1.0);
+        let want = engine.execute_encoder_heads(&x, &mh).unwrap();
+        for shards in [1, 2, 4, 6] {
+            let got = engine.execute_encoder_heads_sharded(&x, &mh, shards).unwrap();
+            assert_eq!(got.hidden, want.hidden, "{shards} shards diverged");
+            assert_eq!(got.plans, want.plans, "{shards} shards changed the plan set");
+        }
+        // validation still applies on the sharded path
+        assert!(engine
+            .execute_encoder_heads_sharded(&Matrix::zeros(3, 3), &mh, 4)
+            .is_err());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Chip-level simulation: batches → traces → GOPS / GOPS/W.
 
 use crate::config::{HardwareConfig, ModelConfig};
-use crate::sparse::{DispatchPlan, MaskMatrix, PlanSet};
+use crate::sparse::{DispatchPlan, MaskMatrix, PlanSet, ShardedPlans};
 use crate::workload::WorkloadTrace;
 
 use super::area::AreaModel;
@@ -32,6 +32,34 @@ pub struct HeadsSimReport {
     pub energy_pj: f64,
     /// Mean mask density across heads.
     pub mean_density: f64,
+}
+
+/// Multi-chip cost attribution of one *sharded* batch: shard `s` runs
+/// its sliced [`PlanSet`] on its own full chip (heads inside still on
+/// `tiles/heads` slices). Chips process their row slices concurrently,
+/// so batch wall time is the slowest shard and energy sums over shards
+/// — the same max/sum law the head fan-out uses, one level up.
+#[derive(Clone, Debug)]
+pub struct ShardedSimReport {
+    /// One multi-head report per shard, shard order.
+    pub shards: Vec<HeadsSimReport>,
+    /// Wall-clock of the batch: max over shards.
+    pub total_ns: f64,
+    /// Energy of the batch: sum over shards.
+    pub energy_pj: f64,
+}
+
+impl ShardedSimReport {
+    /// Head `h`'s latency across the batch: max over shards (chips run
+    /// concurrently, each hosting its slice of head `h`).
+    pub fn head_ns(&self, h: usize) -> f64 {
+        self.shards.iter().map(|s| s.heads[h].breakdown.total_ns).fold(0.0, f64::max)
+    }
+
+    /// Head `h`'s energy across the batch: sum over shards.
+    pub fn head_pj(&self, h: usize) -> f64 {
+        self.shards.iter().map(|s| s.heads[h].energy_pj).sum()
+    }
 }
 
 /// Fold per-head slice reports into the batch view: max-ns, sum-pJ.
@@ -115,6 +143,29 @@ impl ChipSim {
         let heads = heads.max(1);
         let head_sim = self.head_slice_sim(heads);
         aggregate_heads(vec![head_sim.simulate_batch_planned(plan); heads])
+    }
+
+    /// Simulate one sharded batch across K logical chips: each shard's
+    /// sliced plan set is charged against a full chip of this
+    /// configuration via [`ChipSim::simulate_heads_planned`]; the batch
+    /// is then max-ns over shards (concurrent chips) and sum-pJ. One
+    /// shard degenerates to `simulate_heads_planned` exactly (a
+    /// full-range slice reproduces the plan set).
+    ///
+    /// Cost semantics mirror the functional fan-out: every chip ingests
+    /// the *full* batch (keys/values replicate, so transfer-in, the
+    /// Step-2 VMMs, and the Xᵀ/V writes are charged per chip at batch
+    /// size), while the plan-driven engines — pruning dispatch, the
+    /// SDDMM column queues, the SpMM replication — shrink to the
+    /// shard's row slice. Sharding therefore accelerates the sparse
+    /// attention engines and pays a replicated-preprocessing floor, the
+    /// honest scale-out trade.
+    pub fn simulate_sharded(&self, shards: &ShardedPlans) -> ShardedSimReport {
+        let reports: Vec<HeadsSimReport> =
+            shards.sets().iter().map(|s| self.simulate_heads_planned(s)).collect();
+        let total_ns = reports.iter().map(|r| r.total_ns).fold(0.0, f64::max);
+        let energy_pj = reports.iter().map(|r| r.energy_pj).sum();
+        ShardedSimReport { shards: reports, total_ns, energy_pj }
     }
 
     /// A simulator for one head's `tiles/heads` chip slice.
@@ -260,6 +311,57 @@ mod tests {
         assert_eq!(a.total_ns, b.total_ns);
         assert_eq!(a.energy_pj, b.energy_pj);
         assert_eq!(a.mean_density, b.mean_density);
+    }
+
+    #[test]
+    fn sharded_report_is_max_ns_sum_pj_over_shards() {
+        let mut rng = SeededRng::new(7);
+        let masks: Vec<MaskMatrix> = (0..4)
+            .map(|h| MaskMatrix::from_dense(&rng.mask_matrix(320, 320, 0.05 + 0.1 * h as f64)))
+            .collect();
+        let plans = PlanSet::build(&masks);
+        let sharded = plans.shard(4);
+        let r = sim().simulate_sharded(&sharded);
+        assert_eq!(r.shards.len(), sharded.count());
+        let max_ns = r.shards.iter().map(|s| s.total_ns).fold(0.0, f64::max);
+        let sum_pj: f64 = r.shards.iter().map(|s| s.energy_pj).sum();
+        assert_eq!(r.total_ns, max_ns, "wall time is the slowest chip");
+        assert!((r.energy_pj - sum_pj).abs() < 1e-6, "energy sums over chips");
+        // Per-head roll-ups agree with the shard-level aggregates.
+        let head_max = (0..4).map(|h| r.head_ns(h)).fold(0.0, f64::max);
+        assert_eq!(r.total_ns, head_max, "max over (shard, head) both ways");
+        let head_pj: f64 = (0..4).map(|h| r.head_pj(h)).sum();
+        assert!((r.energy_pj - head_pj).abs() < 1e-6 * r.energy_pj.max(1.0));
+    }
+
+    #[test]
+    fn one_shard_degenerates_to_heads_report() {
+        let mut rng = SeededRng::new(8);
+        let masks: Vec<MaskMatrix> =
+            (0..2).map(|_| MaskMatrix::from_dense(&rng.mask_matrix(320, 320, 0.1))).collect();
+        let plans = PlanSet::build(&masks);
+        let single = sim().simulate_heads_planned(&plans);
+        let sharded = sim().simulate_sharded(&plans.shard(1));
+        assert_eq!(sharded.shards.len(), 1);
+        assert_eq!(sharded.total_ns, single.total_ns);
+        assert_eq!(sharded.energy_pj, single.energy_pj);
+    }
+
+    #[test]
+    fn four_chips_beat_one_on_a_balanced_batch() {
+        // Batch parallelism must show: each chip sees ~1/4 of the rows
+        // and coordinates, so the slowest shard finishes well before
+        // the single-chip batch.
+        let plans = PlanSet::single(mask(0.1).plan());
+        let one = sim().simulate_sharded(&plans.shard(1));
+        let four = sim().simulate_sharded(&plans.shard(4));
+        assert_eq!(four.shards.len(), 4);
+        assert!(
+            four.total_ns < one.total_ns,
+            "4 chips {} >= 1 chip {}",
+            four.total_ns,
+            one.total_ns
+        );
     }
 
     #[test]

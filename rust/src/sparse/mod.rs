@@ -22,4 +22,4 @@ mod planset;
 pub use csr::CsrMatrix;
 pub use mask::{BlockCounts, MaskMatrix};
 pub use plan::{DispatchPlan, DISPATCH_TILE};
-pub use planset::PlanSet;
+pub use planset::{PlanSet, ShardedPlans};

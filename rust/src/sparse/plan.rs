@@ -24,6 +24,40 @@ use super::mask::{BlockCounts, MaskMatrix};
 /// Crossbar tile edge of the dispatch fabric (Table 2: 32×32 arrays).
 pub const DISPATCH_TILE: usize = 32;
 
+/// Split `0..n` into at most `parts` contiguous ranges of roughly equal
+/// total weight (greedy target fill, never an empty range). The one
+/// partitioner behind every nnz-balanced split: per-kernel worker
+/// dispatch ([`DispatchPlan::partition_rows`]) and batch-parallel shard
+/// assignment ([`PlanSet::partition_rows`][super::PlanSet::partition_rows]).
+pub(crate) fn partition_by_weights(
+    n: usize,
+    weight: impl Fn(usize) -> usize,
+    parts: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1);
+    if n == 0 {
+        return Vec::new();
+    }
+    let total: usize = (0..n).map(&weight).sum();
+    if parts == 1 || total == 0 {
+        return vec![0..n];
+    }
+    let target = total.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut budget = 0usize;
+    for i in 0..n {
+        budget += weight(i);
+        if budget >= target && i + 1 < n && out.len() + 1 < parts {
+            out.push(start..i + 1);
+            start = i + 1;
+            budget = 0;
+        }
+    }
+    out.push(start..n);
+    out
+}
+
 /// The precomputed dispatch schedule of one pruning mask.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DispatchPlan {
@@ -149,30 +183,48 @@ impl DispatchPlan {
     }
 
     /// Split `0..rows` into at most `parts` contiguous ranges of roughly
-    /// equal nnz — the work partition for parallel kernel dispatch.
+    /// equal nnz — the work partition for parallel kernel dispatch and
+    /// (via [`PlanSet`][super::PlanSet]) for batch-parallel sharding.
     pub fn partition_rows(&self, parts: usize) -> Vec<std::ops::Range<usize>> {
-        let parts = parts.max(1);
-        let total = self.nnz();
-        if self.rows == 0 {
-            return Vec::new();
-        }
-        if parts == 1 || total == 0 {
-            return vec![0..self.rows];
-        }
-        let target = total.div_ceil(parts);
-        let mut out = Vec::with_capacity(parts);
-        let mut start = 0usize;
-        let mut budget = 0usize;
-        for i in 0..self.rows {
-            budget += self.row_nnz(i);
-            if budget >= target && i + 1 < self.rows && out.len() + 1 < parts {
-                out.push(start..i + 1);
-                start = i + 1;
-                budget = 0;
+        partition_by_weights(self.rows, |i| self.row_nnz(i), parts)
+    }
+
+    /// The plan restricted to the contiguous row range `rows` — one
+    /// shard's view of the batch: local row indices `0..rows.len()`,
+    /// full key columns. The CSR topology is carried over (no rescan);
+    /// the per-column queue depths and tile occupancy are rebuilt for
+    /// the slice, because the shard's chip dispatches only its own
+    /// coordinates. Slicing the full range reproduces the plan exactly.
+    pub fn slice_rows(&self, rows: std::ops::Range<usize>) -> DispatchPlan {
+        assert!(
+            rows.start <= rows.end && rows.end <= self.rows,
+            "slice {rows:?} of {} rows",
+            self.rows
+        );
+        let n = rows.len();
+        let tile_rows = n.div_ceil(DISPATCH_TILE).max(1);
+        let tile_cols = self.cols.div_ceil(DISPATCH_TILE).max(1);
+        let base = self.row_ptr[rows.start];
+        let row_ptr: Vec<usize> =
+            self.row_ptr[rows.start..=rows.end].iter().map(|p| p - base).collect();
+        let col_idx = self.col_idx[base..self.row_ptr[rows.end]].to_vec();
+        let mut col_nnz = vec![0u32; self.cols];
+        let mut counts = vec![0u32; tile_rows * tile_cols];
+        for i in 0..n {
+            let tile_row_base = (i / DISPATCH_TILE) * tile_cols;
+            for &j in &col_idx[row_ptr[i]..row_ptr[i + 1]] {
+                col_nnz[j] += 1;
+                counts[tile_row_base + j / DISPATCH_TILE] += 1;
             }
         }
-        out.push(start..self.rows);
-        out
+        DispatchPlan {
+            rows: n,
+            cols: self.cols,
+            row_ptr,
+            col_idx,
+            col_nnz,
+            blocks: BlockCounts { tile_rows, tile_cols, counts },
+        }
     }
 }
 
@@ -267,6 +319,47 @@ mod tests {
             }
             assert_eq!(cursor, n);
         }
+    }
+
+    #[test]
+    fn slice_full_range_is_identity() {
+        for density in [0.0, 0.15, 1.0] {
+            let p = mask(40, 56, density, 11).plan();
+            assert_eq!(p.slice_rows(0..40), p, "density {density}");
+        }
+    }
+
+    #[test]
+    fn slice_matches_rebuilt_subplan() {
+        let m = mask(48, 64, 0.2, 12);
+        let p = m.plan();
+        for range in [0..16, 16..48, 7..9, 31..33] {
+            let sliced = p.slice_rows(range.clone());
+            // Rebuild from the dense rows of the same range: the slice
+            // must equal a from-scratch scan of that sub-mask.
+            let sub = MaskMatrix::from_dense(
+                &m.to_dense().row_block(range.start, range.end),
+            );
+            assert_eq!(sliced, sub.plan(), "range {range:?}");
+        }
+    }
+
+    #[test]
+    fn slice_topology_and_queues() {
+        let m = mask(64, 64, 0.25, 13);
+        let p = m.plan();
+        let s = p.slice_rows(10..30);
+        assert_eq!((s.rows(), s.cols()), (20, 64));
+        let want_nnz: usize = (10..30).map(|i| p.row_nnz(i)).sum();
+        assert_eq!(s.nnz(), want_nnz);
+        for i in 0..20 {
+            assert_eq!(s.row_cols(i), p.row_cols(10 + i), "local row {i}");
+        }
+        for j in 0..64 {
+            let want = (10..30).filter(|&i| m.get(i, j)).count() as u32;
+            assert_eq!(s.col_queue_depths()[j], want, "column {j}");
+        }
+        assert_eq!(s.blocks().total(), want_nnz as u64);
     }
 
     #[test]

@@ -10,6 +10,13 @@
 //!
 //! Like the single-plan path, no consumer re-walks a mask: everything
 //! downstream reads the per-head plans built here.
+//!
+//! Batch-parallel sharding generalizes the set once more: a
+//! [`ShardedPlans`] partitions the batch rows into nnz-balanced
+//! contiguous ranges ([`PlanSet::partition_rows`], weights summed over
+//! heads) and slices every head's plan to each range
+//! ([`PlanSet::slice_rows`]) — one plan set per shard, no rescan, each
+//! shard a logical chip.
 
 use crate::util::par::par_map;
 
@@ -96,6 +103,90 @@ impl PlanSet {
     pub fn max_col_queue(&self) -> u64 {
         self.plans.iter().map(DispatchPlan::max_col_queue).max().unwrap_or(0)
     }
+
+    /// Batch rows (head masks share one shape).
+    pub fn rows(&self) -> usize {
+        self.plans[0].rows()
+    }
+
+    /// Split `0..rows` into at most `parts` contiguous ranges balanced
+    /// by the per-row nnz *summed over heads* — the batch-parallel
+    /// shard partition. Every shard runs all heads on its row slice, so
+    /// its work is the row's total coordinate count across heads, not
+    /// the row count.
+    pub fn partition_rows(&self, parts: usize) -> Vec<std::ops::Range<usize>> {
+        super::plan::partition_by_weights(
+            self.rows(),
+            |i| self.plans.iter().map(|p| p.row_nnz(i)).sum(),
+            parts,
+        )
+    }
+
+    /// Every head's plan sliced to the contiguous row range — one
+    /// shard's plan set (no rescan; see [`DispatchPlan::slice_rows`]).
+    pub fn slice_rows(&self, rows: std::ops::Range<usize>) -> PlanSet {
+        Self { plans: self.plans.iter().map(|p| p.slice_rows(rows.clone())).collect() }
+    }
+
+    /// Partition the batch into `shards` nnz-balanced row ranges and
+    /// slice every head's plan to each — the per-shard view consumed by
+    /// the sharded kernels, the multi-chip simulator, and the
+    /// coordinator's shard accounting.
+    pub fn shard(&self, shards: usize) -> ShardedPlans {
+        let ranges = self.partition_rows(shards);
+        let sets = ranges.iter().map(|r| self.slice_rows(r.clone())).collect();
+        ShardedPlans { ranges, sets }
+    }
+}
+
+/// The per-shard view of one batch's [`PlanSet`]: contiguous row ranges
+/// exactly tiling `0..rows` (at most the requested shard count, never
+/// empty) and each head's plans sliced to them. Shard `s` is one
+/// logical chip: it executes and is costed over `sets[s]` while reading
+/// the full batch for keys/values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardedPlans {
+    ranges: Vec<std::ops::Range<usize>>,
+    sets: Vec<PlanSet>,
+}
+
+impl ShardedPlans {
+    /// Number of shards actually cut (≤ requested; small or empty
+    /// batches may not fill every chip).
+    pub fn count(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Shard `s`'s batch-row range.
+    pub fn range(&self, s: usize) -> &std::ops::Range<usize> {
+        &self.ranges[s]
+    }
+
+    /// All shard ranges, shard order.
+    pub fn ranges(&self) -> &[std::ops::Range<usize>] {
+        &self.ranges
+    }
+
+    /// Shard `s`'s sliced plan set (one plan per head).
+    pub fn set(&self, s: usize) -> &PlanSet {
+        &self.sets[s]
+    }
+
+    /// All shard plan sets, shard order.
+    pub fn sets(&self) -> &[PlanSet] {
+        &self.sets
+    }
+
+    /// Per-shard coordinate load (nnz summed over heads), shard order —
+    /// the balance the partition optimizes.
+    pub fn shard_nnz(&self) -> Vec<usize> {
+        self.sets.iter().map(PlanSet::total_nnz).collect()
+    }
+
+    /// Per-shard row counts, shard order.
+    pub fn shard_rows(&self) -> Vec<usize> {
+        self.ranges.iter().map(|r| r.len()).collect()
+    }
 }
 
 #[cfg(test)]
@@ -166,6 +257,57 @@ mod tests {
         for h in 0..4 {
             assert_eq!(set.plan(h), &want, "head {h}");
         }
+    }
+
+    #[test]
+    fn shard_ranges_tile_rows_and_slice_per_head() {
+        let ms = masks(3, 96, 7);
+        let set = PlanSet::build(&ms);
+        let sharded = set.shard(4);
+        assert!(sharded.count() >= 1 && sharded.count() <= 4);
+        let mut cursor = 0usize;
+        for s in 0..sharded.count() {
+            let r = sharded.range(s);
+            assert_eq!(r.start, cursor, "shard {s} not contiguous");
+            assert!(r.end > r.start, "shard {s} empty");
+            cursor = r.end;
+            let sub = sharded.set(s);
+            assert_eq!(sub.heads(), 3);
+            for h in 0..3 {
+                assert_eq!(sub.plan(h), &set.plan(h).slice_rows(r.clone()), "shard {s} head {h}");
+            }
+        }
+        assert_eq!(cursor, 96, "shards must tile 0..rows");
+        assert_eq!(sharded.shard_nnz().iter().sum::<usize>(), set.total_nnz());
+        assert_eq!(sharded.shard_rows().iter().sum::<usize>(), 96);
+    }
+
+    #[test]
+    fn partition_weights_sum_over_heads() {
+        // Two heads with different densities: the partition must
+        // balance the *combined* per-row load, and conserve total nnz.
+        let ms = masks(2, 64, 9);
+        let set = PlanSet::build(&ms);
+        let ranges = set.partition_rows(2);
+        let load = |r: &std::ops::Range<usize>| -> usize {
+            r.clone().map(|i| set.plan(0).row_nnz(i) + set.plan(1).row_nnz(i)).sum()
+        };
+        let loads: Vec<usize> = ranges.iter().map(load).collect();
+        assert_eq!(loads.iter().sum::<usize>(), set.total_nnz());
+        if loads.len() == 2 {
+            let (max, min) = (*loads.iter().max().unwrap(), *loads.iter().min().unwrap());
+            assert!(max <= 2 * min.max(1) + 64, "imbalanced: {loads:?}");
+        }
+    }
+
+    #[test]
+    fn one_shard_is_the_whole_batch() {
+        let ms = masks(2, 48, 10);
+        let set = PlanSet::build(&ms);
+        let sharded = set.shard(1);
+        assert_eq!(sharded.count(), 1);
+        assert_eq!(sharded.range(0), &(0..48));
+        assert_eq!(sharded.set(0), &set, "full-range slice must reproduce the set");
     }
 
     #[test]

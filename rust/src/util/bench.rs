@@ -5,8 +5,15 @@
 //! [`Bencher::finish`] additionally dumps every measurement as JSON under
 //! `target/bench/<group>.json` (override the directory with `BENCH_JSON_DIR`)
 //! so CI and EXPERIMENTS-style capture can diff numbers across commits.
+//!
+//! [`BenchComparison`] is the diff side: per-rung median ratios between
+//! two such dumps, with a regression tolerance — the engine behind the
+//! `cpsaa bench-compare` CI gate.
 
 use std::time::{Duration, Instant};
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
 
 /// One measurement's summary.
 #[derive(Clone, Debug)]
@@ -103,6 +110,140 @@ impl Bencher {
     }
 }
 
+/// One rung's baseline-vs-current comparison.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    /// Baseline median: `None` when the rung is new (absent from the
+    /// baseline), `Some(0)` for a *seeded* entry (committed placeholder
+    /// recorded before any CI run) — both listed, neither compared.
+    pub baseline_ns: Option<u64>,
+    pub current_ns: u64,
+    /// `current / baseline`; `None` for seeded or new rungs.
+    pub ratio: Option<f64>,
+    pub regressed: bool,
+}
+
+/// The per-rung diff of two bench JSON dumps. Rules:
+///
+/// * rung in both, baseline > 0 → ratio compared against `tolerance`
+///   (fail when `current > tolerance × baseline`);
+/// * baseline median 0 → "seed" (pass; the committed cold-start
+///   baseline has no machine-specific numbers to hold against);
+/// * rung only in current → "new" (pass);
+/// * rung only in baseline → listed in `missing` (warned, not failed —
+///   renames would otherwise block the PR that makes them).
+#[derive(Clone, Debug)]
+pub struct BenchComparison {
+    pub deltas: Vec<BenchDelta>,
+    /// Rungs present in the baseline but absent from the current dump.
+    pub missing: Vec<String>,
+    pub tolerance: f64,
+}
+
+impl BenchComparison {
+    /// Compare two dump files produced by [`Bencher::finish`] (or a
+    /// committed baseline in the same format).
+    pub fn from_files(
+        baseline: &std::path::Path,
+        current: &std::path::Path,
+        tolerance: f64,
+    ) -> Result<Self> {
+        let base = std::fs::read_to_string(baseline)
+            .with_context(|| format!("reading baseline {}", baseline.display()))?;
+        let cur = std::fs::read_to_string(current)
+            .with_context(|| format!("reading current {}", current.display()))?;
+        Self::from_json(&base, &cur, tolerance)
+    }
+
+    /// Compare two dump strings.
+    pub fn from_json(baseline: &str, current: &str, tolerance: f64) -> Result<Self> {
+        if !tolerance.is_finite() || tolerance <= 0.0 {
+            crate::bail!("tolerance must be positive, got {tolerance}");
+        }
+        let base = parse_medians(baseline).context("parsing baseline bench JSON")?;
+        let cur = parse_medians(current).context("parsing current bench JSON")?;
+        let mut deltas = Vec::with_capacity(cur.len());
+        for (name, current_ns) in &cur {
+            let baseline_ns = base.iter().find(|(n, _)| n == name).map(|(_, m)| *m);
+            let ratio = match baseline_ns {
+                Some(b) if b > 0 => Some(*current_ns as f64 / b as f64),
+                _ => None,
+            };
+            deltas.push(BenchDelta {
+                name: name.clone(),
+                baseline_ns,
+                current_ns: *current_ns,
+                ratio,
+                regressed: ratio.is_some_and(|r| r > tolerance),
+            });
+        }
+        let missing = base
+            .iter()
+            .filter(|(n, _)| !cur.iter().any(|(c, _)| c == n))
+            .map(|(n, _)| n.clone())
+            .collect();
+        Ok(Self { deltas, missing, tolerance })
+    }
+
+    /// Rungs that regressed beyond the tolerance.
+    pub fn regressions(&self) -> Vec<&BenchDelta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+
+    /// The comparison as a markdown table (lands in the CI job summary).
+    pub fn markdown(&self) -> String {
+        let mut s = String::from("### Bench regression gate\n\n");
+        s.push_str(&format!("tolerance: fail when current > {}× baseline\n\n", self.tolerance));
+        s.push_str("| rung | baseline | current | ratio | status |\n");
+        s.push_str("|---|---:|---:|---:|---|\n");
+        for d in &self.deltas {
+            let (ratio, status) = match (d.ratio, d.baseline_ns) {
+                (Some(r), _) if d.regressed => (format!("{r:.2}x"), "**REGRESSED**"),
+                (Some(r), _) => (format!("{r:.2}x"), "ok"),
+                (None, Some(_)) => ("–".to_string(), "seed"),
+                (None, None) => ("–".to_string(), "new"),
+            };
+            s.push_str(&format!(
+                "| {} | {} | {} | {ratio} | {status} |\n",
+                d.name,
+                fmt_ns(d.baseline_ns.unwrap_or(0)),
+                fmt_ns(d.current_ns),
+            ));
+        }
+        for name in &self.missing {
+            s.push_str(&format!("| {name} | – | – | – | missing from current |\n"));
+        }
+        s
+    }
+}
+
+fn fmt_ns(ns: u64) -> String {
+    if ns == 0 {
+        "–".into()
+    } else if ns >= 1_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// Pull `(name, median_ns)` pairs out of a [`Bencher::finish`]-format
+/// dump, dump order preserved.
+fn parse_medians(text: &str) -> Result<Vec<(String, u64)>> {
+    let root = Json::parse(text)?;
+    let benches = root.get("benchmarks")?.as_arr()?;
+    let mut out = Vec::with_capacity(benches.len());
+    for b in benches {
+        let name = b.get("name")?.as_str()?.to_string();
+        let median = b.get("median_ns")?.as_usize()? as u64;
+        out.push((name, median));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +272,83 @@ mod tests {
         b.run("a", || 1);
         b.run("b", || 2);
         assert_eq!(b.results.len(), 2);
+    }
+
+    fn dump(entries: &[(&str, u64)]) -> String {
+        let mut b = String::from("{\"group\": \"t\", \"iters\": 3, \"benchmarks\": [");
+        for (i, (name, median)) in entries.iter().enumerate() {
+            if i > 0 {
+                b.push(',');
+            }
+            b.push_str(&format!("{{\"name\": {name:?}, \"median_ns\": {median}}}"));
+        }
+        b.push_str("]}");
+        b
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance() {
+        let base = dump(&[("a", 1000), ("b", 2000)]);
+        let cur = dump(&[("a", 1200), ("b", 1900)]);
+        let cmp = BenchComparison::from_json(&base, &cur, 1.25).unwrap();
+        assert!(cmp.regressions().is_empty(), "{:?}", cmp.deltas);
+        assert_eq!(cmp.deltas.len(), 2);
+        assert!((cmp.deltas[0].ratio.unwrap() - 1.2).abs() < 1e-9);
+        assert!(cmp.markdown().contains("| a |"));
+        assert!(cmp.markdown().contains("ok"));
+    }
+
+    #[test]
+    fn compare_fails_beyond_tolerance() {
+        let base = dump(&[("fast", 1000), ("slow", 1000)]);
+        let cur = dump(&[("fast", 1100), ("slow", 1500)]);
+        let cmp = BenchComparison::from_json(&base, &cur, 1.25).unwrap();
+        let regs = cmp.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "slow");
+        assert!(cmp.markdown().contains("REGRESSED"), "{}", cmp.markdown());
+    }
+
+    #[test]
+    fn seeded_and_new_rungs_pass() {
+        // A committed cold-start baseline seeds every rung at 0; a new
+        // rung is absent entirely. Neither may fail the gate.
+        let base = dump(&[("seeded", 0), ("gone", 500)]);
+        let cur = dump(&[("seeded", 123456), ("fresh", 999)]);
+        let cmp = BenchComparison::from_json(&base, &cur, 1.25).unwrap();
+        assert!(cmp.regressions().is_empty());
+        assert_eq!(cmp.missing, vec!["gone".to_string()]);
+        let md = cmp.markdown();
+        assert!(md.contains("seed"), "{md}");
+        assert!(md.contains("new"), "{md}");
+        assert!(md.contains("missing from current"), "{md}");
+    }
+
+    #[test]
+    fn compare_round_trips_real_dump_format() {
+        // The comparison must parse exactly what Bencher::finish writes.
+        let mut b = Bencher::new("rt");
+        b.iters = 1;
+        b.warmup = 0;
+        b.run("x", || 1);
+        let j = b.json_string();
+        let cmp = BenchComparison::from_json(&j, &j, 1.25).unwrap();
+        assert_eq!(cmp.deltas.len(), 1);
+        // identical dumps: either ratio 1.0 or seeded (a 0 ns median on
+        // a fast machine)
+        let d = &cmp.deltas[0];
+        assert!(!d.regressed);
+        if let Some(r) = d.ratio {
+            assert!((r - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn bad_tolerance_rejected() {
+        let base = dump(&[("a", 1)]);
+        assert!(BenchComparison::from_json(&base, &base, 0.0).is_err());
+        assert!(BenchComparison::from_json(&base, &base, f64::NAN).is_err());
+        assert!(BenchComparison::from_json("not json", &base, 1.25).is_err());
     }
 
     #[test]

@@ -186,6 +186,119 @@ fn serve_heads_invalid_value_errors() {
 }
 
 #[test]
+fn serve_shards_flag_end_to_end() {
+    // Acceptance: `serve --shards 4 --heads 8` serves with per-shard
+    // metrics lines (aggregates + batch-attributed tail).
+    let art = synth_artifacts("shards", 8);
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "2",
+        "--layers",
+        "1",
+        "--heads",
+        "8",
+        "--shards",
+        "4",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("8 heads"), "{text}");
+    assert!(text.contains("4 shards"), "{text}");
+    assert!(text.contains("served 2 requests"), "{text}");
+    // per-shard aggregate metrics printed
+    assert!(text.contains("shard 0:"), "{text}");
+    // batch-attributed shard lines carry their batch id
+    assert!(text.contains("batch "), "{text}");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn serve_shards_invalid_value_errors() {
+    let art = synth_artifacts("shards-bad", 2);
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "1",
+        "--shards",
+        "0",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("shards"), "{text}");
+    let (ok, _) = cpsaa(&["--artifacts", art.to_str().unwrap(), "serve", "--shards", "lots"]);
+    assert!(!ok);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn bench_compare_gate_passes_and_fails() {
+    let dir = std::env::temp_dir().join(format!("cpsaa-cli-bcmp-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("base.json");
+    let good = dir.join("good.json");
+    let bad = dir.join("bad.json");
+    let dump = |entries: &[(&str, u64)]| {
+        let rows: Vec<String> = entries
+            .iter()
+            .map(|(n, m)| format!("{{\"name\": {n:?}, \"median_ns\": {m}}}"))
+            .collect();
+        format!(
+            "{{\"group\": \"hotpath\", \"iters\": 3, \"benchmarks\": [{}]}}",
+            rows.join(",")
+        )
+    };
+    std::fs::write(&base, dump(&[("a", 1000), ("b", 2000), ("seeded", 0)])).unwrap();
+    std::fs::write(&good, dump(&[("a", 1100), ("b", 1800), ("seeded", 5), ("new", 7)])).unwrap();
+    std::fs::write(&bad, dump(&[("a", 2000), ("b", 1800)])).unwrap();
+
+    let (ok, text) =
+        cpsaa(&["bench-compare", base.to_str().unwrap(), good.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("bench-compare OK"), "{text}");
+    assert!(text.contains("| a |"), "{text}");
+    assert!(text.contains("seed"), "{text}");
+
+    let (ok, text) = cpsaa(&[
+        "bench-compare",
+        base.to_str().unwrap(),
+        bad.to_str().unwrap(),
+        "--tolerance",
+        "1.25",
+    ]);
+    assert!(!ok, "2.0x regression must fail the gate: {text}");
+    assert!(text.contains("regressed") && text.contains("a"), "{text}");
+
+    // missing args is a usage error
+    let (ok, text) = cpsaa(&["bench-compare", base.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(text.contains("BASELINE"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_compare_accepts_committed_baseline() {
+    // The committed baseline must parse and pass the gate against
+    // itself — true both while it is seeded (every rung skipped) and
+    // after a refresh with real medians (every ratio exactly 1.0), so
+    // the documented refresh workflow cannot break this test. It must
+    // also name the CI-asserted shard rungs.
+    let baseline = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_BASELINE.json");
+    let body = std::fs::read_to_string(&baseline).unwrap();
+    assert!(body.contains("attention_320x512_shards1_plan_reuse"), "baseline lost shard rungs");
+    assert!(body.contains("attention_320x512_shards4_plan_reuse"), "baseline lost shard rungs");
+    let (ok, text) = cpsaa(&[
+        "bench-compare",
+        baseline.to_str().unwrap(),
+        baseline.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("bench-compare OK"), "{text}");
+}
+
+#[test]
 fn check_verifies_artifacts_when_present() {
     let has_artifacts =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists();

@@ -206,6 +206,110 @@ fn served_heads8_matches_golden_multihead_reference() {
 }
 
 #[test]
+fn served_shards4_bit_identical_to_shards1_with_shard_lines() {
+    // Acceptance: a served request with shards = 4 must produce exactly
+    // the hidden states of the unsharded (PR 2) path, carry per-shard
+    // cost lines that merge as max-ns / sum-pJ, and leave per-shard
+    // metrics behind. Artifacts are synthesized, so this runs anywhere.
+    let model = heads8_model();
+    let dir1 = std::env::temp_dir()
+        .join(format!("cpsaa-it-shards1-{}", std::process::id()));
+    let dir4 = std::env::temp_dir()
+        .join(format!("cpsaa-it-shards4-{}", std::process::id()));
+    ArtifactSet::synthesize(&dir1, &model, 42).unwrap();
+    ArtifactSet::synthesize(&dir4, &model, 42).unwrap();
+    let svc1 = Service::start(
+        dir1.clone(),
+        HardwareConfig::paper(),
+        model.clone(),
+        ServiceConfig { layers: 2, shards: 1, ..Default::default() },
+    )
+    .unwrap();
+    let svc4 = Service::start(
+        dir4.clone(),
+        HardwareConfig::paper(),
+        model.clone(),
+        ServiceConfig { layers: 2, shards: 4, ..Default::default() },
+    )
+    .unwrap();
+    let x = SeededRng::new(123).normal_matrix(20, model.d_model, 1.0);
+    let r1 = svc1.infer(1, x.clone()).unwrap();
+    let r4 = svc4.infer(1, x).unwrap();
+
+    // shards=1 responses stay exactly the unsharded shape: no shard lines
+    assert!(r1.shard_sim_ns.is_empty());
+    assert_eq!(r1.shards(), 1);
+
+    // functional equivalence to the bit
+    assert_eq!(r4.hidden, r1.hidden, "sharded serving changed the results");
+    assert_eq!(r4.heads(), 8);
+    assert!(!r4.shard_sim_ns.is_empty() && r4.shard_sim_ns.len() <= 4);
+    assert_eq!(r4.shards(), r4.shard_sim_ns.len());
+    assert_eq!(r4.shard_rows.iter().sum::<usize>(), model.seq_len, "shards tile the batch");
+
+    // cost merge: latency is the slowest chip, energy sums over chips
+    let max_shard = r4.shard_sim_ns.iter().copied().fold(0.0, f64::max);
+    assert_eq!(r4.sim_ns, max_shard, "sim latency must be max over shards");
+    let shard_pj: f64 = r4.shard_sim_pj.iter().sum();
+    assert!(
+        (shard_pj - r4.sim_pj).abs() < 1e-6 * r4.sim_pj.max(1.0),
+        "energy must sum over shards: {shard_pj} vs {}",
+        r4.sim_pj
+    );
+    // per-head lines survive sharding and still bound the batch
+    assert_eq!(r4.head_sim_ns.len(), 8);
+    let max_head = r4.head_sim_ns.iter().copied().fold(0.0, f64::max);
+    assert_eq!(r4.sim_ns, max_head, "head and shard roll-ups must agree");
+    // densities are batch properties, identical across modes
+    assert_eq!(r4.head_density, r1.head_density);
+
+    // per-shard metrics recorded, attributed to this batch
+    let m = svc4.metrics();
+    assert!(!m.shards.is_empty() && m.shards.len() <= 4);
+    assert_eq!(m.shards.iter().map(|s| s.rows).sum::<u64>(), model.seq_len as u64);
+    assert!(!m.shard_lines.is_empty());
+    assert!(m.shard_lines.iter().all(|l| l.batch == 0), "first batch id must be 0");
+    std::fs::remove_dir_all(&dir1).ok();
+    std::fs::remove_dir_all(&dir4).ok();
+}
+
+#[test]
+fn metric_lines_attributable_across_batches() {
+    // Two sequential requests → two packed batches; every per-head and
+    // per-shard line must name its batch so interleaved logs stay
+    // attributable.
+    let model = heads8_model();
+    let dir = std::env::temp_dir()
+        .join(format!("cpsaa-it-batchid-{}", std::process::id()));
+    ArtifactSet::synthesize(&dir, &model, 9).unwrap();
+    let svc = Service::start(
+        dir.clone(),
+        HardwareConfig::paper(),
+        model.clone(),
+        ServiceConfig { layers: 1, shards: 2, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = SeededRng::new(55);
+    for id in 0..2u64 {
+        let x = rng.normal_matrix(12, model.d_model, 1.0);
+        svc.infer(id, x).unwrap();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.batches, 2);
+    let head_batches: std::collections::BTreeSet<u64> =
+        m.head_lines.iter().map(|l| l.batch).collect();
+    assert_eq!(head_batches, std::collections::BTreeSet::from([0u64, 1]));
+    let shard_batches: std::collections::BTreeSet<u64> =
+        m.shard_lines.iter().map(|l| l.batch).collect();
+    assert_eq!(shard_batches, std::collections::BTreeSet::from([0u64, 1]));
+    // within one batch, head lines cover every head exactly once
+    let batch0_heads: Vec<usize> =
+        m.head_lines.iter().filter(|l| l.batch == 0).map(|l| l.head).collect();
+    assert_eq!(batch0_heads, (0..8).collect::<Vec<usize>>());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn service_rejects_zero_layers_at_startup() {
     let dir = std::env::temp_dir()
         .join(format!("cpsaa-it-layers0-{}", std::process::id()));
@@ -237,7 +341,7 @@ fn service_concurrent_mixed_lengths_heads8() {
         dir.clone(),
         HardwareConfig::paper(),
         model.clone(),
-        ServiceConfig { layers: 1, max_wait: Duration::from_millis(5) },
+        ServiceConfig { layers: 1, max_wait: Duration::from_millis(5), ..Default::default() },
     )
     .unwrap();
     const CLIENTS: u64 = 6;

@@ -159,6 +159,142 @@ fn prop_one_head_fanout_bit_identical_to_single_head() {
 }
 
 #[test]
+fn partition_rows_degenerate_masks() {
+    // All-empty mask: one range, exactly tiling 0..n.
+    let empty = MaskMatrix::zeros(64, 64).plan();
+    let ranges = empty.partition_rows(4);
+    assert_eq!(ranges, vec![0..64]);
+
+    // Single dense row carrying all the mass: the partition still tiles
+    // 0..n with non-empty contiguous ranges, at most `parts` of them.
+    for hot in [0usize, 31, 63] {
+        let mut m = MaskMatrix::zeros(64, 64);
+        for j in 0..64 {
+            m.set(hot, j, true);
+        }
+        let p = m.plan();
+        let ranges = p.partition_rows(4);
+        assert!(!ranges.is_empty() && ranges.len() <= 4, "hot {hot}: {ranges:?}");
+        let mut cursor = 0;
+        for r in &ranges {
+            assert_eq!(r.start, cursor, "hot {hot}: gap at {r:?}");
+            assert!(r.end > r.start, "hot {hot}: empty range");
+            cursor = r.end;
+        }
+        assert_eq!(cursor, 64, "hot {hot}: ranges must tile 0..64");
+    }
+
+    // Empty rows interspersed with occupied ones (every third row
+    // cleared).
+    let mut rng = SeededRng::new(40);
+    let dense = rng.mask_matrix(96, 96, 0.2);
+    let mut m = MaskMatrix::zeros(96, 96);
+    for i in 0..96 {
+        if i % 3 != 0 {
+            for j in 0..96 {
+                if dense.get(i, j) != 0.0 {
+                    m.set(i, j, true);
+                }
+            }
+        }
+    }
+    let p = m.plan();
+    let ranges = p.partition_rows(4);
+    let mut cursor = 0;
+    for r in &ranges {
+        assert_eq!(r.start, cursor);
+        cursor = r.end;
+    }
+    assert_eq!(cursor, 96);
+    let total: usize = ranges.iter().map(|r| r.clone().map(|i| p.row_nnz(i)).sum::<usize>()).sum();
+    assert_eq!(total, p.nnz(), "partition must conserve nnz");
+}
+
+#[test]
+fn prop_partition_rows_nnz_imbalance_bounded() {
+    // On random masks the greedy nnz partition must stay within 10%
+    // imbalance across 4 shards (the serving fan-out's balance claim);
+    // deterministic seeds keep this reproducible.
+    check("partition_imbalance", 12, |rng| {
+        let density = 0.1 + rng.uniform() as f64 * 0.2;
+        let seed = rng.gen_range_usize(0, 1 << 20) as u64;
+        let mask =
+            MaskMatrix::from_dense(&SeededRng::new(seed).mask_matrix(320, 320, density));
+        let plan = mask.plan();
+        let ranges = plan.partition_rows(4);
+        prop_assert!(ranges.len() == 4, "expected 4 shards, got {:?}", ranges.len());
+        let loads: Vec<usize> =
+            ranges.iter().map(|r| r.clone().map(|i| plan.row_nnz(i)).sum()).collect();
+        let max = *loads.iter().max().unwrap() as f64;
+        let min = *loads.iter().min().unwrap() as f64;
+        let imbalance = (max - min) / max.max(1.0);
+        prop_assert!(
+            imbalance <= 0.10,
+            "shard nnz imbalance {imbalance:.3} > 10% (loads {loads:?}, density {density:.2})"
+        );
+        // and the ranges exactly tile 0..320
+        let mut cursor = 0usize;
+        for r in &ranges {
+            prop_assert!(r.start == cursor, "gap at {r:?}");
+            cursor = r.end;
+        }
+        prop_assert!(cursor == 320, "ranges end at {cursor}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_slice_rows_matches_subplan_rebuild() {
+    // A sliced plan must equal the plan built from scratch on the same
+    // row block — across the full density range, empty/full included.
+    check("plan_slice_rows", default_cases(), |rng| {
+        let n = 8 + rng.gen_range_usize(0, 80);
+        let m = 8 + rng.gen_range_usize(0, 80);
+        let mask = full_range_mask(rng, n, m);
+        let plan = mask.plan();
+        prop_assert!(plan.slice_rows(0..n) == plan, "full-range slice must be identity");
+        let lo = rng.gen_range_usize(0, n);
+        let hi = lo + 1 + rng.gen_range_usize(0, n - lo);
+        let sliced = plan.slice_rows(lo..hi);
+        let rebuilt = MaskMatrix::from_dense(&mask.to_dense().row_block(lo, hi)).plan();
+        prop_assert!(sliced == rebuilt, "slice {lo}..{hi} diverged (n={n}, m={m})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_serving_kernels_bit_identical() {
+    // The acceptance grid: heads × shards, full density sweep. The
+    // sharded encoder layer must produce bit-identical hidden states to
+    // the unsharded PR 2 path at every point, shards=1 included.
+    check("sharded_equivalence", 12, |rng| {
+        let heads = [1, 2, 4][rng.gen_range_usize(0, 3)];
+        let shards = 1 + rng.gen_range_usize(0, 5);
+        let cfg = ModelConfig {
+            seq_len: 24,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            heads,
+            ..Default::default()
+        };
+        let w = MultiHeadWeights::synthetic(&cfg, rng.gen_range_usize(0, 1000) as u64);
+        let x = rng.normal_matrix(24, 32, 1.0);
+        let masks: Vec<MaskMatrix> =
+            (0..heads).map(|_| full_range_mask(rng, 24, 24)).collect();
+        let plans = PlanSet::build(&masks);
+        let want_z = ops::multi_head_attention_planned(&x, &w, &plans, &cfg);
+        let want_h = ops::encoder_layer_heads(&x, &w, &plans, &cfg);
+        let sharded = plans.shard(shards);
+        let z = ops::multi_head_attention_sharded(&x, &w, &sharded, &cfg);
+        prop_assert!(z == want_z, "attention diverged at {heads} heads x {shards} shards");
+        let h = ops::encoder_layer_heads_sharded(&x, &w, &sharded, &cfg);
+        prop_assert!(h == want_h, "encoder diverged at {heads} heads x {shards} shards");
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_planset_stats_match_independent_plans() {
     // Per-head PlanSet statistics (nnz, queue depths, block counts, CSR
     // topology) must match a DispatchPlan built independently from each
