@@ -71,6 +71,48 @@ fn main() {
     let m_for_csr = x.matmul(&w.w_s);
     b.run("csr_from_plan_320", || CsrMatrix::from_plan(&plan, &m_for_csr).nnz());
 
+    // -- fused row-streaming kernel vs the unfused four-pass chain -----------
+    // Same plan, same workload: the fused rung streams SDDMM → scale →
+    // softmax → SpMM per row (zero-copy CsrView topology, workspace
+    // buffers); the unfused rung is the pre-fusion chain over an owned
+    // CSR. Bit-identical outputs (property-tested); CI asserts the
+    // fused median beats the unfused one in the same run
+    // (`cpsaa bench-assert-faster`).
+    let fused_t = b.run("attention_320x512_fused_plan_reuse", || {
+        ops::cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg.model).norm()
+    });
+    let unfused_t = b.run("attention_320x512_unfused_plan_reuse", || {
+        ops::cpsaa_attention_unfused(&x, &w.w_s, &w.w_v, &plan, &cfg.model).norm()
+    });
+    println!(
+        "fused row-streaming vs unfused 4-pass attention: {:.2}x",
+        unfused_t.as_secs_f64() / fused_t.as_secs_f64().max(1e-12)
+    );
+    let enc_fused = b.run("encoder_layer_320x512_fused", || {
+        ops::encoder_layer_planned(&x, &w, &plan, &cfg.model).norm()
+    });
+    let enc_unfused = b.run("encoder_layer_320x512_unfused", || {
+        ops::encoder_layer_unfused(&x, &w, &plan, &cfg.model).norm()
+    });
+    println!(
+        "fused+workspace vs unfused encoder layer: {:.2}x",
+        enc_unfused.as_secs_f64() / enc_fused.as_secs_f64().max(1e-12)
+    );
+
+    // -- u32 vs usize coordinate stream --------------------------------------
+    // The plan's native u32 ⟨α, βᵢ⟩ stream against the same stream
+    // widened to usize (the pre-narrowing layout, built outside the
+    // timer): one gather per coordinate, so the delta is pure
+    // memory-traffic width. Denser 512×512 mask so the stream spills L2.
+    let wide_mask = MaskMatrix::from_dense(&SeededRng::new(7).mask_matrix(512, 512, 0.5));
+    let wide_plan = wide_mask.plan();
+    let widened: Vec<usize> = wide_plan.col_idx().iter().map(|&j| j as usize).collect();
+    let probe: Vec<f32> = (0..512).map(|j| (j as f32).sin()).collect();
+    b.run("coord_stream_u32_gather", || {
+        wide_plan.col_idx().iter().map(|&j| probe[j as usize]).sum::<f32>()
+    });
+    b.run("coord_stream_usize_gather", || widened.iter().map(|&j| probe[j]).sum::<f32>());
+
     // -- multi-head fan-out (plan-reuse mode): 1 vs 8 heads ------------------
     // Same paper workload; the 8-head rung runs 8 concurrent per-head
     // kernels over a prebuilt PlanSet (one plan per head), the 1-head

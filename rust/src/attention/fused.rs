@@ -1,0 +1,167 @@
+//! Fused row-streaming attention kernel — Steps 2–4 (SDDMM → scale →
+//! softmax → SpMM) as one pass per query row.
+//!
+//! CPSAA's §4.5 pipelines never spill the score matrix: a row's SDDMM
+//! dots, the 1/√d_k scale, the streaming max/exp/normalize softmax, and
+//! the SpMM output-row accumulation all happen while the row's scores
+//! sit in a scratch that never leaves L1 — one pass per row instead of
+//! four passes per matrix. Rows dispatch over the plan's nnz-balanced
+//! [`DispatchPlan::partition_rows`] ranges, same as the unfused kernel.
+//!
+//! **Bit-identity contract:** every stage applies exactly the per-row
+//! operation order of the unfused chain (`sddmm_csr` → `scale_values` →
+//! `softmax_rows` → `spmm`): dots accumulate left-to-right, the scale is
+//! a single elementwise multiply, softmax and the SpMM row accumulation
+//! are the literal shared row kernels ([`softmax_row`],
+//! [`spmm_row_into`]). Fusion therefore changes *when* values are
+//! computed, never *what* — fused == unfused to the last bit at any
+//! worker count (property-tested over the density × heads × shards
+//! grid in `tests/properties.rs`).
+
+use crate::sparse::{softmax_row, spmm_row_into, DispatchPlan};
+use crate::tensor::Matrix;
+
+/// One coordinate's SDDMM dot product (shared with the unfused kernel).
+pub(crate) fn dot(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// Fused attention over precomputed projections: `out[i] = softmax(scale
+/// · (m[i] · kvᵀ restricted to plan row i)) · v`, one streaming pass per
+/// row. `out` is reshaped/zeroed in place (workspace reuse); `scratch`
+/// is the serial path's per-row score buffer (parallel workers hold
+/// their own, sized to their range's widest row).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_rows_into(
+    m: &Matrix,
+    kv: &Matrix,
+    v: &Matrix,
+    plan: &DispatchPlan,
+    scale: f32,
+    workers: usize,
+    scratch: &mut Vec<f32>,
+    out: &mut Matrix,
+) {
+    assert_eq!(m.rows(), plan.rows(), "projection rows != plan rows");
+    assert_eq!(m.cols(), kv.cols(), "inner dims");
+    assert_eq!(kv.rows(), plan.cols(), "key rows != plan cols");
+    assert_eq!(v.rows(), plan.cols(), "value rows != plan cols");
+    let d_v = v.cols();
+    out.reset(plan.rows(), d_v);
+    let ranges = plan.partition_rows(workers.max(1));
+    if ranges.len() <= 1 {
+        fuse_range(m, kv, v, plan, scale, 0..plan.rows(), scratch, out.data_mut());
+        return;
+    }
+    // Contiguous row ranges own disjoint output slices; each worker
+    // streams its rows independently (values worker-count invariant).
+    std::thread::scope(|scope| {
+        let mut tail: &mut [f32] = out.data_mut();
+        let mut offset = 0usize;
+        for range in ranges {
+            let (head, rest) =
+                std::mem::take(&mut tail).split_at_mut((range.end - offset) * d_v);
+            tail = rest;
+            offset = range.end;
+            scope.spawn(move || {
+                let mut scratch = Vec::new();
+                fuse_range(m, kv, v, plan, scale, range, &mut scratch, head);
+            });
+        }
+    });
+}
+
+/// The per-row fusion loop over one contiguous row range. `out` is the
+/// range's zeroed output slice (`range.len() × v.cols()`).
+#[allow(clippy::too_many_arguments)]
+fn fuse_range(
+    m: &Matrix,
+    kv: &Matrix,
+    v: &Matrix,
+    plan: &DispatchPlan,
+    scale: f32,
+    rows: std::ops::Range<usize>,
+    scratch: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let d_v = v.cols();
+    let start = rows.start;
+    for i in rows {
+        let cols = plan.row_cols(i);
+        if cols.is_empty() {
+            continue; // empty row: output stays zero, like the unfused SU
+        }
+        scratch.clear();
+        scratch.resize(cols.len(), 0.0);
+        let mrow = m.row(i);
+        for (k, &j) in cols.iter().enumerate() {
+            scratch[k] = dot(mrow, kv.row(j as usize));
+        }
+        for s in scratch.iter_mut() {
+            *s *= scale;
+        }
+        softmax_row(scratch);
+        spmm_row_into(cols, scratch, v, &mut out[(i - start) * d_v..(i - start + 1) * d_v]);
+    }
+}
+
+/// Fused SDDMM + scale + softmax producing plan-ordered probability
+/// values — the shared-scores multi-head path (replicated W_S): P is
+/// computed once here, then only the per-head V-block SpMM fans out.
+/// Reuses `values` (cleared/resized; workspace recycling).
+pub(crate) fn scores_softmax(
+    m: &Matrix,
+    kv: &Matrix,
+    plan: &DispatchPlan,
+    scale: f32,
+    workers: usize,
+    mut values: Vec<f32>,
+) -> Vec<f32> {
+    assert_eq!(m.rows(), plan.rows(), "projection rows != plan rows");
+    assert_eq!(m.cols(), kv.cols(), "inner dims");
+    assert_eq!(kv.rows(), plan.cols(), "key rows != plan cols");
+    values.clear();
+    values.resize(plan.nnz(), 0.0);
+    let ranges = plan.partition_rows(workers.max(1));
+    if ranges.len() <= 1 {
+        score_range(m, kv, plan, scale, 0..plan.rows(), &mut values);
+        return values;
+    }
+    std::thread::scope(|scope| {
+        let mut tail: &mut [f32] = &mut values;
+        let mut offset = 0usize;
+        for range in ranges {
+            let hi = plan.row_ptr()[range.end] as usize;
+            let (head, rest) = std::mem::take(&mut tail).split_at_mut(hi - offset);
+            tail = rest;
+            offset = hi;
+            scope.spawn(move || score_range(m, kv, plan, scale, range, head));
+        }
+    });
+    values
+}
+
+/// Score + scale + softmax one contiguous row range into its slice of
+/// the plan-ordered value stream.
+fn score_range(
+    m: &Matrix,
+    kv: &Matrix,
+    plan: &DispatchPlan,
+    scale: f32,
+    rows: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
+    let base = plan.row_ptr()[rows.start] as usize;
+    for i in rows {
+        let r = plan.row_range(i);
+        let s = &mut out[r.start - base..r.end - base];
+        let mrow = m.row(i);
+        for (k, &j) in plan.row_cols(i).iter().enumerate() {
+            s[k] = dot(mrow, kv.row(j as usize));
+        }
+        for x in s.iter_mut() {
+            *x *= scale;
+        }
+        softmax_row(s);
+    }
+}

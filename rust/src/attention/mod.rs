@@ -12,14 +12,23 @@
 //!   concat + optional W_O
 //! * [`ops::dense_attention`] — the CPDAA dense mode of Fig. 14
 //! * [`ops::vanilla_attention`] — Fig. 1a, used to prove eq. 2 ≡ eq. 3
+//!
+//! The hot path runs *fused*: [`fused`] streams SDDMM → scale → softmax
+//! → SpMM one query row at a time over the plan topology (bit-identical
+//! to the unfused reference chain, which [`ops::cpsaa_attention_unfused`]
+//! keeps alive for property tests and benches), with every large
+//! intermediate drawn from a [`workspace::KernelWorkspace`].
 
+pub(crate) mod fused;
 pub mod mask;
 pub mod ops;
 pub mod quant;
 pub mod softmax;
 pub mod weights;
+pub mod workspace;
 
 pub use mask::generate as generate_mask;
 pub use mask::generate_heads as generate_head_masks;
 pub use ops::{cpsaa_attention, dense_attention, vanilla_attention};
 pub use weights::{HeadWeights, MultiHeadWeights, Weights};
+pub use workspace::{KernelWorkspace, WorkspacePool};

@@ -4,20 +4,65 @@
 //! once (by the caller, or implicitly by the compatibility wrappers) and
 //! the ⟨α, βᵢ⟩ topology drives every dot product, exactly as the ReCAM
 //! coordinate stream drives the crossbar SDDMM engine.
+//!
+//! The hot path is **fused** ([`super::fused`]): SDDMM → scale → softmax
+//! → SpMM stream through one pass per query row, bit-identical to the
+//! unfused four-pass chain that [`cpsaa_attention_unfused`] keeps as the
+//! golden reference. Large intermediates come from a
+//! [`KernelWorkspace`]; concurrent head/shard workers check workspaces
+//! out of a shared [`WorkspacePool`] so the encoder stack stops
+//! allocating per layer per head per shard.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::config::ModelConfig;
-use crate::sparse::{CsrMatrix, DispatchPlan, MaskMatrix, PlanSet};
+use crate::sparse::{CsrMatrix, CsrView, DispatchPlan, MaskMatrix, PlanSet};
 use crate::tensor::Matrix;
 use crate::util::par::par_map;
 
+use super::fused::{self, dot};
 use super::softmax;
 use super::weights::MultiHeadWeights;
+use super::workspace::{KernelWorkspace, WorkspacePool};
 
 /// Nonzeros below which parallel dispatch is not worth the thread spawns.
 const PARALLEL_NNZ_THRESHOLD: usize = 1 << 12;
 
-fn dot(x: &[f32], y: &[f32]) -> f32 {
-    x.iter().zip(y).map(|(a, b)| a * b).sum()
+/// Default hard cap on kernel workers (the pre-knob behavior).
+const DEFAULT_WORKER_CAP: usize = 8;
+
+/// Tunable worker cap: 0 = unset (resolved lazily from the
+/// `CPSAA_MAX_KERNEL_WORKERS` env var, else [`DEFAULT_WORKER_CAP`]).
+static WORKER_CAP: AtomicUsize = AtomicUsize::new(0);
+
+/// The kernel worker cap currently in force. Worker counts never change
+/// computed values (dispatch only), so the cap is pure throughput
+/// tuning: big machines raise it via [`set_worker_cap`] (the
+/// `ServiceConfig::max_kernel_workers` knob) or `CPSAA_MAX_KERNEL_WORKERS`.
+pub fn worker_cap() -> usize {
+    match WORKER_CAP.load(Ordering::Relaxed) {
+        0 => {
+            let cap = std::env::var("CPSAA_MAX_KERNEL_WORKERS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&c| c > 0)
+                .unwrap_or(DEFAULT_WORKER_CAP);
+            // compare_exchange, not store: a concurrent set_worker_cap
+            // (service startup) must not be clobbered by this lazy
+            // default resolution.
+            match WORKER_CAP.compare_exchange(0, cap, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => cap,
+                Err(installed) => installed,
+            }
+        }
+        cap => cap,
+    }
+}
+
+/// Set the kernel worker cap (≥ 1 enforced). Process-wide; the serving
+/// layer applies `ServiceConfig::max_kernel_workers` here at startup.
+pub fn set_worker_cap(cap: usize) {
+    WORKER_CAP.store(cap.max(1), Ordering::Relaxed);
 }
 
 /// Worker count for a kernel over `nnz` coordinates (std-only).
@@ -25,22 +70,21 @@ fn workers_for(nnz: usize) -> usize {
     if nnz < PARALLEL_NNZ_THRESHOLD {
         return 1;
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(worker_cap())
 }
 
 /// Plan-driven SDDMM straight into CSR: `S = plan ⊙ (A · B)` where `bt`
 /// is B **already transposed** (row j of `bt` = column j of B). Values
 /// land in plan order — no dense S round-trip. Row ranges are dispatched
-/// across `std::thread::scope` workers, balanced by nnz.
+/// across `std::thread::scope` workers, balanced by nnz. (The unfused
+/// building block; the fused hot path never materializes S at all.)
 pub fn sddmm_csr(a: &Matrix, bt: &Matrix, plan: &DispatchPlan) -> CsrMatrix {
     sddmm_csr_workers(a, bt, plan, workers_for(plan.nnz()))
 }
 
-/// [`sddmm_csr`] with an explicit worker cap — the multi-head path
-/// divides the machine's worker budget across concurrent heads so
-/// `heads` sibling kernels do not oversubscribe the cores. The worker
-/// count never changes the values (every coordinate's dot product is
-/// independent), only the dispatch.
+/// [`sddmm_csr`] with an explicit worker cap. The worker count never
+/// changes the values (every coordinate's dot product is independent),
+/// only the dispatch.
 fn sddmm_csr_workers(a: &Matrix, bt: &Matrix, plan: &DispatchPlan, workers: usize) -> CsrMatrix {
     assert_eq!(a.cols(), bt.cols(), "inner dims");
     assert_eq!((plan.rows(), plan.cols()), (a.rows(), bt.rows()), "plan shape");
@@ -49,9 +93,9 @@ fn sddmm_csr_workers(a: &Matrix, bt: &Matrix, plan: &DispatchPlan, workers: usiz
     if ranges.len() <= 1 {
         for i in 0..plan.rows() {
             let arow = a.row(i);
-            let base = plan.row_ptr()[i];
+            let base = plan.row_ptr()[i] as usize;
             for (k, &j) in plan.row_cols(i).iter().enumerate() {
-                values[base + k] = dot(arow, bt.row(j));
+                values[base + k] = dot(arow, bt.row(j as usize));
             }
         }
         return CsrMatrix::from_plan_values(plan, values);
@@ -60,17 +104,17 @@ fn sddmm_csr_workers(a: &Matrix, bt: &Matrix, plan: &DispatchPlan, workers: usiz
         let mut tail: &mut [f32] = &mut values;
         let mut offset = 0usize;
         for range in ranges {
-            let hi = plan.row_ptr()[range.end];
+            let hi = plan.row_ptr()[range.end] as usize;
             let (head, rest) = std::mem::take(&mut tail).split_at_mut(hi - offset);
             tail = rest;
             offset = hi;
             scope.spawn(move || {
-                let base = plan.row_ptr()[range.start];
+                let base = plan.row_ptr()[range.start] as usize;
                 for i in range {
                     let arow = a.row(i);
-                    let lo = plan.row_ptr()[i];
+                    let lo = plan.row_ptr()[i] as usize;
                     for (k, &j) in plan.row_cols(i).iter().enumerate() {
-                        head[lo + k - base] = dot(arow, bt.row(j));
+                        head[lo + k - base] = dot(arow, bt.row(j as usize));
                     }
                 }
             });
@@ -81,7 +125,7 @@ fn sddmm_csr_workers(a: &Matrix, bt: &Matrix, plan: &DispatchPlan, workers: usiz
 
 /// Masked SDDMM: `mask ⊙ (a @ b)` as a dense matrix — the reference-mode
 /// wrapper over [`sddmm_csr`] (builds a throwaway plan; hot paths use
-/// `sddmm_csr` with a shared plan).
+/// the fused kernel with a shared plan).
 pub fn masked_sddmm(a: &Matrix, b: &Matrix, mask: &MaskMatrix) -> Matrix {
     assert_eq!(a.cols(), b.rows());
     assert_eq!((mask.rows(), mask.cols()), (a.rows(), b.cols()));
@@ -97,8 +141,7 @@ pub fn cpsaa_attention(x: &Matrix, w_s: &Matrix, w_v: &Matrix, mask: &MaskMatrix
 }
 
 /// [`cpsaa_attention`] over a prebuilt [`DispatchPlan`] — the plan-reuse
-/// hot path. The SDDMM writes straight into CSR values over the plan's
-/// topology; softmax and SpMM run on the same structure.
+/// hot path, running the fused row-streaming kernel.
 pub fn cpsaa_attention_planned(
     x: &Matrix,
     w_s: &Matrix,
@@ -106,35 +149,56 @@ pub fn cpsaa_attention_planned(
     plan: &DispatchPlan,
     cfg: &ModelConfig,
 ) -> Matrix {
-    cpsaa_attention_planned_budgeted(x, w_s, w_v, plan, cfg, 1)
+    cpsaa_attention_planned_ws(x, w_s, w_v, plan, cfg, &mut KernelWorkspace::new())
 }
 
-/// One head's attention kernel under a shared machine: the SDDMM worker
-/// budget is divided by `concurrent_heads` (the number of sibling head
-/// kernels running in the same `par_map` fan-out). `concurrent_heads ==
-/// 1` is exactly [`cpsaa_attention_planned`]; the worker count never
-/// changes the computed values.
-fn cpsaa_attention_planned_budgeted(
+/// [`cpsaa_attention_planned`] drawing every intermediate from a
+/// caller-owned [`KernelWorkspace`] — zero hot-path allocation beyond
+/// the returned output.
+pub fn cpsaa_attention_planned_ws(
     x: &Matrix,
     w_s: &Matrix,
     w_v: &Matrix,
     plan: &DispatchPlan,
     cfg: &ModelConfig,
-    concurrent_heads: usize,
+    ws: &mut KernelWorkspace,
 ) -> Matrix {
-    cpsaa_attention_rows_budgeted(x, x, w_s, w_v, plan, cfg, concurrent_heads)
+    cpsaa_attention_rows_fused(x, x, w_s, w_v, plan, cfg, 1, ws)
 }
 
-/// One head's attention for a Q-row block: `q_rows` is a contiguous row
-/// slice of the packed batch, `kv` the full batch (scores and values
-/// attend over every key row), and `plan` the head plan sliced to the
-/// same rows (`plan.rows() == q_rows.rows()`, `plan.cols() ==
-/// kv.rows()`). Every op — the per-row matmul, the per-coordinate SDDMM
-/// dots, the row softmax, the row SpMM — touches only its own row, so
-/// with `q_rows == kv` (the full range) this computes bit-for-bit what
-/// [`cpsaa_attention_planned`] computes; over a partition of the rows
-/// the concatenated blocks are bit-identical to the unsharded output.
-fn cpsaa_attention_rows_budgeted(
+/// The unfused four-pass reference chain (SDDMM → scale → softmax →
+/// SpMM as separate whole-matrix passes over an owned CSR). Kept as the
+/// golden reference the fused kernel is property-tested against
+/// bit-for-bit, and as the `unfused` hotpath bench rung.
+pub fn cpsaa_attention_unfused(
+    x: &Matrix,
+    w_s: &Matrix,
+    w_v: &Matrix,
+    plan: &DispatchPlan,
+    cfg: &ModelConfig,
+) -> Matrix {
+    let m = x.matmul(w_s);
+    let v = x.matmul(w_v);
+    let workers = workers_for(plan.nnz());
+    // S = M·Xᵀ: B = Xᵀ, so Bᵀ = X — no transpose materialized.
+    let mut p = sddmm_csr_workers(&m, x, plan, workers);
+    p.scale_values(1.0 / (cfg.d_k as f32).sqrt());
+    p.softmax_rows();
+    p.spmm(&v)
+}
+
+/// One head's fused attention for a Q-row block: `q_rows` is a
+/// contiguous row slice of the packed batch, `kv` the full batch
+/// (scores and values attend over every key row), and `plan` the head
+/// plan sliced to the same rows. The SDDMM worker budget divides by
+/// `budget_share` (sibling head × shard kernels sharing the machine);
+/// the worker count never changes the computed values. Every op touches
+/// only its own row, so with `q_rows == kv` this computes bit-for-bit
+/// what the full-range kernel computes, and over a partition of the
+/// rows the concatenated blocks are bit-identical to the unsharded
+/// output.
+#[allow(clippy::too_many_arguments)]
+fn cpsaa_attention_rows_fused(
     q_rows: &Matrix,
     kv: &Matrix,
     w_s: &Matrix,
@@ -142,35 +206,47 @@ fn cpsaa_attention_rows_budgeted(
     plan: &DispatchPlan,
     cfg: &ModelConfig,
     budget_share: usize,
+    ws: &mut KernelWorkspace,
 ) -> Matrix {
-    let m = q_rows.matmul(w_s);
-    let v = kv.matmul(w_v);
+    let KernelWorkspace { m, v, row, .. } = ws;
+    q_rows.matmul_into(w_s, m);
+    kv.matmul_into(w_v, v);
     let workers = (workers_for(plan.nnz()) / budget_share.max(1)).max(1);
-    // S = M·Xᵀ: B = Xᵀ, so Bᵀ = X — no transpose materialized.
-    let mut p = sddmm_csr_workers(&m, kv, plan, workers);
-    p.scale_values(1.0 / (cfg.d_k as f32).sqrt());
-    p.softmax_rows();
-    p.spmm(&v)
+    let scale = 1.0 / (cfg.d_k as f32).sqrt();
+    let mut out = Matrix::default();
+    fused::attention_rows_into(m, kv, v, plan, scale, workers, row, &mut out);
+    out
 }
 
 /// Multi-head CPSAA attention over a prebuilt [`PlanSet`] — one plan
 /// per head, heads executed concurrently on disjoint tile slices (one
 /// [`par_map`][crate::util::par::par_map] worker per head; each head's
-/// SDDMM keeps its own
-/// nnz-balanced `partition_rows` dispatch). The per-head outputs
-/// concatenate column-wise in head order, then the optional output
-/// projection W_O applies. With one head and no W_O this computes
-/// bit-for-bit what [`cpsaa_attention_planned`] computes.
+/// fused kernel keeps its own nnz-balanced `partition_rows` dispatch).
+/// The per-head outputs concatenate column-wise in head order, then the
+/// optional output projection W_O applies. With one head and no W_O
+/// this computes bit-for-bit what [`cpsaa_attention_planned`] computes.
 pub fn multi_head_attention_planned(
     x: &Matrix,
     w: &MultiHeadWeights,
     plans: &PlanSet,
     cfg: &ModelConfig,
 ) -> Matrix {
+    multi_head_attention_planned_ws(x, w, plans, cfg, &WorkspacePool::new())
+}
+
+/// [`multi_head_attention_planned`] with worker workspaces drawn from a
+/// caller-owned [`WorkspacePool`] (the engine's long-lived pool).
+pub fn multi_head_attention_planned_ws(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    plans: &PlanSet,
+    cfg: &ModelConfig,
+    pool: &WorkspacePool,
+) -> Matrix {
     // The single-shard instance of the shard kernel: Q rows = all rows,
     // full worker budget. One definition keeps the sharded/unsharded
     // bit-equivalence structural rather than maintained by hand.
-    multi_head_attention_shard(x, x, w, plans, cfg, 1)
+    multi_head_attention_shard(x, x, w, plans, cfg, 1, pool)
 }
 
 /// One encoder layer with multi-head fan-out: the multi-head attention
@@ -182,22 +258,34 @@ pub fn encoder_layer_heads(
     plans: &PlanSet,
     cfg: &ModelConfig,
 ) -> Matrix {
-    let z = multi_head_attention_planned(x, w, plans, cfg);
-    let h = rms_norm(&x.add(&z));
-    let ff = h.matmul(&w.w_fc1).map(gelu).matmul(&w.w_fc2);
-    rms_norm(&h.add(&ff))
+    encoder_layer_heads_ws(x, w, plans, cfg, &WorkspacePool::new())
+}
+
+/// [`encoder_layer_heads`] over a caller-owned [`WorkspacePool`] — the
+/// encoder stack passes one pool across all layers, so layer N reuses
+/// layer N−1's buffers.
+pub fn encoder_layer_heads_ws(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    plans: &PlanSet,
+    cfg: &ModelConfig,
+    pool: &WorkspacePool,
+) -> Matrix {
+    let z = multi_head_attention_shard(x, x, w, plans, cfg, 1, pool);
+    pool.with(|ws| encoder_tail(x, &z, &w.w_fc1, &w.w_fc2, ws))
 }
 
 /// One shard's multi-head attention: Q rows `x_rows` (a contiguous row
 /// slice of the packed batch `x`, or `x` itself for the full range)
 /// against the full keys/values, over the matching (sliced) plan set.
-/// Heads run one [`par_map`] worker each; the replicated-W_S fan-out (a
-/// single-head weights file split N ways) scores, prunes, and
-/// softmaxes identically per head, so the shared P is computed once and
-/// only the per-head V-block SpMM fans out — bit-identical to running
-/// the heads independently. Every row-wise op touches only the shard's
-/// rows, so the assembled shard blocks are bit-identical to the
-/// full-range kernel.
+/// Heads run one [`par_map`] worker each, drawing workspaces from
+/// `pool`; the replicated-W_S fan-out (a single-head weights file split
+/// N ways) scores, prunes, and softmaxes identically per head, so the
+/// shared P is computed once (one fused SDDMM+scale+softmax row pass
+/// into a zero-copy [`CsrView`]) and only the per-head V-block SpMM
+/// fans out — bit-identical to running the heads independently. Every
+/// row-wise op touches only the shard's rows, so the assembled shard
+/// blocks are bit-identical to the full-range kernel.
 fn multi_head_attention_shard(
     x: &Matrix,
     x_rows: &Matrix,
@@ -205,32 +293,52 @@ fn multi_head_attention_shard(
     plans: &PlanSet,
     cfg: &ModelConfig,
     concurrent_shards: usize,
+    pool: &WorkspacePool,
 ) -> Matrix {
     assert_eq!(w.heads.len(), plans.heads(), "one plan per head");
     let heads = w.heads.len();
     let shared_scores =
         w.shared_w_s() && plans.plans().iter().skip(1).all(|p| p == plans.plan(0));
     let zs: Vec<Matrix> = if shared_scores {
-        let m = x_rows.matmul(&w.heads[0].w_s);
-        let workers =
-            (workers_for(plans.plan(0).nnz()) / concurrent_shards.max(1)).max(1);
-        let mut p = sddmm_csr_workers(&m, x, plans.plan(0), workers);
-        p.scale_values(1.0 / (cfg.d_k as f32).sqrt());
-        p.softmax_rows();
-        par_map(&w.heads, |h| p.spmm(&x.matmul(&h.w_v)))
+        let plan0 = plans.plan(0);
+        let workers = (workers_for(plan0.nnz()) / concurrent_shards.max(1)).max(1);
+        let scale = 1.0 / (cfg.d_k as f32).sqrt();
+        pool.with(|ws| {
+            x_rows.matmul_into(&w.heads[0].w_s, &mut ws.m);
+            let values = fused::scores_softmax(
+                &ws.m,
+                x,
+                plan0,
+                scale,
+                workers,
+                std::mem::take(&mut ws.scores),
+            );
+            let p = CsrView::new(plan0, values);
+            let zs = par_map(&w.heads, |h| {
+                pool.with(|hws| {
+                    x.matmul_into(&h.w_v, &mut hws.v);
+                    p.spmm(&hws.v)
+                })
+            });
+            ws.scores = p.into_values();
+            zs
+        })
     } else {
         let pairs: Vec<(&super::weights::HeadWeights, &DispatchPlan)> =
             w.heads.iter().zip(plans.plans()).collect();
         par_map(&pairs, |&(h, p)| {
-            cpsaa_attention_rows_budgeted(
-                x_rows,
-                x,
-                &h.w_s,
-                &h.w_v,
-                p,
-                cfg,
-                heads * concurrent_shards.max(1),
-            )
+            pool.with(|ws| {
+                cpsaa_attention_rows_fused(
+                    x_rows,
+                    x,
+                    &h.w_s,
+                    &h.w_v,
+                    p,
+                    cfg,
+                    heads * concurrent_shards.max(1),
+                    ws,
+                )
+            })
         })
     };
     let blocks: Vec<&Matrix> = zs.iter().collect();
@@ -253,13 +361,24 @@ pub fn multi_head_attention_sharded(
     shards: &crate::sparse::ShardedPlans,
     cfg: &ModelConfig,
 ) -> Matrix {
+    multi_head_attention_sharded_ws(x, w, shards, cfg, &WorkspacePool::new())
+}
+
+/// [`multi_head_attention_sharded`] over a caller-owned pool.
+pub fn multi_head_attention_sharded_ws(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    shards: &crate::sparse::ShardedPlans,
+    cfg: &ModelConfig,
+    pool: &WorkspacePool,
+) -> Matrix {
     let k = shards.count();
     assert!(k > 0, "sharded attention needs at least one shard");
     let idx: Vec<usize> = (0..k).collect();
     let blocks = par_map(&idx, |&s| {
         let r = shards.range(s);
         let x_rows = x.row_block(r.start, r.end);
-        multi_head_attention_shard(x, &x_rows, w, shards.set(s), cfg, k)
+        multi_head_attention_shard(x, &x_rows, w, shards.set(s), cfg, k, pool)
     });
     assemble_row_blocks(x.rows(), &blocks, shards)
 }
@@ -275,16 +394,25 @@ pub fn encoder_layer_heads_sharded(
     shards: &crate::sparse::ShardedPlans,
     cfg: &ModelConfig,
 ) -> Matrix {
+    encoder_layer_heads_sharded_ws(x, w, shards, cfg, &WorkspacePool::new())
+}
+
+/// [`encoder_layer_heads_sharded`] over a caller-owned pool.
+pub fn encoder_layer_heads_sharded_ws(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    shards: &crate::sparse::ShardedPlans,
+    cfg: &ModelConfig,
+    pool: &WorkspacePool,
+) -> Matrix {
     let k = shards.count();
     assert!(k > 0, "sharded encoder layer needs at least one shard");
     let idx: Vec<usize> = (0..k).collect();
     let blocks = par_map(&idx, |&s| {
         let r = shards.range(s);
         let x_rows = x.row_block(r.start, r.end);
-        let z = multi_head_attention_shard(x, &x_rows, w, shards.set(s), cfg, k);
-        let h = rms_norm(&x_rows.add(&z));
-        let ff = h.matmul(&w.w_fc1).map(gelu).matmul(&w.w_fc2);
-        rms_norm(&h.add(&ff))
+        let z = multi_head_attention_shard(x, &x_rows, w, shards.set(s), cfg, k, pool);
+        pool.with(|ws| encoder_tail(&x_rows, &z, &w.w_fc1, &w.w_fc2, ws))
     });
     assemble_row_blocks(x.rows(), &blocks, shards)
 }
@@ -336,16 +464,53 @@ pub fn encoder_layer(
 
 /// [`encoder_layer`] over a prebuilt [`DispatchPlan`] — the coordinator
 /// builds the plan once per packed batch and reuses it across the stack.
+/// Runs the fused attention kernel and the workspace encoder tail.
 pub fn encoder_layer_planned(
     x: &Matrix,
     w: &super::Weights,
     plan: &DispatchPlan,
     cfg: &ModelConfig,
 ) -> Matrix {
-    let z = cpsaa_attention_planned(x, &w.w_s, &w.w_v, plan, cfg);
+    let mut ws = KernelWorkspace::new();
+    let z = cpsaa_attention_rows_fused(x, x, &w.w_s, &w.w_v, plan, cfg, 1, &mut ws);
+    encoder_tail(x, &z, &w.w_fc1, &w.w_fc2, &mut ws)
+}
+
+/// [`encoder_layer_planned`] through the unfused reference chain and
+/// freshly-allocating tail — the fused/workspace path's bit-equivalence
+/// oracle and the `unfused` encoder bench rung.
+pub fn encoder_layer_unfused(
+    x: &Matrix,
+    w: &super::Weights,
+    plan: &DispatchPlan,
+    cfg: &ModelConfig,
+) -> Matrix {
+    let z = cpsaa_attention_unfused(x, &w.w_s, &w.w_v, plan, cfg);
     let h = rms_norm(&x.add(&z));
     let ff = h.matmul(&w.w_fc1).map(gelu).matmul(&w.w_fc2);
     rms_norm(&h.add(&ff))
+}
+
+/// Residual + RMS-norm + FC tail of one encoder layer, every
+/// intermediate drawn from the workspace: t = x+z, h = rms(t),
+/// ff = gelu(h·FC1)·FC2 (ping-ponging t/ff), out = rms(h+ff).
+/// Bit-identical to the freshly-allocating chain in
+/// [`encoder_layer_unfused`].
+fn encoder_tail(
+    x: &Matrix,
+    z: &Matrix,
+    w_fc1: &Matrix,
+    w_fc2: &Matrix,
+    ws: &mut KernelWorkspace,
+) -> Matrix {
+    let KernelWorkspace { t, h, ff, .. } = ws;
+    x.add_into(z, t);
+    rms_norm_into(t, h);
+    h.matmul_into(w_fc1, ff);
+    ff.map_inplace(gelu);
+    ff.matmul_into(w_fc2, t);
+    h.add_into(t, ff);
+    rms_norm(ff)
 }
 
 fn gelu(x: f32) -> f32 {
@@ -354,18 +519,26 @@ fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
 }
 
+/// RMS-normalize each row.
 fn rms_norm(x: &Matrix) -> Matrix {
-    let mut out = Matrix::zeros(x.rows(), x.cols());
+    let mut out = Matrix::default();
+    rms_norm_into(x, &mut out);
+    out
+}
+
+/// [`rms_norm`] into a caller-owned buffer, writing whole row slices
+/// (no per-element index math) — the workspace tail's norm.
+fn rms_norm_into(x: &Matrix, out: &mut Matrix) {
+    out.reset(x.rows(), x.cols());
     let n = x.cols() as f32;
     for i in 0..x.rows() {
         let row = x.row(i);
         let ms = row.iter().map(|v| v * v).sum::<f32>() / n;
         let scale = 1.0 / (ms + 1e-6).sqrt();
-        for (j, &v) in row.iter().enumerate() {
-            out.set(i, j, v * scale);
+        for (o, &v) in out.row_mut(i).iter_mut().zip(row) {
+            *o = v * scale;
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -404,6 +577,38 @@ mod tests {
         let zd = dense_attention(&x, &w.w_s, &w.w_v, &cfg);
         let zs = cpsaa_attention(&x, &w.w_s, &w.w_v, &ones, &cfg);
         assert!(zd.rel_err(&zs) < 1e-4, "{}", zd.rel_err(&zs));
+    }
+
+    #[test]
+    fn fused_bit_identical_to_unfused_reference() {
+        let (x, w, cfg) = setup(48, 64);
+        for density in [0.0, 0.1, 0.5, 1.0] {
+            let mask =
+                MaskMatrix::from_dense(&SeededRng::new(31).mask_matrix(48, 48, density));
+            let plan = mask.plan();
+            let fused = cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg);
+            let unfused = cpsaa_attention_unfused(&x, &w.w_s, &w.w_v, &plan, &cfg);
+            assert_eq!(fused, unfused, "fused diverged at density {density}");
+            let ef = encoder_layer_planned(&x, &w, &plan, &cfg);
+            let eu = encoder_layer_unfused(&x, &w, &plan, &cfg);
+            assert_eq!(ef, eu, "encoder layer diverged at density {density}");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_stable() {
+        // The same workspace serving different plans/shapes back to back
+        // must never leak state between calls.
+        let (x, w, cfg) = setup(32, 64);
+        let mut ws = KernelWorkspace::new();
+        let mut rng = SeededRng::new(77);
+        for density in [0.8, 0.05, 0.4] {
+            let mask = MaskMatrix::from_dense(&rng.mask_matrix(32, 32, density));
+            let plan = mask.plan();
+            let fresh = cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg);
+            let reused = cpsaa_attention_planned_ws(&x, &w.w_s, &w.w_v, &plan, &cfg, &mut ws);
+            assert_eq!(fresh, reused, "stale workspace state leaked at density {density}");
+        }
     }
 
     #[test]
@@ -542,5 +747,41 @@ mod tests {
         let h = encoder_layer_heads(&x, &mh, &plans, &cfg);
         assert_eq!(h.shape(), (32, 64));
         assert!(h.all_finite());
+    }
+
+    #[test]
+    fn rms_norm_matches_scalar_reference() {
+        let x = SeededRng::new(40).normal_matrix(7, 13, 2.0);
+        let got = rms_norm(&x);
+        for i in 0..7 {
+            let row = x.row(i);
+            let ms = row.iter().map(|v| v * v).sum::<f32>() / 13.0;
+            let scale = 1.0 / (ms + 1e-6).sqrt();
+            for j in 0..13 {
+                assert_eq!(got.get(i, j), x.get(i, j) * scale, "({i},{j})");
+            }
+        }
+        // into-variant overwrites stale larger buffers completely
+        let mut out = Matrix::full(9, 20, 5.0);
+        rms_norm_into(&x, &mut out);
+        assert_eq!(out, got);
+    }
+
+    #[test]
+    fn worker_cap_is_tunable() {
+        let before = worker_cap();
+        assert!(before >= 1);
+        set_worker_cap(2);
+        assert_eq!(worker_cap(), 2);
+        set_worker_cap(0); // clamped to 1, never 0
+        assert_eq!(worker_cap(), 1);
+        // Values are worker-count invariant: a capped run matches.
+        let (x, w, cfg) = setup(32, 64);
+        let mask = generate_mask(&x, &w.w_s, &cfg);
+        let plan = mask.plan();
+        let capped = cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg);
+        set_worker_cap(before);
+        let restored = cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg);
+        assert_eq!(capped, restored);
     }
 }

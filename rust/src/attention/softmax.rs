@@ -21,15 +21,16 @@ pub fn masked_softmax_planned(s: &Matrix, plan: &crate::sparse::DispatchPlan) ->
         if coords.is_empty() {
             continue;
         }
-        let max = coords.iter().map(|&j| s.get(i, j)).fold(f32::NEG_INFINITY, f32::max);
+        let max =
+            coords.iter().map(|&j| s.get(i, j as usize)).fold(f32::NEG_INFINITY, f32::max);
         let mut denom = 0.0;
         for &j in coords {
-            let e = (s.get(i, j) - max).exp();
-            out.set(i, j, e);
+            let e = (s.get(i, j as usize) - max).exp();
+            out.set(i, j as usize, e);
             denom += e;
         }
         for &j in coords {
-            out.set(i, j, out.get(i, j) / denom);
+            out.set(i, j as usize, out.get(i, j as usize) / denom);
         }
     }
     out

@@ -1,0 +1,123 @@
+//! Kernel workspaces: the scratch memory of the attention hot path.
+//!
+//! CPSAA's pipelines never spill the score matrix to memory — Steps 2–4
+//! stream through on-chip buffers (§4.5). The golden model's analogue is
+//! a [`KernelWorkspace`]: every large intermediate of one encoder layer
+//! (the Q/V projections, the plan-ordered score values, the residual /
+//! RMS-norm / FC ping-pong matrices) lives in one reusable bundle, so
+//! the encoder stack stops allocating fresh `Vec`s per layer per head
+//! per shard.
+//!
+//! ## Lifecycle and thread-safety contract
+//!
+//! * **Who allocates:** buffers start empty and grow on first use
+//!   (`Matrix::reset` / `Vec::resize` reuse capacity after that). A pool
+//!   reaches steady state after one batch: no hot-path allocation from
+//!   then on.
+//! * **Who resets:** the *consumer* — every kernel reshapes/zeroes the
+//!   buffers it writes before reading them, so stale contents can never
+//!   leak between calls. A workspace needs no cleanup between uses.
+//! * **Thread safety:** a `KernelWorkspace` is exclusive (`&mut`) to one
+//!   worker for the duration of one kernel. Concurrent workers (per-head
+//!   / per-shard `par_map` fan-outs) each check a workspace out of a
+//!   shared [`WorkspacePool`] — the pool's mutex is held only for the
+//!   pop/push, never across kernel work, so workers never serialize on
+//!   it. The pool grows to the high-water concurrency and then recycles.
+
+use std::sync::Mutex;
+
+use crate::tensor::Matrix;
+
+/// One worker's scratch bundle for the fused attention + encoder-tail
+/// kernels. Field meanings are fixed by the ops layer; all buffers are
+/// reshaped by their writer before use.
+#[derive(Default)]
+pub struct KernelWorkspace {
+    /// Q-side projection `M = X·W_S` (rows × d_model).
+    pub(crate) m: Matrix,
+    /// Value projection `V = X·W_V` (rows × d_v).
+    pub(crate) v: Matrix,
+    /// Encoder-tail ping buffer (residual sums, FC2 output).
+    pub(crate) t: Matrix,
+    /// Encoder-tail pong buffer (RMS-norm output `h`).
+    pub(crate) h: Matrix,
+    /// FC1 output (rows × d_ff) — the widest tail buffer.
+    pub(crate) ff: Matrix,
+    /// Plan-ordered score values (the shared-scores softmax path);
+    /// recycled through [`crate::sparse::CsrView::into_values`].
+    pub(crate) scores: Vec<f32>,
+    /// Per-row score scratch of the serial fused kernel (≤ max row nnz).
+    pub(crate) row: Vec<f32>,
+}
+
+impl KernelWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// A checkout pool of [`KernelWorkspace`]s shared by concurrent kernel
+/// workers. `with` pops a workspace (or makes a fresh one on first use /
+/// above the high-water mark), runs the closure, and returns the
+/// workspace for reuse.
+#[derive(Default)]
+pub struct WorkspacePool {
+    slots: Mutex<Vec<KernelWorkspace>>,
+}
+
+impl WorkspacePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f` with an exclusive workspace checked out of the pool.
+    pub fn with<T>(&self, f: impl FnOnce(&mut KernelWorkspace) -> T) -> T {
+        let mut ws = self.slots.lock().unwrap().pop().unwrap_or_default();
+        let out = f(&mut ws);
+        self.slots.lock().unwrap().push(ws);
+        out
+    }
+
+    /// Workspaces currently idle in the pool (tests / introspection).
+    pub fn idle(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_recycles_workspaces() {
+        let pool = WorkspacePool::new();
+        assert_eq!(pool.idle(), 0);
+        pool.with(|ws| ws.m.reset(8, 8));
+        assert_eq!(pool.idle(), 1);
+        // The recycled workspace keeps its grown buffers.
+        pool.with(|ws| assert_eq!(ws.m.shape(), (8, 8)));
+        assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn pool_grows_under_concurrency() {
+        let pool = WorkspacePool::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    pool.with(|ws| {
+                        ws.row.resize(16, 0.0);
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    })
+                });
+            }
+        });
+        let idle = pool.idle();
+        assert!(idle >= 1 && idle <= 4, "pool holds {idle} workspaces");
+        // Steady state: serial reuse never grows the pool further.
+        for _ in 0..8 {
+            pool.with(|_| {});
+        }
+        assert_eq!(pool.idle(), idle);
+    }
+}

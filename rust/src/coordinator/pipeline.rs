@@ -116,11 +116,16 @@ impl<'e> EncoderStack<'e> {
     /// simulated once and reused for every layer: the coordinator never
     /// re-scans a mask or re-runs the pipeline model.
     pub fn forward(&self, x: &Matrix) -> Result<Vec<LayerOutput>> {
-        let mut h = x.clone();
-        let mut outs = Vec::with_capacity(self.layers);
+        let mut outs: Vec<LayerOutput> = Vec::with_capacity(self.layers);
         let mut batch_cost: Option<BatchCost> = None;
-        for _ in 0..self.layers {
-            let exec = self.engine.execute_encoder_heads_sharded(&h, &self.weights, self.shards)?;
+        for layer in 0..self.layers {
+            // Layer N reads layer N−1's hidden state in place — no
+            // input clone; kernel scratch comes from the engine's
+            // workspace pool, so the stack allocates nothing per layer
+            // beyond the hidden states it returns.
+            let input = if layer == 0 { x } else { &outs[layer - 1].hidden };
+            let exec =
+                self.engine.execute_encoder_heads_sharded(input, &self.weights, self.shards)?;
             let cost = batch_cost.get_or_insert_with(|| {
                 if self.shards <= 1 {
                     let hs = self.sim.simulate_heads_planned(&exec.plans);
@@ -160,7 +165,7 @@ impl<'e> EncoderStack<'e> {
                 }
             });
             outs.push(LayerOutput {
-                hidden: exec.hidden.clone(),
+                hidden: exec.hidden,
                 mask_density: cost.density,
                 sim_ns: cost.ns,
                 sim_pj: cost.pj,
@@ -172,7 +177,6 @@ impl<'e> EncoderStack<'e> {
                 shard_rows: cost.shard_rows.clone(),
                 shard_nnz: cost.shard_nnz.clone(),
             });
-            h = exec.hidden;
         }
         Ok(outs)
     }

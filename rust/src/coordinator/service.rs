@@ -99,11 +99,23 @@ pub struct ServiceConfig {
     /// Logical chips each packed batch fans out across (≥ 1; 1 =
     /// unsharded, bit-identical to the single-chip path).
     pub shards: usize,
+    /// Cap on per-kernel dispatch workers. `None` keeps the process
+    /// default (the `CPSAA_MAX_KERNEL_WORKERS` env var, else 8);
+    /// `Some(n)` applies `n` at startup via
+    /// [`crate::attention::ops::set_worker_cap`] so big machines are
+    /// not throttled at the historical cap. Worker counts never change
+    /// computed values, only throughput.
+    pub max_kernel_workers: Option<usize>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { layers: 2, max_wait: Duration::from_millis(2), shards: 1 }
+        Self {
+            layers: 2,
+            max_wait: Duration::from_millis(2),
+            shards: 1,
+            max_kernel_workers: None,
+        }
     }
 }
 
@@ -185,6 +197,11 @@ fn leader_loop(
         }
         if cfg.shards == 0 {
             return Err(anyhow!("shards must be >= 1"));
+        }
+        match cfg.max_kernel_workers {
+            Some(0) => return Err(anyhow!("max_kernel_workers must be >= 1")),
+            Some(n) => crate::attention::ops::set_worker_cap(n),
+            None => {}
         }
         let weights = MultiHeadWeights::load(&set.dir.join("weights.json"), model.heads)?;
         weights.validate().map_err(|e| anyhow!("bad weights for {} heads: {e}", model.heads))?;

@@ -36,7 +36,7 @@ COMMANDS:
                                     cycle-simulate GLUE/SQuAD traces (default: all)
   bench-figure ID [--out-dir DIR]   regenerate a paper figure/table
                                     (fig3, table2, fig11..fig18, fig19a/b, fig20a/b, all)
-  serve [--requests N] [--layers N] [--heads N] [--shards N]
+  serve [--requests N] [--layers N] [--heads N] [--shards N] [--max-workers N]
                                     demo serving loop over the artifact engine
                                     (multi-head fan-out across tile slices;
                                     --shards N fans each batch across N logical
@@ -51,6 +51,11 @@ COMMANDS:
                                     compare two bench JSON dumps by per-rung
                                     median; exit nonzero on > R regression
                                     (default 1.25; the CI regression gate)
+  bench-assert-faster JSON FAST SLOW [--margin R]
+                                    assert rung FAST's median beats rung SLOW
+                                    in one dump (same-run ordering gate, e.g.
+                                    fused vs unfused; pass while FAST < R x
+                                    SLOW, default R = 1.0 i.e. strict)
 ";
 
 struct Args {
@@ -148,7 +153,10 @@ fn main() -> Result<()> {
                 .map(|s| s.parse::<usize>())
                 .transpose()?
                 .unwrap_or(1);
-            serve(&cfg, &args.artifacts, requests, layers, heads, shards)
+            let max_workers = take_flag(&mut cmd, "--max-workers")
+                .map(|s| s.parse::<usize>())
+                .transpose()?;
+            serve(&cfg, &args.artifacts, requests, layers, heads, shards, max_workers)
         }
         "inference" => {
             let layers = take_flag(&mut cmd, "--layers")
@@ -181,6 +189,16 @@ fn main() -> Result<()> {
                 bail!("bench-compare needs BASELINE and CURRENT json paths");
             }
             bench_compare(&PathBuf::from(&cmd[0]), &PathBuf::from(&cmd[1]), tolerance)
+        }
+        "bench-assert-faster" => {
+            let margin = take_flag(&mut cmd, "--margin")
+                .map(|s| s.parse::<f64>())
+                .transpose()?
+                .unwrap_or(1.0);
+            if cmd.len() != 3 {
+                bail!("bench-assert-faster needs JSON FAST SLOW");
+            }
+            bench_assert_faster(&PathBuf::from(&cmd[0]), &cmd[1], &cmd[2], margin)
         }
         other => {
             print!("{USAGE}");
@@ -263,6 +281,7 @@ fn bench_figure(cfg: &SystemConfig, id: &str, out_dir: Option<&std::path::Path>)
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve(
     cfg: &SystemConfig,
     artifacts: &Path,
@@ -270,6 +289,7 @@ fn serve(
     layers: usize,
     heads: usize,
     shards: usize,
+    max_workers: Option<usize>,
 ) -> Result<()> {
     // Probe the manifest for the artifact shapes before spawning.
     let set = ArtifactSet::open(artifacts)?;
@@ -281,7 +301,7 @@ fn serve(
         artifacts.to_path_buf(),
         cfg.hardware.clone(),
         ModelConfig { heads, ..cfg.model.clone() },
-        ServiceConfig { layers, shards, ..Default::default() },
+        ServiceConfig { layers, shards, max_kernel_workers: max_workers, ..Default::default() },
     )?;
     println!(
         "service up (artifact shape {seq_len}x{d_model}, {layers} layers, {heads} heads, {shards} shards)"
@@ -382,6 +402,36 @@ fn bench_compare(baseline: &Path, current: &Path, tolerance: f64) -> Result<()> 
         cmp.deltas.len(),
         baseline.display()
     );
+    Ok(())
+}
+
+/// Same-run rung ordering gate: rung `fast` must have a smaller median
+/// than rung `slow` in one dump (e.g. the fused kernel must beat the
+/// unfused reference on the machine that ran both). `margin` > 1.0
+/// tolerates runner jitter on rungs dominated by shared cost.
+fn bench_assert_faster(json: &Path, fast: &str, slow: &str, margin: f64) -> Result<()> {
+    if !margin.is_finite() || margin <= 0.0 {
+        bail!("margin must be positive, got {margin}");
+    }
+    let text = std::fs::read_to_string(json)
+        .map_err(|e| anyhow!("reading {}: {e}", json.display()))?;
+    let check = cpsaa::util::bench::assert_faster(&text, fast, slow)?;
+    println!(
+        "{}: {} ns vs {}: {} ns ({:.2}x)",
+        check.fast,
+        check.fast_ns,
+        check.slow,
+        check.slow_ns,
+        check.speedup()
+    );
+    if !check.holds_within(margin) {
+        bail!(
+            "rung {fast:?} ({} ns) did not beat {slow:?} ({} ns, margin {margin}x)",
+            check.fast_ns,
+            check.slow_ns
+        );
+    }
+    println!("bench-assert-faster OK: {fast} beats {slow} (margin {margin}x)");
     Ok(())
 }
 

@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::anyhow;
-use crate::attention::{self, MultiHeadWeights, Weights};
+use crate::attention::{self, MultiHeadWeights, Weights, WorkspacePool};
 use crate::config::ModelConfig;
 use crate::sparse::{MaskMatrix, PlanSet, ShardedPlans};
 use crate::tensor::Matrix;
@@ -52,6 +52,11 @@ pub struct Engine {
     /// Expected parameter shapes per graph, in call order (manifest).
     params: HashMap<String, Vec<Vec<usize>>>,
     stats: std::cell::RefCell<EngineStats>,
+    /// Long-lived kernel scratch: per-head / per-shard workers check
+    /// [`attention::KernelWorkspace`]s out of this pool, so the encoder
+    /// stack stops allocating fresh buffers per layer per head per
+    /// shard (steady state after the first batch).
+    workspaces: WorkspacePool,
 }
 
 impl Engine {
@@ -75,7 +80,7 @@ impl Engine {
             }
             params.insert(name.to_string(), artifacts.manifest.artifacts[name].params.clone());
         }
-        Ok(Self { model, params, stats: Default::default() })
+        Ok(Self { model, params, stats: Default::default(), workspaces: WorkspacePool::new() })
     }
 
     pub fn platform(&self) -> String {
@@ -95,6 +100,11 @@ impl Engine {
     /// The model shapes the artifacts were lowered with.
     pub fn model(&self) -> &ModelConfig {
         &self.model
+    }
+
+    /// The engine's long-lived kernel workspace pool (introspection).
+    pub fn workspaces(&self) -> &WorkspacePool {
+        &self.workspaces
     }
 
     /// Execute graph `name` with matrix inputs; returns the output tuple
@@ -159,10 +169,18 @@ impl Engine {
         let masks = attention::generate_head_masks(x, w, cfg);
         let plans = PlanSet::build(&masks);
         let (hidden, sharded) = if shards <= 1 {
-            (attention::ops::encoder_layer_heads(x, w, &plans, cfg), None)
+            let hidden =
+                attention::ops::encoder_layer_heads_ws(x, w, &plans, cfg, &self.workspaces);
+            (hidden, None)
         } else {
             let sharded = plans.shard(shards);
-            let hidden = attention::ops::encoder_layer_heads_sharded(x, w, &sharded, cfg);
+            let hidden = attention::ops::encoder_layer_heads_sharded_ws(
+                x,
+                w,
+                &sharded,
+                cfg,
+                &self.workspaces,
+            );
             (hidden, Some(sharded))
         };
         let mut s = self.stats.borrow_mut();
@@ -337,6 +355,28 @@ mod tests {
         assert!(engine
             .execute_encoder_heads_sharded(&Matrix::zeros(3, 3), &mh, 4)
             .is_err());
+    }
+
+    #[test]
+    fn workspace_pool_reaches_steady_state() {
+        let engine = Engine::load(&synthetic_set()).unwrap();
+        let cfg = ModelConfig { heads: 4, ..small_model() };
+        let mh = MultiHeadWeights::synthetic(&cfg, 8);
+        let x = crate::tensor::SeededRng::new(14).normal_matrix(16, 32, 1.0);
+        let first = engine.execute_encoder_heads(&x, &mh).unwrap();
+        let high_water = engine.workspaces().idle();
+        assert!(high_water >= 1, "execution must seed the pool");
+        // Repeat executions recycle workspaces; the pool never grows
+        // past the worker high-water mark (4 concurrent head workers).
+        for _ in 0..3 {
+            let again = engine.execute_encoder_heads(&x, &mh).unwrap();
+            assert_eq!(again.hidden, first.hidden, "workspace reuse changed bits");
+        }
+        let settled = engine.workspaces().idle();
+        assert!(
+            settled >= high_water && settled <= 4,
+            "pool at {settled} (high water {high_water})"
+        );
     }
 
     #[test]

@@ -89,7 +89,7 @@ mod tests {
         // mask bit-for-bit.
         for i in 0..64 {
             for &j in s.plan().row_cols(i) {
-                assert!(m.get(i, j));
+                assert!(m.get(i, j as usize));
             }
             assert_eq!(s.plan().row_nnz(i), m.row_nnz(i));
         }

@@ -4,17 +4,63 @@
 //! split-and-pack) all reason about compressed formats; the baselines model
 //! their conversion overhead, and the golden model uses CSR for the sparse
 //! softmax/SpMM reference path.
+//!
+//! Two flavors:
+//!
+//! * [`CsrMatrix`] — owns its topology (a `u32` copy of the plan's
+//!   stream). The reference/compat format: round-trips to dense, feeds
+//!   the unfused golden chain and the conversion-cost baselines.
+//! * [`CsrView`] — borrows the topology straight from a
+//!   [`DispatchPlan`] and owns only the values. The hot-path format: one
+//!   value buffer (workspace-recycled) per kernel call, zero topology
+//!   copies, exactly like the crossbar engines that read the ReCAM
+//!   coordinate stream in place.
 
 use crate::sparse::{DispatchPlan, MaskMatrix};
 use crate::tensor::Matrix;
 
-/// Compressed sparse row f32 matrix.
+/// Row-wise streaming softmax over one row's stored entries (max → exp →
+/// normalize, in entry order) — shared by [`CsrMatrix`], [`CsrView`] and
+/// the fused kernel so every path computes bit-identical probabilities.
+pub(crate) fn softmax_row(vals: &mut [f32]) {
+    if vals.is_empty() {
+        return;
+    }
+    let max = vals.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in vals.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in vals.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// One sparse row times a dense matrix, accumulated into a zero-initialized
+/// output row — the SpMM inner loop every CSR flavor and the fused kernel
+/// share (same accumulation order ⇒ same bits).
+pub(crate) fn spmm_row_into(
+    cols: &[u32],
+    vals: &[f32],
+    dense: &Matrix,
+    out_row: &mut [f32],
+) {
+    for (&j, &v) in cols.iter().zip(vals) {
+        let drow = dense.row(j as usize);
+        for (o, d) in out_row.iter_mut().zip(drow) {
+            *o += v * d;
+        }
+    }
+}
+
+/// Compressed sparse row f32 matrix (owned topology, `u32` indices).
 #[derive(Clone, Debug, PartialEq)]
 pub struct CsrMatrix {
     rows: usize,
     cols: usize,
-    row_ptr: Vec<usize>,
-    col_idx: Vec<usize>,
+    row_ptr: Vec<u32>,
+    col_idx: Vec<u32>,
     values: Vec<f32>,
 }
 
@@ -25,15 +71,15 @@ impl CsrMatrix {
         let mut values = Vec::with_capacity(plan.nnz());
         for i in 0..plan.rows() {
             for &j in plan.row_cols(i) {
-                values.push(m.get(i, j));
+                values.push(m.get(i, j as usize));
             }
         }
         Self::from_plan_values(plan, values)
     }
 
     /// Adopt the plan's topology with values supplied directly in plan
-    /// order (the SDDMM kernels write straight into this — no dense S
-    /// round-trip).
+    /// order. This *copies* the topology (owned format); the hot kernels
+    /// use [`CsrView::new`] instead, which borrows it.
     pub fn from_plan_values(plan: &DispatchPlan, values: Vec<f32>) -> Self {
         assert_eq!(values.len(), plan.nnz(), "values do not match plan topology");
         Self {
@@ -77,56 +123,44 @@ impl CsrMatrix {
         self.values.len()
     }
 
-    /// (column, value) pairs of row `i`.
-    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
-        let lo = self.row_ptr[i];
-        let hi = self.row_ptr[i + 1];
-        self.col_idx[lo..hi].iter().copied().zip(self.values[lo..hi].iter().copied())
+    /// Row `i`'s span of the flat value/coordinate stream.
+    fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize
     }
 
-    /// Mutable values of row `i` (used by the sparse softmax).
-    fn row_values_mut(&mut self, i: usize) -> &mut [f32] {
-        let lo = self.row_ptr[i];
-        let hi = self.row_ptr[i + 1];
-        &mut self.values[lo..hi]
+    /// (column, value) pairs of row `i`.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let r = self.row_range(i);
+        self.col_idx[r.clone()]
+            .iter()
+            .map(|&j| j as usize)
+            .zip(self.values[r].iter().copied())
     }
 
     /// Row-wise softmax over the stored entries only — the SU applied to a
     /// sparse S (masked-out entries carry no probability mass).
     pub fn softmax_rows(&mut self) {
         for i in 0..self.rows {
-            let vals = self.row_values_mut(i);
-            if vals.is_empty() {
-                continue;
-            }
-            let max = vals.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0.0;
-            for v in vals.iter_mut() {
-                *v = (*v - max).exp();
-                sum += *v;
-            }
-            for v in vals.iter_mut() {
-                *v /= sum;
-            }
+            let r = self.row_range(i);
+            softmax_row(&mut self.values[r]);
         }
     }
 
     /// SpMM: `self @ dense` — the golden reference for the crossbar SpMM
-    /// engine (§4.4).
+    /// engine (§4.4). Accumulates straight into the zero-initialized
+    /// output row (no per-row scratch allocation).
     pub fn spmm(&self, dense: &Matrix) -> Matrix {
         assert_eq!(self.cols, dense.rows());
         let m = dense.cols();
         let mut out = Matrix::zeros(self.rows, m);
         for i in 0..self.rows {
-            // split borrows: write into a scratch row then copy
-            let mut acc = vec![0.0f32; m];
-            for (j, v) in self.row(i) {
-                let drow = dense.row(j);
-                for (a, d) in acc.iter_mut().zip(drow) {
-                    *a += v * d;
-                }
-            }
-            out.data_mut()[i * m..(i + 1) * m].copy_from_slice(&acc);
+            let r = self.row_range(i);
+            spmm_row_into(
+                &self.col_idx[r.clone()],
+                &self.values[r],
+                dense,
+                out.row_mut(i),
+            );
         }
         out
     }
@@ -148,6 +182,102 @@ impl CsrMatrix {
             return 0.0;
         }
         self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+/// Zero-copy CSR over a [`DispatchPlan`]'s topology.
+///
+/// Ownership contract: the *plan* owns `row_ptr`/`col_idx` (built once
+/// per mask, shared by every kernel, layer, head and shard); the view
+/// owns only its value buffer. Kernels build one view per call from a
+/// workspace-recycled `Vec<f32>` and hand the buffer back with
+/// [`CsrView::into_values`] when done — nothing about the topology is
+/// ever cloned on the hot path.
+#[derive(Debug)]
+pub struct CsrView<'p> {
+    plan: &'p DispatchPlan,
+    values: Vec<f32>,
+}
+
+impl<'p> CsrView<'p> {
+    /// Wrap plan-ordered values (len == `plan.nnz()`) over the plan's
+    /// borrowed topology.
+    pub fn new(plan: &'p DispatchPlan, values: Vec<f32>) -> Self {
+        assert_eq!(values.len(), plan.nnz(), "values do not match plan topology");
+        Self { plan, values }
+    }
+
+    /// The topology this view borrows.
+    pub fn plan(&self) -> &'p DispatchPlan {
+        self.plan
+    }
+
+    pub fn rows(&self) -> usize {
+        self.plan.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.plan.cols()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Plan-ordered values.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Reclaim the value buffer (workspace recycling).
+    pub fn into_values(self) -> Vec<f32> {
+        self.values
+    }
+
+    /// (column, value) pairs of row `i`.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let r = self.plan.row_range(i);
+        self.plan.row_cols(i).iter().map(|&j| j as usize).zip(self.values[r].iter().copied())
+    }
+
+    /// Scale every stored value (the 1/√d_k factor).
+    pub fn scale_values(&mut self, s: f32) {
+        for v in &mut self.values {
+            *v *= s;
+        }
+    }
+
+    /// Row-wise softmax over stored entries — bit-identical to
+    /// [`CsrMatrix::softmax_rows`] (same shared row kernel).
+    pub fn softmax_rows(&mut self) {
+        for i in 0..self.rows() {
+            let r = self.plan.row_range(i);
+            softmax_row(&mut self.values[r]);
+        }
+    }
+
+    /// SpMM into a caller-owned output buffer (reshaped and zeroed in
+    /// place) — the workspace path. Bit-identical to
+    /// [`CsrMatrix::spmm`] (same shared row kernel).
+    pub fn spmm_into(&self, dense: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols(), dense.rows());
+        out.reset(self.rows(), dense.cols());
+        for i in 0..self.rows() {
+            let r = self.plan.row_range(i);
+            spmm_row_into(self.plan.row_cols(i), &self.values[r], dense, out.row_mut(i));
+        }
+    }
+
+    /// SpMM: `self @ dense`, allocating the output.
+    pub fn spmm(&self, dense: &Matrix) -> Matrix {
+        let mut out = Matrix::default();
+        self.spmm_into(dense, &mut out);
+        out
+    }
+
+    /// Owned copy (tests / conversion-cost baselines).
+    pub fn to_owned_csr(&self) -> CsrMatrix {
+        CsrMatrix::from_plan_values(self.plan, self.values.clone())
     }
 }
 
@@ -247,5 +377,41 @@ mod tests {
         let csr = CsrMatrix::from_dense(&dense);
         let got = csr.spmm(&Matrix::eye(8));
         assert!(got.max_abs_diff(&dense) < 1e-6);
+    }
+
+    #[test]
+    fn view_matches_owned_csr_bitwise() {
+        let (dense, mask) = sample(9, 24, 32, 0.3);
+        let plan = mask.plan();
+        let mut owned = CsrMatrix::from_plan(&plan, &dense);
+        let vals: Vec<f32> = (0..plan.rows()).flat_map(|i| owned.row(i).map(|(_, v)| v)).collect();
+        let mut view = CsrView::new(&plan, vals);
+        assert_eq!((view.rows(), view.cols(), view.nnz()), (24, 32, plan.nnz()));
+        owned.scale_values(0.5);
+        view.scale_values(0.5);
+        owned.softmax_rows();
+        view.softmax_rows();
+        assert_eq!(view.to_owned_csr(), owned, "view ops diverged from owned CSR");
+        let v = SeededRng::new(10).normal_matrix(32, 8, 1.0);
+        let want = owned.spmm(&v);
+        assert_eq!(view.spmm(&v), want, "spmm bits diverged");
+        // spmm_into must fully overwrite a stale, larger buffer
+        let mut out = Matrix::full(40, 40, 7.0);
+        view.spmm_into(&v, &mut out);
+        assert_eq!(out, want);
+        // buffer recycling round-trip
+        let n = view.nnz();
+        let buf = view.into_values();
+        assert_eq!(buf.len(), n);
+    }
+
+    #[test]
+    fn view_empty_rows_ok() {
+        let plan = MaskMatrix::zeros(4, 4).plan();
+        let mut view = CsrView::new(&plan, Vec::new());
+        view.softmax_rows();
+        let z = view.spmm(&Matrix::eye(4));
+        assert_eq!(z.norm(), 0.0);
+        assert_eq!(z.shape(), (4, 4));
     }
 }

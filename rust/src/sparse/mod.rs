@@ -9,7 +9,10 @@
 //! per-column queue depths, 32×32 tile occupancy, per-row nnz) that every
 //! kernel, simulator engine, and the coordinator consume instead of
 //! re-walking the mask. [`CsrMatrix`] carries the sparse score values over
-//! the plan's topology. Multi-head batches generalize the plan to a
+//! an owned copy of the plan's topology (reference paths); [`CsrView`]
+//! borrows the topology from the plan and owns only its values — the
+//! zero-copy format of the fused attention hot path. Multi-head batches
+//! generalize the plan to a
 //! [`PlanSet`] — one scan per head mask, heads scanned concurrently —
 //! consumed the same way (per-head kernels, per-head tile-slice costing,
 //! per-head serving metrics).
@@ -19,7 +22,8 @@ mod mask;
 mod plan;
 mod planset;
 
-pub use csr::CsrMatrix;
+pub use csr::{CsrMatrix, CsrView};
+pub(crate) use csr::{softmax_row, spmm_row_into};
 pub use mask::{BlockCounts, MaskMatrix};
 pub use plan::{DispatchPlan, DISPATCH_TILE};
 pub use planset::{PlanSet, ShardedPlans};

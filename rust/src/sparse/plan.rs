@@ -59,15 +59,20 @@ pub(crate) fn partition_by_weights(
 }
 
 /// The precomputed dispatch schedule of one pruning mask.
+///
+/// The coordinate stream is stored as `u32` — the ⟨α, βᵢ⟩ stream is the
+/// hot path's dominant memory traffic (every SDDMM dot and SpMM gather
+/// walks it), and the crossbar fabric addresses at most `2^32` columns,
+/// so narrowing it halves the bytes the kernels pull per coordinate.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DispatchPlan {
     rows: usize,
     cols: usize,
     /// CSR row pointers: row i's coordinates live at
     /// `col_idx[row_ptr[i]..row_ptr[i+1]]`, ascending.
-    row_ptr: Vec<usize>,
+    row_ptr: Vec<u32>,
     /// Column indices of every '1' cell, row-major (the ⟨α, βᵢ⟩ stream).
-    col_idx: Vec<usize>,
+    col_idx: Vec<u32>,
     /// Ones per column — the SDDMM per-column input-queue depths.
     col_nnz: Vec<u32>,
     /// Nonzeros per DISPATCH_TILE×DISPATCH_TILE tile.
@@ -79,21 +84,26 @@ impl DispatchPlan {
     pub fn build(mask: &MaskMatrix) -> Self {
         let rows = mask.rows();
         let cols = mask.cols();
+        assert!(cols <= u32::MAX as usize, "mask wider than the u32 coordinate stream");
+        assert!(
+            mask.nnz() <= u32::MAX as usize,
+            "mask nnz overflows the u32 row-pointer stream"
+        );
         let tile_rows = rows.div_ceil(DISPATCH_TILE).max(1);
         let tile_cols = cols.div_ceil(DISPATCH_TILE).max(1);
         let mut row_ptr = Vec::with_capacity(rows + 1);
-        let mut col_idx = Vec::with_capacity(mask.nnz());
+        let mut col_idx: Vec<u32> = Vec::with_capacity(mask.nnz());
         let mut col_nnz = vec![0u32; cols];
         let mut counts = vec![0u32; tile_rows * tile_cols];
-        row_ptr.push(0);
+        row_ptr.push(0u32);
         for i in 0..rows {
             let tile_row_base = (i / DISPATCH_TILE) * tile_cols;
             for j in mask.row_coords(i) {
-                col_idx.push(j);
+                col_idx.push(j as u32);
                 col_nnz[j] += 1;
                 counts[tile_row_base + j / DISPATCH_TILE] += 1;
             }
-            row_ptr.push(col_idx.len());
+            row_ptr.push(col_idx.len() as u32);
         }
         let blocks = BlockCounts { tile_rows, tile_cols, counts };
         Self { rows, cols, row_ptr, col_idx, col_nnz, blocks }
@@ -120,24 +130,31 @@ impl DispatchPlan {
         self.nnz() as f64 / (self.rows * self.cols) as f64
     }
 
-    /// CSR row pointers (len `rows + 1`).
-    pub fn row_ptr(&self) -> &[usize] {
+    /// CSR row pointers (len `rows + 1`), `u32` like the coordinate
+    /// stream they index.
+    pub fn row_ptr(&self) -> &[u32] {
         &self.row_ptr
     }
 
     /// Flat column-index stream (len `nnz`).
-    pub fn col_idx(&self) -> &[usize] {
+    pub fn col_idx(&self) -> &[u32] {
         &self.col_idx
     }
 
+    /// Row `i`'s span of the flat coordinate stream, as `usize` bounds
+    /// for slicing kernel value buffers.
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize
+    }
+
     /// Column coordinates of row `i` (one ReCAM row-match), ascending.
-    pub fn row_cols(&self, i: usize) -> &[usize] {
-        &self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]]
+    pub fn row_cols(&self, i: usize) -> &[u32] {
+        &self.col_idx[self.row_range(i)]
     }
 
     /// Ones in row `i` — the V-row replication count of output row i.
     pub fn row_nnz(&self, i: usize) -> usize {
-        self.row_ptr[i + 1] - self.row_ptr[i]
+        (self.row_ptr[i + 1] - self.row_ptr[i]) as usize
     }
 
     /// Per-column queue depths (the Fig. 8d latency bound).
@@ -205,16 +222,16 @@ impl DispatchPlan {
         let tile_rows = n.div_ceil(DISPATCH_TILE).max(1);
         let tile_cols = self.cols.div_ceil(DISPATCH_TILE).max(1);
         let base = self.row_ptr[rows.start];
-        let row_ptr: Vec<usize> =
+        let row_ptr: Vec<u32> =
             self.row_ptr[rows.start..=rows.end].iter().map(|p| p - base).collect();
-        let col_idx = self.col_idx[base..self.row_ptr[rows.end]].to_vec();
+        let col_idx = self.col_idx[base as usize..self.row_ptr[rows.end] as usize].to_vec();
         let mut col_nnz = vec![0u32; self.cols];
         let mut counts = vec![0u32; tile_rows * tile_cols];
         for i in 0..n {
             let tile_row_base = (i / DISPATCH_TILE) * tile_cols;
-            for &j in &col_idx[row_ptr[i]..row_ptr[i + 1]] {
-                col_nnz[j] += 1;
-                counts[tile_row_base + j / DISPATCH_TILE] += 1;
+            for &j in &col_idx[row_ptr[i] as usize..row_ptr[i + 1] as usize] {
+                col_nnz[j as usize] += 1;
+                counts[tile_row_base + j as usize / DISPATCH_TILE] += 1;
             }
         }
         DispatchPlan {
@@ -256,8 +273,9 @@ mod tests {
             let cols = p.row_cols(i);
             assert!(cols.windows(2).all(|w| w[0] < w[1]));
             for &j in cols {
-                assert!(m.get(i, j), "({i},{j}) not set");
+                assert!(m.get(i, j as usize), "({i},{j}) not set");
             }
+            assert_eq!(p.row_range(i).len(), p.row_nnz(i));
         }
     }
 

@@ -20,6 +20,14 @@ impl fmt::Debug for Matrix {
     }
 }
 
+impl Default for Matrix {
+    /// The 0×0 matrix — the empty state of a workspace buffer before its
+    /// first [`Matrix::reset`].
+    fn default() -> Self {
+        Self::zeros(0, 0)
+    }
+}
+
 impl Matrix {
     /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
@@ -75,6 +83,21 @@ impl Matrix {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable slice.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Reshape to `rows`×`cols`, zero-filled, reusing the existing
+    /// allocation when it is large enough — the workspace buffers cycle
+    /// through shapes across layers/heads without reallocating.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
     pub fn get(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.cols + j]
     }
@@ -87,9 +110,18 @@ impl Matrix {
     /// loops stay in L1 and auto-vectorize (the hot path of the golden
     /// model; measured in benches/hotpath.rs).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
+        let mut out = Matrix::default();
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// [`Matrix::matmul`] writing into a caller-owned buffer (reshaped and
+    /// zeroed in place) — the workspace path's allocation-free matmul.
+    /// Identical numerics to `matmul`.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
         assert_eq!(self.cols, other.rows, "matmul {:?} x {:?}", self.shape(), other.shape());
         let (n, k, m) = (self.rows, self.cols, other.cols);
-        let mut out = Matrix::zeros(n, m);
+        out.reset(n, m);
         const KB: usize = 64; // k-panel kept hot in L1
         let mut p0 = 0;
         while p0 < k {
@@ -127,7 +159,6 @@ impl Matrix {
             }
             p0 = p1;
         }
-        out
     }
 
     /// Columns `[lo, hi)` as a new matrix (the per-head V slice).
@@ -186,6 +217,14 @@ impl Matrix {
         }
     }
 
+    /// Elementwise map in place (the workspace path's allocation-free
+    /// [`Matrix::map`]; identical numerics).
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
     /// Elementwise combine; panics on shape mismatch.
     pub fn zip(&self, other: &Matrix, f: impl Fn(f32, f32) -> f32) -> Matrix {
         assert_eq!(self.shape(), other.shape());
@@ -198,6 +237,16 @@ impl Matrix {
 
     pub fn add(&self, other: &Matrix) -> Matrix {
         self.zip(other, |a, b| a + b)
+    }
+
+    /// `self + other` into a caller-owned buffer (reshaped in place) —
+    /// identical numerics to [`Matrix::add`].
+    pub fn add_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        out.reset(self.rows, self.cols);
+        for ((o, &a), &b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
+            *o = a + b;
+        }
     }
 
     pub fn scale(&self, s: f32) -> Matrix {
@@ -323,5 +372,32 @@ mod tests {
     #[should_panic]
     fn from_vec_length_checked() {
         Matrix::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ops() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Matrix::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        // A stale, larger buffer must be fully overwritten by reset.
+        let mut out = Matrix::full(4, 4, 9.9);
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+        let c = Matrix::full(2, 3, 0.5);
+        a.add_into(&c, &mut out);
+        assert_eq!(out, a.add(&c));
+        let mut d = a.clone();
+        d.map_inplace(|x| x * 2.0);
+        assert_eq!(d, a.map(|x| x * 2.0));
+    }
+
+    #[test]
+    fn reset_reuses_allocation() {
+        let mut m = Matrix::full(8, 8, 3.0);
+        let cap = m.data.capacity();
+        m.reset(4, 4);
+        assert_eq!(m.shape(), (4, 4));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        assert_eq!(m.data.capacity(), cap);
+        assert_eq!(m.row_mut(1).len(), 4);
     }
 }

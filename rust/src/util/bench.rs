@@ -230,6 +230,60 @@ fn fmt_ns(ns: u64) -> String {
     }
 }
 
+/// The outcome of one same-run rung ordering check
+/// ([`assert_faster`]) — the engine of the `cpsaa bench-assert-faster`
+/// CI gate (e.g. the fused rung must beat the unfused rung).
+#[derive(Clone, Debug)]
+pub struct FasterCheck {
+    pub fast: String,
+    pub slow: String,
+    pub fast_ns: u64,
+    pub slow_ns: u64,
+}
+
+impl FasterCheck {
+    /// `slow / fast` speedup (∞-safe: 0-ns medians compare as-is).
+    pub fn speedup(&self) -> f64 {
+        self.slow_ns as f64 / (self.fast_ns as f64).max(1.0)
+    }
+
+    /// Strict ordering: `fast` median below `slow` median.
+    pub fn holds(&self) -> bool {
+        self.holds_within(1.0)
+    }
+
+    /// Ordering with a noise margin: passes while `fast < slow ×
+    /// margin`. A margin slightly above 1.0 keeps the gate robust on
+    /// rungs whose two sides share a large common cost (e.g. the dense
+    /// projections of an encoder layer) and differ by only a few
+    /// percent — runner jitter must not fail an unrelated PR.
+    pub fn holds_within(&self, margin: f64) -> bool {
+        (self.fast_ns as f64) < self.slow_ns as f64 * margin
+    }
+}
+
+/// Compare two rungs of one bench JSON dump: `fast` must have a
+/// strictly smaller median than `slow`. Unlike [`BenchComparison`] this
+/// is a *same-machine, same-run* comparison, so no tolerance applies —
+/// an optimization that cannot beat its own baseline in its own run has
+/// regressed.
+pub fn assert_faster(json: &str, fast: &str, slow: &str) -> Result<FasterCheck> {
+    let medians = parse_medians(json).context("parsing bench JSON")?;
+    let find = |name: &str| -> Result<u64> {
+        medians
+            .iter()
+            .find(|(n, _)| n.as_str() == name)
+            .map(|&(_, m)| m)
+            .ok_or_else(|| crate::anyhow!("rung {name:?} not in dump"))
+    };
+    Ok(FasterCheck {
+        fast: fast.to_string(),
+        slow: slow.to_string(),
+        fast_ns: find(fast)?,
+        slow_ns: find(slow)?,
+    })
+}
+
 /// Pull `(name, median_ns)` pairs out of a [`Bencher::finish`]-format
 /// dump, dump order preserved.
 fn parse_medians(text: &str) -> Result<Vec<(String, u64)>> {
@@ -284,6 +338,23 @@ mod tests {
         }
         b.push_str("]}");
         b
+    }
+
+    #[test]
+    fn assert_faster_orders_rungs() {
+        let cur = dump(&[("fused", 1000), ("unfused", 2500)]);
+        let ok = assert_faster(&cur, "fused", "unfused").unwrap();
+        assert!(ok.holds());
+        assert!((ok.speedup() - 2.5).abs() < 1e-9);
+        let bad = assert_faster(&cur, "unfused", "fused").unwrap();
+        assert!(!bad.holds());
+        assert!(assert_faster(&cur, "fused", "nope").is_err());
+        // margin absorbs a small inversion, strict does not
+        let close = dump(&[("a", 1010), ("b", 1000)]);
+        let c = assert_faster(&close, "a", "b").unwrap();
+        assert!(!c.holds());
+        assert!(c.holds_within(1.02));
+        assert!(!c.holds_within(1.005));
     }
 
     #[test]

@@ -289,6 +289,11 @@ fn bench_compare_accepts_committed_baseline() {
     let body = std::fs::read_to_string(&baseline).unwrap();
     assert!(body.contains("attention_320x512_shards1_plan_reuse"), "baseline lost shard rungs");
     assert!(body.contains("attention_320x512_shards4_plan_reuse"), "baseline lost shard rungs");
+    assert!(body.contains("attention_320x512_fused_plan_reuse"), "baseline lost fused rung");
+    assert!(body.contains("attention_320x512_unfused_plan_reuse"), "baseline lost unfused rung");
+    assert!(body.contains("encoder_layer_320x512_fused"), "baseline lost encoder rungs");
+    assert!(body.contains("coord_stream_u32_gather"), "baseline lost u32-stream rung");
+    assert!(body.contains("coord_stream_usize_gather"), "baseline lost usize-stream rung");
     let (ok, text) = cpsaa(&[
         "bench-compare",
         baseline.to_str().unwrap(),
@@ -296,6 +301,86 @@ fn bench_compare_accepts_committed_baseline() {
     ]);
     assert!(ok, "{text}");
     assert!(text.contains("bench-compare OK"), "{text}");
+}
+
+#[test]
+fn bench_assert_faster_orders_rungs() {
+    let dir = std::env::temp_dir().join(format!("cpsaa-cli-baf-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let json = dir.join("run.json");
+    std::fs::write(
+        &json,
+        r#"{"group": "hotpath", "iters": 3, "benchmarks": [
+            {"name": "fused", "median_ns": 900},
+            {"name": "unfused", "median_ns": 2100}
+        ]}"#,
+    )
+    .unwrap();
+    let (ok, text) = cpsaa(&["bench-assert-faster", json.to_str().unwrap(), "fused", "unfused"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("bench-assert-faster OK"), "{text}");
+    assert!(text.contains("2.33x"), "{text}");
+    // reversed ordering fails the gate
+    let (ok, text) = cpsaa(&["bench-assert-faster", json.to_str().unwrap(), "unfused", "fused"]);
+    assert!(!ok, "reversed ordering must fail: {text}");
+    assert!(text.contains("did not beat"), "{text}");
+    // a wide-enough margin absorbs the inversion; a bad margin errors
+    let (ok, text) = cpsaa(&[
+        "bench-assert-faster",
+        json.to_str().unwrap(),
+        "unfused",
+        "fused",
+        "--margin",
+        "3.0",
+    ]);
+    assert!(ok, "{text}");
+    let (ok, text) =
+        cpsaa(&["bench-assert-faster", json.to_str().unwrap(), "fused", "unfused", "--margin", "0"]);
+    assert!(!ok);
+    assert!(text.contains("margin"), "{text}");
+    // unknown rung is an error, not a pass
+    let (ok, text) = cpsaa(&["bench-assert-faster", json.to_str().unwrap(), "fused", "nope"]);
+    assert!(!ok, "{text}");
+    // missing args is a usage error
+    let (ok, text) = cpsaa(&["bench-assert-faster", json.to_str().unwrap(), "fused"]);
+    assert!(!ok);
+    assert!(text.contains("FAST"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_max_workers_flag_end_to_end() {
+    // The worker-cap knob must be accepted and serve correctly (values
+    // are worker-count invariant, so only liveness is observable here).
+    let art = synth_artifacts("maxworkers", 2);
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "2",
+        "--layers",
+        "1",
+        "--heads",
+        "2",
+        "--max-workers",
+        "3",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("served 2 requests"), "{text}");
+    // zero is rejected at startup, like shards
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "1",
+        "--max-workers",
+        "0",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("max_kernel_workers"), "{text}");
+    std::fs::remove_dir_all(&art).ok();
 }
 
 #[test]
