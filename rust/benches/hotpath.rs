@@ -8,9 +8,11 @@
 
 use cpsaa::attention::{self, ops, MultiHeadWeights, Weights};
 use cpsaa::config::{ModelConfig, SystemConfig};
+use cpsaa::coordinator::{Service, ServiceConfig};
+use cpsaa::runtime::{executor, ArtifactSet};
 use cpsaa::sim::{pipeline, sddmm, spmm, ChipSim};
-use cpsaa::sparse::{CsrMatrix, MaskMatrix, PlanSet};
-use cpsaa::tensor::SeededRng;
+use cpsaa::sparse::{CsrMatrix, DispatchPlan, MaskMatrix, PlanSet};
+use cpsaa::tensor::{Matrix, SeededRng};
 use cpsaa::util::bench::Bencher;
 
 fn main() {
@@ -154,6 +156,123 @@ fn main() {
         "4-shard batch parallelism vs 1 shard (same work, 4 concurrent row slices): {:.2}x wall",
         s4.as_secs_f64() / s1.as_secs_f64().max(1e-12)
     );
+
+    // -- persistent executor pool vs per-call scoped spawns ------------------
+    // The same (head × row-range) task grid — 8 heads × 4 nnz-balanced
+    // row slices, each an independent serial SDDMM over its sliced plan
+    // — dispatched two ways: the `pool` rung claims tasks from the
+    // long-lived executor (what every kernel now does), the `spawn`
+    // rung re-creates the pre-executor nested model per call (one
+    // scoped OS thread per head, each scope-spawning one thread per row
+    // range: 40 thread creations per call, oversubscribed). Identical
+    // kernels and work on both sides; the delta is pure
+    // thread-creation + oversubscription cost, which the persistent
+    // pool deletes. CI asserts the pool rung beats the spawn rung
+    // same-run (`cpsaa bench-assert-faster`).
+    struct GridTask {
+        m_block: Matrix,
+        plan: DispatchPlan,
+    }
+    let spawn_fanout = 4usize;
+    let grid: Vec<Vec<GridTask>> = (0..8)
+        .map(|h| {
+            let m_h = x.matmul(&mh8.heads[h].w_s);
+            let plan_h = plans8.plan(h);
+            plan_h
+                .partition_rows(spawn_fanout)
+                .into_iter()
+                .map(|r| GridTask {
+                    m_block: m_h.row_block(r.start, r.end),
+                    plan: plan_h.slice_rows(r.clone()),
+                })
+                .collect()
+        })
+        .collect();
+    let flat: Vec<&GridTask> = grid.iter().flatten().collect();
+    let exec = executor::global();
+    let pool_t = b.run("attention_320x512_pool", || {
+        exec.map(&flat, |t| ops::sddmm_csr(&t.m_block, &x, &t.plan).nnz())
+            .iter()
+            .sum::<usize>()
+    });
+    let spawn_t = b.run("attention_320x512_spawn", || {
+        let xr = &x;
+        std::thread::scope(|s| {
+            let heads: Vec<_> = grid
+                .iter()
+                .map(|head_tasks| {
+                    s.spawn(move || {
+                        std::thread::scope(|s2| {
+                            let ranges: Vec<_> = head_tasks
+                                .iter()
+                                .map(|t| {
+                                    s2.spawn(move || ops::sddmm_csr(&t.m_block, xr, &t.plan).nnz())
+                                })
+                                .collect();
+                            ranges.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+                        })
+                    })
+                })
+                .collect();
+            heads.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+        })
+    });
+    println!(
+        "persistent pool vs nested scoped spawns (same task grid): {:.2}x",
+        spawn_t.as_secs_f64() / pool_t.as_secs_f64().max(1e-12)
+    );
+
+    // -- serving: 1 vs 4 leader threads --------------------------------------
+    // End-to-end serve throughput on synthesized artifacts: 8 concurrent
+    // single-batch requests against a 1-leader and a 4-leader service
+    // (both feeding the one executor pool). CI asserts both rungs exist
+    // so multi-leader regressions stay visible per-PR.
+    let serve_model = ModelConfig {
+        seq_len: 32,
+        d_model: 64,
+        d_k: 8,
+        d_ff: 128,
+        heads: 2,
+        ..cfg.model.clone()
+    };
+    let serve_dir =
+        std::env::temp_dir().join(format!("cpsaa-bench-leaders-{}", std::process::id()));
+    ArtifactSet::synthesize(&serve_dir, &serve_model, 3).expect("synthesize serve artifacts");
+    let leaders_svc = |leaders: usize| {
+        Service::start(
+            serve_dir.clone(),
+            cfg.hardware.clone(),
+            serve_model.clone(),
+            ServiceConfig {
+                layers: 1,
+                leaders,
+                max_wait: std::time::Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .expect("start bench service")
+    };
+    let svc1 = leaders_svc(1);
+    let svc4 = leaders_svc(4);
+    let fire = |svc: &Service| {
+        let mut clients = Vec::new();
+        for id in 0..8u64 {
+            let svc = svc.clone();
+            clients.push(std::thread::spawn(move || {
+                let mut rng = SeededRng::new(id + 1);
+                let x = rng.normal_matrix(32, 64, 1.0);
+                svc.infer(id, x).expect("bench request").hidden.norm()
+            }));
+        }
+        clients.into_iter().map(|c| c.join().unwrap()).sum::<f32>()
+    };
+    let l1 = b.run("serve_leaders1", || fire(&svc1));
+    let l4 = b.run("serve_leaders4", || fire(&svc4));
+    println!(
+        "4 leader threads vs 1 (8 concurrent single-batch requests): {:.2}x wall",
+        l4.as_secs_f64() / l1.as_secs_f64().max(1e-12)
+    );
+    std::fs::remove_dir_all(&serve_dir).ok();
 
     // -- golden model end-to-end (pruning + attention) -----------------------
     let model = cpsaa::config::ModelConfig { seq_len: 128, d_model: 256, ..cfg.model.clone() };

@@ -18,6 +18,7 @@
 //! worker count (property-tested over the density × heads × shards
 //! grid in `tests/properties.rs`).
 
+use crate::runtime::executor::Executor;
 use crate::sparse::{softmax_row, spmm_row_into, DispatchPlan};
 use crate::tensor::Matrix;
 
@@ -29,10 +30,12 @@ pub(crate) fn dot(x: &[f32], y: &[f32]) -> f32 {
 /// Fused attention over precomputed projections: `out[i] = softmax(scale
 /// · (m[i] · kvᵀ restricted to plan row i)) · v`, one streaming pass per
 /// row. `out` is reshaped/zeroed in place (workspace reuse); `scratch`
-/// is the serial path's per-row score buffer (parallel workers hold
-/// their own, sized to their range's widest row).
+/// is the serial path's per-row score buffer. Parallel pool tasks
+/// allocate their own small row scratch (≤ widest row) per call — the
+/// one hot-path allocation fusion does not eliminate.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attention_rows_into(
+    exec: &Executor,
     m: &Matrix,
     kv: &Matrix,
     v: &Matrix,
@@ -53,21 +56,20 @@ pub(crate) fn attention_rows_into(
         fuse_range(m, kv, v, plan, scale, 0..plan.rows(), scratch, out.data_mut());
         return;
     }
-    // Contiguous row ranges own disjoint output slices; each worker
+    // Contiguous row ranges own disjoint output slices; each pool task
     // streams its rows independently (values worker-count invariant).
-    std::thread::scope(|scope| {
-        let mut tail: &mut [f32] = out.data_mut();
-        let mut offset = 0usize;
-        for range in ranges {
-            let (head, rest) =
-                std::mem::take(&mut tail).split_at_mut((range.end - offset) * d_v);
-            tail = rest;
-            offset = range.end;
-            scope.spawn(move || {
-                let mut scratch = Vec::new();
-                fuse_range(m, kv, v, plan, scale, range, &mut scratch, head);
-            });
-        }
+    let mut tasks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut tail: &mut [f32] = out.data_mut();
+    let mut offset = 0usize;
+    for range in ranges {
+        let (head, rest) = std::mem::take(&mut tail).split_at_mut((range.end - offset) * d_v);
+        tail = rest;
+        offset = range.end;
+        tasks.push((range, head));
+    }
+    exec.map_consume(tasks, |(range, out_slice)| {
+        let mut scratch = Vec::new();
+        fuse_range(m, kv, v, plan, scale, range, &mut scratch, out_slice);
     });
 }
 
@@ -110,6 +112,7 @@ fn fuse_range(
 /// computed once here, then only the per-head V-block SpMM fans out.
 /// Reuses `values` (cleared/resized; workspace recycling).
 pub(crate) fn scores_softmax(
+    exec: &Executor,
     m: &Matrix,
     kv: &Matrix,
     plan: &DispatchPlan,
@@ -127,17 +130,17 @@ pub(crate) fn scores_softmax(
         score_range(m, kv, plan, scale, 0..plan.rows(), &mut values);
         return values;
     }
-    std::thread::scope(|scope| {
-        let mut tail: &mut [f32] = &mut values;
-        let mut offset = 0usize;
-        for range in ranges {
-            let hi = plan.row_ptr()[range.end] as usize;
-            let (head, rest) = std::mem::take(&mut tail).split_at_mut(hi - offset);
-            tail = rest;
-            offset = hi;
-            scope.spawn(move || score_range(m, kv, plan, scale, range, head));
-        }
-    });
+    let mut tasks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut tail: &mut [f32] = &mut values;
+    let mut offset = 0usize;
+    for range in ranges {
+        let hi = plan.row_ptr()[range.end] as usize;
+        let (head, rest) = std::mem::take(&mut tail).split_at_mut(hi - offset);
+        tail = rest;
+        offset = hi;
+        tasks.push((range, head));
+    }
+    exec.map_consume(tasks, |(range, out_slice)| score_range(m, kv, plan, scale, range, out_slice));
     values
 }
 

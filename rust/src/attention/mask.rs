@@ -1,10 +1,9 @@
 //! Pruning-phase mask generation — Step 1 of the dataflow (eq. 4).
 
 use crate::config::ModelConfig;
+use crate::runtime::executor::{self, Executor};
 use crate::sparse::MaskMatrix;
 use crate::tensor::Matrix;
-
-use crate::util::par::par_map;
 
 use super::quant;
 use super::softmax;
@@ -27,17 +26,27 @@ pub fn generate(x: &Matrix, w_s: &Matrix, cfg: &ModelConfig) -> MaskMatrix {
 
 /// Per-head Step 1: one pruning mask per head from the head's folded
 /// `w_s`. Head prunes are independent (each head's ReCAM slice searches
-/// its own mask, §4.5), so they run concurrently — one
-/// [`par_map`][crate::util::par::par_map] worker per head, head order
-/// preserved.
+/// its own mask, §4.5), so they run concurrently — one pool task per
+/// head on the global executor, head order preserved.
 pub fn generate_heads(x: &Matrix, w: &MultiHeadWeights, cfg: &ModelConfig) -> Vec<MaskMatrix> {
+    generate_heads_in(&executor::global(), x, w, cfg)
+}
+
+/// [`generate_heads`] on a caller-owned [`Executor`] — the engine's
+/// injectable dispatch path.
+pub fn generate_heads_in(
+    exec: &Executor,
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    cfg: &ModelConfig,
+) -> Vec<MaskMatrix> {
     // Replicated-W_S fan-out (a single-head weights file served with
     // heads > 1) prunes identically per head: one quantized matmul
     // chain instead of `heads`.
     if w.shared_w_s() {
         return vec![generate(x, &w.heads[0].w_s, cfg); w.heads.len()];
     }
-    par_map(&w.heads, |h| generate(x, &h.w_s, cfg))
+    exec.map(&w.heads, |h| generate(x, &h.w_s, cfg))
 }
 
 /// Eq. 1: G[i,j] = 1 iff S̃[i,j] ≥ θ — the Binarization Unit.

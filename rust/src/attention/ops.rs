@@ -13,79 +13,37 @@
 //! out of a shared [`WorkspacePool`] so the encoder stack stops
 //! allocating per layer per head per shard.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-
 use crate::config::ModelConfig;
+use crate::runtime::executor::{self, Executor};
 use crate::sparse::{CsrMatrix, CsrView, DispatchPlan, MaskMatrix, PlanSet};
 use crate::tensor::Matrix;
-use crate::util::par::par_map;
 
 use super::fused::{self, dot};
 use super::softmax;
 use super::weights::MultiHeadWeights;
 use super::workspace::{KernelWorkspace, WorkspacePool};
 
-/// Nonzeros below which parallel dispatch is not worth the thread spawns.
-const PARALLEL_NNZ_THRESHOLD: usize = 1 << 12;
-
-/// Default hard cap on kernel workers (the pre-knob behavior).
-const DEFAULT_WORKER_CAP: usize = 8;
-
-/// Tunable worker cap: 0 = unset (resolved lazily from the
-/// `CPSAA_MAX_KERNEL_WORKERS` env var, else [`DEFAULT_WORKER_CAP`]).
-static WORKER_CAP: AtomicUsize = AtomicUsize::new(0);
-
-/// The kernel worker cap currently in force. Worker counts never change
-/// computed values (dispatch only), so the cap is pure throughput
-/// tuning: big machines raise it via [`set_worker_cap`] (the
-/// `ServiceConfig::max_kernel_workers` knob) or `CPSAA_MAX_KERNEL_WORKERS`.
-pub fn worker_cap() -> usize {
-    match WORKER_CAP.load(Ordering::Relaxed) {
-        0 => {
-            let cap = std::env::var("CPSAA_MAX_KERNEL_WORKERS")
-                .ok()
-                .and_then(|s| s.parse::<usize>().ok())
-                .filter(|&c| c > 0)
-                .unwrap_or(DEFAULT_WORKER_CAP);
-            // compare_exchange, not store: a concurrent set_worker_cap
-            // (service startup) must not be clobbered by this lazy
-            // default resolution.
-            match WORKER_CAP.compare_exchange(0, cap, Ordering::Relaxed, Ordering::Relaxed) {
-                Ok(_) => cap,
-                Err(installed) => installed,
-            }
-        }
-        cap => cap,
-    }
-}
-
-/// Set the kernel worker cap (≥ 1 enforced). Process-wide; the serving
-/// layer applies `ServiceConfig::max_kernel_workers` here at startup.
-pub fn set_worker_cap(cap: usize) {
-    WORKER_CAP.store(cap.max(1), Ordering::Relaxed);
-}
-
-/// Worker count for a kernel over `nnz` coordinates (std-only).
-fn workers_for(nnz: usize) -> usize {
-    if nnz < PARALLEL_NNZ_THRESHOLD {
-        return 1;
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(worker_cap())
-}
-
 /// Plan-driven SDDMM straight into CSR: `S = plan ⊙ (A · B)` where `bt`
 /// is B **already transposed** (row j of `bt` = column j of B). Values
 /// land in plan order — no dense S round-trip. Row ranges are dispatched
-/// across `std::thread::scope` workers, balanced by nnz. (The unfused
+/// onto the global [`Executor`] pool, balanced by nnz. (The unfused
 /// building block; the fused hot path never materializes S at all.)
 pub fn sddmm_csr(a: &Matrix, bt: &Matrix, plan: &DispatchPlan) -> CsrMatrix {
-    sddmm_csr_workers(a, bt, plan, workers_for(plan.nnz()))
+    let exec = executor::global();
+    let workers = exec.workers_for(plan.nnz());
+    sddmm_csr_in(&exec, a, bt, plan, workers)
 }
 
-/// [`sddmm_csr`] with an explicit worker cap. The worker count never
-/// changes the values (every coordinate's dot product is independent),
-/// only the dispatch.
-fn sddmm_csr_workers(a: &Matrix, bt: &Matrix, plan: &DispatchPlan, workers: usize) -> CsrMatrix {
+/// [`sddmm_csr`] on an explicit executor with an explicit worker count.
+/// The worker count never changes the values (every coordinate's dot
+/// product is independent), only the dispatch.
+fn sddmm_csr_in(
+    exec: &Executor,
+    a: &Matrix,
+    bt: &Matrix,
+    plan: &DispatchPlan,
+    workers: usize,
+) -> CsrMatrix {
     assert_eq!(a.cols(), bt.cols(), "inner dims");
     assert_eq!((plan.rows(), plan.cols()), (a.rows(), bt.rows()), "plan shape");
     let mut values = vec![0.0f32; plan.nnz()];
@@ -100,24 +58,26 @@ fn sddmm_csr_workers(a: &Matrix, bt: &Matrix, plan: &DispatchPlan, workers: usiz
         }
         return CsrMatrix::from_plan_values(plan, values);
     }
-    std::thread::scope(|scope| {
-        let mut tail: &mut [f32] = &mut values;
-        let mut offset = 0usize;
-        for range in ranges {
-            let hi = plan.row_ptr()[range.end] as usize;
-            let (head, rest) = std::mem::take(&mut tail).split_at_mut(hi - offset);
-            tail = rest;
-            offset = hi;
-            scope.spawn(move || {
-                let base = plan.row_ptr()[range.start] as usize;
-                for i in range {
-                    let arow = a.row(i);
-                    let lo = plan.row_ptr()[i] as usize;
-                    for (k, &j) in plan.row_cols(i).iter().enumerate() {
-                        head[lo + k - base] = dot(arow, bt.row(j as usize));
-                    }
-                }
-            });
+    // Contiguous row ranges own disjoint value slices; each pool task
+    // fills its own (values worker-count invariant).
+    let mut tasks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut tail: &mut [f32] = &mut values;
+    let mut offset = 0usize;
+    for range in ranges {
+        let hi = plan.row_ptr()[range.end] as usize;
+        let (head, rest) = std::mem::take(&mut tail).split_at_mut(hi - offset);
+        tail = rest;
+        offset = hi;
+        tasks.push((range, head));
+    }
+    exec.map_consume(tasks, |(range, out)| {
+        let base = plan.row_ptr()[range.start] as usize;
+        for i in range {
+            let arow = a.row(i);
+            let lo = plan.row_ptr()[i] as usize;
+            for (k, &j) in plan.row_cols(i).iter().enumerate() {
+                out[lo + k - base] = dot(arow, bt.row(j as usize));
+            }
         }
     });
     CsrMatrix::from_plan_values(plan, values)
@@ -152,9 +112,10 @@ pub fn cpsaa_attention_planned(
     cpsaa_attention_planned_ws(x, w_s, w_v, plan, cfg, &mut KernelWorkspace::new())
 }
 
-/// [`cpsaa_attention_planned`] drawing every intermediate from a
-/// caller-owned [`KernelWorkspace`] — zero hot-path allocation beyond
-/// the returned output.
+/// [`cpsaa_attention_planned`] drawing every large intermediate from a
+/// caller-owned [`KernelWorkspace`] — beyond the returned output, the
+/// only hot-path allocation left is the parallel dispatch's per-task
+/// row scratch (see [`super::fused::attention_rows_into`]).
 pub fn cpsaa_attention_planned_ws(
     x: &Matrix,
     w_s: &Matrix,
@@ -163,7 +124,7 @@ pub fn cpsaa_attention_planned_ws(
     cfg: &ModelConfig,
     ws: &mut KernelWorkspace,
 ) -> Matrix {
-    cpsaa_attention_rows_fused(x, x, w_s, w_v, plan, cfg, 1, ws)
+    cpsaa_attention_rows_fused(&executor::global(), x, x, w_s, w_v, plan, cfg, 1, ws)
 }
 
 /// The unfused four-pass reference chain (SDDMM → scale → softmax →
@@ -179,9 +140,10 @@ pub fn cpsaa_attention_unfused(
 ) -> Matrix {
     let m = x.matmul(w_s);
     let v = x.matmul(w_v);
-    let workers = workers_for(plan.nnz());
+    let exec = executor::global();
+    let workers = exec.workers_for(plan.nnz());
     // S = M·Xᵀ: B = Xᵀ, so Bᵀ = X — no transpose materialized.
-    let mut p = sddmm_csr_workers(&m, x, plan, workers);
+    let mut p = sddmm_csr_in(&exec, &m, x, plan, workers);
     p.scale_values(1.0 / (cfg.d_k as f32).sqrt());
     p.softmax_rows();
     p.spmm(&v)
@@ -199,6 +161,7 @@ pub fn cpsaa_attention_unfused(
 /// output.
 #[allow(clippy::too_many_arguments)]
 fn cpsaa_attention_rows_fused(
+    exec: &Executor,
     q_rows: &Matrix,
     kv: &Matrix,
     w_s: &Matrix,
@@ -211,17 +174,18 @@ fn cpsaa_attention_rows_fused(
     let KernelWorkspace { m, v, row, .. } = ws;
     q_rows.matmul_into(w_s, m);
     kv.matmul_into(w_v, v);
-    let workers = (workers_for(plan.nnz()) / budget_share.max(1)).max(1);
+    let workers = (exec.workers_for(plan.nnz()) / budget_share.max(1)).max(1);
     let scale = 1.0 / (cfg.d_k as f32).sqrt();
     let mut out = Matrix::default();
-    fused::attention_rows_into(m, kv, v, plan, scale, workers, row, &mut out);
+    fused::attention_rows_into(exec, m, kv, v, plan, scale, workers, row, &mut out);
     out
 }
 
 /// Multi-head CPSAA attention over a prebuilt [`PlanSet`] — one plan
 /// per head, heads executed concurrently on disjoint tile slices (one
-/// [`par_map`][crate::util::par::par_map] worker per head; each head's
-/// fused kernel keeps its own nnz-balanced `partition_rows` dispatch).
+/// pool task per head on the shared [`Executor`]; each head's fused
+/// kernel keeps its own nnz-balanced `partition_rows` dispatch, and the
+/// nested fan-out flattens into the one pool).
 /// The per-head outputs concatenate column-wise in head order, then the
 /// optional output projection W_O applies. With one head and no W_O
 /// this computes bit-for-bit what [`cpsaa_attention_planned`] computes.
@@ -231,22 +195,24 @@ pub fn multi_head_attention_planned(
     plans: &PlanSet,
     cfg: &ModelConfig,
 ) -> Matrix {
-    multi_head_attention_planned_ws(x, w, plans, cfg, &WorkspacePool::new())
+    multi_head_attention_planned_ws(x, w, plans, cfg, &WorkspacePool::new(), &executor::global())
 }
 
 /// [`multi_head_attention_planned`] with worker workspaces drawn from a
-/// caller-owned [`WorkspacePool`] (the engine's long-lived pool).
+/// caller-owned [`WorkspacePool`] and dispatch on a caller-owned
+/// [`Executor`] (the engine's long-lived pair).
 pub fn multi_head_attention_planned_ws(
     x: &Matrix,
     w: &MultiHeadWeights,
     plans: &PlanSet,
     cfg: &ModelConfig,
     pool: &WorkspacePool,
+    exec: &Executor,
 ) -> Matrix {
     // The single-shard instance of the shard kernel: Q rows = all rows,
     // full worker budget. One definition keeps the sharded/unsharded
     // bit-equivalence structural rather than maintained by hand.
-    multi_head_attention_shard(x, x, w, plans, cfg, 1, pool)
+    multi_head_attention_shard(exec, x, x, w, plans, cfg, 1, pool)
 }
 
 /// One encoder layer with multi-head fan-out: the multi-head attention
@@ -258,35 +224,39 @@ pub fn encoder_layer_heads(
     plans: &PlanSet,
     cfg: &ModelConfig,
 ) -> Matrix {
-    encoder_layer_heads_ws(x, w, plans, cfg, &WorkspacePool::new())
+    encoder_layer_heads_ws(x, w, plans, cfg, &WorkspacePool::new(), &executor::global())
 }
 
-/// [`encoder_layer_heads`] over a caller-owned [`WorkspacePool`] — the
-/// encoder stack passes one pool across all layers, so layer N reuses
-/// layer N−1's buffers.
+/// [`encoder_layer_heads`] over a caller-owned [`WorkspacePool`] and
+/// [`Executor`] — the encoder stack passes one pool across all layers,
+/// so layer N reuses layer N−1's buffers.
 pub fn encoder_layer_heads_ws(
     x: &Matrix,
     w: &MultiHeadWeights,
     plans: &PlanSet,
     cfg: &ModelConfig,
     pool: &WorkspacePool,
+    exec: &Executor,
 ) -> Matrix {
-    let z = multi_head_attention_shard(x, x, w, plans, cfg, 1, pool);
+    let z = multi_head_attention_shard(exec, x, x, w, plans, cfg, 1, pool);
     pool.with(|ws| encoder_tail(x, &z, &w.w_fc1, &w.w_fc2, ws))
 }
 
 /// One shard's multi-head attention: Q rows `x_rows` (a contiguous row
 /// slice of the packed batch `x`, or `x` itself for the full range)
 /// against the full keys/values, over the matching (sliced) plan set.
-/// Heads run one [`par_map`] worker each, drawing workspaces from
-/// `pool`; the replicated-W_S fan-out (a single-head weights file split
-/// N ways) scores, prunes, and softmaxes identically per head, so the
-/// shared P is computed once (one fused SDDMM+scale+softmax row pass
-/// into a zero-copy [`CsrView`]) and only the per-head V-block SpMM
-/// fans out — bit-identical to running the heads independently. Every
-/// row-wise op touches only the shard's rows, so the assembled shard
-/// blocks are bit-identical to the full-range kernel.
+/// Heads run one pool task each on the shared executor, drawing
+/// workspaces from `pool`; the replicated-W_S fan-out (a single-head
+/// weights file split N ways) scores, prunes, and softmaxes identically
+/// per head, so the shared P is computed once (one fused
+/// SDDMM+scale+softmax row pass into a zero-copy [`CsrView`]) and only
+/// the per-head V-block SpMM fans out — bit-identical to running the
+/// heads independently. Every row-wise op touches only the shard's
+/// rows, so the assembled shard blocks are bit-identical to the
+/// full-range kernel.
+#[allow(clippy::too_many_arguments)]
 fn multi_head_attention_shard(
+    exec: &Executor,
     x: &Matrix,
     x_rows: &Matrix,
     w: &MultiHeadWeights,
@@ -301,11 +271,12 @@ fn multi_head_attention_shard(
         w.shared_w_s() && plans.plans().iter().skip(1).all(|p| p == plans.plan(0));
     let zs: Vec<Matrix> = if shared_scores {
         let plan0 = plans.plan(0);
-        let workers = (workers_for(plan0.nnz()) / concurrent_shards.max(1)).max(1);
+        let workers = (exec.workers_for(plan0.nnz()) / concurrent_shards.max(1)).max(1);
         let scale = 1.0 / (cfg.d_k as f32).sqrt();
         pool.with(|ws| {
             x_rows.matmul_into(&w.heads[0].w_s, &mut ws.m);
             let values = fused::scores_softmax(
+                exec,
                 &ws.m,
                 x,
                 plan0,
@@ -314,7 +285,7 @@ fn multi_head_attention_shard(
                 std::mem::take(&mut ws.scores),
             );
             let p = CsrView::new(plan0, values);
-            let zs = par_map(&w.heads, |h| {
+            let zs = exec.map(&w.heads, |h| {
                 pool.with(|hws| {
                     x.matmul_into(&h.w_v, &mut hws.v);
                     p.spmm(&hws.v)
@@ -326,9 +297,10 @@ fn multi_head_attention_shard(
     } else {
         let pairs: Vec<(&super::weights::HeadWeights, &DispatchPlan)> =
             w.heads.iter().zip(plans.plans()).collect();
-        par_map(&pairs, |&(h, p)| {
+        exec.map(&pairs, |&(h, p)| {
             pool.with(|ws| {
                 cpsaa_attention_rows_fused(
+                    exec,
                     x_rows,
                     x,
                     &h.w_s,
@@ -351,34 +323,36 @@ fn multi_head_attention_shard(
 
 /// Batch-parallel multi-head attention over a sharded plan set: shard
 /// `s` computes output rows `shards.range(s)` against the full keys (K
-/// logical chips, one [`par_map`] worker per shard), and the blocks
-/// assemble back in row order. Row-separability of every op makes the
-/// result bit-identical to [`multi_head_attention_planned`] over the
-/// unsliced set, at any shard count.
+/// logical chips, one pool task per shard), and the blocks assemble
+/// back in row order. Row-separability of every op makes the result
+/// bit-identical to [`multi_head_attention_planned`] over the unsliced
+/// set, at any shard count.
 pub fn multi_head_attention_sharded(
     x: &Matrix,
     w: &MultiHeadWeights,
     shards: &crate::sparse::ShardedPlans,
     cfg: &ModelConfig,
 ) -> Matrix {
-    multi_head_attention_sharded_ws(x, w, shards, cfg, &WorkspacePool::new())
+    multi_head_attention_sharded_ws(x, w, shards, cfg, &WorkspacePool::new(), &executor::global())
 }
 
-/// [`multi_head_attention_sharded`] over a caller-owned pool.
+/// [`multi_head_attention_sharded`] over a caller-owned pool and
+/// executor.
 pub fn multi_head_attention_sharded_ws(
     x: &Matrix,
     w: &MultiHeadWeights,
     shards: &crate::sparse::ShardedPlans,
     cfg: &ModelConfig,
     pool: &WorkspacePool,
+    exec: &Executor,
 ) -> Matrix {
     let k = shards.count();
     assert!(k > 0, "sharded attention needs at least one shard");
     let idx: Vec<usize> = (0..k).collect();
-    let blocks = par_map(&idx, |&s| {
+    let blocks = exec.map(&idx, |&s| {
         let r = shards.range(s);
         let x_rows = x.row_block(r.start, r.end);
-        multi_head_attention_shard(x, &x_rows, w, shards.set(s), cfg, k, pool)
+        multi_head_attention_shard(exec, x, &x_rows, w, shards.set(s), cfg, k, pool)
     });
     assemble_row_blocks(x.rows(), &blocks, shards)
 }
@@ -394,24 +368,26 @@ pub fn encoder_layer_heads_sharded(
     shards: &crate::sparse::ShardedPlans,
     cfg: &ModelConfig,
 ) -> Matrix {
-    encoder_layer_heads_sharded_ws(x, w, shards, cfg, &WorkspacePool::new())
+    encoder_layer_heads_sharded_ws(x, w, shards, cfg, &WorkspacePool::new(), &executor::global())
 }
 
-/// [`encoder_layer_heads_sharded`] over a caller-owned pool.
+/// [`encoder_layer_heads_sharded`] over a caller-owned pool and
+/// executor.
 pub fn encoder_layer_heads_sharded_ws(
     x: &Matrix,
     w: &MultiHeadWeights,
     shards: &crate::sparse::ShardedPlans,
     cfg: &ModelConfig,
     pool: &WorkspacePool,
+    exec: &Executor,
 ) -> Matrix {
     let k = shards.count();
     assert!(k > 0, "sharded encoder layer needs at least one shard");
     let idx: Vec<usize> = (0..k).collect();
-    let blocks = par_map(&idx, |&s| {
+    let blocks = exec.map(&idx, |&s| {
         let r = shards.range(s);
         let x_rows = x.row_block(r.start, r.end);
-        let z = multi_head_attention_shard(x, &x_rows, w, shards.set(s), cfg, k, pool);
+        let z = multi_head_attention_shard(exec, x, &x_rows, w, shards.set(s), cfg, k, pool);
         pool.with(|ws| encoder_tail(&x_rows, &z, &w.w_fc1, &w.w_fc2, ws))
     });
     assemble_row_blocks(x.rows(), &blocks, shards)
@@ -472,7 +448,8 @@ pub fn encoder_layer_planned(
     cfg: &ModelConfig,
 ) -> Matrix {
     let mut ws = KernelWorkspace::new();
-    let z = cpsaa_attention_rows_fused(x, x, &w.w_s, &w.w_v, plan, cfg, 1, &mut ws);
+    let exec = executor::global();
+    let z = cpsaa_attention_rows_fused(&exec, x, x, &w.w_s, &w.w_v, plan, cfg, 1, &mut ws);
     encoder_tail(x, &z, &w.w_fc1, &w.w_fc2, &mut ws)
 }
 
@@ -768,20 +745,29 @@ mod tests {
     }
 
     #[test]
-    fn worker_cap_is_tunable() {
-        let before = worker_cap();
-        assert!(before >= 1);
-        set_worker_cap(2);
-        assert_eq!(worker_cap(), 2);
-        set_worker_cap(0); // clamped to 1, never 0
-        assert_eq!(worker_cap(), 1);
-        // Values are worker-count invariant: a capped run matches.
-        let (x, w, cfg) = setup(32, 64);
-        let mask = generate_mask(&x, &w.w_s, &cfg);
-        let plan = mask.plan();
-        let capped = cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg);
-        set_worker_cap(before);
-        let restored = cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg);
-        assert_eq!(capped, restored);
+    fn injected_executor_is_worker_count_invariant() {
+        // The same kernels on a strictly serial pool, a narrow pool, and
+        // the crate-wide default must not differ in a single bit — the
+        // executor axis of the equivalence grid.
+        let cfg = ModelConfig { seq_len: 32, d_model: 64, d_k: 8, d_ff: 128, heads: 4, ..Default::default() };
+        let mh = MultiHeadWeights::synthetic(&cfg, 21);
+        let x = SeededRng::new(22).normal_matrix(32, 64, 1.0);
+        let masks = super::super::mask::generate_heads(&x, &mh, &cfg);
+        let plans = PlanSet::build(&masks);
+        let want = multi_head_attention_planned(&x, &mh, &plans, &cfg);
+        let want_sharded = multi_head_attention_sharded(&x, &mh, &plans.shard(3), &cfg);
+        assert_eq!(want, want_sharded);
+        for workers in [1usize, 2, 5] {
+            let exec = Executor::new(workers);
+            let pool = WorkspacePool::new();
+            let got = multi_head_attention_planned_ws(&x, &mh, &plans, &cfg, &pool, &exec);
+            assert_eq!(got, want, "planned diverged at {workers} executor workers");
+            let got_sharded =
+                multi_head_attention_sharded_ws(&x, &mh, &plans.shard(3), &cfg, &pool, &exec);
+            assert_eq!(got_sharded, want, "sharded diverged at {workers} executor workers");
+            let h = encoder_layer_heads_ws(&x, &mh, &plans, &cfg, &pool, &exec);
+            let h_want = encoder_layer_heads(&x, &mh, &plans, &cfg);
+            assert_eq!(h, h_want, "encoder layer diverged at {workers} executor workers");
+        }
     }
 }

@@ -19,7 +19,7 @@
 //!   leak between calls. A workspace needs no cleanup between uses.
 //! * **Thread safety:** a `KernelWorkspace` is exclusive (`&mut`) to one
 //!   worker for the duration of one kernel. Concurrent workers (per-head
-//!   / per-shard `par_map` fan-outs) each check a workspace out of a
+//!   / per-shard executor tasks) each check a workspace out of a
 //!   shared [`WorkspacePool`] — the pool's mutex is held only for the
 //!   pop/push, never across kernel work, so workers never serialize on
 //!   it. The pool grows to the high-water concurrency and then recycles.
@@ -101,16 +101,16 @@ mod tests {
 
     #[test]
     fn pool_grows_under_concurrency() {
+        // A private 4-worker executor gives the concurrent checkout
+        // pattern deterministically, independent of the global pool size.
+        let exec = crate::runtime::executor::Executor::new(4);
         let pool = WorkspacePool::new();
-        std::thread::scope(|s| {
-            for _ in 0..4 {
-                s.spawn(|| {
-                    pool.with(|ws| {
-                        ws.row.resize(16, 0.0);
-                        std::thread::sleep(std::time::Duration::from_millis(10));
-                    })
-                });
-            }
+        let idx: Vec<usize> = (0..4).collect();
+        exec.map(&idx, |_| {
+            pool.with(|ws| {
+                ws.row.resize(16, 0.0);
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            })
         });
         let idle = pool.idle();
         assert!(idle >= 1 && idle <= 4, "pool holds {idle} workspaces");

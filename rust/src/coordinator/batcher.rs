@@ -15,7 +15,34 @@
 //! across every encoder layer; the packing itself is head-agnostic —
 //! all heads see the same packed X.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
 use crate::tensor::Matrix;
+
+/// Shared monotonic batch-id source. Every leader's [`Batcher`] draws
+/// from one `BatchIds`, so batch ids stay unique and attributable
+/// across *all* leaders of a service — two leaders can never seal the
+/// same id, and interleaved metric lines from concurrent leaders keep
+/// pointing at exactly one batch.
+#[derive(Clone, Debug, Default)]
+pub struct BatchIds(Arc<AtomicU64>);
+
+impl BatchIds {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Claim the next batch id (monotonic for this source's lifetime).
+    fn next(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Batches sealed so far across every batcher sharing this source.
+    pub fn sealed(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
 
 /// A request occupying `rows` leading rows of its embedding matrix.
 #[derive(Clone, Debug)]
@@ -45,13 +72,20 @@ pub struct Batcher {
     seq_len: usize,
     d_model: usize,
     queue: Vec<(u64, Matrix)>,
-    /// Batches sealed so far — the next batch id.
-    sealed: u64,
+    /// Batch-id source — private to this batcher, or shared across the
+    /// leaders of one service ([`Batcher::with_ids`]).
+    ids: BatchIds,
 }
 
 impl Batcher {
     pub fn new(seq_len: usize, d_model: usize) -> Self {
-        Self { seq_len, d_model, queue: Vec::new(), sealed: 0 }
+        Self::with_ids(seq_len, d_model, BatchIds::new())
+    }
+
+    /// A batcher drawing batch ids from a shared source — one source
+    /// per service, one batcher per leader.
+    pub fn with_ids(seq_len: usize, d_model: usize, ids: BatchIds) -> Self {
+        Self { seq_len, d_model, queue: Vec::new(), ids }
     }
 
     /// Enqueue one request. Returns `Err` if the request alone exceeds a
@@ -111,9 +145,7 @@ impl Batcher {
             entries.push(PackedRequest { id, offset, rows });
             offset += rows;
         }
-        let batch = self.sealed;
-        self.sealed += 1;
-        BatchPlan { batch, x, entries, used_rows: offset }
+        BatchPlan { batch: self.ids.next(), x, entries, used_rows: offset }
     }
 }
 
@@ -219,5 +251,26 @@ mod tests {
         // ids keep counting across windows — the attribution key never
         // repeats for this batcher's lifetime
         assert_eq!(second[0].batch, 2);
+    }
+
+    #[test]
+    fn shared_id_source_never_repeats_across_batchers() {
+        // Two batchers (two leaders) on one source: every sealed batch
+        // gets a unique id, and the source counts all of them.
+        let ids = BatchIds::new();
+        let mut a = Batcher::with_ids(8, 2, ids.clone());
+        let mut b = Batcher::with_ids(8, 2, ids.clone());
+        a.push(0, Matrix::zeros(8, 2)).unwrap();
+        b.push(1, Matrix::zeros(8, 2)).unwrap();
+        a.push(2, Matrix::zeros(8, 2)).unwrap();
+        let mut seen: Vec<u64> = a
+            .drain()
+            .into_iter()
+            .chain(b.drain())
+            .map(|p| p.batch)
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2], "ids must be unique across leaders");
+        assert_eq!(ids.sealed(), 3);
     }
 }

@@ -129,6 +129,21 @@ pub struct ShardLine {
     pub sim_pj: f64,
 }
 
+/// Per-leader serving accounting (index = leader thread). Leaders run
+/// independent batching loops feeding the one executor pool, so the
+/// per-leader lines make leader imbalance (one leader starving while
+/// another drains the queue) visible.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LeaderMetrics {
+    /// Batches this leader sealed and executed.
+    pub batches: u64,
+    /// Requests this leader served.
+    pub requests: u64,
+    /// Simulated accelerator time attributed to this leader's batches
+    /// (ns).
+    pub sim_ns: f64,
+}
+
 /// Attribution lines kept per log; oldest drop first so a long-running
 /// service holds bounded memory while recent batches stay inspectable.
 const LINE_LOG_CAP: usize = 4096;
@@ -156,6 +171,9 @@ pub struct ServeMetrics {
     pub head_lines: Vec<HeadLine>,
     /// Recent per-batch shard lines, each carrying its batch id.
     pub shard_lines: Vec<ShardLine>,
+    /// Per-leader accounting, leader order; sized at service startup
+    /// (len 1 under single-leader serving).
+    pub leaders: Vec<LeaderMetrics>,
 }
 
 impl ServeMetrics {
@@ -228,6 +246,17 @@ impl ServeMetrics {
     pub fn head_mean_densities(&self) -> Vec<f64> {
         let n = self.batches.max(1) as f64;
         self.heads.iter().map(|h| h.density_sum / n).collect()
+    }
+
+    /// Fold one executed batch into leader `leader`'s line.
+    pub fn record_leader(&mut self, leader: usize, requests: u64, sim_ns: f64) {
+        if self.leaders.len() <= leader {
+            self.leaders.resize(leader + 1, LeaderMetrics::default());
+        }
+        let m = &mut self.leaders[leader];
+        m.batches += 1;
+        m.requests += requests;
+        m.sim_ns += sim_ns;
     }
 }
 
@@ -327,6 +356,19 @@ mod tests {
         // oldest dropped first: the newest batch is still present
         assert_eq!(m.head_lines.last().unwrap().batch, 2999);
         assert!(m.head_lines.first().unwrap().batch > 0);
+    }
+
+    #[test]
+    fn leader_metrics_accumulate_per_leader() {
+        let mut m = ServeMetrics::default();
+        m.record_leader(0, 3, 100.0);
+        m.record_leader(2, 1, 50.0);
+        m.record_leader(0, 2, 25.0);
+        assert_eq!(m.leaders.len(), 3);
+        assert_eq!(m.leaders[0], LeaderMetrics { batches: 2, requests: 5, sim_ns: 125.0 });
+        // leader 1 exists (sized by the highest index) but idle
+        assert_eq!(m.leaders[1], LeaderMetrics::default());
+        assert_eq!(m.leaders[2].batches, 1);
     }
 
     #[test]

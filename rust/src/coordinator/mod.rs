@@ -3,15 +3,18 @@
 //!
 //! CPSAA's system contribution is the in-memory dataflow; the coordinator
 //! is the thin-but-real host layer around it (the paper's DTC + CTRL role
-//! at application level, §4.5): it packs incoming sequences into
-//! 320-embedding batches, drives the per-layer multi-head executions
+//! at application level, §4.5): its leader threads (one or several,
+//! sharing one request channel and one batch-id source, all feeding the
+//! one executor pool) pack incoming sequences into
+//! 320-embedding batches, drive the per-layer multi-head executions
 //! (one [`PlanSet`][crate::sparse::PlanSet] per batch, heads concurrent
-//! on disjoint tile slices), fans each batch across K logical chips when
+//! on disjoint tile slices), fan each batch across K logical chips when
 //! sharded ([`shard`]: nnz-balanced row partition from the plan set, one
-//! sliced plan set per shard, max-ns/sum-pJ merge), tracks
+//! sliced plan set per shard, max-ns/sum-pJ merge), track
 //! hardware-simulated cost alongside functional results — per head, per
-//! shard, and per batch — and reports serving metrics (latency
-//! percentiles, GOPS, head/shard imbalance, batch-attributed lines).
+//! shard, and per batch — and report serving metrics (latency
+//! percentiles, GOPS, head/shard/leader imbalance, batch-attributed
+//! lines).
 
 mod batcher;
 mod metrics;
@@ -19,8 +22,10 @@ mod pipeline;
 mod service;
 pub mod shard;
 
-pub use batcher::{BatchPlan, Batcher, PackedRequest};
-pub use metrics::{HeadLine, HeadMetrics, LatencyHistogram, ServeMetrics, ShardLine, ShardMetrics};
+pub use batcher::{BatchIds, BatchPlan, Batcher, PackedRequest};
+pub use metrics::{
+    HeadLine, HeadMetrics, LatencyHistogram, LeaderMetrics, ServeMetrics, ShardLine, ShardMetrics,
+};
 pub use pipeline::{EncoderStack, LayerOutput};
 pub use service::{InferenceResponse, Service, ServiceConfig};
 pub use shard::{ShardCost, ShardedBatchCost};

@@ -2,14 +2,27 @@
 //!
 //! The engine is single-threaded by design (interior `RefCell` stats;
 //! with a PJRT backend the client is `Rc`-based too) — exactly like the
-//! physical CPSAA chip is one device. The service spawns a **leader
-//! thread** that owns the engine; callers submit requests over an mpsc
-//! channel and block on a reply channel. Dynamic batching happens in the
-//! leader: it drains whatever arrived within `max_wait` (or until a batch
-//! fills), packs with [`Batcher`], executes the encoder stack once per
-//! batch — one [`PlanSet`][crate::sparse::PlanSet] per batch (one ReCAM
-//! scan per head mask), reused across all layers — and fans results back
-//! out. `model.heads > 1` fans each layer across concurrent per-head
+//! physical CPSAA chip is one device. The service spawns `leaders`
+//! **leader threads**, each owning its own engine instance; callers
+//! submit requests over one shared mpsc channel and block on a reply
+//! channel. Dynamic batching happens in whichever leader claims the
+//! channel: it drains whatever arrived within `max_wait` (or until a
+//! batch fills), releases the channel, packs with [`Batcher`], executes
+//! the encoder stack once per batch — one
+//! [`PlanSet`][crate::sparse::PlanSet] per batch (one ReCAM scan per
+//! head mask), reused across all layers — and fans results back out.
+//! While one leader executes, the next leader is already draining the
+//! channel, so batch windows pipeline with batch executions.
+//!
+//! All leaders dispatch kernels onto the **one** crate-wide
+//! [`executor`][crate::runtime::executor] pool (sized by
+//! `max_kernel_workers`), and all draw batch ids from one shared
+//! [`BatchIds`] source, so ids stay unique and every interleaved metric
+//! line remains attributable. Per-leader metrics lines make leader
+//! imbalance visible. `leaders == 1` is the historical single-leader
+//! loop.
+//!
+//! `model.heads > 1` fans each layer across concurrent per-head
 //! workers inside the stack (§4.5 tile slices); responses and metrics
 //! carry the per-head latency/energy/density lines.
 //!
@@ -17,9 +30,7 @@
 //! chips: rows are partitioned by per-row nnz from the batch's plan set,
 //! each shard runs its slice (own sliced `PlanSet`, own simulated chip)
 //! concurrently, and costs merge as max-ns across chips / sum-pJ.
-//! Responses and metrics gain per-shard lines; every per-head and
-//! per-shard metric line carries its batch id so interleaved lines stay
-//! attributable when several batches are in flight. `shards == 1` is
+//! Responses and metrics gain per-shard lines. `shards == 1` is
 //! bit-identical to unsharded serving.
 
 use std::sync::mpsc;
@@ -34,7 +45,7 @@ use crate::config::{HardwareConfig, ModelConfig};
 use crate::runtime::{ArtifactSet, Engine};
 use crate::tensor::Matrix;
 
-use super::batcher::Batcher;
+use super::batcher::{BatchIds, Batcher};
 use super::metrics::ServeMetrics;
 use super::pipeline::EncoderStack;
 
@@ -76,6 +87,8 @@ pub struct InferenceResponse {
     /// Rows each shard owned of this request's batch (nnz-balanced);
     /// empty when unsharded.
     pub shard_rows: Vec<usize>,
+    /// The leader thread that batched and executed this request.
+    pub leader: usize,
 }
 
 impl InferenceResponse {
@@ -99,12 +112,17 @@ pub struct ServiceConfig {
     /// Logical chips each packed batch fans out across (≥ 1; 1 =
     /// unsharded, bit-identical to the single-chip path).
     pub shards: usize,
-    /// Cap on per-kernel dispatch workers. `None` keeps the process
-    /// default (the `CPSAA_MAX_KERNEL_WORKERS` env var, else 8);
-    /// `Some(n)` applies `n` at startup via
-    /// [`crate::attention::ops::set_worker_cap`] so big machines are
-    /// not throttled at the historical cap. Worker counts never change
-    /// computed values, only throughput.
+    /// Leader threads batching in parallel (≥ 1; 1 = the historical
+    /// single-leader loop). All leaders feed the one executor pool and
+    /// share one monotonic batch-id source.
+    pub leaders: usize,
+    /// Width of the crate-wide kernel executor pool. `None` keeps the
+    /// process default (the `CPSAA_MAX_KERNEL_WORKERS` env var, else 8,
+    /// capped at machine parallelism); `Some(n)` rebuilds the global
+    /// pool at `n` workers via
+    /// [`executor::configure`][crate::runtime::executor::configure] at
+    /// startup so big machines are not throttled at the historical cap.
+    /// Worker counts never change computed values, only throughput.
     pub max_kernel_workers: Option<usize>,
 }
 
@@ -114,6 +132,7 @@ impl Default for ServiceConfig {
             layers: 2,
             max_wait: Duration::from_millis(2),
             shards: 1,
+            leaders: 1,
             max_kernel_workers: None,
         }
     }
@@ -127,28 +146,76 @@ pub struct Service {
 }
 
 impl Service {
-    /// Spawn the leader thread: it opens the artifacts and builds the
-    /// PJRT engine *on its own thread* (the client is not `Send`).
+    /// Spawn the leader threads: each opens the artifacts and builds its
+    /// own engine *on its own thread* (the client is not `Send`). All
+    /// leaders share one request channel, one batch-id source, and the
+    /// one global executor pool.
     pub fn start(
         artifact_dir: std::path::PathBuf,
         hw: HardwareConfig,
         model_overlay: ModelConfig,
         cfg: ServiceConfig,
     ) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<InferenceRequest>();
-        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
-        let metrics2 = metrics.clone();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<ModelConfig>>();
-        std::thread::Builder::new()
-            .name("cpsaa-leader".into())
-            .spawn(move || leader_loop(artifact_dir, hw, model_overlay, cfg, rx, metrics2, ready_tx))
-            .context("spawning leader thread")?;
-        // Wait for the engine to come up (or fail fast).
-        match ready_rx.recv() {
-            Ok(Ok(_model)) => Ok(Self { tx, metrics }),
-            Ok(Err(e)) => Err(e),
-            Err(_) => Err(anyhow!("leader thread died during startup")),
+        if cfg.leaders == 0 {
+            return Err(anyhow!("leaders must be >= 1"));
         }
+        // Size the one crate-wide pool every leader feeds, before any
+        // leader starts dispatching onto it.
+        match cfg.max_kernel_workers {
+            Some(0) => return Err(anyhow!("max_kernel_workers must be >= 1")),
+            Some(n) => crate::runtime::executor::configure(n)
+                .map_err(|e| anyhow!("max_kernel_workers: {e}"))?,
+            None => {}
+        }
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        let rx = Arc::new(Mutex::new(rx));
+        // Size the per-leader lines up front so an idle leader shows as
+        // an explicit zero row instead of silently missing — leader
+        // imbalance is exactly what these lines exist to expose.
+        let metrics = Arc::new(Mutex::new(ServeMetrics {
+            leaders: vec![super::metrics::LeaderMetrics::default(); cfg.leaders],
+            ..Default::default()
+        }));
+        let ids = BatchIds::new();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<ModelConfig>>();
+        for leader in 0..cfg.leaders {
+            let artifact_dir = artifact_dir.clone();
+            let hw = hw.clone();
+            let model_overlay = model_overlay.clone();
+            let cfg = cfg.clone();
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            let ids = ids.clone();
+            let ready_tx = ready_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("cpsaa-leader-{leader}"))
+                .spawn(move || {
+                    leader_loop(
+                        leader,
+                        artifact_dir,
+                        hw,
+                        model_overlay,
+                        cfg,
+                        rx,
+                        metrics,
+                        ids,
+                        ready_tx,
+                    )
+                })
+                .context("spawning leader thread")?;
+        }
+        // Only the leaders hold ready senders now: a leader dying before
+        // reporting in surfaces as a recv error instead of a hang.
+        drop(ready_tx);
+        // Wait for every engine to come up (or fail fast).
+        for _ in 0..cfg.leaders {
+            match ready_rx.recv() {
+                Ok(Ok(_model)) => {}
+                Ok(Err(e)) => return Err(e),
+                Err(_) => return Err(anyhow!("leader thread died during startup")),
+            }
+        }
+        Ok(Self { tx, metrics })
     }
 
     /// Submit a request and block until its response arrives.
@@ -167,12 +234,14 @@ impl Service {
 
 #[allow(clippy::too_many_arguments)]
 fn leader_loop(
+    leader: usize,
     artifact_dir: std::path::PathBuf,
     hw: HardwareConfig,
     model_overlay: ModelConfig,
     cfg: ServiceConfig,
-    rx: mpsc::Receiver<InferenceRequest>,
+    rx: Arc<Mutex<mpsc::Receiver<InferenceRequest>>>,
     metrics: Arc<Mutex<ServeMetrics>>,
+    ids: BatchIds,
     ready: mpsc::Sender<Result<ModelConfig>>,
 ) {
     // Build everything that must live on this thread.
@@ -198,11 +267,6 @@ fn leader_loop(
         if cfg.shards == 0 {
             return Err(anyhow!("shards must be >= 1"));
         }
-        match cfg.max_kernel_workers {
-            Some(0) => return Err(anyhow!("max_kernel_workers must be >= 1")),
-            Some(n) => crate::attention::ops::set_worker_cap(n),
-            None => {}
-        }
         let weights = MultiHeadWeights::load(&set.dir.join("weights.json"), model.heads)?;
         weights.validate().map_err(|e| anyhow!("bad weights for {} heads: {e}", model.heads))?;
         let engine = Engine::load(&set)?;
@@ -220,28 +284,36 @@ fn leader_loop(
     };
     let stack = EncoderStack::new(&engine, weights, hw, model.clone(), cfg.layers)
         .with_shards(cfg.shards);
-    // One batcher for the leader's lifetime: its monotonic batch ids key
-    // every per-head/per-shard metric line.
-    let mut batcher = Batcher::new(model.seq_len, model.d_model);
+    // One batcher per leader, all drawing from the service's shared
+    // monotonic id source: every per-head/per-shard metric line stays
+    // keyed to exactly one batch even with several leaders in flight.
+    let mut batcher = Batcher::with_ids(model.seq_len, model.d_model, ids);
 
-    while let Ok(first) = rx.recv() {
-        // Batching window.
-        let mut window = vec![first];
-        let mut rows = window[0].x.rows();
-        let deadline = Instant::now() + cfg.max_wait;
-        while rows < model.seq_len {
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
-                break;
-            }
-            match rx.recv_timeout(remaining) {
-                Ok(req) => {
-                    rows += req.x.rows();
-                    window.push(req);
+    loop {
+        // Claim the shared channel for one batching window; competing
+        // leaders block here while this one drains, then take over the
+        // channel the moment this leader moves on to execution.
+        let window = {
+            let Ok(channel) = rx.lock() else { return };
+            let Ok(first) = channel.recv() else { return };
+            let mut window = vec![first];
+            let mut rows = window[0].x.rows();
+            let deadline = Instant::now() + cfg.max_wait;
+            while rows < model.seq_len {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
                 }
-                Err(_) => break,
+                match channel.recv_timeout(remaining) {
+                    Ok(req) => {
+                        rows += req.x.rows();
+                        window.push(req);
+                    }
+                    Err(_) => break,
+                }
             }
-        }
+            window
+        };
 
         let mut replies = std::collections::HashMap::new();
         let arrival = Instant::now();
@@ -304,6 +376,7 @@ fn leader_loop(
                     if !shard_ns.is_empty() {
                         m.record_shards(plan.batch, &shard_rows, &shard_nnz, &shard_ns, &shard_pj);
                     }
+                    m.record_leader(leader, plan.entries.len() as u64, sim_ns);
                     for entry in &plan.entries {
                         let hidden = plan.extract(&last.hidden, entry);
                         let latency = arrival.elapsed();
@@ -323,6 +396,7 @@ fn leader_loop(
                                 shard_sim_ns: shard_ns.clone(),
                                 shard_sim_pj: shard_pj.clone(),
                                 shard_rows: shard_rows.clone(),
+                                leader,
                             }));
                         }
                     }
@@ -428,6 +502,85 @@ mod tests {
             Err(e) => e,
         };
         assert!(err.to_string().contains("shards"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn zero_leaders_rejected_at_startup() {
+        let dir = std::env::temp_dir()
+            .join(format!("cpsaa-svc-leaders0-{}", std::process::id()));
+        let model = crate::config::ModelConfig {
+            seq_len: 16,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            ..crate::config::ModelConfig::default()
+        };
+        crate::runtime::ArtifactSet::synthesize(&dir, &model, 2).unwrap();
+        let err = match Service::start(
+            dir.clone(),
+            HardwareConfig::paper(),
+            model,
+            ServiceConfig { leaders: 0, ..Default::default() },
+        ) {
+            Ok(_) => panic!("leaders = 0 must be rejected at startup"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("leaders"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn multi_leader_serves_all_requests_with_unique_batch_ids() {
+        let dir = std::env::temp_dir()
+            .join(format!("cpsaa-svc-leaders3-{}", std::process::id()));
+        let model = crate::config::ModelConfig {
+            seq_len: 16,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            ..crate::config::ModelConfig::default()
+        };
+        crate::runtime::ArtifactSet::synthesize(&dir, &model, 7).unwrap();
+        let svc = Service::start(
+            dir.clone(),
+            HardwareConfig::paper(),
+            model,
+            ServiceConfig {
+                layers: 1,
+                leaders: 3,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut handles = Vec::new();
+        for id in 0..6u64 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = SeededRng::new(id);
+                let x = rng.normal_matrix(16, 32, 1.0);
+                svc.infer(id, x).unwrap()
+            }));
+        }
+        let resps: Vec<InferenceResponse> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let mut got: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..6).collect::<Vec<u64>>());
+        assert!(resps.iter().all(|r| r.leader < 3), "leader index out of range");
+        let m = svc.metrics();
+        assert_eq!(m.requests, 6);
+        // Every batch was attributed to exactly one leader...
+        let leader_batches: u64 = m.leaders.iter().map(|l| l.batches).sum();
+        assert_eq!(leader_batches, m.batches);
+        let leader_requests: u64 = m.leaders.iter().map(|l| l.requests).sum();
+        assert_eq!(leader_requests, m.requests);
+        // ...and head lines never reused a batch id across leaders.
+        let mut batch_ids: Vec<u64> = m.head_lines.iter().map(|l| l.batch).collect();
+        batch_ids.sort_unstable();
+        batch_ids.dedup();
+        assert_eq!(batch_ids.len() as u64, m.batches, "batch ids must be unique");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -7,7 +7,7 @@
 //! counts — and every shard gets its own sliced plan set
 //! ([`PlanSet::shard`]). The functional fan-out lives in
 //! [`ops::encoder_layer_heads_sharded`][crate::attention::ops::encoder_layer_heads_sharded]
-//! (one [`par_map`][crate::util::par::par_map] worker per shard,
+//! (one executor pool task per shard,
 //! bit-identical assembly); this module owns the *cost and metrics*
 //! side: simulate each shard's chip, merge max-ns / sum-pJ across
 //! chips, and attribute per-shard and per-head lines back to one batch.

@@ -36,11 +36,14 @@ COMMANDS:
                                     cycle-simulate GLUE/SQuAD traces (default: all)
   bench-figure ID [--out-dir DIR]   regenerate a paper figure/table
                                     (fig3, table2, fig11..fig18, fig19a/b, fig20a/b, all)
-  serve [--requests N] [--layers N] [--heads N] [--shards N] [--max-workers N]
+  serve [--requests N] [--layers N] [--heads N] [--shards N] [--leaders N]
+        [--max-workers N]
                                     demo serving loop over the artifact engine
                                     (multi-head fan-out across tile slices;
                                     --shards N fans each batch across N logical
-                                    chips, rows nnz-balanced from the plan set)
+                                    chips, rows nnz-balanced from the plan set;
+                                    --leaders N batches in N parallel leader
+                                    threads feeding one executor pool)
   inference [DATASET] [--layers N] [--heads N]
                                     application-level sim: encoders = attention
                                     + FC (+ DTC hops) + endurance estimate
@@ -153,10 +156,14 @@ fn main() -> Result<()> {
                 .map(|s| s.parse::<usize>())
                 .transpose()?
                 .unwrap_or(1);
+            let leaders = take_flag(&mut cmd, "--leaders")
+                .map(|s| s.parse::<usize>())
+                .transpose()?
+                .unwrap_or(1);
             let max_workers = take_flag(&mut cmd, "--max-workers")
                 .map(|s| s.parse::<usize>())
                 .transpose()?;
-            serve(&cfg, &args.artifacts, requests, layers, heads, shards, max_workers)
+            serve(&cfg, &args.artifacts, requests, layers, heads, shards, leaders, max_workers)
         }
         "inference" => {
             let layers = take_flag(&mut cmd, "--layers")
@@ -289,6 +296,7 @@ fn serve(
     layers: usize,
     heads: usize,
     shards: usize,
+    leaders: usize,
     max_workers: Option<usize>,
 ) -> Result<()> {
     // Probe the manifest for the artifact shapes before spawning.
@@ -301,10 +309,16 @@ fn serve(
         artifacts.to_path_buf(),
         cfg.hardware.clone(),
         ModelConfig { heads, ..cfg.model.clone() },
-        ServiceConfig { layers, shards, max_kernel_workers: max_workers, ..Default::default() },
+        ServiceConfig {
+            layers,
+            shards,
+            leaders,
+            max_kernel_workers: max_workers,
+            ..Default::default()
+        },
     )?;
     println!(
-        "service up (artifact shape {seq_len}x{d_model}, {layers} layers, {heads} heads, {shards} shards)"
+        "service up (artifact shape {seq_len}x{d_model}, {layers} layers, {heads} heads, {shards} shards, {leaders} leaders)"
     );
 
     let start = std::time::Instant::now();
@@ -343,6 +357,16 @@ fn serve(
         m.sim_ns / 1e6,
         m.sim_pj * 1e-9
     );
+    if m.leaders.len() > 1 {
+        for (l, lm) in m.leaders.iter().enumerate() {
+            println!(
+                "  leader {l}: {} batches, {} requests, {:.3} ms",
+                lm.batches,
+                lm.requests,
+                lm.sim_ns / 1e6
+            );
+        }
+    }
     if m.heads.len() > 1 {
         let dens = m.head_mean_densities();
         for (h, hm) in m.heads.iter().enumerate() {

@@ -9,6 +9,7 @@
 //! to the same JAX numerics.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::anyhow;
@@ -19,6 +20,7 @@ use crate::tensor::Matrix;
 use crate::util::error::Result;
 
 use super::artifact::ArtifactSet;
+use super::executor::{self, Executor};
 
 /// Graph names the native interpreter implements.
 const KNOWN_GRAPHS: [&str; 5] =
@@ -57,6 +59,12 @@ pub struct Engine {
     /// stack stops allocating fresh buffers per layer per head per
     /// shard (steady state after the first batch).
     workspaces: WorkspacePool,
+    /// The worker pool every fan-out under this engine dispatches onto
+    /// (mask scans, plan builds, head/shard/row-range kernels). Defaults
+    /// to the crate-wide [`executor::global`] pool — all engines, and
+    /// all leader threads, share the one pool — and is injectable for
+    /// tests via [`Engine::with_executor`].
+    exec: Arc<Executor>,
 }
 
 impl Engine {
@@ -80,7 +88,25 @@ impl Engine {
             }
             params.insert(name.to_string(), artifacts.manifest.artifacts[name].params.clone());
         }
-        Ok(Self { model, params, stats: Default::default(), workspaces: WorkspacePool::new() })
+        Ok(Self {
+            model,
+            params,
+            stats: Default::default(),
+            workspaces: WorkspacePool::new(),
+            exec: executor::global(),
+        })
+    }
+
+    /// Replace the engine's dispatch pool (tests pin worker counts with
+    /// this; serving keeps the shared global pool).
+    pub fn with_executor(mut self, exec: Arc<Executor>) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// The worker pool this engine dispatches onto.
+    pub fn executor(&self) -> &Arc<Executor> {
+        &self.exec
     }
 
     pub fn platform(&self) -> String {
@@ -166,11 +192,17 @@ impl Engine {
         let cfg = &self.model;
         self.validate_encoder_heads_input(x, w)?;
         let start = Instant::now();
-        let masks = attention::generate_head_masks(x, w, cfg);
-        let plans = PlanSet::build(&masks);
+        let masks = attention::mask::generate_heads_in(&self.exec, x, w, cfg);
+        let plans = PlanSet::build_in(&self.exec, &masks);
         let (hidden, sharded) = if shards <= 1 {
-            let hidden =
-                attention::ops::encoder_layer_heads_ws(x, w, &plans, cfg, &self.workspaces);
+            let hidden = attention::ops::encoder_layer_heads_ws(
+                x,
+                w,
+                &plans,
+                cfg,
+                &self.workspaces,
+                &self.exec,
+            );
             (hidden, None)
         } else {
             let sharded = plans.shard(shards);
@@ -180,6 +212,7 @@ impl Engine {
                 &sharded,
                 cfg,
                 &self.workspaces,
+                &self.exec,
             );
             (hidden, Some(sharded))
         };
@@ -355,6 +388,28 @@ mod tests {
         assert!(engine
             .execute_encoder_heads_sharded(&Matrix::zeros(3, 3), &mh, 4)
             .is_err());
+    }
+
+    #[test]
+    fn injected_serial_executor_matches_default_engine() {
+        // The executor axis at the engine level: a strictly serial pool
+        // and a narrow pool must reproduce the shared-pool results to
+        // the bit, sharded or not.
+        let cfg = ModelConfig { heads: 4, ..small_model() };
+        let mh = MultiHeadWeights::synthetic(&cfg, 8);
+        let x = crate::tensor::SeededRng::new(14).normal_matrix(16, 32, 1.0);
+        let default_engine = Engine::load(&synthetic_set()).unwrap();
+        let want = default_engine.execute_encoder_heads(&x, &mh).unwrap();
+        for workers in [1usize, 3] {
+            let engine = Engine::load(&synthetic_set())
+                .unwrap()
+                .with_executor(Arc::new(Executor::new(workers)));
+            assert_eq!(engine.executor().workers(), workers);
+            let got = engine.execute_encoder_heads(&x, &mh).unwrap();
+            assert_eq!(got.hidden, want.hidden, "{workers}-worker engine diverged");
+            let sharded = engine.execute_encoder_heads_sharded(&x, &mh, 3).unwrap();
+            assert_eq!(sharded.hidden, want.hidden, "{workers}-worker sharded engine diverged");
+        }
     }
 
     #[test]

@@ -1,0 +1,488 @@
+//! Persistent executor runtime — the crate's one worker pool.
+//!
+//! CPSAA keeps every pipeline stage *resident*: crossbars hold their
+//! operands, the pruning and attention units run concurrently, and work
+//! arrives at standing hardware instead of hardware being built per
+//! batch (§4.5). The software analogue is this executor: one long-lived
+//! pool of worker threads with a flat task queue, replacing the old
+//! model of re-spawning scoped OS threads at every fan-out level (plan
+//! scans → row partitions → heads → shards) per batch.
+//!
+//! ## Execution model
+//!
+//! * **Flat queue, shared helpers.** A fan-out submits one job holding N
+//!   index-claimable tasks. Idle workers *and the submitting thread*
+//!   claim task indices from the same job until it is exhausted — the
+//!   caller always participates, so a 1-worker executor runs everything
+//!   serially on the caller (the determinism leg) and nested fan-outs
+//!   (shards → heads → row ranges) flatten into the one pool instead of
+//!   oversubscribing the machine with nested spawns.
+//! * **Borrowed closures, scope-style.** Tasks may borrow the caller's
+//!   stack (matrices, plans, output slices). Safety comes from the same
+//!   invariant `std::thread::scope` provides: `map`/`map_consume` do not
+//!   return until every claimed task has finished, and a task that was
+//!   never claimed never touches the borrowed data.
+//! * **Panic propagation.** A panicking task poisons its job (remaining
+//!   tasks are skipped), the worker survives, and the submitting call
+//!   re-panics with the worker's index and the original message.
+//! * **Values are schedule-invariant.** Every task writes only its own
+//!   output slot, so results are bit-identical at any worker count —
+//!   the invariant the fused-vs-unfused property grid pins.
+//!
+//! ## Sizing and the grain heuristic
+//!
+//! The pool is sized by the `max_kernel_workers` plumbing: the
+//! [`global`] executor resolves `CPSAA_MAX_KERNEL_WORKERS` (else 8,
+//! capped at the machine's parallelism), and the serving layer's
+//! `--max-workers` knob rebuilds it via [`configure`] at startup (0 is
+//! rejected). [`Executor::workers_for`] is the one serial-fallback
+//! heuristic: work below [`GRAIN`] coordinates/cells never queues —
+//! replacing the per-site thresholds the kernels and plan scans used to
+//! duplicate.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+
+/// Work below this weight (mask cells, plan coordinates) runs serially
+/// on the caller: queueing it costs more than computing it. The one
+/// crate-wide serial-fallback threshold.
+pub const GRAIN: usize = 1 << 12;
+
+/// Default worker cap when `CPSAA_MAX_KERNEL_WORKERS` is unset (the
+/// historical kernel cap).
+const DEFAULT_WORKER_CAP: usize = 8;
+
+/// One submitted fan-out: N tasks claimed by index from the flat queue.
+/// The type-erased `data`/`runner` pair points into the submitting
+/// call's stack; it is only dereferenced between a successful index
+/// claim (`next < total`) and the matching `completed` increment — a
+/// window the submitter always outlives (it blocks until
+/// `completed == total`).
+struct Job {
+    next: AtomicUsize,
+    completed: AtomicUsize,
+    total: usize,
+    /// Set by the first panicking task: remaining tasks are skipped.
+    poisoned: AtomicBool,
+    data: *const (),
+    runner: unsafe fn(*const (), usize),
+    done: Mutex<()>,
+    done_cv: Condvar,
+    /// First panic observed: (worker label, panic message).
+    panic: Mutex<Option<(String, String)>>,
+}
+
+// The raw pointers are only dereferenced under the claim protocol above,
+// and every pointee is Sync-accessible per claimed index.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// True once every task index has been handed out (the job can be
+    /// dropped from the queue; late claimers become no-ops).
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.total
+    }
+
+    /// Claim and run task indices until none remain. `label` identifies
+    /// the helping thread in panic reports.
+    fn help(&self, label: &str) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                return;
+            }
+            if !self.poisoned.load(Ordering::Relaxed) {
+                let run = catch_unwind(AssertUnwindSafe(|| unsafe { (self.runner)(self.data, i) }));
+                if let Err(payload) = run {
+                    self.poisoned.store(true, Ordering::Relaxed);
+                    let msg = panic_message(&payload);
+                    let mut slot = self.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some((label.to_string(), msg));
+                    }
+                }
+            }
+            // Release pairs with the submitter's Acquire wait: the task's
+            // output writes happen-before the submitter sees the count.
+            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+                let _sync = self.done.lock().unwrap();
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    /// Block until every claimed task has finished.
+    fn wait(&self) {
+        let mut guard = self.done.lock().unwrap();
+        while self.completed.load(Ordering::Acquire) < self.total {
+            guard = self.done_cv.wait(guard).unwrap();
+        }
+    }
+}
+
+/// Best-effort string form of a panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+struct PoolState {
+    queue: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    available: Condvar,
+}
+
+/// The long-lived worker pool. One instance serves the whole crate (see
+/// [`global`]); tests and the engine may hold their own for injection.
+pub struct Executor {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+impl Executor {
+    /// A pool with `workers` total concurrency — the submitting thread
+    /// counts as one, so `workers - 1` background threads are spawned
+    /// and `workers == 1` is the strictly serial executor.
+    ///
+    /// # Panics
+    /// If `workers == 0` (serving rejects 0 at startup; a zero-width
+    /// pool could make no progress).
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1, "executor needs at least one worker");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        for index in 0..workers - 1 {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("cpsaa-exec-{index}"))
+                .spawn(move || worker_loop(shared, index))
+                .expect("spawning executor worker");
+        }
+        Self { shared, workers }
+    }
+
+    /// Total concurrency (background threads + the participating caller).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Workers a fan-out of `weight` (coordinates, cells) should use:
+    /// 1 below [`GRAIN`] — small work never queues — else the pool
+    /// width. The one serial-fallback heuristic every kernel shares.
+    pub fn workers_for(&self, weight: usize) -> usize {
+        if weight < GRAIN {
+            1
+        } else {
+            self.workers
+        }
+    }
+
+    /// Map `f` over `items` on the pool, order-preserving. Serial (on
+    /// the caller, schedule-identical to a plain `iter().map`) when the
+    /// input has ≤ 1 item or the pool has one worker. Propagates the
+    /// first task panic with the helping worker's label.
+    pub fn map<T: Sync, R: Send>(&self, items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+        if items.len() <= 1 || self.workers == 1 {
+            return items.iter().map(f).collect();
+        }
+        self.map_consume(items.iter().collect::<Vec<&T>>(), f)
+    }
+
+    /// [`Executor::map`] over owned items — the variant the row-range
+    /// dispatchers use to hand each task exclusive `&mut` output slices.
+    pub fn map_consume<T: Send, R: Send, F: Fn(T) -> R + Sync>(
+        &self,
+        items: Vec<T>,
+        f: F,
+    ) -> Vec<R> {
+        let total = items.len();
+        if total <= 1 || self.workers == 1 {
+            return items.into_iter().map(f).collect();
+        }
+
+        // Per-index slots: a claim hands exactly one task to exactly one
+        // helper, so the unsynchronized slot access never aliases.
+        let mut items: Vec<Option<T>> = items.into_iter().map(Some).collect();
+        let mut results: Vec<Option<R>> = (0..total).map(|_| None).collect();
+
+        struct Ctx<'a, T, R, F> {
+            items: *mut Option<T>,
+            results: *mut Option<R>,
+            f: &'a F,
+        }
+        unsafe fn run_one<T, R, F: Fn(T) -> R>(data: *const (), i: usize) {
+            let ctx = &*data.cast::<Ctx<'_, T, R, F>>();
+            let item = (*ctx.items.add(i)).take().expect("task index claimed twice");
+            let out = (ctx.f)(item);
+            *ctx.results.add(i) = Some(out);
+        }
+
+        let ctx = Ctx { items: items.as_mut_ptr(), results: results.as_mut_ptr(), f: &f };
+        let job = Arc::new(Job {
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            total,
+            poisoned: AtomicBool::new(false),
+            data: &ctx as *const Ctx<'_, T, R, F> as *const (),
+            runner: run_one::<T, R, F>,
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+
+        // Enqueue for the pool, then work the job from this thread too.
+        {
+            let mut state = self.shared.state.lock().unwrap();
+            state.queue.push_back(job.clone());
+        }
+        self.shared.available.notify_all();
+        job.help("caller");
+        job.wait();
+
+        if let Some((label, msg)) = job.panic.lock().unwrap().take() {
+            panic!("executor worker {label} panicked: {msg}");
+        }
+        results.into_iter().map(|r| r.expect("claimed task left no result")).collect()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let mut state = self.shared.state.lock().unwrap();
+        state.shutdown = true;
+        drop(state);
+        self.shared.available.notify_all();
+    }
+}
+
+/// Background worker: take the front job, help until it is exhausted,
+/// repeat. Jobs stay at the front while unexhausted so *every* idle
+/// worker piles onto the same fan-out (the flat-queue invariant).
+fn worker_loop(shared: Arc<Shared>, index: usize) {
+    let label = index.to_string();
+    loop {
+        let job = {
+            let mut state = shared.state.lock().unwrap();
+            loop {
+                while state.queue.front().is_some_and(|j| j.exhausted()) {
+                    state.queue.pop_front();
+                }
+                if state.shutdown {
+                    return;
+                }
+                if let Some(job) = state.queue.front() {
+                    break job.clone();
+                }
+                state = shared.available.wait(state).unwrap();
+            }
+        };
+        job.help(&label);
+    }
+}
+
+fn global_cell() -> &'static RwLock<Arc<Executor>> {
+    static CELL: OnceLock<RwLock<Arc<Executor>>> = OnceLock::new();
+    CELL.get_or_init(|| RwLock::new(Arc::new(Executor::new(default_workers()))))
+}
+
+/// The crate-wide executor every fan-out shares (kernels, plan scans,
+/// head/shard dispatch, all leader threads). Built lazily from
+/// [`default_workers`]; replaced wholesale by [`configure`].
+pub fn global() -> Arc<Executor> {
+    global_cell().read().unwrap().clone()
+}
+
+/// Rebuild the global pool at `workers` total concurrency — the
+/// `ServiceConfig::max_kernel_workers` / `serve --max-workers` startup
+/// knob. Rejects 0. Executions already holding the old pool finish on
+/// it; it drains and stops when the last handle drops.
+pub fn configure(workers: usize) -> Result<(), String> {
+    if workers == 0 {
+        return Err("executor workers must be >= 1".into());
+    }
+    *global_cell().write().unwrap() = Arc::new(Executor::new(workers));
+    Ok(())
+}
+
+/// Pool width when nothing configures one: `CPSAA_MAX_KERNEL_WORKERS`
+/// (ignored unless > 0), else 8, never above the machine's parallelism.
+pub fn default_workers() -> usize {
+    let cap = std::env::var("CPSAA_MAX_KERNEL_WORKERS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(DEFAULT_WORKER_CAP);
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(cap).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order_and_values() {
+        let exec = Executor::new(4);
+        let items: Vec<usize> = (0..64).collect();
+        let out = exec.map(&items, |&x| x * x);
+        assert_eq!(out, items.iter().map(|&x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let exec = Executor::new(4);
+        let none: [u32; 0] = [];
+        assert!(exec.map(&none, |&x| x).is_empty());
+        assert!(exec.map_consume(Vec::<u32>::new(), |x| x).is_empty());
+        // A single item runs inline on the caller — schedule-identical
+        // to a serial call (the heads=1 bit-equivalence invariant).
+        let here = std::thread::current().id();
+        let out = exec.map(&[7usize], |&x| {
+            assert_eq!(std::thread::current().id(), here);
+            x + 1
+        });
+        assert_eq!(out, vec![8]);
+    }
+
+    #[test]
+    fn single_worker_pool_runs_serially_on_caller() {
+        let exec = Executor::new(1);
+        let here = std::thread::current().id();
+        let items: Vec<usize> = (0..16).collect();
+        let out = exec.map(&items, |&x| {
+            assert_eq!(std::thread::current().id(), here, "workers=1 must never hop threads");
+            x + 1
+        });
+        assert_eq!(out, (1..17).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_consume_hands_out_exclusive_items() {
+        let exec = Executor::new(4);
+        let mut data = vec![0u64; 32];
+        let tasks: Vec<(usize, &mut [u64])> =
+            data.chunks_mut(8).enumerate().collect();
+        exec.map_consume(tasks, |(k, chunk)| {
+            for (j, slot) in chunk.iter_mut().enumerate() {
+                *slot = (k * 8 + j) as u64;
+            }
+        });
+        assert_eq!(data, (0..32u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn results_identical_at_any_worker_count() {
+        let items: Vec<usize> = (0..40).collect();
+        let want: Vec<usize> = items.iter().map(|&x| x.wrapping_mul(2654435761)).collect();
+        for workers in [1, 2, 3, 8] {
+            let exec = Executor::new(workers);
+            let got = exec.map(&items, |&x| x.wrapping_mul(2654435761));
+            assert_eq!(got, want, "diverged at {workers} workers");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "executor worker")]
+    fn panic_carries_worker_index() {
+        let exec = Executor::new(4);
+        let items: Vec<usize> = (0..8).collect();
+        exec.map(&items, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn panic_poisons_job_but_pool_survives() {
+        let exec = Executor::new(4);
+        let ran = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..64).collect();
+        let blast = catch_unwind(AssertUnwindSafe(|| {
+            exec.map(&items, |&i| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                if i == 0 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        let msg = panic_message(&blast.expect_err("panic must propagate"));
+        assert!(msg.contains("executor worker") && msg.contains("boom"), "{msg}");
+        // Poisoning skipped the tail of the job...
+        assert!(ran.load(Ordering::Relaxed) <= 64);
+        // ...and the pool still serves new jobs afterwards.
+        let out = exec.map(&items, |&i| i + 1);
+        assert_eq!(out.len(), 64);
+        assert_eq!(out[63], 64);
+    }
+
+    #[test]
+    fn nested_submits_flatten_into_the_pool() {
+        // workers=2 ⇒ at most two threads exist to run tasks (caller +
+        // one background worker). An outer map whose tasks submit inner
+        // maps must complete (caller participation ⇒ no deadlock) and
+        // never exceed the pool's concurrency.
+        let exec = Executor::new(2);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let outer: Vec<usize> = (0..4).collect();
+        let sums = exec.map(&outer, |&o| {
+            let inner: Vec<usize> = (0..4).collect();
+            let vals = exec.map(&inner, |&i| {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                live.fetch_sub(1, Ordering::SeqCst);
+                o * 10 + i
+            });
+            vals.iter().sum::<usize>()
+        });
+        assert_eq!(sums, vec![6, 46, 86, 126]);
+        assert!(
+            peak.load(Ordering::SeqCst) <= 2,
+            "nested fan-out oversubscribed: peak {}",
+            peak.load(Ordering::SeqCst)
+        );
+    }
+
+    #[test]
+    fn grain_heuristic_gates_small_work() {
+        let exec = Executor::new(8);
+        assert_eq!(exec.workers_for(0), 1);
+        assert_eq!(exec.workers_for(GRAIN - 1), 1);
+        assert_eq!(exec.workers_for(GRAIN), 8);
+        assert_eq!(exec.workers_for(usize::MAX), 8);
+        let serial = Executor::new(1);
+        assert_eq!(serial.workers_for(usize::MAX), 1);
+    }
+
+    #[test]
+    fn configure_rejects_zero_and_resizes() {
+        assert!(configure(0).is_err());
+        let before = global().workers();
+        configure(2).unwrap();
+        assert_eq!(global().workers(), 2);
+        // Values are schedule-invariant, so restoring is safe even with
+        // concurrent tests mid-flight on the old pool.
+        configure(before).unwrap();
+        assert_eq!(global().workers(), before);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = global();
+        let b = global();
+        assert!(Arc::ptr_eq(&a, &b) || a.workers() == b.workers());
+        assert!(a.workers() >= 1);
+    }
+}

@@ -9,6 +9,8 @@
 
 mod artifact;
 mod engine;
+pub mod executor;
 
 pub use artifact::{ArtifactSet, Fixtures, Manifest};
 pub use engine::{EncoderHeadsExec, Engine, EngineStats};
+pub use executor::Executor;

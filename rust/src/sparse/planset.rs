@@ -18,13 +18,10 @@
 //! ([`PlanSet::slice_rows`]) — one plan set per shard, no rescan, each
 //! shard a logical chip.
 
-use crate::util::par::par_map;
+use crate::runtime::executor::{self, Executor};
 
 use super::mask::MaskMatrix;
 use super::plan::DispatchPlan;
-
-/// Masks below this cell count scan faster serially than a thread spawn.
-const PARALLEL_SCAN_CELLS: usize = 1 << 12;
 
 /// Per-head dispatch plans of one packed batch (index = head).
 #[derive(Clone, Debug, PartialEq)]
@@ -33,10 +30,18 @@ pub struct PlanSet {
 }
 
 impl PlanSet {
-    /// One ReCAM scan per head mask. Head scans are independent (each
-    /// head's ReCAM slice searches its own mask), so large masks scan in
-    /// parallel via `std::thread::scope`.
+    /// One ReCAM scan per head mask on the global executor pool. Head
+    /// scans are independent (each head's ReCAM slice searches its own
+    /// mask), so large masks scan concurrently.
     pub fn build(masks: &[MaskMatrix]) -> Self {
+        Self::build_in(&executor::global(), masks)
+    }
+
+    /// [`PlanSet::build`] on a caller-owned [`Executor`] — the engine's
+    /// injectable dispatch path. Small masks fall below the executor's
+    /// grain and scan serially on the caller (the shared serial-fallback
+    /// heuristic; there is no per-site threshold anymore).
+    pub fn build_in(exec: &Executor, masks: &[MaskMatrix]) -> Self {
         assert!(!masks.is_empty(), "PlanSet needs at least one head mask");
         let shape = (masks[0].rows(), masks[0].cols());
         for m in masks {
@@ -48,8 +53,8 @@ impl PlanSet {
         if masks.len() > 1 && masks.iter().skip(1).all(|m| m == &masks[0]) {
             return Self { plans: vec![masks[0].plan(); masks.len()] };
         }
-        let plans = if shape.0 * shape.1 >= PARALLEL_SCAN_CELLS {
-            par_map(masks, |m| m.plan())
+        let plans = if exec.workers_for(shape.0 * shape.1) > 1 {
+            exec.map(masks, |m| m.plan())
         } else {
             masks.iter().map(|m| m.plan()).collect()
         };

@@ -1,25 +1,25 @@
-//! Scoped parallel map — the one fan-out primitive the head-parallel
-//! paths share (per-head mask scans, per-head pruning, per-head
-//! attention kernels).
+//! Scoped parallel map — now a thin shim over the crate-wide persistent
+//! [`Executor`][crate::runtime::executor::Executor] pool.
 //!
-//! One scoped worker per item, order-preserving. A single item runs on
-//! the calling thread, so 1-item maps are bit- and schedule-identical
-//! to a plain serial call — the invariant the heads = 1 equivalence
-//! tests rely on. Item counts here are head counts (≤ ~16), so one
-//! thread per item is the right granularity; the kernels inside each
-//! worker do their own nnz-balanced splitting.
+//! Historically this spawned one scoped OS thread per item at every
+//! call; the executor runtime replaced that model with one long-lived
+//! worker pool and a flat task queue (see `runtime::executor`), so this
+//! shim exists only to keep the familiar call shape for head-parallel
+//! paths (per-head mask scans, per-head pruning, per-head attention
+//! kernels).
+//!
+//! The serial contract is unchanged: a single item runs on the calling
+//! thread, so 1-item maps are bit- and schedule-identical to a plain
+//! serial call — the invariant the heads = 1 equivalence tests rely on.
+//! Larger maps claim tasks from the shared pool (the submitting thread
+//! participates), and nested maps flatten into the same pool instead of
+//! multiplying threads.
 
-/// Map `f` over `items` with one scoped thread per item (serial when
-/// `items.len() <= 1`), preserving order. Propagates worker panics.
+/// Map `f` over `items` on the global executor pool (serial when
+/// `items.len() <= 1`), preserving order. Propagates task panics with
+/// the claiming worker's index in the message.
 pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
-    if items.len() <= 1 {
-        return items.iter().map(f).collect();
-    }
-    let f = &f;
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = items.iter().map(|it| scope.spawn(move || f(it))).collect();
-        handles.into_iter().map(|h| h.join().expect("par_map worker panicked")).collect()
-    })
+    crate::runtime::executor::global().map(items, f)
 }
 
 #[cfg(test)]
@@ -46,8 +46,12 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "par_map worker panicked")]
+    #[should_panic(expected = "boom")]
     fn worker_panic_propagates() {
+        // The executor wraps parallel-path panics with the worker index;
+        // the serial path (a 1-worker global pool, e.g. under
+        // CPSAA_MAX_KERNEL_WORKERS=1) re-raises the payload as-is.
+        // Either way the original message survives.
         par_map(&[1, 2], |_| panic!("boom"));
     }
 }

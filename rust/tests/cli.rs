@@ -215,6 +215,50 @@ fn serve_shards_flag_end_to_end() {
 }
 
 #[test]
+fn serve_leaders_flag_end_to_end() {
+    // Acceptance: `serve --leaders 4` serves every request through the
+    // multi-leader loop (all leaders feeding the one executor pool).
+    let art = synth_artifacts("leaders", 2);
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "6",
+        "--layers",
+        "1",
+        "--heads",
+        "2",
+        "--leaders",
+        "4",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("4 leaders"), "{text}");
+    assert!(text.contains("served 6 requests"), "{text}");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn serve_leaders_invalid_value_errors() {
+    let art = synth_artifacts("leaders-bad", 2);
+    // leaders = 0 is rejected at startup, like shards
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "1",
+        "--leaders",
+        "0",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("leaders"), "{text}");
+    let (ok, _) = cpsaa(&["--artifacts", art.to_str().unwrap(), "serve", "--leaders", "many"]);
+    assert!(!ok);
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
 fn serve_shards_invalid_value_errors() {
     let art = synth_artifacts("shards-bad", 2);
     let (ok, text) = cpsaa(&[
@@ -294,6 +338,10 @@ fn bench_compare_accepts_committed_baseline() {
     assert!(body.contains("encoder_layer_320x512_fused"), "baseline lost encoder rungs");
     assert!(body.contains("coord_stream_u32_gather"), "baseline lost u32-stream rung");
     assert!(body.contains("coord_stream_usize_gather"), "baseline lost usize-stream rung");
+    assert!(body.contains("attention_320x512_pool"), "baseline lost executor-pool rung");
+    assert!(body.contains("attention_320x512_spawn"), "baseline lost scoped-spawn rung");
+    assert!(body.contains("serve_leaders1"), "baseline lost single-leader serve rung");
+    assert!(body.contains("serve_leaders4"), "baseline lost multi-leader serve rung");
     let (ok, text) = cpsaa(&[
         "bench-compare",
         baseline.to_str().unwrap(),

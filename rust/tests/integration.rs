@@ -310,6 +310,118 @@ fn metric_lines_attributable_across_batches() {
 }
 
 #[test]
+fn served_leaders4_bit_identical_to_leaders1() {
+    // Acceptance: multi-leader serving must not change a single bit of
+    // any response. Requests are submitted one at a time so both
+    // services pack identical batches; whichever leader picks a batch
+    // up, the hidden states must match the single-leader service
+    // exactly, and leader metrics must account for every batch.
+    let model = heads8_model();
+    let dir1 = std::env::temp_dir()
+        .join(format!("cpsaa-it-leaders1-{}", std::process::id()));
+    let dir4 = std::env::temp_dir()
+        .join(format!("cpsaa-it-leaders4-{}", std::process::id()));
+    ArtifactSet::synthesize(&dir1, &model, 42).unwrap();
+    ArtifactSet::synthesize(&dir4, &model, 42).unwrap();
+    let svc1 = Service::start(
+        dir1.clone(),
+        HardwareConfig::paper(),
+        model.clone(),
+        ServiceConfig { layers: 2, leaders: 1, shards: 2, ..Default::default() },
+    )
+    .unwrap();
+    let svc4 = Service::start(
+        dir4.clone(),
+        HardwareConfig::paper(),
+        model.clone(),
+        ServiceConfig { layers: 2, leaders: 4, shards: 2, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = SeededRng::new(321);
+    for id in 0..4u64 {
+        let x = rng.normal_matrix(20, model.d_model, 1.0);
+        let r1 = svc1.infer(id, x.clone()).unwrap();
+        let r4 = svc4.infer(id, x).unwrap();
+        assert_eq!(r4.hidden, r1.hidden, "request {id}: multi-leader serving changed bits");
+        assert_eq!(r1.leader, 0, "single-leader service has one leader");
+        assert!(r4.leader < 4, "leader index out of range");
+        // cost attribution is a pure function of the packed batch —
+        // identical whichever leader executed it
+        assert_eq!(r4.sim_ns, r1.sim_ns);
+        assert_eq!(r4.head_density, r1.head_density);
+    }
+    let m4 = svc4.metrics();
+    assert_eq!(m4.requests, 4);
+    let leader_batches: u64 = m4.leaders.iter().map(|l| l.batches).sum();
+    assert_eq!(leader_batches, m4.batches, "every batch must be attributed to a leader");
+    let leader_requests: u64 = m4.leaders.iter().map(|l| l.requests).sum();
+    assert_eq!(leader_requests, m4.requests);
+    // batch ids stay unique across leaders (shared monotonic source)
+    let mut ids: Vec<u64> = m4.head_lines.iter().map(|l| l.batch).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, m4.batches, "batch ids reused across leaders");
+    std::fs::remove_dir_all(&dir1).ok();
+    std::fs::remove_dir_all(&dir4).ok();
+}
+
+#[test]
+fn multi_leader_concurrent_load_loses_nothing() {
+    // 8 client threads hammering a 3-leader service: every reply
+    // arrives, routed to the right caller, finite, and the leader
+    // roll-up covers all batches.
+    let model = heads8_model();
+    let dir = std::env::temp_dir()
+        .join(format!("cpsaa-it-leaders-conc-{}", std::process::id()));
+    ArtifactSet::synthesize(&dir, &model, 13).unwrap();
+    let svc = Service::start(
+        dir.clone(),
+        HardwareConfig::paper(),
+        model.clone(),
+        ServiceConfig {
+            layers: 1,
+            leaders: 3,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    const CLIENTS: u64 = 8;
+    const PER_CLIENT: u64 = 3;
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let svc = svc.clone();
+        let d_model = model.d_model;
+        let seq_len = model.seq_len;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SeededRng::new(5000 + c);
+            let mut got = Vec::new();
+            for r in 0..PER_CLIENT {
+                let id = c * PER_CLIENT + r;
+                let rows = 1 + rng.gen_range_usize(0, seq_len);
+                let x = rng.normal_matrix(rows, d_model, 1.0);
+                let resp = svc.infer(id, x).expect("infer failed");
+                assert_eq!(resp.id, id, "reply routed to the wrong caller");
+                assert_eq!(resp.hidden.shape(), (rows, d_model));
+                assert!(resp.hidden.all_finite());
+                assert!(resp.leader < 3);
+                got.push(id);
+            }
+            got
+        }));
+    }
+    let mut ids: Vec<u64> =
+        handles.into_iter().flat_map(|h| h.join().expect("client panicked")).collect();
+    ids.sort();
+    assert_eq!(ids, (0..CLIENTS * PER_CLIENT).collect::<Vec<u64>>(), "lost replies");
+    let m = svc.metrics();
+    assert_eq!(m.requests, CLIENTS * PER_CLIENT);
+    let leader_batches: u64 = m.leaders.iter().map(|l| l.batches).sum();
+    assert_eq!(leader_batches, m.batches);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn service_rejects_zero_layers_at_startup() {
     let dir = std::env::temp_dir()
         .join(format!("cpsaa-it-layers0-{}", std::process::id()));

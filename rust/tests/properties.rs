@@ -2,10 +2,11 @@
 //! (the in-tree `util::prop` driver replaces proptest in this offline
 //! build — N seeded cases per property, failing seed reported).
 
-use cpsaa::attention::{self, ops, MultiHeadWeights, Weights};
+use cpsaa::attention::{self, ops, MultiHeadWeights, Weights, WorkspacePool};
 use cpsaa::config::{HardwareConfig, ModelConfig};
 use cpsaa::coordinator::Batcher;
 use cpsaa::prop_assert;
+use cpsaa::runtime::Executor;
 use cpsaa::sim::{pipeline, sddmm, spmm};
 use cpsaa::sparse::{CsrMatrix, DispatchPlan, MaskMatrix, PlanSet};
 use cpsaa::tensor::{Matrix, SeededRng};
@@ -320,10 +321,14 @@ fn unfused_multi_head(
 #[test]
 fn prop_fused_bit_identical_to_unfused_grid() {
     // The acceptance grid: density sweep × heads {1,4,8} × shards
-    // {1,2,4}, exhaustively. The fused row-streaming kernel (with
-    // workspace reuse and the zero-copy CsrView) must reproduce the
-    // unfused four-pass reference to the last bit at every point.
+    // {1,2,4} × executor axis, exhaustively. The fused row-streaming
+    // kernel (with workspace reuse and the zero-copy CsrView) must
+    // reproduce the unfused four-pass reference to the last bit at
+    // every point — on the crate-wide pool AND on injected pools of 1
+    // (strictly serial: the determinism leg) and 3 workers.
     let mut rng = SeededRng::new(4242);
+    let serial = Executor::new(1);
+    let narrow = Executor::new(3);
     for &heads in &[1usize, 4, 8] {
         for &density in &[0.0, 0.1, 0.5, 1.0] {
             let cfg = ModelConfig {
@@ -343,12 +348,40 @@ fn prop_fused_bit_identical_to_unfused_grid() {
             let want = unfused_multi_head(&x, &w, &plans, &cfg);
             let fused = ops::multi_head_attention_planned(&x, &w, &plans, &cfg);
             assert!(fused == want, "fused diverged at {heads} heads, density {density}");
+            for exec in [&serial, &narrow] {
+                let got = ops::multi_head_attention_planned_ws(
+                    &x,
+                    &w,
+                    &plans,
+                    &cfg,
+                    &WorkspacePool::new(),
+                    exec,
+                );
+                assert!(
+                    got == want,
+                    "fused diverged at {heads} heads, density {density}, {} executor workers",
+                    exec.workers()
+                );
+            }
             for &shards in &[1usize, 2, 4] {
                 let got =
                     ops::multi_head_attention_sharded(&x, &w, &plans.shard(shards), &cfg);
                 assert!(
                     got == want,
                     "fused diverged at {heads} heads x {shards} shards, density {density}"
+                );
+                let got_serial = ops::multi_head_attention_sharded_ws(
+                    &x,
+                    &w,
+                    &plans.shard(shards),
+                    &cfg,
+                    &WorkspacePool::new(),
+                    &serial,
+                );
+                assert!(
+                    got_serial == want,
+                    "fused diverged at {heads} heads x {shards} shards, density {density} on \
+                     the serial executor"
                 );
             }
         }
