@@ -6,13 +6,13 @@
 //! pipeline) with and without plan amortization on the paper workload
 //! (320×320 mask @ 0.1 density). Numbers land in `target/bench/hotpath.json`.
 
-use cpsaa::attention::{self, ops, MultiHeadWeights, Weights};
+use cpsaa::attention::{self, ops, MultiHeadWeights, QuantizedRows, Weights};
 use cpsaa::config::{ModelConfig, SystemConfig};
 use cpsaa::coordinator::{Service, ServiceConfig};
 use cpsaa::runtime::{executor, ArtifactSet};
 use cpsaa::sim::{pipeline, sddmm, spmm, ChipSim};
 use cpsaa::sparse::{CsrMatrix, DispatchPlan, MaskMatrix, PlanSet};
-use cpsaa::tensor::{Matrix, SeededRng};
+use cpsaa::tensor::{simd, Matrix, SeededRng};
 use cpsaa::util::bench::Bencher;
 
 fn main() {
@@ -99,6 +99,42 @@ fn main() {
     println!(
         "fused+workspace vs unfused encoder layer: {:.2}x",
         enc_unfused.as_secs_f64() / enc_fused.as_secs_f64().max(1e-12)
+    );
+
+    // -- SIMD row primitives vs their bit-identical scalar twins -------------
+    // The same fused plan-reuse kernel with the `tensor::simd` lane
+    // switch flipped both ways: the `simd` rung runs the 8-lane unrolled
+    // primitives, the `scalar` rung forces the element-at-a-time twins
+    // (same FP operation DAG, so same bits — only throughput moves). CI
+    // asserts the simd rung beats the scalar one same-run
+    // (`cpsaa bench-assert-faster`).
+    simd::set_force_scalar(false);
+    let simd_t = b.run("attention_320x512_simd", || {
+        ops::cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg.model).norm()
+    });
+    simd::set_force_scalar(true);
+    let scalar_t = b.run("attention_320x512_scalar", || {
+        ops::cpsaa_attention_planned(&x, &w.w_s, &w.w_v, &plan, &cfg.model).norm()
+    });
+    simd::set_force_scalar(simd::env_force_scalar());
+    println!(
+        "8-lane simd vs forced-scalar attention: {:.2}x",
+        scalar_t.as_secs_f64() / simd_t.as_secs_f64().max(1e-12)
+    );
+
+    // -- i8-storage / i32-accumulate SDDMM vs the f32 path -------------------
+    // Same plan topology, operands pre-quantized outside the timer (the
+    // serving stack quantizes once per batch): the i8 rung moves a
+    // quarter of the bytes per dot and accumulates exactly in i32. CI
+    // asserts the i8 rung beats the f32 one same-run.
+    let qa = QuantizedRows::from_matrix(&m_for_csr);
+    let qx = QuantizedRows::from_matrix(&x);
+    let f32_sddmm = b.run("sddmm_f32_320x512", || ops::sddmm_csr(&m_for_csr, &x, &plan).nnz());
+    let i8_sddmm =
+        b.run("sddmm_i8_320x512", || ops::sddmm_csr_i8_quantized(&qa, &qx, &plan).nnz());
+    println!(
+        "i8-storage/i32-accumulate vs f32 SDDMM: {:.2}x",
+        f32_sddmm.as_secs_f64() / i8_sddmm.as_secs_f64().max(1e-12)
     );
 
     // -- u32 vs usize coordinate stream --------------------------------------

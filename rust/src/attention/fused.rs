@@ -18,13 +18,16 @@
 //! worker count (property-tested over the density × heads × shards
 //! grid in `tests/properties.rs`).
 
+use crate::attention::quant::QuantizedRows;
 use crate::runtime::executor::Executor;
 use crate::sparse::{softmax_row, spmm_row_into, DispatchPlan};
-use crate::tensor::Matrix;
+use crate::tensor::{simd, Matrix};
 
-/// One coordinate's SDDMM dot product (shared with the unfused kernel).
+/// One coordinate's SDDMM dot product (shared with the unfused kernel):
+/// the laned `tensor::simd` dot, so fused and unfused keep accumulating
+/// in the one shared order.
 pub(crate) fn dot(x: &[f32], y: &[f32]) -> f32 {
-    x.iter().zip(y).map(|(a, b)| a * b).sum()
+    simd::dot(x, y)
 }
 
 /// Fused attention over precomputed projections: `out[i] = softmax(scale
@@ -99,9 +102,87 @@ fn fuse_range(
         for (k, &j) in cols.iter().enumerate() {
             scratch[k] = dot(mrow, kv.row(j as usize));
         }
-        for s in scratch.iter_mut() {
-            *s *= scale;
+        simd::scale(scratch, scale);
+        softmax_row(scratch);
+        spmm_row_into(cols, scratch, v, &mut out[(i - start) * d_v..(i - start + 1) * d_v]);
+    }
+}
+
+/// The i8 twin of [`attention_rows_into`]: score-side operands arrive
+/// pre-quantized ([`QuantizedRows`]: i8 codes + per-row γ), each
+/// coordinate's dot accumulates in i32, and the score dequantizes at the
+/// softmax boundary — `s = (Σ q_m·q_k) / (γ_m·γ_k)` — exactly where
+/// SPRINT recomputes. Softmax and the SpMM over the f32 V reuse the
+/// literal shared row kernels, so everything downstream of the
+/// dequantized logits is the f32 path bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_rows_into_i8(
+    exec: &Executor,
+    qm: &QuantizedRows,
+    qkv: &QuantizedRows,
+    v: &Matrix,
+    plan: &DispatchPlan,
+    scale: f32,
+    workers: usize,
+    scratch: &mut Vec<f32>,
+    out: &mut Matrix,
+) {
+    assert_eq!(qm.rows(), plan.rows(), "projection rows != plan rows");
+    assert_eq!(qm.cols(), qkv.cols(), "inner dims");
+    assert_eq!(qkv.rows(), plan.cols(), "key rows != plan cols");
+    assert_eq!(v.rows(), plan.cols(), "value rows != plan cols");
+    let d_v = v.cols();
+    out.reset(plan.rows(), d_v);
+    let ranges = plan.partition_rows(workers.max(1));
+    if ranges.len() <= 1 {
+        fuse_range_i8(qm, qkv, v, plan, scale, 0..plan.rows(), scratch, out.data_mut());
+        return;
+    }
+    let mut tasks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut tail: &mut [f32] = out.data_mut();
+    let mut offset = 0usize;
+    for range in ranges {
+        let (head, rest) = std::mem::take(&mut tail).split_at_mut((range.end - offset) * d_v);
+        tail = rest;
+        offset = range.end;
+        tasks.push((range, head));
+    }
+    exec.map_consume(tasks, |(range, out_slice)| {
+        let mut scratch = Vec::new();
+        fuse_range_i8(qm, qkv, v, plan, scale, range, &mut scratch, out_slice);
+    });
+}
+
+/// The per-row i8 fusion loop over one contiguous row range.
+#[allow(clippy::too_many_arguments)]
+fn fuse_range_i8(
+    qm: &QuantizedRows,
+    qkv: &QuantizedRows,
+    v: &Matrix,
+    plan: &DispatchPlan,
+    scale: f32,
+    rows: std::ops::Range<usize>,
+    scratch: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let d_v = v.cols();
+    let start = rows.start;
+    for i in rows {
+        let cols = plan.row_cols(i);
+        if cols.is_empty() {
+            continue;
         }
+        scratch.clear();
+        scratch.resize(cols.len(), 0.0);
+        let mrow = qm.row(i);
+        let gm = qm.scale(i);
+        for (k, &j) in cols.iter().enumerate() {
+            let j = j as usize;
+            // i32-accumulated integer dot, dequantized at the softmax
+            // boundary (exact f32 conversion: |dot| < 2^24).
+            scratch[k] = simd::dot_i8(mrow, qkv.row(j)) as f32 / (gm * qkv.scale(j));
+        }
+        simd::scale(scratch, scale);
         softmax_row(scratch);
         spmm_row_into(cols, scratch, v, &mut out[(i - start) * d_v..(i - start + 1) * d_v]);
     }
@@ -162,9 +243,7 @@ fn score_range(
         for (k, &j) in plan.row_cols(i).iter().enumerate() {
             s[k] = dot(mrow, kv.row(j as usize));
         }
-        for x in s.iter_mut() {
-            *x *= scale;
-        }
+        simd::scale(s, scale);
         softmax_row(s);
     }
 }

@@ -30,5 +30,6 @@ pub mod workspace;
 pub use mask::generate as generate_mask;
 pub use mask::generate_heads as generate_head_masks;
 pub use ops::{cpsaa_attention, dense_attention, vanilla_attention};
+pub use quant::{Precision, QuantizedRows};
 pub use weights::{HeadWeights, MultiHeadWeights, Weights};
 pub use workspace::{KernelWorkspace, WorkspacePool};

@@ -16,9 +16,10 @@
 use crate::config::ModelConfig;
 use crate::runtime::executor::{self, Executor};
 use crate::sparse::{CsrMatrix, CsrView, DispatchPlan, MaskMatrix, PlanSet};
-use crate::tensor::Matrix;
+use crate::tensor::{simd, Matrix};
 
 use super::fused::{self, dot};
+use super::quant::{Precision, QuantizedRows};
 use super::softmax;
 use super::weights::MultiHeadWeights;
 use super::workspace::{KernelWorkspace, WorkspacePool};
@@ -83,6 +84,61 @@ fn sddmm_csr_in(
     CsrMatrix::from_plan_values(plan, values)
 }
 
+/// The i8-storage / i32-accumulate twin of [`sddmm_csr`]: both operands
+/// quantize row-wise to i8 ([`QuantizedRows`]), every masked coordinate
+/// accumulates an integer dot, and each score dequantizes once —
+/// `(Σ qₐ·q_b) / (γₐᵢ·γ_bⱼ)` — as it lands in the f32 value stream.
+pub fn sddmm_csr_i8(a: &Matrix, bt: &Matrix, plan: &DispatchPlan) -> CsrMatrix {
+    sddmm_csr_i8_quantized(&QuantizedRows::from_matrix(a), &QuantizedRows::from_matrix(bt), plan)
+}
+
+/// [`sddmm_csr_i8`] over pre-quantized operands — the form the bench
+/// rung times, so the measurement is exactly the integer dispatch over
+/// i8 storage (quantization itself happens once per batch, outside).
+pub fn sddmm_csr_i8_quantized(
+    qa: &QuantizedRows,
+    qbt: &QuantizedRows,
+    plan: &DispatchPlan,
+) -> CsrMatrix {
+    assert_eq!(qa.cols(), qbt.cols(), "inner dims");
+    assert_eq!((plan.rows(), plan.cols()), (qa.rows(), qbt.rows()), "plan shape");
+    let exec = executor::global();
+    let workers = exec.workers_for(plan.nnz());
+    let mut values = vec![0.0f32; plan.nnz()];
+    let fill_rows = |range: std::ops::Range<usize>, out: &mut [f32], base: usize| {
+        for i in range {
+            let arow = qa.row(i);
+            let ga = qa.scale(i);
+            let lo = plan.row_ptr()[i] as usize;
+            for (k, &j) in plan.row_cols(i).iter().enumerate() {
+                let j = j as usize;
+                out[lo + k - base] =
+                    simd::dot_i8(arow, qbt.row(j)) as f32 / (ga * qbt.scale(j));
+            }
+        }
+    };
+    let ranges = plan.partition_rows(workers.max(1));
+    if ranges.len() <= 1 {
+        fill_rows(0..plan.rows(), &mut values, 0);
+        return CsrMatrix::from_plan_values(plan, values);
+    }
+    let mut tasks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut tail: &mut [f32] = &mut values;
+    let mut offset = 0usize;
+    for range in ranges {
+        let hi = plan.row_ptr()[range.end] as usize;
+        let (head, rest) = std::mem::take(&mut tail).split_at_mut(hi - offset);
+        tail = rest;
+        offset = hi;
+        tasks.push((range, head));
+    }
+    exec.map_consume(tasks, |(range, out)| {
+        let base = plan.row_ptr()[range.start] as usize;
+        fill_rows(range, out, base);
+    });
+    CsrMatrix::from_plan_values(plan, values)
+}
+
 /// Masked SDDMM: `mask ⊙ (a @ b)` as a dense matrix — the reference-mode
 /// wrapper over [`sddmm_csr`] (builds a throwaway plan; hot paths use
 /// the fused kernel with a shared plan).
@@ -124,7 +180,7 @@ pub fn cpsaa_attention_planned_ws(
     cfg: &ModelConfig,
     ws: &mut KernelWorkspace,
 ) -> Matrix {
-    cpsaa_attention_rows_fused(&executor::global(), x, x, w_s, w_v, plan, cfg, 1, ws)
+    cpsaa_attention_rows_fused(&executor::global(), x, x, w_s, w_v, plan, cfg, 1, Precision::F32, ws)
 }
 
 /// The unfused four-pass reference chain (SDDMM → scale → softmax →
@@ -159,6 +215,12 @@ pub fn cpsaa_attention_unfused(
 /// what the full-range kernel computes, and over a partition of the
 /// rows the concatenated blocks are bit-identical to the unsharded
 /// output.
+///
+/// At [`Precision::I8`] the score-side operands (M and the keys)
+/// quantize row-wise to i8 after the projections and the integer fused
+/// kernel runs instead; per-row γ makes the quantization row-slice
+/// invariant, so the sharded i8 output is still bit-identical to the
+/// unsharded i8 output.
 #[allow(clippy::too_many_arguments)]
 fn cpsaa_attention_rows_fused(
     exec: &Executor,
@@ -169,6 +231,7 @@ fn cpsaa_attention_rows_fused(
     plan: &DispatchPlan,
     cfg: &ModelConfig,
     budget_share: usize,
+    precision: Precision,
     ws: &mut KernelWorkspace,
 ) -> Matrix {
     let KernelWorkspace { m, v, row, .. } = ws;
@@ -177,7 +240,16 @@ fn cpsaa_attention_rows_fused(
     let workers = (exec.workers_for(plan.nnz()) / budget_share.max(1)).max(1);
     let scale = 1.0 / (cfg.d_k as f32).sqrt();
     let mut out = Matrix::default();
-    fused::attention_rows_into(exec, m, kv, v, plan, scale, workers, row, &mut out);
+    match precision {
+        Precision::F32 => {
+            fused::attention_rows_into(exec, m, kv, v, plan, scale, workers, row, &mut out);
+        }
+        Precision::I8 => {
+            let qm = QuantizedRows::from_matrix(m);
+            let qkv = QuantizedRows::from_matrix(kv);
+            fused::attention_rows_into_i8(exec, &qm, &qkv, v, plan, scale, workers, row, &mut out);
+        }
+    }
     out
 }
 
@@ -212,7 +284,30 @@ pub fn multi_head_attention_planned_ws(
     // The single-shard instance of the shard kernel: Q rows = all rows,
     // full worker budget. One definition keeps the sharded/unsharded
     // bit-equivalence structural rather than maintained by hand.
-    multi_head_attention_shard(exec, x, x, w, plans, cfg, 1, pool)
+    multi_head_attention_shard(exec, x, x, w, plans, cfg, 1, Precision::F32, pool)
+}
+
+/// [`multi_head_attention_planned`] at an explicit [`Precision`] — the
+/// serve-selectable arithmetic mode (`--precision i8`), and the entry
+/// the i8-vs-f32 error-bound property test drives.
+pub fn multi_head_attention_planned_prec(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    plans: &PlanSet,
+    cfg: &ModelConfig,
+    precision: Precision,
+) -> Matrix {
+    multi_head_attention_shard(
+        &executor::global(),
+        x,
+        x,
+        w,
+        plans,
+        cfg,
+        1,
+        precision,
+        &WorkspacePool::new(),
+    )
 }
 
 /// One encoder layer with multi-head fan-out: the multi-head attention
@@ -238,7 +333,23 @@ pub fn encoder_layer_heads_ws(
     pool: &WorkspacePool,
     exec: &Executor,
 ) -> Matrix {
-    let z = multi_head_attention_shard(exec, x, x, w, plans, cfg, 1, pool);
+    encoder_layer_heads_ws_prec(x, w, plans, cfg, pool, exec, Precision::F32)
+}
+
+/// [`encoder_layer_heads_ws`] at an explicit [`Precision`] — the engine's
+/// entry once `serve --precision` has been threaded down to it. Only the
+/// attention score dots change mode; the residual/norm/FC tail is always
+/// f32.
+pub fn encoder_layer_heads_ws_prec(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    plans: &PlanSet,
+    cfg: &ModelConfig,
+    pool: &WorkspacePool,
+    exec: &Executor,
+    precision: Precision,
+) -> Matrix {
+    let z = multi_head_attention_shard(exec, x, x, w, plans, cfg, 1, precision, pool);
     pool.with(|ws| encoder_tail(x, &z, &w.w_fc1, &w.w_fc2, ws))
 }
 
@@ -263,12 +374,16 @@ fn multi_head_attention_shard(
     plans: &PlanSet,
     cfg: &ModelConfig,
     concurrent_shards: usize,
+    precision: Precision,
     pool: &WorkspacePool,
 ) -> Matrix {
     assert_eq!(w.heads.len(), plans.heads(), "one plan per head");
     let heads = w.heads.len();
-    let shared_scores =
-        w.shared_w_s() && plans.plans().iter().skip(1).all(|p| p == plans.plan(0));
+    // The shared-scores fast path is f32-only; at i8 every head runs the
+    // quantized fused kernel so the precision mode is uniform end to end.
+    let shared_scores = precision == Precision::F32
+        && w.shared_w_s()
+        && plans.plans().iter().skip(1).all(|p| p == plans.plan(0));
     let zs: Vec<Matrix> = if shared_scores {
         let plan0 = plans.plan(0);
         let workers = (exec.workers_for(plan0.nnz()) / concurrent_shards.max(1)).max(1);
@@ -308,6 +423,7 @@ fn multi_head_attention_shard(
                     p,
                     cfg,
                     heads * concurrent_shards.max(1),
+                    precision,
                     ws,
                 )
             })
@@ -346,13 +462,45 @@ pub fn multi_head_attention_sharded_ws(
     pool: &WorkspacePool,
     exec: &Executor,
 ) -> Matrix {
+    multi_head_attention_sharded_prec_ws(x, w, shards, cfg, pool, exec, Precision::F32)
+}
+
+/// [`multi_head_attention_sharded`] at an explicit [`Precision`].
+pub fn multi_head_attention_sharded_prec(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    shards: &crate::sparse::ShardedPlans,
+    cfg: &ModelConfig,
+    precision: Precision,
+) -> Matrix {
+    multi_head_attention_sharded_prec_ws(
+        x,
+        w,
+        shards,
+        cfg,
+        &WorkspacePool::new(),
+        &executor::global(),
+        precision,
+    )
+}
+
+/// [`multi_head_attention_sharded_ws`] at an explicit [`Precision`].
+pub fn multi_head_attention_sharded_prec_ws(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    shards: &crate::sparse::ShardedPlans,
+    cfg: &ModelConfig,
+    pool: &WorkspacePool,
+    exec: &Executor,
+    precision: Precision,
+) -> Matrix {
     let k = shards.count();
     assert!(k > 0, "sharded attention needs at least one shard");
     let idx: Vec<usize> = (0..k).collect();
     let blocks = exec.map(&idx, |&s| {
         let r = shards.range(s);
         let x_rows = x.row_block(r.start, r.end);
-        multi_head_attention_shard(exec, x, &x_rows, w, shards.set(s), cfg, k, pool)
+        multi_head_attention_shard(exec, x, &x_rows, w, shards.set(s), cfg, k, precision, pool)
     });
     assemble_row_blocks(x.rows(), &blocks, shards)
 }
@@ -381,13 +529,27 @@ pub fn encoder_layer_heads_sharded_ws(
     pool: &WorkspacePool,
     exec: &Executor,
 ) -> Matrix {
+    encoder_layer_heads_sharded_ws_prec(x, w, shards, cfg, pool, exec, Precision::F32)
+}
+
+/// [`encoder_layer_heads_sharded_ws`] at an explicit [`Precision`].
+pub fn encoder_layer_heads_sharded_ws_prec(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    shards: &crate::sparse::ShardedPlans,
+    cfg: &ModelConfig,
+    pool: &WorkspacePool,
+    exec: &Executor,
+    precision: Precision,
+) -> Matrix {
     let k = shards.count();
     assert!(k > 0, "sharded encoder layer needs at least one shard");
     let idx: Vec<usize> = (0..k).collect();
     let blocks = exec.map(&idx, |&s| {
         let r = shards.range(s);
         let x_rows = x.row_block(r.start, r.end);
-        let z = multi_head_attention_shard(exec, x, &x_rows, w, shards.set(s), cfg, k, pool);
+        let z =
+            multi_head_attention_shard(exec, x, &x_rows, w, shards.set(s), cfg, k, precision, pool);
         pool.with(|ws| encoder_tail(&x_rows, &z, &w.w_fc1, &w.w_fc2, ws))
     });
     assemble_row_blocks(x.rows(), &blocks, shards)
@@ -449,7 +611,8 @@ pub fn encoder_layer_planned(
 ) -> Matrix {
     let mut ws = KernelWorkspace::new();
     let exec = executor::global();
-    let z = cpsaa_attention_rows_fused(&exec, x, x, &w.w_s, &w.w_v, plan, cfg, 1, &mut ws);
+    let z =
+        cpsaa_attention_rows_fused(&exec, x, x, &w.w_s, &w.w_v, plan, cfg, 1, Precision::F32, &mut ws);
     encoder_tail(x, &z, &w.w_fc1, &w.w_fc2, &mut ws)
 }
 
@@ -510,7 +673,8 @@ fn rms_norm_into(x: &Matrix, out: &mut Matrix) {
     let n = x.cols() as f32;
     for i in 0..x.rows() {
         let row = x.row(i);
-        let ms = row.iter().map(|v| v * v).sum::<f32>() / n;
+        // sum of squares through the one laned reduction definition
+        let ms = simd::dot(row, row) / n;
         let scale = 1.0 / (ms + 1e-6).sqrt();
         for (o, &v) in out.row_mut(i).iter_mut().zip(row) {
             *o = v * scale;
@@ -728,11 +892,16 @@ mod tests {
 
     #[test]
     fn rms_norm_matches_scalar_reference() {
+        // The reference mean-square uses the shared simd::dot reduction
+        // (bit-identical to its scalar fallback by construction), and the
+        // per-row value is sanity-checked against a sequential f64 sum.
         let x = SeededRng::new(40).normal_matrix(7, 13, 2.0);
         let got = rms_norm(&x);
         for i in 0..7 {
             let row = x.row(i);
-            let ms = row.iter().map(|v| v * v).sum::<f32>() / 13.0;
+            let ms = simd::dot(row, row) / 13.0;
+            let seq: f64 = row.iter().map(|&v| f64::from(v) * f64::from(v)).sum::<f64>() / 13.0;
+            assert!((f64::from(ms) - seq).abs() < 1e-4, "row {i}: {ms} vs {seq}");
             let scale = 1.0 / (ms + 1e-6).sqrt();
             for j in 0..13 {
                 assert_eq!(got.get(i, j), x.get(i, j) * scale, "({i},{j})");

@@ -1,4 +1,7 @@
-//! The paper's quantization operator Q(x) = round(γx) and its inverse.
+//! The paper's quantization operator Q(x) = round(γx) and its inverse,
+//! plus the i8-storage row format and the serve-selectable [`Precision`]
+//! knob of the quantized SDDMM path (SPRINT-style low-bitwidth score
+//! compute: approximate in-memory dots, exact everything after).
 
 use crate::tensor::Matrix;
 
@@ -7,11 +10,29 @@ pub fn grid_bound(bits: u32) -> f32 {
     (2u32.pow(bits - 1) - 1) as f32
 }
 
+/// Quantize one value to the γ grid. Non-finite inputs clamp instead of
+/// poisoning the grid: NaN carries no magnitude and maps to 0, ±∞ clamp
+/// to the grid edges.
+fn quantize_value(v: f32, gamma: f32, hi: f32) -> f32 {
+    if v.is_nan() {
+        return 0.0;
+    }
+    (v * gamma).round_ties_even().clamp(-hi, hi)
+}
+
 /// Q(x): round to the γ-scaled integer grid, clipped to `bits` bits.
 /// Values stay f32 — exactly the convention of the L1 kernel.
+///
+/// γ must be finite and positive (a zero/negative/non-finite scale has
+/// no inverse grid and is rejected); non-finite *inputs* clamp — NaN to
+/// 0, ±∞ to the grid edge — instead of silently producing NaN grids.
 pub fn quantize(x: &Matrix, gamma: f32, bits: u32) -> Matrix {
+    assert!(
+        gamma.is_finite() && gamma > 0.0,
+        "quantize: gamma must be finite and positive, got {gamma}"
+    );
     let hi = grid_bound(bits);
-    x.map(|v| (v * gamma).round_ties_even().clamp(-hi, hi))
+    x.map(|v| quantize_value(v, gamma, hi))
 }
 
 /// Q⁻¹(x): undo the γ scaling.
@@ -22,6 +43,95 @@ pub fn dequantize(x: &Matrix, gamma: f32) -> Matrix {
 /// Q⁻¹(Q(x)) — the effective value entering the pruning matmul.
 pub fn roundtrip(x: &Matrix, gamma: f32, bits: u32) -> Matrix {
     dequantize(&quantize(x, gamma, bits), gamma)
+}
+
+/// Kernel arithmetic mode, threaded from `serve --precision` through
+/// `ServiceConfig` → `EncoderStack` → `Engine` down to the row kernels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 storage and accumulation (the reference path).
+    #[default]
+    F32,
+    /// i8 storage / i32 accumulation for the SDDMM score dots,
+    /// dequantized at the softmax boundary; V stays f32.
+    I8,
+}
+
+impl std::str::FromStr for Precision {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f32" => Ok(Self::F32),
+            "i8" => Ok(Self::I8),
+            other => Err(format!("unknown precision '{other}' (expected f32 or i8)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::F32 => "f32",
+            Self::I8 => "i8",
+        })
+    }
+}
+
+/// A matrix quantized row-wise to i8 storage: flat row-major codes plus
+/// one γ scale per row, γᵢ = 127 / max|rowᵢ| (γ = 1 for all-zero rows, so
+/// dequantization is always defined). Per-row scaling keeps the grid
+/// matched to each row's dynamic range *and* makes the codes independent
+/// of any row slicing — a sharded kernel quantizing its row block
+/// produces exactly the rows of the unsharded quantization.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedRows {
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl QuantizedRows {
+    /// Quantize every row of `x` to the signed 8-bit grid.
+    pub fn from_matrix(x: &Matrix) -> Self {
+        let (rows, cols) = x.shape();
+        let hi = grid_bound(8);
+        let mut codes = Vec::with_capacity(rows * cols);
+        let mut scales = Vec::with_capacity(rows);
+        for i in 0..rows {
+            let row = x.row(i);
+            let mut max_abs = 0.0f32;
+            for &v in row {
+                if v.is_finite() {
+                    max_abs = max_abs.max(v.abs());
+                }
+            }
+            let gamma = if max_abs > 0.0 { hi / max_abs } else { 1.0 };
+            scales.push(gamma);
+            for &v in row {
+                codes.push(quantize_value(v, gamma, hi) as i8);
+            }
+        }
+        Self { codes, scales, rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row `i`'s i8 codes.
+    pub fn row(&self, i: usize) -> &[i8] {
+        &self.codes[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Row `i`'s γ scale.
+    pub fn scale(&self, i: usize) -> f32 {
+        self.scales[i]
+    }
 }
 
 #[cfg(test)]
@@ -65,5 +175,88 @@ mod tests {
         let q1 = quantize(&x, 4.0, 4);
         let q2 = quantize(&dequantize(&q1, 4.0), 4.0, 4);
         assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn non_finite_inputs_clamp_not_nan() {
+        let x = Matrix::from_vec(
+            1,
+            4,
+            vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.25],
+        );
+        let q = quantize(&x, 4.0, 4);
+        assert_eq!(q.data(), &[0.0, 7.0, -7.0, 1.0]);
+        assert!(q.all_finite(), "no NaN may survive quantization");
+    }
+
+    #[test]
+    #[should_panic(expected = "gamma must be finite and positive")]
+    fn zero_gamma_rejected() {
+        quantize(&Matrix::zeros(2, 2), 0.0, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "gamma must be finite and positive")]
+    fn negative_gamma_rejected() {
+        quantize(&Matrix::zeros(2, 2), -3.0, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "gamma must be finite and positive")]
+    fn non_finite_gamma_rejected() {
+        quantize(&Matrix::zeros(2, 2), f32::NAN, 8);
+    }
+
+    #[test]
+    fn precision_parses_and_displays() {
+        assert_eq!("f32".parse::<Precision>().unwrap(), Precision::F32);
+        assert_eq!("i8".parse::<Precision>().unwrap(), Precision::I8);
+        assert!("fp16".parse::<Precision>().is_err());
+        assert_eq!(Precision::F32.to_string(), "f32");
+        assert_eq!(Precision::I8.to_string(), "i8");
+        assert_eq!(Precision::default(), Precision::F32);
+    }
+
+    #[test]
+    fn quantized_rows_roundtrip_error_per_row() {
+        let x = SeededRng::new(3).normal_matrix(12, 24, 1.5);
+        let q = QuantizedRows::from_matrix(&x);
+        assert_eq!((q.rows(), q.cols()), (12, 24));
+        for i in 0..12 {
+            let g = q.scale(i);
+            assert!(g.is_finite() && g > 0.0);
+            for (&code, &v) in q.row(i).iter().zip(x.row(i)) {
+                // dequantized code within half a grid step of the value
+                assert!(
+                    (f32::from(code) / g - v).abs() <= 0.5 / g + 1e-6,
+                    "row {i}: code {code} vs {v} (gamma {g})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_rows_zero_row_has_unit_scale() {
+        let mut x = SeededRng::new(4).normal_matrix(4, 8, 1.0);
+        for v in x.row_mut(2) {
+            *v = 0.0;
+        }
+        let q = QuantizedRows::from_matrix(&x);
+        assert_eq!(q.scale(2), 1.0);
+        assert!(q.row(2).iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn quantized_rows_slice_invariant() {
+        // Per-row γ ⇒ quantizing a row block reproduces the block of the
+        // full quantization (the sharding-invariance the i8 kernel
+        // relies on).
+        let x = SeededRng::new(5).normal_matrix(10, 16, 1.0);
+        let full = QuantizedRows::from_matrix(&x);
+        let block = QuantizedRows::from_matrix(&x.row_block(3, 7));
+        for i in 0..4 {
+            assert_eq!(block.row(i), full.row(3 + i));
+            assert_eq!(block.scale(i), full.scale(3 + i));
+        }
     }
 }

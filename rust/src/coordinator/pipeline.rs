@@ -24,7 +24,7 @@
 
 use crate::util::error::Result;
 
-use crate::attention::MultiHeadWeights;
+use crate::attention::{MultiHeadWeights, Precision};
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::runtime::Engine;
 use crate::sim::ChipSim;
@@ -69,6 +69,7 @@ pub struct EncoderStack<'e> {
     sim: ChipSim,
     layers: usize,
     shards: usize,
+    precision: Precision,
 }
 
 impl<'e> EncoderStack<'e> {
@@ -85,13 +86,23 @@ impl<'e> EncoderStack<'e> {
             "weights fan-out must match model.heads"
         );
         let sim = ChipSim::new(hw, model);
-        Self { engine, weights, sim, layers, shards: 1 }
+        Self { engine, weights, sim, layers, shards: 1, precision: Precision::F32 }
     }
 
     /// Fan every batch out across `shards` logical chips (≥ 1). One
     /// shard keeps the exact unsharded path.
     pub fn with_shards(mut self, shards: usize) -> Self {
         self.shards = shards.max(1);
+        self
+    }
+
+    /// Run the stack's kernels (and cost them) at `precision`: `F32` is
+    /// the reference path; `I8` quantizes the SDDMM score operands to
+    /// i8 storage / i32 accumulation and cheapens the simulated Step-3
+    /// crossbar pass to match the narrower bit-serial inputs.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self.sim = self.sim.with_precision(precision);
         self
     }
 
@@ -105,6 +116,10 @@ impl<'e> EncoderStack<'e> {
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Run one batch through every layer. Returns per-layer outputs
@@ -124,8 +139,12 @@ impl<'e> EncoderStack<'e> {
             // workspace pool, so the stack allocates nothing per layer
             // beyond the hidden states it returns.
             let input = if layer == 0 { x } else { &outs[layer - 1].hidden };
-            let exec =
-                self.engine.execute_encoder_heads_sharded(input, &self.weights, self.shards)?;
+            let exec = self.engine.execute_encoder_heads_sharded_prec(
+                input,
+                &self.weights,
+                self.shards,
+                self.precision,
+            )?;
             let cost = batch_cost.get_or_insert_with(|| {
                 if self.shards <= 1 {
                     let hs = self.sim.simulate_heads_planned(&exec.plans);
@@ -281,6 +300,38 @@ mod tests {
             assert_eq!(la.head_density, lb.head_density);
             assert!((la.mask_density - lb.mask_density).abs() < 1e-12);
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn i8_stack_serves_finite_hidden_at_lower_cost() {
+        let dir = std::env::temp_dir().join(format!("cpsaa-pipe-i8-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 32,
+            d_model: 64,
+            d_k: 8,
+            d_ff: 128,
+            heads: 2,
+            ..ModelConfig::default()
+        };
+        let set = ArtifactSet::synthesize(&dir, &model, 44).unwrap();
+        let engine = Engine::load(&set).unwrap();
+        let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 2).unwrap();
+        let x = crate::tensor::SeededRng::new(7).normal_matrix(32, 64, 1.0);
+        let f32_stack =
+            EncoderStack::new(&engine, w.clone(), HardwareConfig::paper(), model.clone(), 1);
+        let i8_stack = EncoderStack::new(&engine, w, HardwareConfig::paper(), model, 1)
+            .with_precision(Precision::I8);
+        assert_eq!(i8_stack.precision(), Precision::I8);
+        assert_eq!(f32_stack.precision(), Precision::F32);
+        let a = f32_stack.forward(&x).unwrap();
+        let b = i8_stack.forward(&x).unwrap();
+        assert!(b[0].hidden.all_finite());
+        assert_eq!(b[0].hidden.shape(), a[0].hidden.shape());
+        // i8 narrows the Step-3 bit-serial inputs: never slower, and
+        // strictly cheaper in energy.
+        assert!(b[0].sim_ns <= a[0].sim_ns, "i8 {} vs f32 {}", b[0].sim_ns, a[0].sim_ns);
+        assert!(b[0].sim_pj < a[0].sim_pj, "i8 {} vs f32 {}", b[0].sim_pj, a[0].sim_pj);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -40,7 +40,7 @@ use std::time::{Duration, Instant};
 use crate::anyhow;
 use crate::util::error::{Context, Result};
 
-use crate::attention::MultiHeadWeights;
+use crate::attention::{MultiHeadWeights, Precision};
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::runtime::{ArtifactSet, Engine};
 use crate::tensor::Matrix;
@@ -89,6 +89,8 @@ pub struct InferenceResponse {
     pub shard_rows: Vec<usize>,
     /// The leader thread that batched and executed this request.
     pub leader: usize,
+    /// Kernel arithmetic mode this request was served at.
+    pub precision: Precision,
 }
 
 impl InferenceResponse {
@@ -124,6 +126,15 @@ pub struct ServiceConfig {
     /// startup so big machines are not throttled at the historical cap.
     /// Worker counts never change computed values, only throughput.
     pub max_kernel_workers: Option<usize>,
+    /// Kernel arithmetic mode: `F32` (default, the reference path) or
+    /// `I8` (i8-storage / i32-accumulate SDDMM score dots, dequantized
+    /// at the softmax boundary; V stays f32).
+    pub precision: Precision,
+    /// Force the bit-identical scalar twins of the `tensor::simd` row
+    /// primitives for every kernel in this process (same switch as the
+    /// `CPSAA_FORCE_SCALAR` env var). Diagnostics knob: values never
+    /// change, only throughput.
+    pub force_scalar: bool,
 }
 
 impl Default for ServiceConfig {
@@ -134,6 +145,8 @@ impl Default for ServiceConfig {
             shards: 1,
             leaders: 1,
             max_kernel_workers: None,
+            precision: Precision::F32,
+            force_scalar: false,
         }
     }
 }
@@ -158,6 +171,11 @@ impl Service {
     ) -> Result<Self> {
         if cfg.leaders == 0 {
             return Err(anyhow!("leaders must be >= 1"));
+        }
+        // Process-wide lane switch: only ever *set* it here (never clear
+        // on false), so an env-forced scalar run stays scalar.
+        if cfg.force_scalar {
+            crate::tensor::simd::set_force_scalar(true);
         }
         // Size the one crate-wide pool every leader feeds, before any
         // leader starts dispatching onto it.
@@ -283,7 +301,8 @@ fn leader_loop(
         }
     };
     let stack = EncoderStack::new(&engine, weights, hw, model.clone(), cfg.layers)
-        .with_shards(cfg.shards);
+        .with_shards(cfg.shards)
+        .with_precision(cfg.precision);
     // One batcher per leader, all drawing from the service's shared
     // monotonic id source: every per-head/per-shard metric line stays
     // keyed to exactly one batch even with several leaders in flight.
@@ -397,6 +416,7 @@ fn leader_loop(
                                 shard_sim_pj: shard_pj.clone(),
                                 shard_rows: shard_rows.clone(),
                                 leader,
+                                precision: cfg.precision,
                             }));
                         }
                     }
@@ -581,6 +601,33 @@ mod tests {
         batch_ids.sort_unstable();
         batch_ids.dedup();
         assert_eq!(batch_ids.len() as u64, m.batches, "batch ids must be unique");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn i8_precision_serves_finite_responses() {
+        let dir = std::env::temp_dir().join(format!("cpsaa-svc-i8-{}", std::process::id()));
+        let model = crate::config::ModelConfig {
+            seq_len: 16,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            ..crate::config::ModelConfig::default()
+        };
+        crate::runtime::ArtifactSet::synthesize(&dir, &model, 9).unwrap();
+        let svc = Service::start(
+            dir.clone(),
+            HardwareConfig::paper(),
+            model,
+            ServiceConfig { layers: 1, precision: Precision::I8, ..Default::default() },
+        )
+        .unwrap();
+        let x = SeededRng::new(6).normal_matrix(16, 32, 1.0);
+        let resp = svc.infer(7, x).unwrap();
+        assert_eq!(resp.precision, Precision::I8);
+        assert_eq!(resp.hidden.shape(), (16, 32));
+        assert!(resp.hidden.all_finite());
+        assert!(resp.sim_ns > 0.0 && resp.sim_pj > 0.0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

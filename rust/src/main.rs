@@ -15,7 +15,7 @@ use std::path::{Path, PathBuf};
 use cpsaa::util::error::Result;
 use cpsaa::{anyhow, bail};
 
-use cpsaa::attention::Weights;
+use cpsaa::attention::{Precision, Weights};
 use cpsaa::bench_harness;
 use cpsaa::config::{ModelConfig, SystemConfig};
 use cpsaa::coordinator::{Service, ServiceConfig};
@@ -37,13 +37,18 @@ COMMANDS:
   bench-figure ID [--out-dir DIR]   regenerate a paper figure/table
                                     (fig3, table2, fig11..fig18, fig19a/b, fig20a/b, all)
   serve [--requests N] [--layers N] [--heads N] [--shards N] [--leaders N]
-        [--max-workers N]
+        [--max-workers N] [--precision f32|i8] [--force-scalar]
                                     demo serving loop over the artifact engine
                                     (multi-head fan-out across tile slices;
                                     --shards N fans each batch across N logical
                                     chips, rows nnz-balanced from the plan set;
                                     --leaders N batches in N parallel leader
-                                    threads feeding one executor pool)
+                                    threads feeding one executor pool;
+                                    --precision i8 quantizes the SDDMM score
+                                    dots to i8 storage / i32 accumulation;
+                                    --force-scalar pins the scalar twins of
+                                    the SIMD row primitives, like the
+                                    CPSAA_FORCE_SCALAR env var)
   inference [DATASET] [--layers N] [--heads N]
                                     application-level sim: encoders = attention
                                     + FC (+ DTC hops) + endurance estimate
@@ -163,7 +168,25 @@ fn main() -> Result<()> {
             let max_workers = take_flag(&mut cmd, "--max-workers")
                 .map(|s| s.parse::<usize>())
                 .transpose()?;
-            serve(&cfg, &args.artifacts, requests, layers, heads, shards, leaders, max_workers)
+            let precision = match take_flag(&mut cmd, "--precision") {
+                Some(s) => s
+                    .parse::<Precision>()
+                    .map_err(|e| anyhow!("--precision: {e}"))?,
+                None => Precision::F32,
+            };
+            let force_scalar = take_switch(&mut cmd, "--force-scalar");
+            serve(
+                &cfg,
+                &args.artifacts,
+                requests,
+                layers,
+                heads,
+                shards,
+                leaders,
+                max_workers,
+                precision,
+                force_scalar,
+            )
         }
         "inference" => {
             let layers = take_flag(&mut cmd, "--layers")
@@ -298,6 +321,8 @@ fn serve(
     shards: usize,
     leaders: usize,
     max_workers: Option<usize>,
+    precision: Precision,
+    force_scalar: bool,
 ) -> Result<()> {
     // Probe the manifest for the artifact shapes before spawning.
     let set = ArtifactSet::open(artifacts)?;
@@ -314,11 +339,14 @@ fn serve(
             shards,
             leaders,
             max_kernel_workers: max_workers,
+            precision,
+            force_scalar,
             ..Default::default()
         },
     )?;
     println!(
-        "service up (artifact shape {seq_len}x{d_model}, {layers} layers, {heads} heads, {shards} shards, {leaders} leaders)"
+        "service up (artifact shape {seq_len}x{d_model}, {layers} layers, {heads} heads, {shards} shards, {leaders} leaders, {precision} precision{})",
+        if force_scalar { ", scalar lanes" } else { "" }
     );
 
     let start = std::time::Instant::now();
@@ -353,7 +381,7 @@ fn serve(
         m.latency.max()
     );
     println!(
-        "simulated accelerator time {:.3} ms, energy {:.3} mJ",
+        "simulated accelerator time {:.3} ms, energy {:.3} mJ ({precision} precision)",
         m.sim_ns / 1e6,
         m.sim_pj * 1e-9
     );

@@ -13,7 +13,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::anyhow;
-use crate::attention::{self, MultiHeadWeights, Weights, WorkspacePool};
+use crate::attention::{self, MultiHeadWeights, Precision, Weights, WorkspacePool};
 use crate::config::ModelConfig;
 use crate::sparse::{MaskMatrix, PlanSet, ShardedPlans};
 use crate::tensor::Matrix;
@@ -189,30 +189,48 @@ impl Engine {
         w: &MultiHeadWeights,
         shards: usize,
     ) -> Result<EncoderHeadsExec> {
+        self.execute_encoder_heads_sharded_prec(x, w, shards, Precision::F32)
+    }
+
+    /// [`Engine::execute_encoder_heads_sharded`] with a kernel
+    /// [`Precision`]: `F32` is the reference path; `I8` runs the
+    /// quantized SDDMM score kernels (i8 storage / i32 accumulate,
+    /// dequantize at softmax). Mask generation, plan building, and the
+    /// sharding partition are precision-independent, so the same plans
+    /// drive both modes.
+    pub fn execute_encoder_heads_sharded_prec(
+        &self,
+        x: &Matrix,
+        w: &MultiHeadWeights,
+        shards: usize,
+        precision: Precision,
+    ) -> Result<EncoderHeadsExec> {
         let cfg = &self.model;
         self.validate_encoder_heads_input(x, w)?;
         let start = Instant::now();
         let masks = attention::mask::generate_heads_in(&self.exec, x, w, cfg);
         let plans = PlanSet::build_in(&self.exec, &masks);
         let (hidden, sharded) = if shards <= 1 {
-            let hidden = attention::ops::encoder_layer_heads_ws(
+            let hidden = attention::ops::encoder_layer_heads_ws_prec(
                 x,
                 w,
                 &plans,
                 cfg,
                 &self.workspaces,
                 &self.exec,
+                precision,
             );
             (hidden, None)
         } else {
             let sharded = plans.shard(shards);
-            let hidden = attention::ops::encoder_layer_heads_sharded_ws(
+            let hidden = attention::ops::encoder_layer_heads_sharded_ws_prec(
                 x,
                 w,
                 &sharded,
                 cfg,
                 &self.workspaces,
                 &self.exec,
+                precision,
             );
             (hidden, Some(sharded))
         };
@@ -388,6 +406,30 @@ mod tests {
         assert!(engine
             .execute_encoder_heads_sharded(&Matrix::zeros(3, 3), &mh, 4)
             .is_err());
+    }
+
+    #[test]
+    fn encoder_heads_i8_precision_shard_invariant() {
+        // i8 differs from f32 (it is an approximation) but must be
+        // bit-identical across shard counts: per-row γ quantization is
+        // row-slice invariant.
+        let engine = Engine::load(&synthetic_set()).unwrap();
+        let cfg = ModelConfig { heads: 4, ..small_model() };
+        let mh = MultiHeadWeights::synthetic(&cfg, 8);
+        let x = crate::tensor::SeededRng::new(14).normal_matrix(16, 32, 1.0);
+        let f32_out = engine.execute_encoder_heads(&x, &mh).unwrap();
+        let i8_out = engine
+            .execute_encoder_heads_sharded_prec(&x, &mh, 1, Precision::I8)
+            .unwrap();
+        assert!(i8_out.hidden.all_finite());
+        assert_eq!(i8_out.hidden.shape(), f32_out.hidden.shape());
+        assert_eq!(i8_out.plans, f32_out.plans, "plans are precision-independent");
+        for shards in [2, 4] {
+            let got = engine
+                .execute_encoder_heads_sharded_prec(&x, &mh, shards, Precision::I8)
+                .unwrap();
+            assert_eq!(got.hidden, i8_out.hidden, "i8 diverged at {shards} shards");
+        }
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Chip-level simulation: batches → traces → GOPS / GOPS/W.
 
+use crate::attention::Precision;
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::sparse::{DispatchPlan, MaskMatrix, PlanSet, ShardedPlans};
 use crate::workload::WorkloadTrace;
@@ -90,18 +91,31 @@ pub struct ChipSim {
     pub hw: HardwareConfig,
     pub model: ModelConfig,
     pub mode: Mode,
+    precision: Precision,
     area: AreaModel,
 }
 
 impl ChipSim {
     pub fn new(hw: HardwareConfig, model: ModelConfig) -> Self {
         let area = AreaModel::build(&hw);
-        Self { hw, model, mode: Mode::Sparse, area }
+        Self { hw, model, mode: Mode::Sparse, precision: Precision::F32, area }
     }
 
     pub fn dense(mut self) -> Self {
         self.mode = Mode::Dense;
         self
+    }
+
+    /// Cost the SDDMM score pass at `precision` (`I8` halves the Step-3
+    /// bit-serial crossbar work; see
+    /// [`pipeline::simulate_batch_planned_prec`]).
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     pub fn area(&self) -> &AreaModel {
@@ -110,7 +124,8 @@ impl ChipSim {
 
     /// Simulate a single batch with the given pruning mask.
     pub fn simulate_batch(&self, mask: &MaskMatrix) -> SimReport {
-        let r: PipelineReport = pipeline::simulate_batch(&self.hw, &self.model, mask, self.mode);
+        let r: PipelineReport =
+            pipeline::simulate_batch_prec(&self.hw, &self.model, mask, self.mode, self.precision);
         self.report_from(r)
     }
 
@@ -119,7 +134,13 @@ impl ChipSim {
     /// every encoder layer). The plan must describe the mode's effective
     /// mask (for [`Mode::Dense`] that is the all-ones mask).
     pub fn simulate_batch_planned(&self, plan: &DispatchPlan) -> SimReport {
-        let r = pipeline::simulate_batch_planned(&self.hw, &self.model, plan, self.mode);
+        let r = pipeline::simulate_batch_planned_prec(
+            &self.hw,
+            &self.model,
+            plan,
+            self.mode,
+            self.precision,
+        );
         self.report_from(r)
     }
 
@@ -174,6 +195,7 @@ impl ChipSim {
             HardwareConfig { tiles: (self.hw.tiles / heads.max(1)).max(1), ..self.hw.clone() };
         let mut head_sim = ChipSim::new(head_hw, self.model.clone());
         head_sim.mode = self.mode;
+        head_sim.precision = self.precision;
         head_sim
     }
 
@@ -362,6 +384,23 @@ mod tests {
             four.total_ns,
             one.total_ns
         );
+    }
+
+    #[test]
+    fn i8_precision_cheapens_sim_including_head_slices() {
+        let m = mask(0.1);
+        let f = sim().simulate_batch(&m);
+        let q = sim().with_precision(Precision::I8).simulate_batch(&m);
+        assert!(q.breakdown.total_ns <= f.breakdown.total_ns);
+        assert!(q.energy_pj < f.energy_pj, "i8 {} vs f32 {}", q.energy_pj, f.energy_pj);
+        // head_slice_sim must carry the precision down to per-head
+        // slices, or multi-head i8 serving silently costs f32.
+        let plans = PlanSet::from_plans(vec![m.plan(); 4]);
+        let fh = sim().simulate_heads_planned(&plans);
+        let qh = sim().with_precision(Precision::I8).simulate_heads_planned(&plans);
+        assert_eq!(sim().with_precision(Precision::I8).precision(), Precision::I8);
+        assert!(qh.total_ns <= fh.total_ns);
+        assert!(qh.energy_pj < fh.energy_pj, "head slices lost the precision knob");
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! removes the Q dependency), writes hidden behind compute (Fig. 4c), and
 //! the wait-for-write accounting of Fig. 15.
 
+use crate::attention::Precision;
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::sparse::{DispatchPlan, MaskMatrix};
 
@@ -73,12 +74,23 @@ pub fn simulate_batch(
     mask: &MaskMatrix,
     mode: Mode,
 ) -> PipelineReport {
+    simulate_batch_prec(hw, model, mask, mode, Precision::F32)
+}
+
+/// [`simulate_batch`] at an explicit kernel [`Precision`].
+pub fn simulate_batch_prec(
+    hw: &HardwareConfig,
+    model: &ModelConfig,
+    mask: &MaskMatrix,
+    mode: Mode,
+    precision: Precision,
+) -> PipelineReport {
     let plan = match mode {
         Mode::Sparse => mask.plan(),
         // CPDAA (Fig. 14): same calculation mode over an all-ones mask.
         Mode::Dense => MaskMatrix::ones(mask.rows(), mask.cols()).plan(),
     };
-    simulate_batch_planned(hw, model, &plan, mode)
+    simulate_batch_planned_prec(hw, model, &plan, mode, precision)
 }
 
 /// Simulate one batch over a prebuilt plan. The plan must describe the
@@ -89,6 +101,22 @@ pub fn simulate_batch_planned(
     model: &ModelConfig,
     plan: &DispatchPlan,
     mode: Mode,
+) -> PipelineReport {
+    simulate_batch_planned_prec(hw, model, plan, mode, Precision::F32)
+}
+
+/// [`simulate_batch_planned`] at an explicit kernel [`Precision`]:
+/// `I8` halves the Step-3 SDDMM crossbar pass (8-bit instead of 16-bit
+/// bit-serial input streaming — half the DAC pulses, half the ADC
+/// conversions per dot). Everything downstream of the dequantized
+/// scores (softmax, the f32 SpMM over V) is unchanged, matching the
+/// functional i8 kernel.
+pub fn simulate_batch_planned_prec(
+    hw: &HardwareConfig,
+    model: &ModelConfig,
+    plan: &DispatchPlan,
+    mode: Mode,
+    precision: Precision,
 ) -> PipelineReport {
     let n = model.seq_len;
     let d = model.d_model;
@@ -137,7 +165,11 @@ pub fn simulate_batch_planned(
     let (xfer_m_ns, xfer_m_pj) = cost::transfer(hw, (n * d * 4 / 8) as u64);
     energy.add(Component::Transfer, xfer_m_pj);
 
-    let sd = sddmm::simulate_plan(hw, plan, d);
+    let mut sd = sddmm::simulate_plan(hw, plan, d);
+    if precision == Precision::I8 {
+        sd.compute_ns *= 0.5;
+        sd.energy_pj *= 0.5;
+    }
     energy.add(Component::Crossbar, sd.energy_pj * 0.55);
     energy.add(Component::Adc, sd.energy_pj * 0.3);
     energy.add(Component::Recam, sd.energy_pj * 0.15);
@@ -322,6 +354,27 @@ mod tests {
         let hi = simulate_batch(&hw, &model, &mk(0.5), Mode::Sparse);
         assert!(hi.breakdown.total_ns > lo.breakdown.total_ns);
         assert!(hi.energy.total_pj() > lo.energy.total_pj());
+    }
+
+    #[test]
+    fn i8_precision_cheapens_step3() {
+        let (hw, model, mask) = setup(0.1);
+        let f = simulate_batch(&hw, &model, &mask, Mode::Sparse);
+        let q = simulate_batch_prec(&hw, &model, &mask, Mode::Sparse, Precision::I8);
+        // Step-3 never lengthens (compute halves; ReCAM scheduling may
+        // still dominate) and energy strictly drops.
+        assert!(q.breakdown.step3_ns <= f.breakdown.step3_ns);
+        assert!(q.breakdown.total_ns <= f.breakdown.total_ns);
+        assert!(
+            q.energy.total_pj() < f.energy.total_pj(),
+            "i8 {} vs f32 {}",
+            q.energy.total_pj(),
+            f.energy.total_pj()
+        );
+        // F32 is the literal legacy path.
+        let f2 = simulate_batch_prec(&hw, &model, &mask, Mode::Sparse, Precision::F32);
+        assert_eq!(f.breakdown.total_ns, f2.breakdown.total_ns);
+        assert_eq!(f.energy.total_pj(), f2.energy.total_pj());
     }
 
     #[test]

@@ -17,21 +17,23 @@
 //!   coordinate stream in place.
 
 use crate::sparse::{DispatchPlan, MaskMatrix};
-use crate::tensor::Matrix;
+use crate::tensor::{simd, Matrix};
 
-/// Row-wise streaming softmax over one row's stored entries (max → exp →
-/// normalize, in entry order) — shared by [`CsrMatrix`], [`CsrView`] and
-/// the fused kernel so every path computes bit-identical probabilities.
+/// Row-wise streaming softmax over one row's stored entries (laned
+/// max-reduce → elementwise exp → laned sum-reduce → normalize) — shared
+/// by [`CsrMatrix`], [`CsrView`] and the fused kernel so every path
+/// computes bit-identical probabilities. The reductions go through
+/// `tensor::simd`, whose scalar fallback replays the identical lane
+/// order, so the probabilities are also mode-invariant.
 pub(crate) fn softmax_row(vals: &mut [f32]) {
     if vals.is_empty() {
         return;
     }
-    let max = vals.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0.0;
+    let max = simd::max_reduce(vals);
     for v in vals.iter_mut() {
         *v = (*v - max).exp();
-        sum += *v;
     }
+    let sum = simd::sum(vals);
     for v in vals.iter_mut() {
         *v /= sum;
     }
@@ -39,7 +41,8 @@ pub(crate) fn softmax_row(vals: &mut [f32]) {
 
 /// One sparse row times a dense matrix, accumulated into a zero-initialized
 /// output row — the SpMM inner loop every CSR flavor and the fused kernel
-/// share (same accumulation order ⇒ same bits).
+/// share (same accumulation order ⇒ same bits). Each selected V row lands
+/// via the laned axpy primitive.
 pub(crate) fn spmm_row_into(
     cols: &[u32],
     vals: &[f32],
@@ -47,10 +50,7 @@ pub(crate) fn spmm_row_into(
     out_row: &mut [f32],
 ) {
     for (&j, &v) in cols.iter().zip(vals) {
-        let drow = dense.row(j as usize);
-        for (o, d) in out_row.iter_mut().zip(drow) {
-            *o += v * d;
-        }
+        simd::axpy(v, dense.row(j as usize), out_row);
     }
 }
 

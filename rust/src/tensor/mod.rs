@@ -7,6 +7,7 @@
 
 mod matrix;
 mod rng;
+pub mod simd;
 
 pub use matrix::Matrix;
 pub use rng::SeededRng;

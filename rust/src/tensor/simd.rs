@@ -1,0 +1,426 @@
+//! Fixed-width SIMD-lane row primitives for the fused attention hot path.
+//!
+//! Every row kernel in the crate (SDDMM dots, softmax reductions, SpMM
+//! axpy, RMS-norm sums) funnels through these primitives, so the
+//! bit-identity contract between CSR flavors survives vectorization:
+//! there is exactly one accumulation-order definition per reduction.
+//!
+//! The laned form keeps [`LANES`] independent accumulators per chunk and
+//! folds them with a fixed pairwise tree; the plain 8-wide inner loop is
+//! what the compiler maps onto vector units. The scalar fallback —
+//! selected at runtime via the `CPSAA_FORCE_SCALAR` environment variable
+//! or [`set_force_scalar`] (the `serve --force-scalar` hook) — executes
+//! the *same* operation sequence: same chunking, same lane accumulators,
+//! same reduction tree, same sequential tail. It differs only in pinning
+//! every element update through `std::hint::black_box`, which is
+//! value-transparent but forces each update to be observable, blocking
+//! vectorization. Identical floating-point operation DAG ⇒ identical
+//! results to the last bit; the two modes differ only in speed.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// f32 lane width. 8 matches 256-bit vector units and divides every
+/// d_k / d_model in the tree, so tails are rare on real shapes.
+pub const LANES: usize = 8;
+
+fn force_flag() -> &'static AtomicBool {
+    static FLAG: OnceLock<AtomicBool> = OnceLock::new();
+    FLAG.get_or_init(|| AtomicBool::new(env_force_scalar()))
+}
+
+/// The `CPSAA_FORCE_SCALAR` environment default: set and non-`0` means
+/// the scalar fallback.
+pub fn env_force_scalar() -> bool {
+    std::env::var("CPSAA_FORCE_SCALAR").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Select the scalar fallback (`true`) or the laned path (`false`) for
+/// all subsequent primitive calls, overriding the environment default.
+pub fn set_force_scalar(on: bool) {
+    force_flag().store(on, Ordering::Relaxed);
+}
+
+/// True when the scalar fallback is active.
+pub fn scalar_forced() -> bool {
+    force_flag().load(Ordering::Relaxed)
+}
+
+/// The one pairwise add tree shared by both modes: (0+4, 1+5, 2+6, 3+7)
+/// then (a0+a2, a1+a3) then the final add.
+#[inline(always)]
+fn fold_add(acc: [f32; LANES]) -> f32 {
+    let a = [acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6], acc[3] + acc[7]];
+    let b = [a[0] + a[2], a[1] + a[3]];
+    b[0] + b[1]
+}
+
+/// The pairwise max tree, mirroring [`fold_add`].
+#[inline(always)]
+fn fold_max(acc: [f32; LANES]) -> f32 {
+    let a = [acc[0].max(acc[4]), acc[1].max(acc[5]), acc[2].max(acc[6]), acc[3].max(acc[7])];
+    let b = [a[0].max(a[2]), a[1].max(a[3])];
+    b[0].max(b[1])
+}
+
+/// Dot product `Σ x[i]·y[i]` over the common prefix of `x` and `y`.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    if scalar_forced() {
+        dot_scalar(x, y)
+    } else {
+        dot_lanes(x, y)
+    }
+}
+
+#[inline(always)]
+fn dot_lanes(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len().min(y.len());
+    let mut acc = [0.0f32; LANES];
+    let mut xs = x[..n].chunks_exact(LANES);
+    let mut ys = y[..n].chunks_exact(LANES);
+    for (cx, cy) in xs.by_ref().zip(ys.by_ref()) {
+        for (a, (&px, &py)) in acc.iter_mut().zip(cx.iter().zip(cy)) {
+            *a += px * py;
+        }
+    }
+    let mut s = fold_add(acc);
+    for (&px, &py) in xs.remainder().iter().zip(ys.remainder()) {
+        s += px * py;
+    }
+    s
+}
+
+fn dot_scalar(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len().min(y.len());
+    let mut acc = [0.0f32; LANES];
+    let mut xs = x[..n].chunks_exact(LANES);
+    let mut ys = y[..n].chunks_exact(LANES);
+    for (cx, cy) in xs.by_ref().zip(ys.by_ref()) {
+        for (a, (&px, &py)) in acc.iter_mut().zip(cx.iter().zip(cy)) {
+            *a += px * py;
+            std::hint::black_box(a);
+        }
+    }
+    let mut s = fold_add(acc);
+    for (&px, &py) in xs.remainder().iter().zip(ys.remainder()) {
+        s += px * py;
+        std::hint::black_box(&mut s);
+    }
+    s
+}
+
+/// `out[i] += a·x[i]` over the common prefix (the SpMM row update).
+pub fn axpy(a: f32, x: &[f32], out: &mut [f32]) {
+    if scalar_forced() {
+        axpy_scalar(a, x, out)
+    } else {
+        axpy_lanes(a, x, out)
+    }
+}
+
+#[inline(always)]
+fn axpy_lanes(a: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len().min(out.len());
+    let mut xs = x[..n].chunks_exact(LANES);
+    let mut os = out[..n].chunks_exact_mut(LANES);
+    for (cx, co) in xs.by_ref().zip(os.by_ref()) {
+        for (o, &v) in co.iter_mut().zip(cx) {
+            *o += a * v;
+        }
+    }
+    for (o, &v) in os.into_remainder().iter_mut().zip(xs.remainder()) {
+        *o += a * v;
+    }
+}
+
+fn axpy_scalar(a: f32, x: &[f32], out: &mut [f32]) {
+    let n = x.len().min(out.len());
+    let mut xs = x[..n].chunks_exact(LANES);
+    let mut os = out[..n].chunks_exact_mut(LANES);
+    for (cx, co) in xs.by_ref().zip(os.by_ref()) {
+        for (o, &v) in co.iter_mut().zip(cx) {
+            *o += a * v;
+            std::hint::black_box(o);
+        }
+    }
+    for (o, &v) in os.into_remainder().iter_mut().zip(xs.remainder()) {
+        *o += a * v;
+        std::hint::black_box(o);
+    }
+}
+
+/// `x[i] *= a` in place (the 1/√d_k score scaling). Elementwise, so the
+/// two modes are trivially bit-identical.
+pub fn scale(x: &mut [f32], a: f32) {
+    if scalar_forced() {
+        for v in x.iter_mut() {
+            *v *= a;
+            std::hint::black_box(v);
+        }
+    } else {
+        for v in x.iter_mut() {
+            *v *= a;
+        }
+    }
+}
+
+/// Max-reduce with the `f32::max` NaN-ignoring semantics of the old
+/// sequential fold; `NEG_INFINITY` on an empty slice.
+pub fn max_reduce(x: &[f32]) -> f32 {
+    if scalar_forced() {
+        max_scalar(x)
+    } else {
+        max_lanes(x)
+    }
+}
+
+#[inline(always)]
+fn max_lanes(x: &[f32]) -> f32 {
+    let mut acc = [f32::NEG_INFINITY; LANES];
+    let mut xs = x.chunks_exact(LANES);
+    for cx in xs.by_ref() {
+        for (a, &v) in acc.iter_mut().zip(cx) {
+            *a = a.max(v);
+        }
+    }
+    let mut m = fold_max(acc);
+    for &v in xs.remainder() {
+        m = m.max(v);
+    }
+    m
+}
+
+fn max_scalar(x: &[f32]) -> f32 {
+    let mut acc = [f32::NEG_INFINITY; LANES];
+    let mut xs = x.chunks_exact(LANES);
+    for cx in xs.by_ref() {
+        for (a, &v) in acc.iter_mut().zip(cx) {
+            *a = a.max(v);
+            std::hint::black_box(a);
+        }
+    }
+    let mut m = fold_max(acc);
+    for &v in xs.remainder() {
+        m = m.max(v);
+        std::hint::black_box(&mut m);
+    }
+    m
+}
+
+/// Sum-reduce (the softmax denominator).
+pub fn sum(x: &[f32]) -> f32 {
+    if scalar_forced() {
+        sum_scalar(x)
+    } else {
+        sum_lanes(x)
+    }
+}
+
+#[inline(always)]
+fn sum_lanes(x: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut xs = x.chunks_exact(LANES);
+    for cx in xs.by_ref() {
+        for (a, &v) in acc.iter_mut().zip(cx) {
+            *a += v;
+        }
+    }
+    let mut s = fold_add(acc);
+    for &v in xs.remainder() {
+        s += v;
+    }
+    s
+}
+
+fn sum_scalar(x: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut xs = x.chunks_exact(LANES);
+    for cx in xs.by_ref() {
+        for (a, &v) in acc.iter_mut().zip(cx) {
+            *a += v;
+            std::hint::black_box(a);
+        }
+    }
+    let mut s = fold_add(acc);
+    for &v in xs.remainder() {
+        s += v;
+        std::hint::black_box(&mut s);
+    }
+    s
+}
+
+/// i8-storage / i32-accumulate dot product over the common prefix (the
+/// quantized SDDMM inner product). Integer addition is exactly
+/// associative, so lane order cannot change the result; |x·y| ≤
+/// 127²·len stays far below `i32::MAX` for every model shape in the
+/// tree (len < 16k), so the accumulation never wraps.
+pub fn dot_i8(x: &[i8], y: &[i8]) -> i32 {
+    if scalar_forced() {
+        dot_i8_scalar(x, y)
+    } else {
+        dot_i8_lanes(x, y)
+    }
+}
+
+#[inline(always)]
+fn dot_i8_lanes(x: &[i8], y: &[i8]) -> i32 {
+    let n = x.len().min(y.len());
+    let mut acc = [0i32; LANES];
+    let mut xs = x[..n].chunks_exact(LANES);
+    let mut ys = y[..n].chunks_exact(LANES);
+    for (cx, cy) in xs.by_ref().zip(ys.by_ref()) {
+        for (a, (&px, &py)) in acc.iter_mut().zip(cx.iter().zip(cy)) {
+            *a += i32::from(px) * i32::from(py);
+        }
+    }
+    let mut s: i32 = acc.iter().sum();
+    for (&px, &py) in xs.remainder().iter().zip(ys.remainder()) {
+        s += i32::from(px) * i32::from(py);
+    }
+    s
+}
+
+fn dot_i8_scalar(x: &[i8], y: &[i8]) -> i32 {
+    let n = x.len().min(y.len());
+    let mut acc = [0i32; LANES];
+    let mut xs = x[..n].chunks_exact(LANES);
+    let mut ys = y[..n].chunks_exact(LANES);
+    for (cx, cy) in xs.by_ref().zip(ys.by_ref()) {
+        for (a, (&px, &py)) in acc.iter_mut().zip(cx.iter().zip(cy)) {
+            *a += i32::from(px) * i32::from(py);
+            std::hint::black_box(a);
+        }
+    }
+    let mut s: i32 = acc.iter().sum();
+    for (&px, &py) in xs.remainder().iter().zip(ys.remainder()) {
+        s += i32::from(px) * i32::from(py);
+        std::hint::black_box(&mut s);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    /// Lengths hitting no-chunk, exact-chunk, and every tail residue.
+    const SIZES: [usize; 13] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 63, 100, 512];
+
+    fn vec_f32(rng: &mut SeededRng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn vec_i8(rng: &mut SeededRng, n: usize) -> Vec<i8> {
+        (0..n)
+            .map(|_| (rng.gen_range_usize(0, 255) as i32 - 127) as i8)
+            .collect()
+    }
+
+    #[test]
+    fn laned_and_scalar_twins_bit_identical() {
+        let mut rng = SeededRng::new(7);
+        for n in SIZES {
+            let x = vec_f32(&mut rng, n);
+            let y = vec_f32(&mut rng, n);
+            assert_eq!(dot_lanes(&x, &y).to_bits(), dot_scalar(&x, &y).to_bits(), "dot n={n}");
+            assert_eq!(sum_lanes(&x).to_bits(), sum_scalar(&x).to_bits(), "sum n={n}");
+            assert_eq!(max_lanes(&x).to_bits(), max_scalar(&x).to_bits(), "max n={n}");
+            let mut a = y.clone();
+            let mut b = y.clone();
+            axpy_lanes(0.37, &x, &mut a);
+            axpy_scalar(0.37, &x, &mut b);
+            assert!(
+                a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "axpy n={n}"
+            );
+            let xi = vec_i8(&mut rng, n);
+            let yi = vec_i8(&mut rng, n);
+            assert_eq!(dot_i8_lanes(&xi, &yi), dot_i8_scalar(&xi, &yi), "dot_i8 n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_sequential_reference() {
+        let mut rng = SeededRng::new(11);
+        for n in SIZES {
+            let x = vec_f32(&mut rng, n);
+            let y = vec_f32(&mut rng, n);
+            let mut want = 0.0f64;
+            for (&a, &b) in x.iter().zip(&y) {
+                want += f64::from(a) * f64::from(b);
+            }
+            let got = f64::from(dot_lanes(&x, &y));
+            assert!((got - want).abs() < 1e-3 * want.abs().max(1.0), "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn max_matches_sequential_fold() {
+        let mut rng = SeededRng::new(13);
+        for n in SIZES {
+            let x = vec_f32(&mut rng, n);
+            let want = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(max_lanes(&x).to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_and_scale_match_reference() {
+        let mut rng = SeededRng::new(17);
+        for n in SIZES {
+            let x = vec_f32(&mut rng, n);
+            let base = vec_f32(&mut rng, n);
+            let mut got = base.clone();
+            axpy(2.5, &x, &mut got);
+            for i in 0..n {
+                let want = base[i] + 2.5 * x[i];
+                assert_eq!(got[i].to_bits(), want.to_bits(), "axpy n={n} i={i}");
+            }
+            let mut s = x.clone();
+            scale(&mut s, 0.125);
+            for i in 0..n {
+                assert_eq!(s[i].to_bits(), (x[i] * 0.125).to_bits(), "scale n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_i8_matches_wide_reference() {
+        let mut rng = SeededRng::new(19);
+        for n in SIZES {
+            let x = vec_i8(&mut rng, n);
+            let y = vec_i8(&mut rng, n);
+            let mut want = 0i64;
+            for (&a, &b) in x.iter().zip(&y) {
+                want += i64::from(a) * i64::from(b);
+            }
+            assert_eq!(i64::from(dot_i8_lanes(&x, &y)), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn unequal_lengths_use_common_prefix() {
+        // dot and axpy zip to the shorter operand, matching the old
+        // `iter().zip()` kernels they replaced.
+        let x = [1.0f32, 2.0, 3.0];
+        let y = [10.0f32, 20.0];
+        assert_eq!(dot_lanes(&x, &y), 50.0);
+        let mut out = [0.0f32; 2];
+        axpy_lanes(1.0, &x, &mut out);
+        assert_eq!(out, [1.0, 2.0]);
+    }
+
+    #[test]
+    fn force_scalar_toggle_roundtrips() {
+        let prior = scalar_forced();
+        set_force_scalar(true);
+        assert!(scalar_forced());
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let forced = dot(&x, &x);
+        set_force_scalar(false);
+        assert!(!scalar_forced());
+        assert_eq!(dot(&x, &x).to_bits(), forced.to_bits());
+        set_force_scalar(prior);
+    }
+}

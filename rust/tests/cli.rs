@@ -342,6 +342,10 @@ fn bench_compare_accepts_committed_baseline() {
     assert!(body.contains("attention_320x512_spawn"), "baseline lost scoped-spawn rung");
     assert!(body.contains("serve_leaders1"), "baseline lost single-leader serve rung");
     assert!(body.contains("serve_leaders4"), "baseline lost multi-leader serve rung");
+    assert!(body.contains("attention_320x512_simd"), "baseline lost simd-lane rung");
+    assert!(body.contains("attention_320x512_scalar"), "baseline lost scalar-twin rung");
+    assert!(body.contains("sddmm_f32_320x512"), "baseline lost f32 sddmm rung");
+    assert!(body.contains("sddmm_i8_320x512"), "baseline lost i8 sddmm rung");
     let (ok, text) = cpsaa(&[
         "bench-compare",
         baseline.to_str().unwrap(),
@@ -428,6 +432,81 @@ fn serve_max_workers_flag_end_to_end() {
     ]);
     assert!(!ok);
     assert!(text.contains("max_kernel_workers"), "{text}");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn serve_precision_flag_end_to_end() {
+    // Acceptance: `serve --precision i8` serves the quantized score
+    // path end to end and the banner + summary carry the precision.
+    let art = synth_artifacts("precision", 2);
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "2",
+        "--layers",
+        "1",
+        "--heads",
+        "2",
+        "--precision",
+        "i8",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("i8 precision"), "{text}");
+    assert!(text.contains("served 2 requests"), "{text}");
+    // the default spelled out explicitly also serves
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "1",
+        "--layers",
+        "1",
+        "--heads",
+        "2",
+        "--precision",
+        "f32",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("f32 precision"), "{text}");
+    // unknown precisions fail flag parsing with a pointed message
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "1",
+        "--precision",
+        "fp16",
+    ]);
+    assert!(!ok, "{text}");
+    assert!(text.contains("precision"), "{text}");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn serve_force_scalar_flag_end_to_end() {
+    // The scalar-lane escape hatch must be accepted and announced;
+    // outputs are lane-invariant so only liveness is observable here.
+    let art = synth_artifacts("scalar", 2);
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "2",
+        "--layers",
+        "1",
+        "--heads",
+        "2",
+        "--force-scalar",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("scalar lanes"), "{text}");
+    assert!(text.contains("served 2 requests"), "{text}");
     std::fs::remove_dir_all(&art).ok();
 }
 

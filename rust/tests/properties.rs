@@ -2,14 +2,16 @@
 //! (the in-tree `util::prop` driver replaces proptest in this offline
 //! build — N seeded cases per property, failing seed reported).
 
-use cpsaa::attention::{self, ops, MultiHeadWeights, Weights, WorkspacePool};
+use cpsaa::attention::{
+    self, ops, MultiHeadWeights, Precision, QuantizedRows, Weights, WorkspacePool,
+};
 use cpsaa::config::{HardwareConfig, ModelConfig};
 use cpsaa::coordinator::Batcher;
 use cpsaa::prop_assert;
 use cpsaa::runtime::Executor;
 use cpsaa::sim::{pipeline, sddmm, spmm};
 use cpsaa::sparse::{CsrMatrix, DispatchPlan, MaskMatrix, PlanSet};
-use cpsaa::tensor::{Matrix, SeededRng};
+use cpsaa::tensor::{simd, Matrix, SeededRng};
 use cpsaa::util::prop::{check, default_cases};
 
 fn rand_mask(rng: &mut SeededRng, n: usize) -> MaskMatrix {
@@ -642,4 +644,182 @@ fn prop_quant_error_bounded() {
         }
         Ok(())
     });
+}
+
+/// One (planned, sharded-2) pair at a given precision under whatever
+/// lane mode is currently forced — the unit the bit-identity grid
+/// compares across the `set_force_scalar` flip.
+fn mh_prec(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    plans: &PlanSet,
+    cfg: &ModelConfig,
+    p: Precision,
+) -> (Matrix, Matrix) {
+    let planned = ops::multi_head_attention_planned_prec(x, w, plans, cfg, p);
+    let sharded = ops::multi_head_attention_sharded_prec(x, w, &plans.shard(2), cfg, p);
+    (planned, sharded)
+}
+
+#[test]
+fn prop_simd_scalar_bit_identical_grid() {
+    // The lane switch must never change a bit: the scalar twins perform
+    // the identical FP operation DAG (same 8-accumulator splits, same
+    // pairwise reduction tree, same sequential tail), so flipping
+    // `set_force_scalar` mid-process is always value-safe — at every
+    // precision, density, head count, and shard count.
+    let mut rng = SeededRng::new(777);
+    for &heads in &[1usize, 4, 8] {
+        for &density in &[0.0, 0.1, 0.5, 1.0] {
+            let cfg = ModelConfig {
+                seq_len: 24,
+                d_model: 32,
+                d_k: 8,
+                d_ff: 64,
+                heads,
+                ..Default::default()
+            };
+            let w = MultiHeadWeights::synthetic(&cfg, 200 + heads as u64);
+            let x = rng.normal_matrix(24, 32, 1.0);
+            let masks: Vec<MaskMatrix> = (0..heads)
+                .map(|_| MaskMatrix::from_dense(&rng.mask_matrix(24, 24, density)))
+                .collect();
+            let plans = PlanSet::build(&masks);
+            for &precision in &[Precision::F32, Precision::I8] {
+                simd::set_force_scalar(false);
+                let (laned, laned_sharded) = mh_prec(&x, &w, &plans, &cfg, precision);
+                simd::set_force_scalar(true);
+                let (scalar, scalar_sharded) = mh_prec(&x, &w, &plans, &cfg, precision);
+                simd::set_force_scalar(simd::env_force_scalar());
+                assert!(
+                    laned == scalar,
+                    "scalar twin diverged at {heads} heads, density {density}, {precision}"
+                );
+                assert!(
+                    laned_sharded == scalar_sharded,
+                    "sharded scalar twin diverged at {heads} heads, density {density}, {precision}"
+                );
+                assert!(
+                    laned_sharded == laned,
+                    "2 shards diverged at {heads} heads, density {density}, {precision}"
+                );
+            }
+        }
+    }
+}
+
+/// Per-row analytic logit-error budget of the i8 score path for one
+/// head: quantizing m (per-row γ_m) and kv (per-row γ_k) perturbs each
+/// scaled logit by at most
+/// `ε_i = scale · d · (max|m_i|·e_k + max|kv|·e_m_i + e_m_i·e_k)` with
+/// `e = 0.5/γ` the half-grid-step dequantization error, taking the
+/// worst kv row. A uniform logit shift of ±ε multiplies every softmax
+/// weight by at most e^{±2ε}, so the output row is off by at most
+/// `(e^{2ε_i} − 1) · max|V|` per component.
+fn i8_row_bounds(m: &Matrix, kv: &Matrix, v: &Matrix, scale: f64) -> (Vec<f64>, f64) {
+    let qm = QuantizedRows::from_matrix(m);
+    let qk = QuantizedRows::from_matrix(kv);
+    let d = m.cols() as f64;
+    let row_max = |mat: &Matrix, i: usize| {
+        mat.row(i).iter().fold(0.0f64, |a, &v| a.max(f64::from(v).abs()))
+    };
+    let e_k = (0..kv.rows()).map(|j| 0.5 / f64::from(qk.scale(j))).fold(0.0, f64::max);
+    let kv_max = (0..kv.rows()).map(|j| row_max(kv, j)).fold(0.0, f64::max);
+    let v_max = v.data().iter().fold(0.0f64, |a, &x| a.max(f64::from(x).abs()));
+    let bounds = (0..m.rows())
+        .map(|i| {
+            let e_m = 0.5 / f64::from(qm.scale(i));
+            let eps = scale * d * (row_max(m, i) * e_k + kv_max * e_m + e_m * e_k);
+            ((2.0 * eps).exp() - 1.0) * v_max
+        })
+        .collect();
+    (bounds, v_max)
+}
+
+#[test]
+fn prop_i8_attention_error_bounded_grid() {
+    // The i8 path against the f32 oracle across the acceptance grid:
+    // every output row stays inside its analytic quantization budget
+    // (per-row γs, softmax amplification, f32 slop), and the i8 result
+    // itself is bit-identical across shard counts (per-row γ is row-
+    // slice invariant).
+    let mut rng = SeededRng::new(31337);
+    for &heads in &[1usize, 4, 8] {
+        for &density in &[0.0, 0.1, 0.5, 1.0] {
+            let cfg = ModelConfig {
+                seq_len: 24,
+                d_model: 32,
+                d_k: 8,
+                d_ff: 64,
+                heads,
+                ..Default::default()
+            };
+            let w = MultiHeadWeights::synthetic(&cfg, 300 + heads as u64);
+            let x = rng.normal_matrix(24, 32, 1.0);
+            let masks: Vec<MaskMatrix> = (0..heads)
+                .map(|_| MaskMatrix::from_dense(&rng.mask_matrix(24, 24, density)))
+                .collect();
+            let plans = PlanSet::build(&masks);
+            let oracle = unfused_multi_head(&x, &w, &plans, &cfg);
+            let got = ops::multi_head_attention_planned_prec(&x, &w, &plans, &cfg, Precision::I8);
+            assert_eq!(got.shape(), oracle.shape());
+            assert!(got.all_finite(), "i8 output not finite at {heads} heads, {density}");
+
+            // Per-row worst-head z budget, then through the optional W_O
+            // mixing (row inf-norm: |Δ(z·W_O)| ≤ d_model·maxΔz·max|W_O|).
+            let scale = 1.0 / f64::from(cfg.d_k as u32).sqrt();
+            let per_head: Vec<(Vec<f64>, f64)> = w
+                .heads
+                .iter()
+                .map(|h| i8_row_bounds(&x.matmul(&h.w_s), &x, &x.matmul(&h.w_v), scale))
+                .collect();
+            // W_O mixes the concat row: |Δ(z·W_O)|∞ ≤ width(z)·maxΔz·max|W_O|.
+            let wo_mix = w.w_o.as_ref().map(|o| {
+                let om = o.data().iter().fold(0.0f64, |a, &v| a.max(f64::from(v).abs()));
+                o.rows() as f64 * om
+            });
+            for i in 0..24 {
+                let z_bound = per_head.iter().map(|(b, _)| b[i]).fold(0.0, f64::max);
+                let bound = match wo_mix {
+                    Some(mix) => mix * z_bound,
+                    None => z_bound,
+                } + 1e-3;
+                let err = got
+                    .row(i)
+                    .iter()
+                    .zip(oracle.row(i))
+                    .map(|(&a, &b)| (f64::from(a) - f64::from(b)).abs())
+                    .fold(0.0, f64::max);
+                assert!(
+                    err <= bound,
+                    "row {i}: i8 error {err} > budget {bound} at {heads} heads, density {density}"
+                );
+            }
+
+            // Shard invariance of the i8 result itself.
+            for &shards in &[1usize, 2] {
+                let sharded = ops::multi_head_attention_sharded_prec(
+                    &x,
+                    &w,
+                    &plans.shard(shards),
+                    &cfg,
+                    Precision::I8,
+                );
+                assert!(
+                    sharded == got,
+                    "i8 diverged at {heads} heads x {shards} shards, density {density}"
+                );
+            }
+
+            // The quantized path must actually quantize: on a dense-ish
+            // mask the score grid error is far above f32 ulps.
+            if density >= 0.5 {
+                assert!(
+                    got != oracle,
+                    "i8 output bit-identical to f32 at {heads} heads, density {density} — \
+                     the precision knob is not reaching the kernel"
+                );
+            }
+        }
+    }
 }
