@@ -6,7 +6,15 @@
 use crate::tensor::Matrix;
 
 /// Symmetric grid bound for a signed `bits`-bit quantizer (e.g. 4 → ±7).
+///
+/// Callers are expected to pass 2..=16 bits — [`ModelConfig::validate`]
+/// [crate::config::ModelConfig::validate] rejects anything else at
+/// config load — but the function is total anyway: `bits - 1` would
+/// underflow at 0 and overflow the shift at ≥ 32, so out-of-range
+/// widths clamp to the nearest representable grid instead of panicking.
 pub fn grid_bound(bits: u32) -> f32 {
+    debug_assert!((2..=16).contains(&bits), "grid_bound: {bits} bits outside 2..=16");
+    let bits = bits.clamp(2, 31);
     (2u32.pow(bits - 1) - 1) as f32
 }
 
@@ -144,6 +152,17 @@ mod tests {
         assert_eq!(grid_bound(4), 7.0);
         assert_eq!(grid_bound(8), 127.0);
         assert_eq!(grid_bound(2), 1.0);
+    }
+
+    #[test]
+    fn grid_bound_is_total_in_release() {
+        // Config validation rejects these widths upstream; the grid
+        // itself must still not underflow/overflow if one leaks through.
+        if !cfg!(debug_assertions) {
+            assert_eq!(grid_bound(0), 1.0);
+            assert_eq!(grid_bound(1), 1.0);
+            assert!(grid_bound(40).is_finite());
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //!   pop/push, never across kernel work, so workers never serialize on
 //!   it. The pool grows to the high-water concurrency and then recycles.
 
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::tensor::Matrix;
 
@@ -70,17 +70,26 @@ impl WorkspacePool {
         Self::default()
     }
 
+    /// Lock the slot list, recovering from poison: the lock only guards
+    /// a `Vec` pop/push, so a worker that panicked while holding it
+    /// cannot have left the slots inconsistent — cascading the panic
+    /// into every surviving worker would turn one dead request into a
+    /// dead service.
+    fn slots(&self) -> MutexGuard<'_, Vec<KernelWorkspace>> {
+        self.slots.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Run `f` with an exclusive workspace checked out of the pool.
     pub fn with<T>(&self, f: impl FnOnce(&mut KernelWorkspace) -> T) -> T {
-        let mut ws = self.slots.lock().unwrap().pop().unwrap_or_default();
+        let mut ws = self.slots().pop().unwrap_or_default();
         let out = f(&mut ws);
-        self.slots.lock().unwrap().push(ws);
+        self.slots().push(ws);
         out
     }
 
     /// Workspaces currently idle in the pool (tests / introspection).
     pub fn idle(&self) -> usize {
-        self.slots.lock().unwrap().len()
+        self.slots().len()
     }
 }
 
@@ -119,5 +128,22 @@ mod tests {
             pool.with(|_| {});
         }
         assert_eq!(pool.idle(), idle);
+    }
+
+    #[test]
+    fn pool_survives_a_poisoned_lock() {
+        let pool = std::sync::Arc::new(WorkspacePool::new());
+        pool.with(|ws| ws.m.reset(4, 4));
+        // A worker dying while holding the slot lock poisons it...
+        let p = pool.clone();
+        let died = std::thread::spawn(move || {
+            let _guard = p.slots.lock().unwrap();
+            panic!("worker dies holding the pool lock");
+        })
+        .join();
+        assert!(died.is_err());
+        // ...but the pool keeps serving checkouts, and still recycles.
+        pool.with(|ws| assert_eq!(ws.m.shape(), (4, 4)));
+        assert_eq!(pool.idle(), 1);
     }
 }

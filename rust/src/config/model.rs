@@ -97,8 +97,11 @@ impl ModelConfig {
         if !(0.0..1.0).contains(&self.theta) || self.theta <= 0.0 {
             return Err(format!("theta {} outside (0,1)", self.theta));
         }
-        if !(1..=16).contains(&self.quant_bits) {
-            return Err(format!("quant_bits {} outside 1..=16", self.quant_bits));
+        // A signed quantization grid needs at least a sign bit and one
+        // magnitude bit: grid_bound computes 2^(bits-1) - 1, which
+        // underflows at bits = 0 and collapses to 0 levels at bits = 1.
+        if !(2..=16).contains(&self.quant_bits) {
+            return Err(format!("quant_bits {} outside 2..=16", self.quant_bits));
         }
         Ok(())
     }
@@ -166,7 +169,11 @@ mod tests {
     fn validate_rejects_bad() {
         assert!(ModelConfig { theta: 0.0, ..Default::default() }.validate().is_err());
         assert!(ModelConfig { seq_len: 0, ..Default::default() }.validate().is_err());
+        // bits = 0 used to reach quant::grid_bound and underflow there;
+        // bits = 1 has no magnitude bit — both must die at config load
         assert!(ModelConfig { quant_bits: 0, ..Default::default() }.validate().is_err());
+        assert!(ModelConfig { quant_bits: 1, ..Default::default() }.validate().is_err());
+        ModelConfig { quant_bits: 2, ..Default::default() }.validate().unwrap();
         assert!(ModelConfig { heads: 0, ..Default::default() }.validate().is_err());
         // non-dividing head counts are fine for the simulator (serving
         // enforces divisibility at the weights fan-out instead)

@@ -27,5 +27,5 @@ pub use metrics::{
     HeadLine, HeadMetrics, LatencyHistogram, LeaderMetrics, ServeMetrics, ShardLine, ShardMetrics,
 };
 pub use pipeline::{EncoderStack, LayerOutput};
-pub use service::{InferenceResponse, Service, ServiceConfig};
+pub use service::{InferenceResponse, ServeHooks, Service, ServiceConfig};
 pub use shard::{ShardCost, ShardedBatchCost};

@@ -27,7 +27,7 @@ use crate::util::error::Result;
 use crate::attention::{MultiHeadWeights, Precision};
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::runtime::Engine;
-use crate::sim::ChipSim;
+use crate::sim::{ChipSim, SimTrace};
 use crate::tensor::Matrix;
 
 use super::shard;
@@ -131,6 +131,15 @@ impl<'e> EncoderStack<'e> {
     /// simulated once and reused for every layer: the coordinator never
     /// re-scans a mask or re-runs the pipeline model.
     pub fn forward(&self, x: &Matrix) -> Result<Vec<LayerOutput>> {
+        Ok(self.forward_traced(x)?.0)
+    }
+
+    /// [`EncoderStack::forward`] plus the batch's per-chip-slice stage
+    /// timelines (one [`SimTrace`] per head, or per (shard, head) under
+    /// sharding) — the payload `serve --trace` / `replay --trace` dump.
+    /// The timelines describe the batch's one simulated execution, the
+    /// same one every layer's cost lines reuse.
+    pub fn forward_traced(&self, x: &Matrix) -> Result<(Vec<LayerOutput>, Vec<SimTrace>)> {
         let mut outs: Vec<LayerOutput> = Vec::with_capacity(self.layers);
         let mut batch_cost: Option<BatchCost> = None;
         for layer in 0..self.layers {
@@ -159,6 +168,7 @@ impl<'e> EncoderStack<'e> {
                         shard_pj: Vec::new(),
                         shard_rows: Vec::new(),
                         shard_nnz: Vec::new(),
+                        traces: hs.traces(),
                     }
                 } else {
                     // Cost the partition the engine actually executed.
@@ -180,6 +190,7 @@ impl<'e> EncoderStack<'e> {
                         shard_pj: sc.shards.iter().map(|s| s.sim_pj).collect(),
                         shard_rows: sc.shards.iter().map(|s| s.rows).collect(),
                         shard_nnz: sc.shards.iter().map(|s| s.nnz).collect(),
+                        traces: sc.traces,
                     }
                 }
             });
@@ -197,7 +208,8 @@ impl<'e> EncoderStack<'e> {
                 shard_nnz: cost.shard_nnz.clone(),
             });
         }
-        Ok(outs)
+        let traces = batch_cost.map(|c| c.traces).unwrap_or_default();
+        Ok((outs, traces))
     }
 }
 
@@ -213,6 +225,8 @@ struct BatchCost {
     shard_pj: Vec<f64>,
     shard_rows: Vec<usize>,
     shard_nnz: Vec<usize>,
+    /// Per-chip-slice stage timelines of the batch's one simulation.
+    traces: Vec<SimTrace>,
 }
 
 #[cfg(test)]
@@ -300,6 +314,43 @@ mod tests {
             assert_eq!(la.head_density, lb.head_density);
             assert!((la.mask_density - lb.mask_density).abs() < 1e-12);
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn forward_traced_labels_one_timeline_per_chip_slice() {
+        let dir =
+            std::env::temp_dir().join(format!("cpsaa-pipe-traced-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 32,
+            d_model: 64,
+            d_k: 8,
+            d_ff: 128,
+            heads: 2,
+            ..ModelConfig::default()
+        };
+        let set = ArtifactSet::synthesize(&dir, &model, 55).unwrap();
+        let engine = Engine::load(&set).unwrap();
+        let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 2).unwrap();
+        let x = crate::tensor::SeededRng::new(9).normal_matrix(32, 64, 1.0);
+        let plain =
+            EncoderStack::new(&engine, w.clone(), HardwareConfig::paper(), model.clone(), 2);
+        let (outs, traces) = plain.forward_traced(&x).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(traces.len(), 2, "one timeline per head");
+        for (h, t) in traces.iter().enumerate() {
+            assert_eq!((t.head, t.shard), (h, None));
+            assert!(!t.events.is_empty());
+            // the timeline's end is the head's charged latency
+            let end = t.events.last().unwrap().end_ns;
+            assert_eq!(end, outs[0].head_sim_ns[h]);
+        }
+        let sharded =
+            EncoderStack::new(&engine, w, HardwareConfig::paper(), model, 1).with_shards(2);
+        let (outs, traces) = sharded.forward_traced(&x).unwrap();
+        let shards = outs[0].shard_sim_ns.len();
+        assert_eq!(traces.len(), shards * 2, "one timeline per (shard, head)");
+        assert!(traces.iter().all(|t| t.shard.is_some()));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -44,6 +44,9 @@ use crate::attention::{MultiHeadWeights, Precision};
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::runtime::{ArtifactSet, Engine};
 use crate::tensor::Matrix;
+use crate::workload::capture::{
+    BatchTraceRecord, CaptureRecorder, RecordedBatch, RecordedRequest, RecordedResponse, SimTracer,
+};
 
 use super::batcher::{BatchIds, Batcher};
 use super::metrics::ServeMetrics;
@@ -54,6 +57,26 @@ struct InferenceRequest {
     id: u64,
     x: Matrix,
     reply: mpsc::Sender<Result<InferenceResponse>>,
+}
+
+/// What travels over the shared request channel: a single request (the
+/// live-traffic path, co-batched by time window), or a pre-composed
+/// group whose members enter **one** batching window atomically, in
+/// order — the deterministic ingest path replay uses to reproduce a
+/// recorded batch composition independent of wall-clock timing.
+enum Msg {
+    One(InferenceRequest),
+    Group(Vec<InferenceRequest>),
+}
+
+/// Optional observation hooks threaded into every leader loop.
+#[derive(Clone, Default)]
+pub struct ServeHooks {
+    /// Capture each admitted batch (payloads + deterministic response
+    /// fields, in packing order) for later replay.
+    pub recorder: Option<CaptureRecorder>,
+    /// Collect each batch's simulated per-stage timelines (`--trace`).
+    pub tracer: Option<SimTracer>,
 }
 
 /// The response: final hidden state rows for this request.
@@ -154,8 +177,9 @@ impl Default for ServiceConfig {
 /// The serving front end. Cloneable across caller threads.
 #[derive(Clone)]
 pub struct Service {
-    tx: mpsc::Sender<InferenceRequest>,
+    tx: mpsc::Sender<Msg>,
     metrics: Arc<Mutex<ServeMetrics>>,
+    model: ModelConfig,
 }
 
 impl Service {
@@ -168,6 +192,18 @@ impl Service {
         hw: HardwareConfig,
         model_overlay: ModelConfig,
         cfg: ServiceConfig,
+    ) -> Result<Self> {
+        Self::start_with_hooks(artifact_dir, hw, model_overlay, cfg, ServeHooks::default())
+    }
+
+    /// [`start`][Self::start] with capture/trace hooks attached to every
+    /// leader.
+    pub fn start_with_hooks(
+        artifact_dir: std::path::PathBuf,
+        hw: HardwareConfig,
+        model_overlay: ModelConfig,
+        cfg: ServiceConfig,
+        hooks: ServeHooks,
     ) -> Result<Self> {
         if cfg.leaders == 0 {
             return Err(anyhow!("leaders must be >= 1"));
@@ -185,7 +221,7 @@ impl Service {
                 .map_err(|e| anyhow!("max_kernel_workers: {e}"))?,
             None => {}
         }
-        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        let (tx, rx) = mpsc::channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         // Size the per-leader lines up front so an idle leader shows as
         // an explicit zero row instead of silently missing — leader
@@ -205,6 +241,7 @@ impl Service {
             let metrics = metrics.clone();
             let ids = ids.clone();
             let ready_tx = ready_tx.clone();
+            let hooks = hooks.clone();
             std::thread::Builder::new()
                 .name(format!("cpsaa-leader-{leader}"))
                 .spawn(move || {
@@ -218,6 +255,7 @@ impl Service {
                         metrics,
                         ids,
                         ready_tx,
+                        hooks,
                     )
                 })
                 .context("spawning leader thread")?;
@@ -226,27 +264,68 @@ impl Service {
         // reporting in surfaces as a recv error instead of a hang.
         drop(ready_tx);
         // Wait for every engine to come up (or fail fast).
+        let mut resolved: Option<ModelConfig> = None;
         for _ in 0..cfg.leaders {
             match ready_rx.recv() {
-                Ok(Ok(_model)) => {}
+                Ok(Ok(model)) => {
+                    resolved.get_or_insert(model);
+                }
                 Ok(Err(e)) => return Err(e),
                 Err(_) => return Err(anyhow!("leader thread died during startup")),
             }
         }
-        Ok(Self { tx, metrics })
+        let model = resolved.expect("leaders >= 1, so at least one reported in");
+        Ok(Self { tx, metrics, model })
+    }
+
+    /// The resolved serving model — artifact shapes overlaid with the
+    /// caller's heads/layers/sharpness — as every leader loaded it.
+    pub fn model(&self) -> &ModelConfig {
+        &self.model
+    }
+
+    /// Submit a request without blocking; the returned receiver yields
+    /// the response once its batch completes.
+    pub fn submit(&self, id: u64, x: Matrix) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::One(InferenceRequest { id, x, reply }))
+            .map_err(|_| anyhow!("service stopped"))?;
+        Ok(rx)
+    }
+
+    /// Submit a pre-composed batch group: every member enters a single
+    /// batching window atomically, in order, regardless of wall-clock
+    /// timing or leader scheduling. This is how replay reproduces a
+    /// recorded batch composition — and with it the exact FP summation
+    /// order — deterministically.
+    pub fn submit_group(
+        &self,
+        reqs: Vec<(u64, Matrix)>,
+    ) -> Result<Vec<mpsc::Receiver<Result<InferenceResponse>>>> {
+        let mut rxs = Vec::with_capacity(reqs.len());
+        let mut group = Vec::with_capacity(reqs.len());
+        for (id, x) in reqs {
+            let (reply, rx) = mpsc::channel();
+            group.push(InferenceRequest { id, x, reply });
+            rxs.push(rx);
+        }
+        self.tx.send(Msg::Group(group)).map_err(|_| anyhow!("service stopped"))?;
+        Ok(rxs)
     }
 
     /// Submit a request and block until its response arrives.
     pub fn infer(&self, id: u64, x: Matrix) -> Result<InferenceResponse> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(InferenceRequest { id, x, reply })
-            .map_err(|_| anyhow!("service stopped"))?;
+        let rx = self.submit(id, x)?;
         rx.recv().map_err(|_| anyhow!("request {id} dropped"))?
     }
 
     pub fn metrics(&self) -> ServeMetrics {
-        self.metrics.lock().unwrap().clone()
+        // A leader that panicked while holding the metrics lock poisons
+        // it; the counters it was updating are monotonic aggregates, so
+        // reading them is still sound — don't let one dead leader take
+        // observability down with it.
+        self.metrics.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 }
 
@@ -257,10 +336,11 @@ fn leader_loop(
     hw: HardwareConfig,
     model_overlay: ModelConfig,
     cfg: ServiceConfig,
-    rx: Arc<Mutex<mpsc::Receiver<InferenceRequest>>>,
+    rx: Arc<Mutex<mpsc::Receiver<Msg>>>,
     metrics: Arc<Mutex<ServeMetrics>>,
     ids: BatchIds,
     ready: mpsc::Sender<Result<ModelConfig>>,
+    hooks: ServeHooks,
 ) {
     // Build everything that must live on this thread.
     let setup = (|| -> Result<(Engine, MultiHeadWeights, ModelConfig)> {
@@ -313,25 +393,44 @@ fn leader_loop(
         // leaders block here while this one drains, then take over the
         // channel the moment this leader moves on to execution.
         let window = {
-            let Ok(channel) = rx.lock() else { return };
+            // A leader that panicked while holding this lock poisons
+            // it, but the receiver inside stays sound — surviving
+            // leaders keep claiming windows instead of shutting the
+            // whole service down.
+            let channel = rx.lock().unwrap_or_else(|e| e.into_inner());
             let Ok(first) = channel.recv() else { return };
-            let mut window = vec![first];
-            let mut rows = window[0].x.rows();
-            let deadline = Instant::now() + cfg.max_wait;
-            while rows < model.seq_len {
-                let remaining = deadline.saturating_duration_since(Instant::now());
-                if remaining.is_zero() {
-                    break;
-                }
-                match channel.recv_timeout(remaining) {
-                    Ok(req) => {
-                        rows += req.x.rows();
-                        window.push(req);
+            match first {
+                // A pre-composed group seals its window immediately:
+                // its composition was decided by the sender (replay),
+                // not by arrival timing.
+                Msg::Group(group) => group,
+                Msg::One(first) => {
+                    let mut window = vec![first];
+                    let mut rows = window[0].x.rows();
+                    let deadline = Instant::now() + cfg.max_wait;
+                    while rows < model.seq_len {
+                        let remaining = deadline.saturating_duration_since(Instant::now());
+                        if remaining.is_zero() {
+                            break;
+                        }
+                        match channel.recv_timeout(remaining) {
+                            Ok(Msg::One(req)) => {
+                                rows += req.x.rows();
+                                window.push(req);
+                            }
+                            // A group arriving mid-window joins it
+                            // whole (members stay contiguous and in
+                            // order) and seals it.
+                            Ok(Msg::Group(group)) => {
+                                window.extend(group);
+                                break;
+                            }
+                            Err(_) => break,
+                        }
                     }
-                    Err(_) => break,
+                    window
                 }
             }
-            window
         };
 
         let mut replies = std::collections::HashMap::new();
@@ -348,8 +447,11 @@ fn leader_loop(
         }
 
         for plan in batcher.drain() {
-            match stack.forward(&plan.x) {
-                Ok(outs) => {
+            match stack.forward_traced(&plan.x) {
+                Ok((outs, traces)) => {
+                    if let Some(tracer) = &hooks.tracer {
+                        tracer.record(BatchTraceRecord { batch: plan.batch, leader, traces });
+                    }
                     let last = outs.last().expect("≥1 layer");
                     let sim_ns: f64 = outs.iter().map(|o| o.sim_ns).sum();
                     let sim_pj: f64 = outs.iter().map(|o| o.sim_pj).sum();
@@ -385,7 +487,10 @@ fn leader_loop(
                     // layer's partition (the batch's plan set).
                     let shard_rows = outs[0].shard_rows.clone();
                     let shard_nnz = outs[0].shard_nnz.clone();
-                    let mut m = metrics.lock().unwrap();
+                    // Poison recovery mirrors `Service::metrics`: the
+                    // aggregates stay sound, so a dead leader must not
+                    // kill the survivors' recording path.
+                    let mut m = metrics.lock().unwrap_or_else(|e| e.into_inner());
                     m.batches += 1;
                     m.used_rows += plan.used_rows as u64;
                     m.padded_rows += (model.seq_len - plan.used_rows) as u64;
@@ -396,11 +501,32 @@ fn leader_loop(
                         m.record_shards(plan.batch, &shard_rows, &shard_nnz, &shard_ns, &shard_pj);
                     }
                     m.record_leader(leader, plan.entries.len() as u64, sim_ns);
+                    let mut captured: Vec<RecordedRequest> = Vec::new();
                     for entry in &plan.entries {
                         let hidden = plan.extract(&last.hidden, entry);
                         let latency = arrival.elapsed();
                         m.requests += 1;
                         m.latency.record(latency);
+                        if hooks.recorder.is_some() {
+                            captured.push(RecordedRequest {
+                                id: entry.id,
+                                // The request's payload rows, sliced
+                                // back out of the packed batch bitwise.
+                                x: plan.extract(&plan.x, entry),
+                                response: RecordedResponse {
+                                    hidden: hidden.clone(),
+                                    mask_density: density,
+                                    sim_ns,
+                                    sim_pj,
+                                    head_sim_ns: head_ns.clone(),
+                                    head_sim_pj: head_pj.clone(),
+                                    head_density: head_density.clone(),
+                                    shard_sim_ns: shard_ns.clone(),
+                                    shard_sim_pj: shard_pj.clone(),
+                                    shard_rows: shard_rows.clone(),
+                                },
+                            });
+                        }
                         if let Some(reply) = replies.remove(&entry.id) {
                             let _ = reply.send(Ok(InferenceResponse {
                                 id: entry.id,
@@ -418,6 +544,12 @@ fn leader_loop(
                                 leader,
                                 precision: cfg.precision,
                             }));
+                        }
+                    }
+                    drop(m);
+                    if let Some(recorder) = &hooks.recorder {
+                        if !captured.is_empty() {
+                            recorder.record(RecordedBatch { batch: plan.batch, requests: captured });
                         }
                     }
                 }
@@ -628,6 +760,65 @@ mod tests {
         assert_eq!(resp.hidden.shape(), (16, 32));
         assert!(resp.hidden.all_finite());
         assert!(resp.sim_ns > 0.0 && resp.sim_pj > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn synth_service(tag: &str, seed: u64, cfg: ServiceConfig) -> (PathBuf, Service) {
+        let dir = std::env::temp_dir().join(format!("cpsaa-svc-{tag}-{}", std::process::id()));
+        let model = crate::config::ModelConfig {
+            seq_len: 16,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            ..crate::config::ModelConfig::default()
+        };
+        crate::runtime::ArtifactSet::synthesize(&dir, &model, seed).unwrap();
+        let svc = Service::start(dir.clone(), HardwareConfig::paper(), model, cfg).unwrap();
+        (dir, svc)
+    }
+
+    #[test]
+    fn group_submission_seals_one_window() {
+        let (dir, svc) = synth_service(
+            "group",
+            21,
+            ServiceConfig { layers: 1, max_wait: Duration::from_millis(0), ..Default::default() },
+        );
+        assert_eq!(svc.model().seq_len, 16);
+        let mut rng = SeededRng::new(9);
+        let reqs: Vec<(u64, Matrix)> =
+            (0..2).map(|id| (id, rng.normal_matrix(8, 32, 1.0))).collect();
+        let rxs = svc.submit_group(reqs).unwrap();
+        let resps: Vec<InferenceResponse> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        assert_eq!(resps[0].id, 0);
+        assert_eq!(resps[1].id, 1);
+        // Both members were co-batched despite a zero batching window —
+        // the group arrived atomically.
+        let m = svc.metrics();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.batches, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metrics_survive_a_poisoned_lock() {
+        let (dir, svc) = synth_service("poison", 23, ServiceConfig { layers: 1, ..Default::default() });
+        // A thread dying while holding the metrics lock poisons it...
+        let m = svc.metrics.clone();
+        let died = std::thread::spawn(move || {
+            let _guard = m.lock().unwrap();
+            panic!("die holding the metrics lock");
+        })
+        .join();
+        assert!(died.is_err());
+        // ...but serving continues: the leader records through the
+        // poisoned lock and the front end still reads it.
+        let x = SeededRng::new(4).normal_matrix(8, 32, 1.0);
+        let resp = svc.infer(5, x).unwrap();
+        assert_eq!(resp.id, 5);
+        let m = svc.metrics();
+        assert_eq!(m.requests, 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

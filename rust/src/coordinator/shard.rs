@@ -12,7 +12,7 @@
 //! side: simulate each shard's chip, merge max-ns / sum-pJ across
 //! chips, and attribute per-shard and per-head lines back to one batch.
 
-use crate::sim::ChipSim;
+use crate::sim::{ChipSim, SimTrace};
 use crate::sparse::{PlanSet, ShardedPlans};
 
 /// One shard's cost line for a served batch.
@@ -44,6 +44,9 @@ pub struct ShardedBatchCost {
     pub head_ns: Vec<f64>,
     /// Per-head energy across shards (pJ), head order.
     pub head_pj: Vec<f64>,
+    /// One stage timeline per (shard, head) chip slice — the `--trace`
+    /// payload of a sharded batch.
+    pub traces: Vec<SimTrace>,
 }
 
 /// Simulate each shard of a prebuilt partition (normally the one the
@@ -72,6 +75,7 @@ pub fn attribute(sim: &ChipSim, sharded: &ShardedPlans) -> ShardedBatchCost {
         sim_pj: report.energy_pj,
         head_ns: (0..heads).map(|h| report.head_ns(h)).collect(),
         head_pj: (0..heads).map(|h| report.head_pj(h)).collect(),
+        traces: report.traces(),
     }
 }
 

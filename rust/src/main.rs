@@ -18,11 +18,12 @@ use cpsaa::{anyhow, bail};
 use cpsaa::attention::{Precision, Weights};
 use cpsaa::bench_harness;
 use cpsaa::config::{ModelConfig, SystemConfig};
-use cpsaa::coordinator::{Service, ServiceConfig};
+use cpsaa::coordinator::{ServeHooks, Service, ServiceConfig};
 use cpsaa::runtime::{ArtifactSet, Engine};
 use cpsaa::sim::area::AreaModel;
 use cpsaa::sim::ChipSim;
 use cpsaa::tensor::SeededRng;
+use cpsaa::workload::capture::{Capture, CaptureConfig, CaptureRecorder, ReplayOverrides, SimTracer};
 use cpsaa::workload::TraceGenerator;
 
 const USAGE: &str = "\
@@ -38,6 +39,7 @@ COMMANDS:
                                     (fig3, table2, fig11..fig18, fig19a/b, fig20a/b, all)
   serve [--requests N] [--layers N] [--heads N] [--shards N] [--leaders N]
         [--max-workers N] [--precision f32|i8] [--force-scalar]
+        [--record FILE] [--trace FILE]
                                     demo serving loop over the artifact engine
                                     (multi-head fan-out across tile slices;
                                     --shards N fans each batch across N logical
@@ -48,7 +50,19 @@ COMMANDS:
                                     dots to i8 storage / i32 accumulation;
                                     --force-scalar pins the scalar twins of
                                     the SIMD row primitives, like the
-                                    CPSAA_FORCE_SCALAR env var)
+                                    CPSAA_FORCE_SCALAR env var;
+                                    --record FILE captures every admitted batch
+                                    + the full serving config for `replay`;
+                                    --trace FILE dumps per-batch simulated
+                                    stage timelines as JSON)
+  replay FILE [--max-workers N] [--leaders N] [--shards N] [--trace FILE]
+                                    re-serve a `serve --record` capture and
+                                    assert byte-identical responses; topology
+                                    overrides exercise the determinism
+                                    contract (outputs must not change by a
+                                    bit at any worker/leader/shard count)
+  synth-artifacts DIR [--seed N]    synthesize a serving artifact set from the
+                                    [model] config (no Python/JAX needed)
   inference [DATASET] [--layers N] [--heads N]
                                     application-level sim: encoders = attention
                                     + FC (+ DTC hops) + endurance estimate
@@ -175,6 +189,8 @@ fn main() -> Result<()> {
                 None => Precision::F32,
             };
             let force_scalar = take_switch(&mut cmd, "--force-scalar");
+            let record = take_flag(&mut cmd, "--record").map(PathBuf::from);
+            let trace = take_flag(&mut cmd, "--trace").map(PathBuf::from);
             serve(
                 &cfg,
                 &args.artifacts,
@@ -186,7 +202,35 @@ fn main() -> Result<()> {
                 max_workers,
                 precision,
                 force_scalar,
+                record,
+                trace,
             )
+        }
+        "replay" => {
+            let overrides = ReplayOverrides {
+                max_workers: take_flag(&mut cmd, "--max-workers")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()?,
+                leaders: take_flag(&mut cmd, "--leaders")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()?,
+                shards: take_flag(&mut cmd, "--shards")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()?,
+            };
+            let trace = take_flag(&mut cmd, "--trace").map(PathBuf::from);
+            let capture =
+                cmd.first().cloned().ok_or_else(|| anyhow!("replay needs a capture file"))?;
+            replay_cmd(&args.artifacts, &PathBuf::from(capture), overrides, trace)
+        }
+        "synth-artifacts" => {
+            let seed = take_flag(&mut cmd, "--seed")
+                .map(|s| s.parse::<u64>())
+                .transpose()?
+                .unwrap_or(0);
+            let dir =
+                cmd.first().cloned().ok_or_else(|| anyhow!("synth-artifacts needs a directory"))?;
+            synth_artifacts(&cfg, &PathBuf::from(dir), seed)
         }
         "inference" => {
             let layers = take_flag(&mut cmd, "--layers")
@@ -323,14 +367,19 @@ fn serve(
     max_workers: Option<usize>,
     precision: Precision,
     force_scalar: bool,
+    record: Option<PathBuf>,
+    trace: Option<PathBuf>,
 ) -> Result<()> {
     // Probe the manifest for the artifact shapes before spawning.
     let set = ArtifactSet::open(artifacts)?;
     let d_model = set.manifest.config.d_model;
     let seq_len = set.manifest.config.seq_len;
+    let artifact_seed = set.manifest.config.seed;
     drop(set);
 
-    let svc = Service::start(
+    let recorder = record.as_ref().map(|_| CaptureRecorder::new());
+    let tracer = trace.as_ref().map(|_| SimTracer::new());
+    let svc = Service::start_with_hooks(
         artifacts.to_path_buf(),
         cfg.hardware.clone(),
         ModelConfig { heads, ..cfg.model.clone() },
@@ -343,6 +392,7 @@ fn serve(
             force_scalar,
             ..Default::default()
         },
+        ServeHooks { recorder: recorder.clone(), tracer: tracer.clone() },
     )?;
     println!(
         "service up (artifact shape {seq_len}x{d_model}, {layers} layers, {heads} heads, {shards} shards, {leaders} leaders, {precision} precision{})",
@@ -431,6 +481,85 @@ fn serve(
             );
         }
     }
+    if let Some(path) = &record {
+        let recorder = recorder.expect("recorder exists when --record is set");
+        let capture = recorder.into_capture(CaptureConfig {
+            model: svc.model().clone(),
+            layers,
+            shards,
+            leaders,
+            max_kernel_workers: max_workers,
+            precision,
+            force_scalar,
+            artifact_seed,
+            system_toml: cfg.to_toml_string(),
+        });
+        capture.save(path)?;
+        println!(
+            "recorded {} batches / {} requests to {}",
+            capture.batches.len(),
+            capture.requests(),
+            path.display()
+        );
+    }
+    if let Some(path) = &trace {
+        let tracer = tracer.expect("tracer exists when --trace is set");
+        tracer.save(path)?;
+        println!("wrote {} batch timelines to {}", tracer.batches_recorded(), path.display());
+    }
+    Ok(())
+}
+
+/// Re-serve a capture and hold it to the bit-identity contract; exits
+/// nonzero on the first diverging response field (or a corrupt file).
+fn replay_cmd(
+    artifacts: &Path,
+    capture_path: &Path,
+    overrides: ReplayOverrides,
+    trace: Option<PathBuf>,
+) -> Result<()> {
+    let capture = Capture::load(capture_path)?;
+    println!(
+        "capture: {} batches / {} requests, recorded at {} leaders x {} shards ({} precision)",
+        capture.batches.len(),
+        capture.requests(),
+        capture.config.leaders,
+        capture.config.shards,
+        capture.config.precision
+    );
+    let tracer = trace.as_ref().map(|_| SimTracer::new());
+    let report = cpsaa::workload::capture::replay(&capture, artifacts, overrides, tracer.clone())?;
+    if let Some(path) = &trace {
+        let tracer = tracer.expect("tracer exists when --trace is set");
+        tracer.save(path)?;
+        println!("wrote {} batch timelines to {}", tracer.batches_recorded(), path.display());
+    }
+    println!(
+        "replay OK: {} batches / {} requests bit-identical at {} leaders x {} shards ({})",
+        report.batches,
+        report.requests,
+        report.leaders,
+        report.shards,
+        if report.strict_sim {
+            "sim costs compared"
+        } else {
+            "sim costs skipped: shard topology changed"
+        }
+    );
+    Ok(())
+}
+
+/// Synthesize a serving artifact set from the `[model]` config — the
+/// CI/offline path to a servable directory without Python or JAX.
+fn synth_artifacts(cfg: &SystemConfig, dir: &Path, seed: u64) -> Result<()> {
+    let set = ArtifactSet::synthesize(dir, &cfg.model, seed)?;
+    println!(
+        "synthesized artifacts: {}x{} ({} heads, seed {seed}) in {}",
+        cfg.model.seq_len,
+        cfg.model.d_model,
+        cfg.model.heads,
+        set.dir.display()
+    );
     Ok(())
 }
 

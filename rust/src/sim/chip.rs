@@ -6,7 +6,7 @@ use crate::sparse::{DispatchPlan, MaskMatrix, PlanSet, ShardedPlans};
 use crate::workload::WorkloadTrace;
 
 use super::area::AreaModel;
-use super::pipeline::{self, Mode, PhaseBreakdown, PipelineReport};
+use super::pipeline::{self, Mode, PhaseBreakdown, PipelineReport, StageEvent};
 
 /// One batch's simulation outcome.
 #[derive(Clone, Debug)]
@@ -18,6 +18,20 @@ pub struct SimReport {
     pub gops: f64,
     /// Energy efficiency (GOPS/W) using dynamic energy + static power.
     pub gops_per_watt: f64,
+    /// The Step 1–4 stage timeline behind the breakdown, start order.
+    pub events: Vec<StageEvent>,
+}
+
+/// One labeled stage timeline of a simulated batch: the events of one
+/// head's chip slice (and, under sharding, of one (shard, head) chip
+/// slice). The `--trace` dump is a list of these per batch.
+#[derive(Clone, Debug)]
+pub struct SimTrace {
+    /// Head index the timeline belongs to.
+    pub head: usize,
+    /// Shard (logical chip) index; `None` under unsharded serving.
+    pub shard: Option<usize>,
+    pub events: Vec<StageEvent>,
 }
 
 /// Multi-head cost attribution of one batch over a shared [`PlanSet`]
@@ -50,6 +64,28 @@ pub struct ShardedSimReport {
     pub energy_pj: f64,
 }
 
+impl HeadsSimReport {
+    /// Latency of the quickest head slice (ns). A plain `f64::min` fold
+    /// over an empty head list would return `f64::INFINITY` and poison
+    /// any metric line it lands in; the degenerate case reports 0.0,
+    /// matching the zeroed report [`aggregate_heads`] builds for it.
+    pub fn fastest_head_ns(&self) -> f64 {
+        if self.heads.is_empty() {
+            return 0.0;
+        }
+        self.heads.iter().map(|h| h.breakdown.total_ns).fold(f64::INFINITY, f64::min)
+    }
+
+    /// One labeled stage timeline per head, head order.
+    pub fn traces(&self) -> Vec<SimTrace> {
+        self.heads
+            .iter()
+            .enumerate()
+            .map(|(h, r)| SimTrace { head: h, shard: None, events: r.events.clone() })
+            .collect()
+    }
+}
+
 impl ShardedSimReport {
     /// Head `h`'s latency across the batch: max over shards (chips run
     /// concurrently, each hosting its slice of head `h`).
@@ -61,14 +97,35 @@ impl ShardedSimReport {
     pub fn head_pj(&self, h: usize) -> f64 {
         self.shards.iter().map(|s| s.heads[h].energy_pj).sum()
     }
+
+    /// One labeled stage timeline per (shard, head) chip slice.
+    pub fn traces(&self) -> Vec<SimTrace> {
+        let mut out = Vec::new();
+        for (s, shard) in self.shards.iter().enumerate() {
+            for (h, r) in shard.heads.iter().enumerate() {
+                out.push(SimTrace { head: h, shard: Some(s), events: r.events.clone() });
+            }
+        }
+        out
+    }
 }
 
 /// Fold per-head slice reports into the batch view: max-ns, sum-pJ.
+/// An empty head list (a degenerate plan set) folds to an explicitly
+/// zeroed report — never `INFINITY`/`NaN` from empty min/mean folds.
 fn aggregate_heads(reports: Vec<SimReport>) -> HeadsSimReport {
+    if reports.is_empty() {
+        return HeadsSimReport {
+            heads: Vec::new(),
+            total_ns: 0.0,
+            energy_pj: 0.0,
+            mean_density: 0.0,
+        };
+    }
     let total_ns = reports.iter().map(|r| r.breakdown.total_ns).fold(0.0, f64::max);
     let energy_pj: f64 = reports.iter().map(|r| r.energy_pj).sum();
     let mean_density =
-        reports.iter().map(|r| r.mask_density).sum::<f64>() / reports.len().max(1) as f64;
+        reports.iter().map(|r| r.mask_density).sum::<f64>() / reports.len() as f64;
     HeadsSimReport { heads: reports, total_ns, energy_pj, mean_density }
 }
 
@@ -215,6 +272,7 @@ impl ChipSim {
             mask_density: r.mask_density,
             gops,
             gops_per_watt: gops / watts.max(1e-9),
+            events: r.events,
         }
     }
 
@@ -309,8 +367,48 @@ mod tests {
         assert_eq!(r.total_ns, max_ns, "wall time is the slowest head");
         assert!((r.energy_pj - sum_pj).abs() < 1e-6, "energy sums over heads");
         // distinct densities ⇒ per-head costs genuinely differ
-        let fastest = r.heads.iter().map(|h| h.breakdown.total_ns).fold(f64::INFINITY, f64::min);
+        let fastest = r.fastest_head_ns();
+        assert!(fastest.is_finite() && fastest > 0.0);
         assert!(max_ns > fastest, "heads with different masks cost differently");
+    }
+
+    #[test]
+    fn empty_head_list_folds_to_zeroed_report() {
+        // Degenerate plan set: the report must come back zeroed and
+        // finite, not poisoned by empty-fold identities (min → +inf,
+        // mean → NaN) leaking into metric lines.
+        let r = aggregate_heads(Vec::new());
+        assert!(r.heads.is_empty());
+        assert_eq!(r.total_ns, 0.0);
+        assert_eq!(r.energy_pj, 0.0);
+        assert_eq!(r.mean_density, 0.0);
+        assert_eq!(r.fastest_head_ns(), 0.0);
+        assert!(
+            r.total_ns.is_finite() && r.mean_density.is_finite() && r.fastest_head_ns().is_finite()
+        );
+        assert!(r.traces().is_empty());
+    }
+
+    #[test]
+    fn sim_reports_carry_stage_events() {
+        let r = sim().simulate_batch(&mask(0.1));
+        assert!(!r.events.is_empty());
+        assert_eq!(r.events.last().unwrap().end_ns, r.breakdown.total_ns);
+        // Head fan-out: one timeline per head, labeled in head order.
+        let plans = PlanSet::from_plans(vec![mask(0.1).plan(); 3]);
+        let hs = sim().simulate_heads_planned(&plans);
+        let traces = hs.traces();
+        assert_eq!(traces.len(), 3);
+        for (h, t) in traces.iter().enumerate() {
+            assert_eq!(t.head, h);
+            assert_eq!(t.shard, None);
+            assert!(!t.events.is_empty());
+        }
+        // Sharded fan-out: one timeline per (shard, head).
+        let sharded = sim().simulate_sharded(&plans.shard(2));
+        let st = sharded.traces();
+        assert_eq!(st.len(), sharded.shards.len() * 3);
+        assert!(st.iter().all(|t| t.shard.is_some()));
     }
 
     #[test]

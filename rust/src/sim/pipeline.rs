@@ -57,12 +57,31 @@ pub struct PhaseBreakdown {
     pub peak_parallel_arrays: u64,
 }
 
+/// One named interval on the Step 1–4 timeline of a simulated batch.
+/// Events carry absolute timestamps (ns from batch arrival), so a dump
+/// of them reconstructs the Fig. 7 overlap structure — which stages ran
+/// concurrently, where the critical path sat — without re-deriving the
+/// scheduling from the phase totals.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StageEvent {
+    /// Stable stage name (`transfer_in`, `prune`, `step2_vmm`,
+    /// `write_xt`, `step3_sddmm`, `write_v`, `softmax`, `step4_spmm`,
+    /// `transfer_out`).
+    pub stage: &'static str,
+    /// Start of the interval (ns since the batch hit the input buffer).
+    pub start_ns: f64,
+    /// End of the interval (ns).
+    pub end_ns: f64,
+}
+
 /// Full pipeline result for one batch.
 #[derive(Clone, Debug)]
 pub struct PipelineReport {
     pub breakdown: PhaseBreakdown,
     pub energy: EnergyMeter,
     pub mask_density: f64,
+    /// The stage timeline behind the breakdown, in start order.
+    pub events: Vec<StageEvent>,
 }
 
 /// Simulate one batch through the Step 1–4 pipeline. Builds the
@@ -236,6 +255,25 @@ pub fn simulate_batch_planned_prec(
         (sd.schedule_ns - sd.compute_ns).max(0.0) + (sp_schedule_ns - sp_compute_ns).max(0.0)
     };
 
+    // The absolute timeline the numbers above were derived from, for
+    // `--trace` dumps: every interval at its scheduled start/end, so
+    // overlaps (Step1 ∥ Step2, writes behind compute) stay visible.
+    let mut events = vec![StageEvent { stage: "transfer_in", start_ns: 0.0, end_ns: t0 }];
+    if mode == Mode::Sparse {
+        events.push(StageEvent { stage: "prune", start_ns: t0, end_ns: prune_end });
+    }
+    events.push(StageEvent { stage: "step2_vmm", start_ns: t0, end_ns: t0 + step2_compute });
+    events.push(StageEvent { stage: "write_xt", start_ns: t0, end_ns: t0 + xt_write });
+    events.push(StageEvent { stage: "step3_sddmm", start_ns: step3_start, end_ns: step3_end });
+    events.push(StageEvent { stage: "write_v", start_ns: step2_end, end_ns: v_write_end });
+    events.push(StageEvent {
+        stage: "softmax",
+        start_ns: step3_end,
+        end_ns: step3_end + softmax_ns,
+    });
+    events.push(StageEvent { stage: "step4_spmm", start_ns: step4_start, end_ns: step4_end });
+    events.push(StageEvent { stage: "transfer_out", start_ns: step4_end, end_ns: total_ns });
+
     PipelineReport {
         breakdown: PhaseBreakdown {
             prune_ns: prune_end - t0,
@@ -251,6 +289,7 @@ pub fn simulate_batch_planned_prec(
         },
         energy,
         mask_density: plan.density(),
+        events,
     }
 }
 
@@ -375,6 +414,37 @@ mod tests {
         let f2 = simulate_batch_prec(&hw, &model, &mask, Mode::Sparse, Precision::F32);
         assert_eq!(f.breakdown.total_ns, f2.breakdown.total_ns);
         assert_eq!(f.energy.total_pj(), f2.energy.total_pj());
+    }
+
+    #[test]
+    fn stage_events_cover_the_breakdown_timeline() {
+        let (hw, model, mask) = setup(0.1);
+        for mode in [Mode::Sparse, Mode::Dense] {
+            let r = simulate_batch(&hw, &model, &mask, mode);
+            assert!(!r.events.is_empty());
+            // Well-formed intervals inside the batch window.
+            for e in &r.events {
+                assert!(e.end_ns >= e.start_ns, "{}: inverted interval", e.stage);
+                assert!(e.start_ns >= 0.0 && e.end_ns <= r.breakdown.total_ns + 1e-9);
+            }
+            // The dense timeline carries no prune stage; sparse does.
+            let has_prune = r.events.iter().any(|e| e.stage == "prune");
+            assert_eq!(has_prune, mode == Mode::Sparse);
+            // Anchors: the timeline starts at transfer-in and its last
+            // event ends exactly at the batch total.
+            assert_eq!(r.events[0].stage, "transfer_in");
+            assert_eq!(r.events[0].start_ns, 0.0);
+            let last = r.events.last().unwrap();
+            assert_eq!(last.stage, "transfer_out");
+            assert_eq!(last.end_ns, r.breakdown.total_ns);
+            // Stage totals agree with the breakdown the figures use.
+            let ev = |s: &str| {
+                r.events.iter().find(|e| e.stage == s).map(|e| e.end_ns - e.start_ns)
+            };
+            assert_eq!(ev("step3_sddmm"), Some(r.breakdown.step3_ns));
+            assert_eq!(ev("softmax"), Some(r.breakdown.softmax_ns));
+            assert_eq!(ev("step4_spmm"), Some(r.breakdown.step4_ns));
+        }
     }
 
     #[test]

@@ -1,0 +1,813 @@
+//! Deterministic capture/replay for the serving path.
+//!
+//! `serve --record` snapshots a live request stream — every admitted
+//! request's payload, its batch composition, and the full serving
+//! configuration — into a self-describing JSON capture file; `cpsaa
+//! replay` re-serves that capture through a fresh [`Service`] and
+//! asserts byte-identical [`InferenceResponse`]s. Because PRs 3–6
+//! established that functional outputs are bit-identical at any worker
+//! count, leader count, shard count, and under the forced-scalar lane
+//! twins, a capture recorded under one `{workers, leaders, shards}`
+//! topology must replay cleanly under any other — replay *is* the
+//! determinism contract, executable against real traffic instead of
+//! hand-written property grids.
+//!
+//! ## What gets recorded
+//!
+//! Responses depend on the whole packed batch (cross-request attention
+//! through the batch mask, row-packing order), so the capture records
+//! **batch groups**: which requests were packed together and in what
+//! order. Replay submits each group atomically through
+//! [`Service::submit_group`], which seals one batching window per group
+//! — reproducing the recorded composition exactly, independent of
+//! wall-clock timing.
+//!
+//! ## Bit-exact payloads
+//!
+//! f32 matrix payloads are serialized as `u32` bit patterns (integers,
+//! exact in f64 well below 2^53), so round-trips are bit-exact and
+//! non-finite values survive; f64 scalars rely on Rust's
+//! shortest-round-trip float formatting, which the in-tree JSON parser
+//! reads back to the identical bits.
+//!
+//! ## Comparison contract
+//!
+//! Always compared bit-exactly: `hidden`, `mask_density`,
+//! `head_density`, `precision`, response ids. The simulated-cost fields
+//! (`sim_ns`/`sim_pj`, per-head and per-shard lines) are a function of
+//! the shard topology, so they are compared bit-exactly only when the
+//! replay runs at the recorded shard count and skipped otherwise.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::{anyhow, bail};
+
+use crate::attention::Precision;
+use crate::config::{ModelConfig, SystemConfig};
+use crate::coordinator::{InferenceResponse, ServeHooks, Service, ServiceConfig};
+use crate::sim::SimTrace;
+use crate::tensor::Matrix;
+
+/// Format marker of the capture file (`"format"` key).
+pub const FORMAT: &str = "cpsaa-capture";
+/// Capture schema version this build reads and writes.
+pub const VERSION: u64 = 1;
+/// Format marker of the `--trace` dump.
+pub const TRACE_FORMAT: &str = "cpsaa-sim-trace";
+
+/// The serving configuration a capture was recorded under — enough to
+/// rebuild an equivalent [`Service`] without the original command line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CaptureConfig {
+    /// The resolved serving model (artifact shapes + serving overlay),
+    /// as the leaders loaded it.
+    pub model: ModelConfig,
+    /// Encoder layers per request.
+    pub layers: usize,
+    /// Logical chips each batch fanned across at record time.
+    pub shards: usize,
+    /// Leader threads at record time.
+    pub leaders: usize,
+    /// Explicit kernel-pool width, if one was set.
+    pub max_kernel_workers: Option<usize>,
+    /// Kernel arithmetic mode (recorded and honored at replay —
+    /// precision changes values, so it is part of the contract, not an
+    /// override axis).
+    pub precision: Precision,
+    /// Whether the scalar lane twins were forced.
+    pub force_scalar: bool,
+    /// Seed of the artifact set served against (replay refuses to run
+    /// against different artifacts).
+    pub artifact_seed: u64,
+    /// Full system TOML of the recording run (hardware knobs drive the
+    /// simulated-cost fields).
+    pub system_toml: String,
+}
+
+/// The response fields replay asserts on (everything deterministic in
+/// [`InferenceResponse`] — wall-clock latency is excluded).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecordedResponse {
+    pub hidden: Matrix,
+    pub mask_density: f64,
+    pub sim_ns: f64,
+    pub sim_pj: f64,
+    pub head_sim_ns: Vec<f64>,
+    pub head_sim_pj: Vec<f64>,
+    pub head_density: Vec<f64>,
+    pub shard_sim_ns: Vec<f64>,
+    pub shard_sim_pj: Vec<f64>,
+    pub shard_rows: Vec<usize>,
+}
+
+/// One admitted request: payload in packing order plus the response it
+/// received at record time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecordedRequest {
+    pub id: u64,
+    pub x: Matrix,
+    pub response: RecordedResponse,
+}
+
+/// One packed batch: its monotonic id and its requests in packing
+/// (offset) order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecordedBatch {
+    pub batch: u64,
+    pub requests: Vec<RecordedRequest>,
+}
+
+/// A full serving capture: config block plus the batch-grouped request
+/// stream, batch-id order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Capture {
+    pub config: CaptureConfig,
+    pub batches: Vec<RecordedBatch>,
+}
+
+impl Capture {
+    /// Total requests across all recorded batches.
+    pub fn requests(&self) -> usize {
+        self.batches.iter().map(|b| b.requests.len()).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let c = &self.config;
+        let batches: Vec<Json> = self
+            .batches
+            .iter()
+            .map(|b| {
+                let requests: Vec<Json> = b
+                    .requests
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("id", num(r.id as f64)),
+                            ("x", matrix_to_json(&r.x)),
+                            ("response", response_to_json(&r.response)),
+                        ])
+                    })
+                    .collect();
+                obj(vec![("batch", num(b.batch as f64)), ("requests", Json::Arr(requests))])
+            })
+            .collect();
+        obj(vec![
+            ("format", Json::Str(FORMAT.into())),
+            ("version", num(VERSION as f64)),
+            (
+                "config",
+                obj(vec![
+                    ("model", model_to_json(&c.model)),
+                    ("layers", num(c.layers as f64)),
+                    ("shards", num(c.shards as f64)),
+                    ("leaders", num(c.leaders as f64)),
+                    (
+                        "max_kernel_workers",
+                        match c.max_kernel_workers {
+                            Some(n) => num(n as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("precision", Json::Str(c.precision.to_string())),
+                    ("force_scalar", Json::Bool(c.force_scalar)),
+                    ("artifact_seed", num(c.artifact_seed as f64)),
+                    ("system_toml", Json::Str(c.system_toml.clone())),
+                ]),
+            ),
+            ("batches", Json::Arr(batches)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Capture> {
+        let format = j.get("format")?.as_str()?;
+        if format != FORMAT {
+            bail!("not a capture file (format {format:?}, expected {FORMAT:?})");
+        }
+        let version = j.get("version")?.as_usize()? as u64;
+        if version != VERSION {
+            bail!("unsupported capture version {version} (this build reads version {VERSION})");
+        }
+        let c = j.get("config")?;
+        let mkw = match c.get("max_kernel_workers")? {
+            Json::Null => None,
+            v => Some(v.as_usize()?),
+        };
+        let config = CaptureConfig {
+            model: model_from_json(c.get("model")?)?,
+            layers: c.get("layers")?.as_usize()?,
+            shards: c.get("shards")?.as_usize()?,
+            leaders: c.get("leaders")?.as_usize()?,
+            max_kernel_workers: mkw,
+            precision: c
+                .get("precision")?
+                .as_str()?
+                .parse::<Precision>()
+                .map_err(|e| anyhow!("capture precision: {e}"))?,
+            force_scalar: match c.get("force_scalar")? {
+                Json::Bool(b) => *b,
+                other => bail!("force_scalar must be a bool, got {other:?}"),
+            },
+            artifact_seed: c.get("artifact_seed")?.as_usize()? as u64,
+            system_toml: c.get("system_toml")?.as_str()?.to_string(),
+        };
+        let mut batches = Vec::new();
+        for b in j.get("batches")?.as_arr()? {
+            let mut requests = Vec::new();
+            for r in b.get("requests")?.as_arr()? {
+                requests.push(RecordedRequest {
+                    id: r.get("id")?.as_usize()? as u64,
+                    x: matrix_from_json(r.get("x")?)?,
+                    response: response_from_json(r.get("response")?)?,
+                });
+            }
+            batches.push(RecordedBatch { batch: b.get("batch")?.as_usize()? as u64, requests });
+        }
+        Ok(Capture { config, batches })
+    }
+
+    /// Parse a capture file's text; any structural defect (bad JSON,
+    /// wrong format marker, unknown version, malformed payload) is a
+    /// hard error — a corrupted capture must never half-replay.
+    pub fn parse(text: &str) -> Result<Capture> {
+        let j = Json::parse(text).context("parsing capture file")?;
+        Self::from_json(&j)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing capture {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Capture> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading capture {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("loading capture {}", path.display()))
+    }
+}
+
+/// Shared recording sink the leader loops push admitted batches into
+/// (cloneable handle, poison-recovering lock).
+#[derive(Clone, Default)]
+pub struct CaptureRecorder {
+    batches: Arc<Mutex<Vec<RecordedBatch>>>,
+}
+
+impl CaptureRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, batch: RecordedBatch) {
+        self.batches.lock().unwrap_or_else(|e| e.into_inner()).push(batch);
+    }
+
+    pub fn batches_recorded(&self) -> usize {
+        self.batches.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Seal the recording into a capture: batches sorted by their
+    /// monotonic id, so multi-leader interleavings serialize into one
+    /// canonical stream.
+    pub fn into_capture(self, config: CaptureConfig) -> Capture {
+        let mut batches =
+            std::mem::take(&mut *self.batches.lock().unwrap_or_else(|e| e.into_inner()));
+        batches.sort_by_key(|b| b.batch);
+        Capture { config, batches }
+    }
+}
+
+/// One batch's simulated stage timelines, as recorded by a leader.
+#[derive(Clone, Debug)]
+pub struct BatchTraceRecord {
+    pub batch: u64,
+    pub leader: usize,
+    pub traces: Vec<SimTrace>,
+}
+
+/// Shared sink for per-batch sim stage timelines (the `--trace` dump).
+#[derive(Clone, Default)]
+pub struct SimTracer {
+    batches: Arc<Mutex<Vec<BatchTraceRecord>>>,
+}
+
+impl SimTracer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, rec: BatchTraceRecord) {
+        self.batches.lock().unwrap_or_else(|e| e.into_inner()).push(rec);
+    }
+
+    pub fn batches_recorded(&self) -> usize {
+        self.batches.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Serialize all recorded timelines, batch-id order.
+    pub fn to_json(&self) -> Json {
+        let mut recs = self.batches.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        recs.sort_by_key(|r| r.batch);
+        let batches: Vec<Json> = recs
+            .iter()
+            .map(|r| {
+                let timelines: Vec<Json> = r
+                    .traces
+                    .iter()
+                    .map(|t| {
+                        let events: Vec<Json> = t
+                            .events
+                            .iter()
+                            .map(|e| {
+                                obj(vec![
+                                    ("stage", Json::Str(e.stage.to_string())),
+                                    ("start_ns", num(e.start_ns)),
+                                    ("end_ns", num(e.end_ns)),
+                                ])
+                            })
+                            .collect();
+                        obj(vec![
+                            ("head", num(t.head as f64)),
+                            (
+                                "shard",
+                                match t.shard {
+                                    Some(s) => num(s as f64),
+                                    None => Json::Null,
+                                },
+                            ),
+                            ("events", Json::Arr(events)),
+                        ])
+                    })
+                    .collect();
+                obj(vec![
+                    ("batch", num(r.batch as f64)),
+                    ("leader", num(r.leader as f64)),
+                    ("timelines", Json::Arr(timelines)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("format", Json::Str(TRACE_FORMAT.into())),
+            ("version", num(VERSION as f64)),
+            ("batches", Json::Arr(batches)),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+}
+
+/// Topology overrides for a replay run. Axes the determinism contract
+/// guarantees are value-invariant; `None` keeps the recorded setting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplayOverrides {
+    pub max_workers: Option<usize>,
+    pub leaders: Option<usize>,
+    pub shards: Option<usize>,
+}
+
+/// Outcome of a successful replay.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub batches: usize,
+    pub requests: usize,
+    /// Whether the simulated-cost fields were compared bit-exactly
+    /// (true iff the replay ran at the recorded shard count).
+    pub strict_sim: bool,
+    pub recorded_leaders: usize,
+    pub recorded_shards: usize,
+    pub leaders: usize,
+    pub shards: usize,
+}
+
+/// Re-serve `capture` through a fresh [`Service`] and assert every
+/// response is byte-identical to the recording. Batch groups are
+/// submitted atomically in recorded order, so the packed compositions
+/// — and therefore the FP summation orders — reproduce exactly;
+/// everything else (worker count, leader count, shard count) may be
+/// overridden and must not change a single output bit.
+pub fn replay(
+    capture: &Capture,
+    artifact_dir: &Path,
+    overrides: ReplayOverrides,
+    tracer: Option<SimTracer>,
+) -> Result<ReplayReport> {
+    let c = &capture.config;
+    let sys = SystemConfig::from_toml_str(&c.system_toml)
+        .context("parsing the capture's recorded system config")?;
+    // Replay only makes sense against the artifacts the capture was
+    // recorded with — different weights would fail every comparison
+    // with an unhelpful "hidden diverged".
+    let set = crate::runtime::ArtifactSet::open(artifact_dir)?;
+    let mc = &set.manifest.config;
+    if (mc.seq_len, mc.d_model) != (c.model.seq_len, c.model.d_model)
+        || mc.seed != c.artifact_seed
+    {
+        bail!(
+            "artifact mismatch: capture was recorded against {}x{} (seed {}), {} holds {}x{} (seed {})",
+            c.model.seq_len,
+            c.model.d_model,
+            c.artifact_seed,
+            artifact_dir.display(),
+            mc.seq_len,
+            mc.d_model,
+            mc.seed
+        );
+    }
+    drop(set);
+
+    let shards = overrides.shards.unwrap_or(c.shards);
+    let leaders = overrides.leaders.unwrap_or(c.leaders);
+    let max_kernel_workers = overrides.max_workers.or(c.max_kernel_workers);
+    let svc = Service::start_with_hooks(
+        artifact_dir.to_path_buf(),
+        sys.hardware.clone(),
+        c.model.clone(),
+        ServiceConfig {
+            layers: c.layers,
+            shards,
+            leaders,
+            max_kernel_workers,
+            precision: c.precision,
+            force_scalar: c.force_scalar,
+            ..Default::default()
+        },
+        ServeHooks { recorder: None, tracer },
+    )?;
+
+    let strict_sim = shards == c.shards;
+    let mut requests = 0usize;
+    for b in &capture.batches {
+        let subs: Vec<(u64, Matrix)> = b.requests.iter().map(|r| (r.id, r.x.clone())).collect();
+        let rxs = svc.submit_group(subs)?;
+        for (rx, rec) in rxs.into_iter().zip(&b.requests) {
+            let resp = rx
+                .recv()
+                .map_err(|_| anyhow!("request {} dropped during replay", rec.id))?
+                .with_context(|| format!("replaying batch {} request {}", b.batch, rec.id))?;
+            compare_response(b.batch, rec, &resp, c.precision, strict_sim)?;
+            requests += 1;
+        }
+    }
+    Ok(ReplayReport {
+        batches: capture.batches.len(),
+        requests,
+        strict_sim,
+        recorded_leaders: c.leaders,
+        recorded_shards: c.shards,
+        leaders,
+        shards,
+    })
+}
+
+/// Assert one replayed response matches its recording bit for bit (sim
+/// fields only under `strict_sim` — they are shard-topology functions).
+fn compare_response(
+    batch: u64,
+    rec: &RecordedRequest,
+    got: &InferenceResponse,
+    precision: Precision,
+    strict_sim: bool,
+) -> Result<()> {
+    let want = &rec.response;
+    if got.id != rec.id {
+        bail!("batch {batch}: response id {} != recorded {}", got.id, rec.id);
+    }
+    if got.precision != precision {
+        bail!(
+            "batch {batch} request {}: served at {} but recorded at {precision}",
+            rec.id,
+            got.precision
+        );
+    }
+    ensure_matrix(batch, rec.id, "hidden", &want.hidden, &got.hidden)?;
+    ensure_f64(batch, rec.id, "mask_density", want.mask_density, got.mask_density)?;
+    ensure_f64s(batch, rec.id, "head_density", &want.head_density, &got.head_density)?;
+    if strict_sim {
+        ensure_f64(batch, rec.id, "sim_ns", want.sim_ns, got.sim_ns)?;
+        ensure_f64(batch, rec.id, "sim_pj", want.sim_pj, got.sim_pj)?;
+        ensure_f64s(batch, rec.id, "head_sim_ns", &want.head_sim_ns, &got.head_sim_ns)?;
+        ensure_f64s(batch, rec.id, "head_sim_pj", &want.head_sim_pj, &got.head_sim_pj)?;
+        ensure_f64s(batch, rec.id, "shard_sim_ns", &want.shard_sim_ns, &got.shard_sim_ns)?;
+        ensure_f64s(batch, rec.id, "shard_sim_pj", &want.shard_sim_pj, &got.shard_sim_pj)?;
+        if want.shard_rows != got.shard_rows {
+            bail!(
+                "batch {batch} request {}: shard_rows {:?} != recorded {:?}",
+                rec.id,
+                got.shard_rows,
+                want.shard_rows
+            );
+        }
+    }
+    Ok(())
+}
+
+fn ensure_matrix(batch: u64, id: u64, field: &str, want: &Matrix, got: &Matrix) -> Result<()> {
+    if want.shape() != got.shape() {
+        bail!(
+            "batch {batch} request {id}: {field} shape {:?} != recorded {:?}",
+            got.shape(),
+            want.shape()
+        );
+    }
+    for (i, (w, g)) in want.data().iter().zip(got.data()).enumerate() {
+        if w.to_bits() != g.to_bits() {
+            bail!(
+                "batch {batch} request {id}: {field} diverged at element {i} \
+                 (recorded {w:?} [{:#010x}], replayed {g:?} [{:#010x}])",
+                w.to_bits(),
+                g.to_bits()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn ensure_f64(batch: u64, id: u64, field: &str, want: f64, got: f64) -> Result<()> {
+    if want.to_bits() != got.to_bits() {
+        bail!("batch {batch} request {id}: {field} diverged (recorded {want:?}, replayed {got:?})");
+    }
+    Ok(())
+}
+
+fn ensure_f64s(batch: u64, id: u64, field: &str, want: &[f64], got: &[f64]) -> Result<()> {
+    if want.len() != got.len() {
+        bail!(
+            "batch {batch} request {id}: {field} has {} entries, recorded {}",
+            got.len(),
+            want.len()
+        );
+    }
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        if w.to_bits() != g.to_bits() {
+            bail!(
+                "batch {batch} request {id}: {field}[{i}] diverged (recorded {w:?}, replayed {g:?})"
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---- JSON helpers --------------------------------------------------------
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn nums(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+}
+
+fn usizes(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn f64s_from(j: &Json) -> Result<Vec<f64>> {
+    j.as_arr()?.iter().map(|v| v.as_f64()).collect()
+}
+
+fn usizes_from(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()?.iter().map(|v| v.as_usize()).collect()
+}
+
+/// f32 payloads as u32 bit patterns: exact in f64, immune to decimal
+/// round-trip drift and to non-finite serialization hazards.
+fn matrix_to_json(m: &Matrix) -> Json {
+    let bits: Vec<Json> = m.data().iter().map(|v| Json::Num(v.to_bits() as f64)).collect();
+    obj(vec![
+        ("rows", num(m.rows() as f64)),
+        ("cols", num(m.cols() as f64)),
+        ("bits_f32", Json::Arr(bits)),
+    ])
+}
+
+fn matrix_from_json(j: &Json) -> Result<Matrix> {
+    let rows = j.get("rows")?.as_usize()?;
+    let cols = j.get("cols")?.as_usize()?;
+    let arr = j.get("bits_f32")?.as_arr()?;
+    if arr.len() != rows * cols {
+        bail!("matrix payload holds {} values, shape says {rows}x{cols}", arr.len());
+    }
+    let mut data = Vec::with_capacity(arr.len());
+    for v in arr {
+        let n = v.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 || n > u32::MAX as f64 {
+            bail!("bad f32 bit pattern {n}");
+        }
+        data.push(f32::from_bits(n as u32));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+fn model_to_json(m: &ModelConfig) -> Json {
+    obj(vec![
+        ("seq_len", num(m.seq_len as f64)),
+        ("d_model", num(m.d_model as f64)),
+        ("d_k", num(m.d_k as f64)),
+        ("d_ff", num(m.d_ff as f64)),
+        ("layers", num(m.layers as f64)),
+        ("heads", num(m.heads as f64)),
+        ("gamma", num(m.gamma as f64)),
+        ("quant_bits", num(m.quant_bits as f64)),
+        ("theta", num(m.theta as f64)),
+        ("sharpness", num(m.sharpness as f64)),
+    ])
+}
+
+fn model_from_json(j: &Json) -> Result<ModelConfig> {
+    let model = ModelConfig {
+        seq_len: j.get("seq_len")?.as_usize()?,
+        d_model: j.get("d_model")?.as_usize()?,
+        d_k: j.get("d_k")?.as_usize()?,
+        d_ff: j.get("d_ff")?.as_usize()?,
+        layers: j.get("layers")?.as_usize()?,
+        heads: j.get("heads")?.as_usize()?,
+        gamma: j.get("gamma")?.as_f64()? as f32,
+        quant_bits: j.get("quant_bits")?.as_usize()? as u32,
+        theta: j.get("theta")?.as_f64()? as f32,
+        sharpness: j.get("sharpness")?.as_f64()? as f32,
+    };
+    model.validate().map_err(|e| anyhow!("capture model config: {e}"))?;
+    Ok(model)
+}
+
+fn response_to_json(r: &RecordedResponse) -> Json {
+    obj(vec![
+        ("hidden", matrix_to_json(&r.hidden)),
+        ("mask_density", num(r.mask_density)),
+        ("sim_ns", num(r.sim_ns)),
+        ("sim_pj", num(r.sim_pj)),
+        ("head_sim_ns", nums(&r.head_sim_ns)),
+        ("head_sim_pj", nums(&r.head_sim_pj)),
+        ("head_density", nums(&r.head_density)),
+        ("shard_sim_ns", nums(&r.shard_sim_ns)),
+        ("shard_sim_pj", nums(&r.shard_sim_pj)),
+        ("shard_rows", usizes(&r.shard_rows)),
+    ])
+}
+
+fn response_from_json(j: &Json) -> Result<RecordedResponse> {
+    Ok(RecordedResponse {
+        hidden: matrix_from_json(j.get("hidden")?)?,
+        mask_density: j.get("mask_density")?.as_f64()?,
+        sim_ns: j.get("sim_ns")?.as_f64()?,
+        sim_pj: j.get("sim_pj")?.as_f64()?,
+        head_sim_ns: f64s_from(j.get("head_sim_ns")?)?,
+        head_sim_pj: f64s_from(j.get("head_sim_pj")?)?,
+        head_density: f64s_from(j.get("head_density")?)?,
+        shard_sim_ns: f64s_from(j.get("shard_sim_ns")?)?,
+        shard_sim_pj: f64s_from(j.get("shard_sim_pj")?)?,
+        shard_rows: usizes_from(j.get("shard_rows")?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SeededRng;
+
+    fn sample_capture() -> Capture {
+        let mut rng = SeededRng::new(5);
+        let model = ModelConfig {
+            seq_len: 16,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            heads: 2,
+            ..ModelConfig::default()
+        };
+        let x = rng.normal_matrix(6, 32, 1.0);
+        let hidden = rng.normal_matrix(6, 32, 1.0);
+        Capture {
+            config: CaptureConfig {
+                model,
+                layers: 1,
+                shards: 2,
+                leaders: 1,
+                max_kernel_workers: Some(3),
+                precision: Precision::I8,
+                force_scalar: false,
+                artifact_seed: 7,
+                system_toml: SystemConfig::paper().to_toml_string(),
+            },
+            batches: vec![RecordedBatch {
+                batch: 0,
+                requests: vec![RecordedRequest {
+                    id: 42,
+                    x,
+                    response: RecordedResponse {
+                        hidden,
+                        mask_density: 0.123456789,
+                        sim_ns: 98765.4321,
+                        sim_pj: 1.25e7,
+                        head_sim_ns: vec![90000.5, 98765.4321],
+                        head_sim_pj: vec![6.0e6, 6.5e6],
+                        head_density: vec![0.1, 0.15],
+                        shard_sim_ns: vec![5.0e4, 4.5e4],
+                        shard_sim_pj: vec![6.25e6, 6.25e6],
+                        shard_rows: vec![3, 3],
+                    },
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn capture_roundtrips_bit_exactly() {
+        let cap = sample_capture();
+        let text = cap.to_json().to_string();
+        let back = Capture::parse(&text).unwrap();
+        assert_eq!(back, cap);
+        // f32 payloads survive to the bit
+        let a = &cap.batches[0].requests[0].x;
+        let b = &back.batches[0].requests[0].x;
+        assert!(a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn matrix_bits_roundtrip_nonfinite_and_signed_zero() {
+        let m = Matrix::from_vec(
+            1,
+            5,
+            vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1.5e-42],
+        );
+        let back = matrix_from_json(&matrix_to_json(&m)).unwrap();
+        assert_eq!(back.shape(), (1, 5));
+        for (a, b) in m.data().iter().zip(back.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn corrupted_captures_rejected() {
+        let cap = sample_capture();
+        let text = cap.to_json().to_string();
+        // truncated file
+        assert!(Capture::parse(&text[..text.len() / 2]).is_err());
+        // not JSON at all
+        assert!(Capture::parse("definitely not json").is_err());
+        // wrong format marker
+        let other = text.replace("cpsaa-capture", "other-format");
+        assert!(Capture::parse(&other).is_err());
+        // future version
+        let versioned = text.replace("\"version\":1", "\"version\":999");
+        let err = Capture::parse(&versioned).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        // payload length mismatch
+        let j = cap.to_json().to_string().replace("\"rows\":6", "\"rows\":5");
+        assert!(Capture::parse(&j).is_err());
+    }
+
+    #[test]
+    fn recorder_sorts_batches_by_id() {
+        let rec = CaptureRecorder::new();
+        let sample = sample_capture();
+        for id in [2u64, 0, 1] {
+            rec.record(RecordedBatch { batch: id, requests: Vec::new() });
+        }
+        assert_eq!(rec.batches_recorded(), 3);
+        let cap = rec.into_capture(sample.config);
+        let ids: Vec<u64> = cap.batches.iter().map(|b| b.batch).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn tracer_serializes_sorted_timelines() {
+        use crate::sim::StageEvent;
+        let tracer = SimTracer::new();
+        for batch in [1u64, 0] {
+            tracer.record(BatchTraceRecord {
+                batch,
+                leader: 0,
+                traces: vec![SimTrace {
+                    head: 0,
+                    shard: None,
+                    events: vec![StageEvent {
+                        stage: "step2_vmm",
+                        start_ns: 1.0,
+                        end_ns: 2.5,
+                    }],
+                }],
+            });
+        }
+        let j = tracer.to_json();
+        assert_eq!(j.get("format").unwrap().as_str().unwrap(), TRACE_FORMAT);
+        let batches = j.get("batches").unwrap().as_arr().unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].get("batch").unwrap().as_usize().unwrap(), 0);
+        let tl = batches[0].get("timelines").unwrap().as_arr().unwrap();
+        assert_eq!(tl.len(), 1);
+        let ev = tl[0].get("events").unwrap().as_arr().unwrap();
+        assert_eq!(ev[0].get("stage").unwrap().as_str().unwrap(), "step2_vmm");
+        // round-trips as valid JSON
+        Json::parse(&j.to_string()).unwrap();
+    }
+}

@@ -9,7 +9,12 @@
 //! model actually generates).
 
 mod batch;
+pub mod capture;
 mod trace;
 
 pub use batch::{Batch, BatchStats};
+pub use capture::{
+    BatchTraceRecord, Capture, CaptureConfig, CaptureRecorder, RecordedBatch, RecordedRequest,
+    RecordedResponse, ReplayOverrides, ReplayReport, SimTracer,
+};
 pub use trace::{TraceGenerator, WorkloadTrace};

@@ -73,14 +73,18 @@ impl TraceGenerator {
             self.max_batches,
             self.exact_masks,
         );
+        // Poison recovery: the cache is insert-only memoization — a
+        // thread that died holding the lock left, at worst, a complete
+        // earlier insertion; dropping the whole process-wide cache for
+        // that would cascade one panic into every later figure.
         {
-            let cache = trace_cache().lock().unwrap();
+            let cache = trace_cache().lock().unwrap_or_else(|e| e.into_inner());
             if let Some(t) = cache.get(&key) {
                 return t.clone();
             }
         }
         let t = self.generate_uncached(ds);
-        trace_cache().lock().unwrap().insert(key, t.clone());
+        trace_cache().lock().unwrap_or_else(|e| e.into_inner()).insert(key, t.clone());
         t
     }
 

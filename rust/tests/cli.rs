@@ -510,6 +510,142 @@ fn serve_force_scalar_flag_end_to_end() {
     std::fs::remove_dir_all(&art).ok();
 }
 
+fn cpsaa_env(args: &[&str], env: &[(&str, &str)]) -> (bool, String) {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_cpsaa"));
+    c.args(args).current_dir(env!("CARGO_MANIFEST_DIR"));
+    for (k, v) in env {
+        c.env(k, v);
+    }
+    let out = c.output().expect("spawn cpsaa");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn record_then_replay_across_topologies_end_to_end() {
+    // Acceptance: a capture recorded under one {workers, leaders,
+    // shards} topology replays byte-identically under a different one.
+    let art = synth_artifacts("record", 2);
+    let cap = std::env::temp_dir().join(format!("cpsaa-cli-cap-{}.json", std::process::id()));
+    let trace = std::env::temp_dir().join(format!("cpsaa-cli-trc-{}.json", std::process::id()));
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "4",
+        "--layers",
+        "1",
+        "--heads",
+        "2",
+        "--record",
+        cap.to_str().unwrap(),
+        "--trace",
+        trace.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("recorded"), "{text}");
+    assert!(text.contains("batch timelines"), "{text}");
+    // the trace dump is non-empty, well-formed JSON with stage events
+    let trace_text = std::fs::read_to_string(&trace).unwrap();
+    assert!(trace_text.contains("cpsaa-sim-trace"), "{trace_text}");
+    assert!(trace_text.contains("step3_sddmm"), "{trace_text}");
+
+    // Replay at a different worker/leader/shard topology: exit 0.
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "replay",
+        cap.to_str().unwrap(),
+        "--leaders",
+        "3",
+        "--shards",
+        "2",
+        "--max-workers",
+        "3",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("replay OK"), "{text}");
+    assert!(text.contains("sim costs skipped"), "{text}");
+
+    // Replay at the recorded topology compares the sim fields too —
+    // and stays bit-identical under forced-scalar kernels.
+    let (ok, text) = cpsaa_env(
+        &["--artifacts", art.to_str().unwrap(), "replay", cap.to_str().unwrap()],
+        &[("CPSAA_FORCE_SCALAR", "1")],
+    );
+    assert!(ok, "{text}");
+    assert!(text.contains("replay OK"), "{text}");
+    assert!(text.contains("sim costs compared"), "{text}");
+
+    std::fs::remove_file(&cap).ok();
+    std::fs::remove_file(&trace).ok();
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn replay_rejects_corrupted_captures() {
+    let art = synth_artifacts("corrupt", 2);
+    let cap = std::env::temp_dir().join(format!("cpsaa-cli-bad-{}.json", std::process::id()));
+    // not a capture at all
+    std::fs::write(&cap, "{\"format\": \"something-else\", \"version\": 1}").unwrap();
+    let (ok, text) = cpsaa(&["--artifacts", art.to_str().unwrap(), "replay", cap.to_str().unwrap()]);
+    assert!(!ok, "corrupt capture must fail: {text}");
+    assert!(text.contains("capture"), "{text}");
+    // truncated JSON
+    std::fs::write(&cap, "{\"format\": \"cpsaa-capt").unwrap();
+    let (ok, _) = cpsaa(&["--artifacts", art.to_str().unwrap(), "replay", cap.to_str().unwrap()]);
+    assert!(!ok);
+    // missing file
+    let (ok, _) = cpsaa(&["--artifacts", art.to_str().unwrap(), "replay", "/nonexistent/cap.json"]);
+    assert!(!ok);
+    std::fs::remove_file(&cap).ok();
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn synth_artifacts_subcommand_serves() {
+    // The CI path: synthesize servable artifacts from a [model] config,
+    // no Python needed, then serve against them.
+    let dir = std::env::temp_dir().join(format!("cpsaa-cli-synth-{}", std::process::id()));
+    let cfg_path = std::env::temp_dir().join(format!("cpsaa-cli-synth-{}.toml", std::process::id()));
+    std::fs::write(
+        &cfg_path,
+        "[model]\nseq_len = 32\nd_model = 64\nd_k = 8\nd_ff = 128\nheads = 2\n",
+    )
+    .unwrap();
+    let (ok, text) = cpsaa(&[
+        "--config",
+        cfg_path.to_str().unwrap(),
+        "synth-artifacts",
+        dir.to_str().unwrap(),
+        "--seed",
+        "11",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("synthesized artifacts"), "{text}");
+    assert!(dir.join("manifest.json").exists());
+    let (ok, text) = cpsaa(&[
+        "--config",
+        cfg_path.to_str().unwrap(),
+        "--artifacts",
+        dir.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "2",
+        "--layers",
+        "1",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("served 2 requests"), "{text}");
+    std::fs::remove_file(&cfg_path).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn check_verifies_artifacts_when_present() {
     let has_artifacts =

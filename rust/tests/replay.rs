@@ -1,0 +1,196 @@
+//! Capture/replay determinism properties.
+//!
+//! The serving determinism contract, executable: a capture recorded
+//! under one `{workers, leaders, shards}` topology must replay
+//! byte-identically under any other, because batch composition — the
+//! only timing-dependent input — is recorded as atomic groups and
+//! resubmitted through `Service::submit_group`. These tests drive the
+//! library API directly; `tests/cli.rs` covers the `serve --record` /
+//! `replay` binary path.
+
+use std::path::PathBuf;
+
+use cpsaa::attention::Precision;
+use cpsaa::config::{HardwareConfig, ModelConfig, SystemConfig};
+use cpsaa::coordinator::{ServeHooks, Service, ServiceConfig};
+use cpsaa::runtime::ArtifactSet;
+use cpsaa::tensor::{Matrix, SeededRng};
+use cpsaa::workload::capture::{
+    self, Capture, CaptureConfig, CaptureRecorder, ReplayOverrides, SimTracer,
+};
+
+fn model() -> ModelConfig {
+    ModelConfig {
+        seq_len: 32,
+        d_model: 64,
+        d_k: 8,
+        d_ff: 128,
+        heads: 2,
+        ..ModelConfig::default()
+    }
+}
+
+/// Record a small capture at the minimal topology: 1 kernel worker,
+/// 1 leader, 1 shard. Three deterministic batch groups (2, 1, and 3
+/// requests) fix the packing compositions once and for all.
+fn record_capture(tag: &str, seed: u64, precision: Precision) -> (PathBuf, Capture) {
+    let dir = std::env::temp_dir().join(format!("cpsaa-replay-{tag}-{}", std::process::id()));
+    let m = model();
+    ArtifactSet::synthesize(&dir, &m, seed).unwrap();
+    let recorder = CaptureRecorder::new();
+    let svc = Service::start_with_hooks(
+        dir.clone(),
+        HardwareConfig::paper(),
+        m,
+        ServiceConfig {
+            layers: 2,
+            shards: 1,
+            leaders: 1,
+            max_kernel_workers: Some(1),
+            precision,
+            ..Default::default()
+        },
+        ServeHooks { recorder: Some(recorder.clone()), tracer: None },
+    )
+    .unwrap();
+    let mut rng = SeededRng::new(seed + 100);
+    let mut next_id = 0u64;
+    for group_size in [2usize, 1, 3] {
+        let reqs: Vec<(u64, Matrix)> = (0..group_size)
+            .map(|_| {
+                let id = next_id;
+                next_id += 1;
+                (id, rng.normal_matrix(8, 64, 1.0))
+            })
+            .collect();
+        let rxs = svc.submit_group(reqs).unwrap();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+    }
+    let capture = recorder.into_capture(CaptureConfig {
+        model: svc.model().clone(),
+        layers: 2,
+        shards: 1,
+        leaders: 1,
+        max_kernel_workers: Some(1),
+        precision,
+        force_scalar: false,
+        artifact_seed: seed,
+        system_toml: SystemConfig::paper().to_toml_string(),
+    });
+    (dir, capture)
+}
+
+#[test]
+fn capture_replays_bit_identically_across_topologies() {
+    let (dir, capture) = record_capture("f32", 41, Precision::F32);
+    // one batch per atomic group, in submission order
+    assert_eq!(capture.batches.len(), 3);
+    assert_eq!(capture.requests(), 6);
+    assert_eq!(
+        capture.batches.iter().map(|b| b.requests.len()).collect::<Vec<_>>(),
+        vec![2, 1, 3]
+    );
+
+    // The acceptance property: recorded at {workers 1, leaders 1,
+    // shards 1}, replayed at {workers 3, leaders 4, shards 2} — every
+    // functional field must still match to the bit (sim fields are
+    // shard-topology functions, so they are skipped here).
+    let tracer = SimTracer::new();
+    let report = capture::replay(
+        &capture,
+        &dir,
+        ReplayOverrides { max_workers: Some(3), leaders: Some(4), shards: Some(2) },
+        Some(tracer.clone()),
+    )
+    .unwrap();
+    assert_eq!((report.batches, report.requests), (3, 6));
+    assert!(!report.strict_sim);
+    assert_eq!((report.leaders, report.shards), (4, 2));
+    // replay can trace too: one timeline record per replayed batch
+    assert_eq!(tracer.batches_recorded(), 3);
+
+    // Identity replay additionally holds every simulated-cost field to
+    // the bit.
+    let report = capture::replay(&capture, &dir, ReplayOverrides::default(), None).unwrap();
+    assert!(report.strict_sim);
+    assert_eq!(report.requests, 6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn capture_file_roundtrip_then_replay() {
+    let (dir, capture) = record_capture("disk", 43, Precision::F32);
+    let path = std::env::temp_dir().join(format!("cpsaa-replay-cap-{}.json", std::process::id()));
+    capture.save(&path).unwrap();
+    let loaded = Capture::load(&path).unwrap();
+    // the file round-trip is lossless, down to the payload bits
+    assert_eq!(loaded, capture);
+    let report = capture::replay(
+        &loaded,
+        &dir,
+        ReplayOverrides { leaders: Some(2), ..Default::default() },
+        None,
+    )
+    .unwrap();
+    assert_eq!(report.requests, 6);
+    assert!(report.strict_sim, "shards unchanged, sim fields must be compared");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn i8_capture_replays_bit_identically() {
+    let (dir, capture) = record_capture("i8", 47, Precision::I8);
+    let report = capture::replay(
+        &capture,
+        &dir,
+        ReplayOverrides { max_workers: Some(2), leaders: Some(3), shards: Some(2) },
+        None,
+    )
+    .unwrap();
+    assert_eq!(report.requests, 6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replay_detects_tampered_bits() {
+    let (dir, capture) = record_capture("tamper", 53, Precision::F32);
+    // flip the lowest mantissa bit of one recorded hidden value
+    let mut bad = capture.clone();
+    {
+        let r = &mut bad.batches[0].requests[0].response;
+        let mut data: Vec<f32> = r.hidden.data().to_vec();
+        data[0] = f32::from_bits(data[0].to_bits() ^ 1);
+        r.hidden = Matrix::from_vec(r.hidden.rows(), r.hidden.cols(), data);
+    }
+    let err = capture::replay(&bad, &dir, ReplayOverrides::default(), None).unwrap_err();
+    assert!(err.to_string().contains("hidden"), "{err}");
+
+    // a tampered sim cost is caught when the shard topology matches...
+    let mut bad = capture.clone();
+    bad.batches[0].requests[0].response.sim_ns += 1.0;
+    let err = capture::replay(&bad, &dir, ReplayOverrides::default(), None).unwrap_err();
+    assert!(err.to_string().contains("sim_ns"), "{err}");
+
+    // ...and deliberately ignored when the topology changed (sim lines
+    // are functions of the shard partition, not of the requests).
+    let mut bad = capture.clone();
+    bad.batches[0].requests[0].response.sim_ns += 1.0;
+    capture::replay(&bad, &dir, ReplayOverrides { shards: Some(2), ..Default::default() }, None)
+        .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn replay_refuses_mismatched_artifacts() {
+    let (dir, capture) = record_capture("mismatch", 59, Precision::F32);
+    let other = std::env::temp_dir().join(format!("cpsaa-replay-other-{}", std::process::id()));
+    // same shapes, different seed → different weights → refuse up front
+    ArtifactSet::synthesize(&other, &model(), 1234).unwrap();
+    let err = capture::replay(&capture, &other, ReplayOverrides::default(), None).unwrap_err();
+    assert!(err.to_string().contains("artifact mismatch"), "{err}");
+    std::fs::remove_dir_all(&other).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
