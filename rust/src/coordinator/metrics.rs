@@ -72,6 +72,24 @@ impl LatencyHistogram {
         }
         Duration::from_nanos(self.max_ns)
     }
+
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> Duration {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+
+    /// The log-spaced bucket upper bounds (ns) — quantiles resolve to
+    /// one of these, clamped to the observed max.
+    pub fn bucket_bounds_ns(&self) -> &[u64] {
+        &self.bounds_ns
+    }
 }
 
 /// Per-head serving accounting (index = head). Heads run concurrently
@@ -155,7 +173,15 @@ pub struct ServeMetrics {
     pub batches: u64,
     pub padded_rows: u64,
     pub used_rows: u64,
+    /// Submit-to-reply latency (queue wait + batching window + execution).
     pub latency: LatencyHistogram,
+    /// Requests shed at admission because the bounded queue was full.
+    pub shed_queue_full: u64,
+    /// Requests shed because their deadline expired before a leader
+    /// packed them into a window.
+    pub shed_deadline: u64,
+    /// Batches executed on the executor's high-priority lane.
+    pub high_lane_batches: u64,
     /// Simulated accelerator time (ns) across batches (max over
     /// shards/heads per batch, summed over batches).
     pub sim_ns: f64,
@@ -177,6 +203,11 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
+    /// Total requests shed without executing (queue-full + deadline).
+    pub fn shed(&self) -> u64 {
+        self.shed_queue_full + self.shed_deadline
+    }
+
     pub fn batch_utilization(&self) -> f64 {
         let total = self.used_rows + self.padded_rows;
         if total == 0 {
@@ -287,7 +318,81 @@ mod tests {
     fn empty_histogram_zeroes() {
         let h = LatencyHistogram::new();
         assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.p50(), Duration::ZERO);
+        assert_eq!(h.p95(), Duration::ZERO);
+        assert_eq!(h.p99(), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.max(), Duration::ZERO);
+    }
+
+    #[test]
+    fn bucket_bounds_are_the_125_decade_ladder() {
+        let h = LatencyHistogram::new();
+        let bounds = h.bucket_bounds_ns();
+        // 9 decades × 3 mantissas = 27 bounds, strictly increasing,
+        // starting 1/2/5 µs; the last decade starts at 100 s so the top
+        // bound is 500 s.
+        assert_eq!(bounds.len(), 27);
+        assert_eq!(&bounds[..3], &[1_000, 2_000, 5_000]);
+        assert_eq!(bounds[bounds.len() - 1], 500_000_000_000);
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn samples_land_in_their_boundary_bucket() {
+        // A sample exactly on a bucket bound resolves to that bound: 1ms
+        // recordings must report 1ms quantiles, not the next bucket up.
+        let mut h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record(Duration::from_millis(1));
+        }
+        assert_eq!(h.p50(), Duration::from_millis(1));
+        assert_eq!(h.p99(), Duration::from_millis(1));
+        // Just past the bound lands in the next bucket, clamped to the
+        // observed max rather than rounding a 1.001ms run up to 2ms.
+        let mut h = LatencyHistogram::new();
+        for _ in 0..10 {
+            h.record(Duration::from_nanos(1_000_001));
+        }
+        assert_eq!(h.p99(), Duration::from_nanos(1_000_001));
+    }
+
+    #[test]
+    fn one_sample_dominates_every_quantile() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_millis(3));
+        // 3ms sits inside the (2ms, 5ms] bucket; the bound is clamped to
+        // the observed max so every quantile reports the sample itself.
+        for q in [0.01, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), Duration::from_millis(3), "q={q}");
+        }
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean(), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn known_bimodal_distribution_quantiles() {
+        // 90 fast (10µs) + 10 slow (100ms) samples: p50 stays in the
+        // fast mode, p95 and p99 land on the slow mode.
+        let mut h = LatencyHistogram::new();
+        for _ in 0..90 {
+            h.record(Duration::from_micros(10));
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_millis(100));
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.p50(), Duration::from_micros(10));
+        assert_eq!(h.p95(), Duration::from_millis(100));
+        assert_eq!(h.p99(), Duration::from_millis(100));
+        assert_eq!(h.max(), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn shed_counters_total() {
+        let m = ServeMetrics { shed_queue_full: 3, shed_deadline: 4, ..Default::default() };
+        assert_eq!(m.shed(), 7);
+        assert_eq!(ServeMetrics::default().shed(), 0);
     }
 
     #[test]

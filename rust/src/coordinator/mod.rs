@@ -4,8 +4,8 @@
 //! CPSAA's system contribution is the in-memory dataflow; the coordinator
 //! is the thin-but-real host layer around it (the paper's DTC + CTRL role
 //! at application level, §4.5): its leader threads (one or several,
-//! sharing one request channel and one batch-id source, all feeding the
-//! one executor pool) pack incoming sequences into
+//! sharing one bounded admission queue and one batch-id source, all
+//! feeding the one executor pool) pack incoming sequences into
 //! 320-embedding batches, drive the per-layer multi-head executions
 //! (one [`PlanSet`][crate::sparse::PlanSet] per batch, heads concurrent
 //! on disjoint tile slices), fan each batch across K logical chips when
@@ -27,5 +27,8 @@ pub use metrics::{
     HeadLine, HeadMetrics, LatencyHistogram, LeaderMetrics, ServeMetrics, ShardLine, ShardMetrics,
 };
 pub use pipeline::{EncoderStack, LayerOutput};
-pub use service::{InferenceResponse, ServeHooks, Service, ServiceConfig};
+pub use service::{
+    InferenceResponse, ServeError, ServeHooks, ServeResult, Service, ServiceConfig, ShedReason,
+    SubmitOptions,
+};
 pub use shard::{ShardCost, ShardedBatchCost};

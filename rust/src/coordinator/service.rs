@@ -4,15 +4,38 @@
 //! with a PJRT backend the client is `Rc`-based too) — exactly like the
 //! physical CPSAA chip is one device. The service spawns `leaders`
 //! **leader threads**, each owning its own engine instance; callers
-//! submit requests over one shared mpsc channel and block on a reply
-//! channel. Dynamic batching happens in whichever leader claims the
-//! channel: it drains whatever arrived within `max_wait` (or until a
-//! batch fills), releases the channel, packs with [`Batcher`], executes
+//! submit requests into one shared **bounded admission queue**
+//! ([`AdmissionQueue`]) and block on a reply channel.
+//!
+//! ## Continuous batching, admission control, priority
+//!
+//! Batching is *continuous*: admission appends to the queue under its
+//! own lock, which no leader holds while executing, so new requests
+//! keep flowing in — and are picked up by the next window — while every
+//! leader is busy on a batch. One leader at a time holds the window
+//! token to form a window (arrival order decides composition exactly as
+//! before); it drains whatever arrived within `max_wait` (or until a
+//! batch fills), releases the token, packs with [`Batcher`], executes
 //! the encoder stack once per batch — one
 //! [`PlanSet`][crate::sparse::PlanSet] per batch (one ReCAM scan per
 //! head mask), reused across all layers — and fans results back out.
-//! While one leader executes, the next leader is already draining the
-//! channel, so batch windows pipeline with batch executions.
+//! While one leader executes, the next leader is already forming the
+//! next window from requests that arrived mid-execution.
+//!
+//! The queue is bounded (`ServiceConfig::queue_cap`): live submissions
+//! beyond the bound are shed immediately with
+//! [`ServeError::Shed`]`(`[`ShedReason::QueueFull`]`)` instead of
+//! growing memory without limit under overload. Requests may carry a
+//! deadline ([`SubmitOptions::deadline`]); a request whose deadline
+//! expires before a leader packs it into a window is shed with
+//! [`ShedReason::DeadlineExpired`]. Both outcomes are **distinct typed
+//! statuses** on the reply channel, not generic errors, and both count
+//! in [`ServeMetrics`] (`shed_queue_full` / `shed_deadline`) next to
+//! the p50/p95/p99 latency histogram (submit→reply, queue wait
+//! included). Requests may also mark themselves interactive
+//! ([`SubmitOptions::lane`]): a window containing any high-lane request
+//! executes on the executor's high-priority lane, so small interactive
+//! batches are not starved behind bulk fan-outs.
 //!
 //! All leaders dispatch kernels onto the **one** crate-wide
 //! [`executor`][crate::runtime::executor] pool (sized by
@@ -33,8 +56,9 @@
 //! Responses and metrics gain per-shard lines. `shards == 1` is
 //! bit-identical to unsharded serving.
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::anyhow;
@@ -42,6 +66,7 @@ use crate::util::error::{Context, Result};
 
 use crate::attention::{MultiHeadWeights, Precision};
 use crate::config::{HardwareConfig, ModelConfig};
+use crate::runtime::executor::{self, Lane};
 use crate::runtime::{ArtifactSet, Engine};
 use crate::tensor::Matrix;
 use crate::workload::capture::{
@@ -52,21 +77,157 @@ use super::batcher::{BatchIds, Batcher};
 use super::metrics::ServeMetrics;
 use super::pipeline::EncoderStack;
 
+/// Why a request was shed without executing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The bounded admission queue was at capacity when the request
+    /// arrived (backpressure under overload).
+    QueueFull,
+    /// The request's deadline expired before a leader packed it into a
+    /// batching window.
+    DeadlineExpired,
+}
+
+impl ShedReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue full",
+            ShedReason::DeadlineExpired => "deadline expired",
+        }
+    }
+}
+
+/// Typed per-request serving failure, delivered over the reply channel.
+/// Shedding is a *distinct status* from malformed input or execution
+/// failure so callers (and the load generator) can tell backpressure —
+/// retry later — from requests that must not be retried as-is.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Load-shed without executing (queue full or deadline expired).
+    Shed(ShedReason),
+    /// Malformed request (bad shape); retrying the same payload can
+    /// never succeed.
+    Rejected(String),
+    /// The batch execution itself failed.
+    Failed(String),
+}
+
+impl ServeError {
+    /// The shed reason, when this is backpressure rather than failure.
+    pub fn shed_reason(&self) -> Option<ShedReason> {
+        match self {
+            ServeError::Shed(r) => Some(*r),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shed(r) => write!(f, "shed: {}", r.as_str()),
+            ServeError::Rejected(m) => write!(f, "rejected: {m}"),
+            ServeError::Failed(m) => write!(f, "batch failed: {m}"),
+        }
+    }
+}
+
+// `?` and `.context(...)` lift a `ServeError` into the crate-wide
+// string error through the blanket std-error conversion.
+impl std::error::Error for ServeError {}
+
+/// What a reply channel yields: the response, or a typed serving error.
+pub type ServeResult = std::result::Result<InferenceResponse, ServeError>;
+
+/// Per-request submission options (see [`Service::submit_with`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    /// Shed the request ([`ShedReason::DeadlineExpired`]) if no leader
+    /// has packed it into a window within this budget of submission.
+    /// `None` waits indefinitely (bounded in practice by the queue cap).
+    pub deadline: Option<Duration>,
+    /// Executor lane the request's batch executes on; `Lane::High`
+    /// marks interactive traffic that must not starve behind bulk work.
+    pub lane: Lane,
+}
+
 /// One inference request: token embeddings (rows ≤ seq_len).
 struct InferenceRequest {
     id: u64,
     x: Matrix,
-    reply: mpsc::Sender<Result<InferenceResponse>>,
+    /// When `submit` accepted the request — the latency histogram
+    /// measures submit→reply, queue wait included.
+    submitted: Instant,
+    /// Pack-by deadline; checked when a leader pulls the request while
+    /// forming a window.
+    deadline: Option<Instant>,
+    lane: Lane,
+    reply: mpsc::Sender<ServeResult>,
 }
 
-/// What travels over the shared request channel: a single request (the
-/// live-traffic path, co-batched by time window), or a pre-composed
-/// group whose members enter **one** batching window atomically, in
-/// order — the deterministic ingest path replay uses to reproduce a
-/// recorded batch composition independent of wall-clock timing.
-enum Msg {
+/// What sits in the admission queue: a single live request (co-batched
+/// by time window), or a pre-composed group whose members enter **one**
+/// batching window atomically, in order — the deterministic ingest path
+/// replay uses to reproduce a recorded batch composition independent of
+/// wall-clock timing. Groups are never shed and never merge with live
+/// traffic: their composition is a recorded fact, not a load decision.
+enum Admitted {
     One(InferenceRequest),
     Group(Vec<InferenceRequest>),
+}
+
+struct AdmState {
+    items: VecDeque<Admitted>,
+    /// Queued individual requests (group members counted) — the value
+    /// the admission bound compares against.
+    depth: usize,
+    /// Set when the last front-end handle drops; leaders drain the
+    /// backlog and exit.
+    closed: bool,
+}
+
+/// The bounded buffer between the front end and the leaders. Submission
+/// holds only `state`, never the window token, and no leader holds
+/// `state` while executing — which is exactly what makes batching
+/// continuous. Lock order where both are held: `window` → `state`
+/// (leaders); `state` → metrics (leaders, shedding); never the reverse.
+struct AdmissionQueue {
+    state: Mutex<AdmState>,
+    /// Signals arrivals and closure to a leader forming a window.
+    arrived: Condvar,
+    /// Held by the one leader currently forming a window, so window
+    /// composition stays serial in arrival order while admission and
+    /// batch execution proceed concurrently.
+    window: Mutex<()>,
+    /// Depth bound: `One` submissions at or beyond it shed immediately.
+    cap: usize,
+}
+
+impl AdmissionQueue {
+    /// Poison-recovering state lock: the queue's invariants are plain
+    /// counters, sound to read and advance even after a leader died
+    /// mid-update.
+    fn lock_state(&self) -> MutexGuard<'_, AdmState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn close(&self) {
+        self.lock_state().closed = true;
+        self.arrived.notify_all();
+    }
+}
+
+/// Closes the admission queue when the last front-end [`Service`] clone
+/// drops, so leader threads finish the backlog and exit instead of
+/// waiting forever.
+struct FrontGuard {
+    queue: Arc<AdmissionQueue>,
+}
+
+impl Drop for FrontGuard {
+    fn drop(&mut self) {
+        self.queue.close();
+    }
 }
 
 /// Optional observation hooks threaded into every leader loop.
@@ -158,6 +319,12 @@ pub struct ServiceConfig {
     /// `CPSAA_FORCE_SCALAR` env var). Diagnostics knob: values never
     /// change, only throughput.
     pub force_scalar: bool,
+    /// Bound on queued-but-unpacked requests. Live submissions at or
+    /// beyond it are shed with `ServeError::Shed(ShedReason::QueueFull)`
+    /// instead of growing memory without limit under overload. Groups
+    /// (the replay ingest path) bypass the cap. `0` is legal and sheds
+    /// every live submission — a drain/drill mode.
+    pub queue_cap: usize,
 }
 
 impl Default for ServiceConfig {
@@ -170,6 +337,7 @@ impl Default for ServiceConfig {
             max_kernel_workers: None,
             precision: Precision::F32,
             force_scalar: false,
+            queue_cap: 1024,
         }
     }
 }
@@ -177,7 +345,10 @@ impl Default for ServiceConfig {
 /// The serving front end. Cloneable across caller threads.
 #[derive(Clone)]
 pub struct Service {
-    tx: mpsc::Sender<Msg>,
+    queue: Arc<AdmissionQueue>,
+    /// Never read — exists so the last front-end clone's drop closes
+    /// the admission queue and the leaders exit.
+    _front: Arc<FrontGuard>,
     metrics: Arc<Mutex<ServeMetrics>>,
     model: ModelConfig,
 }
@@ -221,8 +392,16 @@ impl Service {
                 .map_err(|e| anyhow!("max_kernel_workers: {e}"))?,
             None => {}
         }
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(AdmissionQueue {
+            state: Mutex::new(AdmState { items: VecDeque::new(), depth: 0, closed: false }),
+            arrived: Condvar::new(),
+            window: Mutex::new(()),
+            cap: cfg.queue_cap,
+        });
+        // Created before any early return below: dropping it on a
+        // startup failure closes the queue, so leaders that did come up
+        // drain and exit instead of waiting forever.
+        let front = FrontGuard { queue: queue.clone() };
         // Size the per-leader lines up front so an idle leader shows as
         // an explicit zero row instead of silently missing — leader
         // imbalance is exactly what these lines exist to expose.
@@ -237,7 +416,7 @@ impl Service {
             let hw = hw.clone();
             let model_overlay = model_overlay.clone();
             let cfg = cfg.clone();
-            let rx = rx.clone();
+            let queue = queue.clone();
             let metrics = metrics.clone();
             let ids = ids.clone();
             let ready_tx = ready_tx.clone();
@@ -251,7 +430,7 @@ impl Service {
                         hw,
                         model_overlay,
                         cfg,
-                        rx,
+                        queue,
                         metrics,
                         ids,
                         ready_tx,
@@ -275,7 +454,7 @@ impl Service {
             }
         }
         let model = resolved.expect("leaders >= 1, so at least one reported in");
-        Ok(Self { tx, metrics, model })
+        Ok(Self { queue, _front: Arc::new(front), metrics, model })
     }
 
     /// The resolved serving model — artifact shapes overlaid with the
@@ -285,12 +464,51 @@ impl Service {
     }
 
     /// Submit a request without blocking; the returned receiver yields
-    /// the response once its batch completes.
-    pub fn submit(&self, id: u64, x: Matrix) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+    /// the response once its batch completes. Default options: no
+    /// deadline, normal lane.
+    pub fn submit(&self, id: u64, x: Matrix) -> Result<mpsc::Receiver<ServeResult>> {
+        self.submit_with(id, x, SubmitOptions::default())
+    }
+
+    /// [`submit`][Self::submit] with per-request deadline and lane.
+    /// Returns `Err` only if the service has stopped; backpressure is
+    /// delivered *through the receiver* as [`ServeError::Shed`] — a
+    /// queue-full shed is already waiting in the channel on return — so
+    /// callers always distinguish shed from failed.
+    pub fn submit_with(
+        &self,
+        id: u64,
+        x: Matrix,
+        opts: SubmitOptions,
+    ) -> Result<mpsc::Receiver<ServeResult>> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::One(InferenceRequest { id, x, reply }))
-            .map_err(|_| anyhow!("service stopped"))?;
+        let submitted = Instant::now();
+        let req = InferenceRequest {
+            id,
+            x,
+            submitted,
+            // An unrepresentable deadline (astronomical budget) means
+            // no deadline.
+            deadline: opts.deadline.and_then(|d| submitted.checked_add(d)),
+            lane: opts.lane,
+            reply,
+        };
+        let mut state = self.queue.lock_state();
+        if state.closed {
+            return Err(anyhow!("service stopped"));
+        }
+        if state.depth >= self.queue.cap {
+            drop(state);
+            let mut m = self.metrics.lock().unwrap_or_else(|e| e.into_inner());
+            m.shed_queue_full += 1;
+            drop(m);
+            let _ = req.reply.send(Err(ServeError::Shed(ShedReason::QueueFull)));
+            return Ok(rx);
+        }
+        state.items.push_back(Admitted::One(req));
+        state.depth += 1;
+        drop(state);
+        self.queue.arrived.notify_all();
         Ok(rx)
     }
 
@@ -298,26 +516,44 @@ impl Service {
     /// batching window atomically, in order, regardless of wall-clock
     /// timing or leader scheduling. This is how replay reproduces a
     /// recorded batch composition — and with it the exact FP summation
-    /// order — deterministically.
+    /// order — deterministically. Groups bypass the admission bound and
+    /// carry no deadline: a recorded composition must never be shed.
     pub fn submit_group(
         &self,
         reqs: Vec<(u64, Matrix)>,
-    ) -> Result<Vec<mpsc::Receiver<Result<InferenceResponse>>>> {
+    ) -> Result<Vec<mpsc::Receiver<ServeResult>>> {
+        let submitted = Instant::now();
         let mut rxs = Vec::with_capacity(reqs.len());
         let mut group = Vec::with_capacity(reqs.len());
         for (id, x) in reqs {
             let (reply, rx) = mpsc::channel();
-            group.push(InferenceRequest { id, x, reply });
+            group.push(InferenceRequest {
+                id,
+                x,
+                submitted,
+                deadline: None,
+                lane: Lane::Normal,
+                reply,
+            });
             rxs.push(rx);
         }
-        self.tx.send(Msg::Group(group)).map_err(|_| anyhow!("service stopped"))?;
+        let n = group.len();
+        let mut state = self.queue.lock_state();
+        if state.closed {
+            return Err(anyhow!("service stopped"));
+        }
+        state.items.push_back(Admitted::Group(group));
+        state.depth += n;
+        drop(state);
+        self.queue.arrived.notify_all();
         Ok(rxs)
     }
 
     /// Submit a request and block until its response arrives.
     pub fn infer(&self, id: u64, x: Matrix) -> Result<InferenceResponse> {
         let rx = self.submit(id, x)?;
-        rx.recv().map_err(|_| anyhow!("request {id} dropped"))?
+        let resp = rx.recv().map_err(|_| anyhow!("request {id} dropped"))?;
+        Ok(resp?)
     }
 
     pub fn metrics(&self) -> ServeMetrics {
@@ -336,7 +572,7 @@ fn leader_loop(
     hw: HardwareConfig,
     model_overlay: ModelConfig,
     cfg: ServiceConfig,
-    rx: Arc<Mutex<mpsc::Receiver<Msg>>>,
+    queue: Arc<AdmissionQueue>,
     metrics: Arc<Mutex<ServeMetrics>>,
     ids: BatchIds,
     ready: mpsc::Sender<Result<ModelConfig>>,
@@ -388,44 +624,98 @@ fn leader_loop(
     // keyed to exactly one batch even with several leaders in flight.
     let mut batcher = Batcher::with_ids(model.seq_len, model.d_model, ids);
 
+    // Shed one expired request: typed status on the reply channel plus
+    // the metrics counter. mpsc sends never block, so doing this under
+    // the admission state lock is safe (and keeps the state→metrics
+    // lock order documented on `AdmissionQueue`).
+    let shed_expired = |req: InferenceRequest| {
+        let mut m = metrics.lock().unwrap_or_else(|e| e.into_inner());
+        m.shed_deadline += 1;
+        drop(m);
+        let _ = req.reply.send(Err(ServeError::Shed(ShedReason::DeadlineExpired)));
+    };
+
     loop {
-        // Claim the shared channel for one batching window; competing
-        // leaders block here while this one drains, then take over the
-        // channel the moment this leader moves on to execution.
+        // Claim the window token for one batching window; competing
+        // leaders block here while this one forms a window, then take
+        // over the moment this leader moves on to execution. Admission
+        // never takes this lock — requests keep arriving while every
+        // leader executes, and the next window picks them up
+        // (continuous batching).
         let window = {
-            // A leader that panicked while holding this lock poisons
-            // it, but the receiver inside stays sound — surviving
+            // A leader that panicked while holding the token poisons
+            // it, but the queue it guards stays sound — surviving
             // leaders keep claiming windows instead of shutting the
             // whole service down.
-            let channel = rx.lock().unwrap_or_else(|e| e.into_inner());
-            let Ok(first) = channel.recv() else { return };
+            let _forming = queue.window.lock().unwrap_or_else(|e| e.into_inner());
+            let mut state = queue.lock_state();
+            // Wait for the first window member, shedding any expired
+            // request that surfaces; exit once closed and drained.
+            let first = loop {
+                match state.items.pop_front() {
+                    // A pre-composed group seals its window
+                    // immediately: its composition was decided by the
+                    // sender (replay), not by arrival timing.
+                    Some(Admitted::Group(group)) => {
+                        state.depth -= group.len();
+                        break Admitted::Group(group);
+                    }
+                    Some(Admitted::One(req)) => {
+                        state.depth -= 1;
+                        if req.deadline.is_some_and(|d| Instant::now() >= d) {
+                            shed_expired(req);
+                            continue;
+                        }
+                        break Admitted::One(req);
+                    }
+                    None => {
+                        if state.closed {
+                            return;
+                        }
+                        state = queue.arrived.wait(state).unwrap_or_else(|e| e.into_inner());
+                    }
+                }
+            };
             match first {
-                // A pre-composed group seals its window immediately:
-                // its composition was decided by the sender (replay),
-                // not by arrival timing.
-                Msg::Group(group) => group,
-                Msg::One(first) => {
+                Admitted::Group(group) => group,
+                Admitted::One(first) => {
                     let mut window = vec![first];
                     let mut rows = window[0].x.rows();
-                    let deadline = Instant::now() + cfg.max_wait;
+                    let seal_at = Instant::now() + cfg.max_wait;
                     while rows < model.seq_len {
-                        let remaining = deadline.saturating_duration_since(Instant::now());
-                        if remaining.is_zero() {
-                            break;
-                        }
-                        match channel.recv_timeout(remaining) {
-                            Ok(Msg::One(req)) => {
+                        match state.items.front() {
+                            // Live requests join the open window (expired
+                            // ones shed at the moment of packing).
+                            Some(Admitted::One(_)) => {
+                                let Some(Admitted::One(req)) = state.items.pop_front() else {
+                                    unreachable!("front() said One");
+                                };
+                                state.depth -= 1;
+                                if req.deadline.is_some_and(|d| Instant::now() >= d) {
+                                    shed_expired(req);
+                                    continue;
+                                }
                                 rows += req.x.rows();
                                 window.push(req);
                             }
-                            // A group arriving mid-window joins it
-                            // whole (members stay contiguous and in
-                            // order) and seals it.
-                            Ok(Msg::Group(group)) => {
-                                window.extend(group);
-                                break;
+                            // A group never merges with live traffic:
+                            // seal this window; the group forms the next.
+                            Some(Admitted::Group(_)) => break,
+                            None => {
+                                if state.closed {
+                                    break;
+                                }
+                                let remaining =
+                                    seal_at.saturating_duration_since(Instant::now());
+                                if remaining.is_zero() {
+                                    break;
+                                }
+                                let (guard, _timeout) = queue
+                                    .arrived
+                                    .wait_timeout(state, remaining)
+                                    .unwrap_or_else(|e| e.into_inner());
+                                state = guard;
                             }
-                            Err(_) => break,
                         }
                     }
                     window
@@ -433,21 +723,32 @@ fn leader_loop(
             }
         };
 
+        // One interactive member lifts the whole window onto the
+        // executor's high lane: its co-batched neighbors ride along.
+        let window_lane = if window.iter().any(|r| r.lane == Lane::High) {
+            Lane::High
+        } else {
+            Lane::Normal
+        };
         let mut replies = std::collections::HashMap::new();
-        let arrival = Instant::now();
         for req in window {
             match batcher.push(req.id, req.x) {
                 Ok(()) => {
-                    replies.insert(req.id, req.reply);
+                    replies.insert(req.id, (req.reply, req.submitted));
                 }
                 Err(e) => {
-                    let _ = req.reply.send(Err(anyhow!("rejected: {e}")));
+                    let _ = req.reply.send(Err(ServeError::Rejected(e.to_string())));
                 }
             }
         }
 
         for plan in batcher.drain() {
-            match stack.forward_traced(&plan.x) {
+            // The lane is scoped around the whole execution: every
+            // nested fan-out the stack submits (shards → heads → row
+            // ranges) inherits it. Lanes reorder scheduling only, so
+            // outputs stay bit-identical either way.
+            let executed = executor::with_lane(window_lane, || stack.forward_traced(&plan.x));
+            match executed {
                 Ok((outs, traces)) => {
                     if let Some(tracer) = &hooks.tracer {
                         tracer.record(BatchTraceRecord { batch: plan.batch, leader, traces });
@@ -492,6 +793,9 @@ fn leader_loop(
                     // kill the survivors' recording path.
                     let mut m = metrics.lock().unwrap_or_else(|e| e.into_inner());
                     m.batches += 1;
+                    if window_lane == Lane::High {
+                        m.high_lane_batches += 1;
+                    }
                     m.used_rows += plan.used_rows as u64;
                     m.padded_rows += (model.seq_len - plan.used_rows) as u64;
                     m.sim_ns += sim_ns;
@@ -504,9 +808,7 @@ fn leader_loop(
                     let mut captured: Vec<RecordedRequest> = Vec::new();
                     for entry in &plan.entries {
                         let hidden = plan.extract(&last.hidden, entry);
-                        let latency = arrival.elapsed();
                         m.requests += 1;
-                        m.latency.record(latency);
                         if hooks.recorder.is_some() {
                             captured.push(RecordedRequest {
                                 id: entry.id,
@@ -527,7 +829,11 @@ fn leader_loop(
                                 },
                             });
                         }
-                        if let Some(reply) = replies.remove(&entry.id) {
+                        if let Some((reply, submitted)) = replies.remove(&entry.id) {
+                            // Submit→reply: queue wait, window wait and
+                            // execution all count against the SLO.
+                            let latency = submitted.elapsed();
+                            m.latency.record(latency);
                             let _ = reply.send(Ok(InferenceResponse {
                                 id: entry.id,
                                 hidden,
@@ -554,10 +860,10 @@ fn leader_loop(
                     }
                 }
                 Err(e) => {
-                    let msg = format!("batch failed: {e:#}");
+                    let msg = format!("{e:#}");
                     for entry in &plan.entries {
-                        if let Some(reply) = replies.remove(&entry.id) {
-                            let _ = reply.send(Err(anyhow!("{msg}")));
+                        if let Some((reply, _submitted)) = replies.remove(&entry.id) {
+                            let _ = reply.send(Err(ServeError::Failed(msg.clone())));
                         }
                     }
                 }
@@ -819,6 +1125,93 @@ mod tests {
         assert_eq!(resp.id, 5);
         let m = svc.metrics();
         assert_eq!(m.requests, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn zero_queue_cap_sheds_live_traffic_but_groups_bypass() {
+        // cap = 0 is the deterministic drill mode: every live
+        // submission sheds with the typed queue-full status...
+        let (dir, svc) = synth_service(
+            "qcap0",
+            31,
+            ServiceConfig { layers: 1, queue_cap: 0, ..Default::default() },
+        );
+        let mut rng = SeededRng::new(2);
+        let rx = svc.submit(1, rng.normal_matrix(8, 32, 1.0)).unwrap();
+        let got = rx.recv().expect("shed status must be delivered");
+        assert_eq!(got.unwrap_err(), ServeError::Shed(ShedReason::QueueFull));
+        // ...while the replay ingest path is exempt: a recorded batch
+        // composition is a fact, not a load decision.
+        let reqs: Vec<(u64, Matrix)> =
+            (0..2).map(|id| (id, rng.normal_matrix(8, 32, 1.0))).collect();
+        let rxs = svc.submit_group(reqs).unwrap();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let m = svc.metrics();
+        assert_eq!(m.shed_queue_full, 1);
+        assert_eq!(m.shed_deadline, 0);
+        assert_eq!(m.shed(), 1);
+        assert_eq!(m.requests, 2, "group members executed, shed request did not");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn expired_deadline_sheds_with_typed_status() {
+        let (dir, svc) =
+            synth_service("deadline", 33, ServiceConfig { layers: 1, ..Default::default() });
+        let mut rng = SeededRng::new(5);
+        // A zero budget has always expired by the time a leader packs
+        // the request — deterministic shed.
+        let rx = svc
+            .submit_with(
+                9,
+                rng.normal_matrix(8, 32, 1.0),
+                SubmitOptions { deadline: Some(Duration::ZERO), ..Default::default() },
+            )
+            .unwrap();
+        let got = rx.recv().expect("shed status must be delivered");
+        let err = got.unwrap_err();
+        assert_eq!(err, ServeError::Shed(ShedReason::DeadlineExpired));
+        assert_eq!(err.shed_reason(), Some(ShedReason::DeadlineExpired));
+        assert_eq!(err.to_string(), "shed: deadline expired");
+        // A generous deadline serves normally.
+        let rx = svc
+            .submit_with(
+                10,
+                rng.normal_matrix(8, 32, 1.0),
+                SubmitOptions { deadline: Some(Duration::from_secs(60)), ..Default::default() },
+            )
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 10);
+        let m = svc.metrics();
+        assert_eq!(m.shed_deadline, 1);
+        assert_eq!(m.requests, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn high_lane_requests_mark_their_batches() {
+        let (dir, svc) =
+            synth_service("lane", 35, ServiceConfig { layers: 1, ..Default::default() });
+        let mut rng = SeededRng::new(8);
+        let rx = svc
+            .submit_with(
+                1,
+                rng.normal_matrix(8, 32, 1.0),
+                SubmitOptions { lane: crate::runtime::Lane::High, ..Default::default() },
+            )
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 1);
+        // A normal-lane request afterwards does not bump the counter.
+        let resp = svc.infer(2, rng.normal_matrix(8, 32, 1.0)).unwrap();
+        assert_eq!(resp.id, 2);
+        let m = svc.metrics();
+        assert_eq!(m.high_lane_batches, 1);
+        assert_eq!(m.batches, 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -38,8 +38,8 @@ COMMANDS:
   bench-figure ID [--out-dir DIR]   regenerate a paper figure/table
                                     (fig3, table2, fig11..fig18, fig19a/b, fig20a/b, all)
   serve [--requests N] [--layers N] [--heads N] [--shards N] [--leaders N]
-        [--max-workers N] [--precision f32|i8] [--force-scalar]
-        [--record FILE] [--trace FILE]
+        [--max-workers N] [--queue-cap N] [--precision f32|i8]
+        [--force-scalar] [--record FILE] [--trace FILE]
                                     demo serving loop over the artifact engine
                                     (multi-head fan-out across tile slices;
                                     --shards N fans each batch across N logical
@@ -51,10 +51,27 @@ COMMANDS:
                                     --force-scalar pins the scalar twins of
                                     the SIMD row primitives, like the
                                     CPSAA_FORCE_SCALAR env var;
+                                    --queue-cap N bounds the admission queue
+                                    (excess live requests shed, default 1024);
                                     --record FILE captures every admitted batch
                                     + the full serving config for `replay`;
                                     --trace FILE dumps per-batch simulated
                                     stage timelines as JSON)
+  loadgen [--seed N] [--rps R] [--duration S] [--deadline-ms MS]
+          [--interactive F] [--layers N] [--heads N] [--shards N]
+          [--leaders N] [--max-workers N] [--queue-cap N]
+          [--slo-p99-ms MS] [--json] [--junit FILE]
+                                    seeded open-loop load generator over the
+                                    artifact engine: Poisson arrivals at R rps
+                                    for S seconds (same --seed, same schedule),
+                                    --interactive F marks that fraction of
+                                    requests high-lane, --deadline-ms sheds
+                                    requests not packed in time; per-request
+                                    CSV to stdout (one JSON document instead
+                                    with --json), progress + summary to
+                                    stderr; --junit FILE writes a JUnit XML
+                                    verdict; exits nonzero if p99 exceeds
+                                    --slo-p99-ms or any request fails
   replay FILE [--max-workers N] [--leaders N] [--shards N] [--trace FILE]
                                     re-serve a `serve --record` capture and
                                     assert byte-identical responses; topology
@@ -188,6 +205,9 @@ fn main() -> Result<()> {
                     .map_err(|e| anyhow!("--precision: {e}"))?,
                 None => Precision::F32,
             };
+            let queue_cap = take_flag(&mut cmd, "--queue-cap")
+                .map(|s| s.parse::<usize>())
+                .transpose()?;
             let force_scalar = take_switch(&mut cmd, "--force-scalar");
             let record = take_flag(&mut cmd, "--record").map(PathBuf::from);
             let trace = take_flag(&mut cmd, "--trace").map(PathBuf::from);
@@ -200,11 +220,63 @@ fn main() -> Result<()> {
                 shards,
                 leaders,
                 max_workers,
+                queue_cap,
                 precision,
                 force_scalar,
                 record,
                 trace,
             )
+        }
+        "loadgen" => {
+            let opts = LoadgenCli {
+                seed: take_flag(&mut cmd, "--seed")
+                    .map(|s| s.parse::<u64>())
+                    .transpose()?
+                    .unwrap_or(7),
+                rps: take_flag(&mut cmd, "--rps")
+                    .map(|s| s.parse::<f64>())
+                    .transpose()?
+                    .unwrap_or(200.0),
+                duration_s: take_flag(&mut cmd, "--duration")
+                    .map(|s| s.parse::<f64>())
+                    .transpose()?
+                    .unwrap_or(2.0),
+                deadline_ms: take_flag(&mut cmd, "--deadline-ms")
+                    .map(|s| s.parse::<u64>())
+                    .transpose()?,
+                interactive: take_flag(&mut cmd, "--interactive")
+                    .map(|s| s.parse::<f64>())
+                    .transpose()?
+                    .unwrap_or(0.0),
+                layers: take_flag(&mut cmd, "--layers")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()?
+                    .unwrap_or(2),
+                heads: take_flag(&mut cmd, "--heads")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()?
+                    .unwrap_or(cfg.model.heads),
+                shards: take_flag(&mut cmd, "--shards")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()?
+                    .unwrap_or(1),
+                leaders: take_flag(&mut cmd, "--leaders")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()?
+                    .unwrap_or(1),
+                max_workers: take_flag(&mut cmd, "--max-workers")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()?,
+                queue_cap: take_flag(&mut cmd, "--queue-cap")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()?,
+                slo_p99_ms: take_flag(&mut cmd, "--slo-p99-ms")
+                    .map(|s| s.parse::<f64>())
+                    .transpose()?,
+                json: take_switch(&mut cmd, "--json"),
+                junit: take_flag(&mut cmd, "--junit").map(PathBuf::from),
+            };
+            loadgen(&cfg, &args.artifacts, opts)
         }
         "replay" => {
             let overrides = ReplayOverrides {
@@ -365,6 +437,7 @@ fn serve(
     shards: usize,
     leaders: usize,
     max_workers: Option<usize>,
+    queue_cap: Option<usize>,
     precision: Precision,
     force_scalar: bool,
     record: Option<PathBuf>,
@@ -379,19 +452,23 @@ fn serve(
 
     let recorder = record.as_ref().map(|_| CaptureRecorder::new());
     let tracer = trace.as_ref().map(|_| SimTracer::new());
+    let mut svc_cfg = ServiceConfig {
+        layers,
+        shards,
+        leaders,
+        max_kernel_workers: max_workers,
+        precision,
+        force_scalar,
+        ..Default::default()
+    };
+    if let Some(cap) = queue_cap {
+        svc_cfg.queue_cap = cap;
+    }
     let svc = Service::start_with_hooks(
         artifacts.to_path_buf(),
         cfg.hardware.clone(),
         ModelConfig { heads, ..cfg.model.clone() },
-        ServiceConfig {
-            layers,
-            shards,
-            leaders,
-            max_kernel_workers: max_workers,
-            precision,
-            force_scalar,
-            ..Default::default()
-        },
+        svc_cfg,
         ServeHooks { recorder: recorder.clone(), tracer: tracer.clone() },
     )?;
     println!(
@@ -506,6 +583,175 @@ fn serve(
         let tracer = tracer.expect("tracer exists when --trace is set");
         tracer.save(path)?;
         println!("wrote {} batch timelines to {}", tracer.batches_recorded(), path.display());
+    }
+    Ok(())
+}
+
+/// Parsed `loadgen` options (one struct so the runner stays readable).
+struct LoadgenCli {
+    seed: u64,
+    rps: f64,
+    duration_s: f64,
+    deadline_ms: Option<u64>,
+    interactive: f64,
+    layers: usize,
+    heads: usize,
+    shards: usize,
+    leaders: usize,
+    max_workers: Option<usize>,
+    queue_cap: Option<usize>,
+    slo_p99_ms: Option<f64>,
+    json: bool,
+    junit: Option<PathBuf>,
+}
+
+/// Seeded open-loop load generation against an in-process service.
+/// Machine-readable output (CSV, or one JSON document with `--json`)
+/// goes to stdout; progress and the human summary go to stderr, so the
+/// data stream stays clean under redirection. Exits nonzero when the
+/// measured p99 exceeds `--slo-p99-ms` or any request fails outright
+/// (sheds are an expected overload outcome, not a failure).
+fn loadgen(cfg: &SystemConfig, artifacts: &Path, o: LoadgenCli) -> Result<()> {
+    use cpsaa::util::json::Json;
+    use cpsaa::util::junit::{JunitCase, JunitSuite};
+    use cpsaa::workload::loadgen as lg;
+
+    if !o.rps.is_finite() || o.rps <= 0.0 {
+        bail!("--rps must be a positive number, got {}", o.rps);
+    }
+    if !o.duration_s.is_finite() || o.duration_s <= 0.0 {
+        bail!("--duration must be positive seconds, got {}", o.duration_s);
+    }
+    if !(0.0..=1.0).contains(&o.interactive) {
+        bail!("--interactive must be a fraction in [0, 1], got {}", o.interactive);
+    }
+    let mut svc_cfg = ServiceConfig {
+        layers: o.layers,
+        shards: o.shards,
+        leaders: o.leaders,
+        max_kernel_workers: o.max_workers,
+        ..Default::default()
+    };
+    if let Some(cap) = o.queue_cap {
+        svc_cfg.queue_cap = cap;
+    }
+    let svc = Service::start(
+        artifacts.to_path_buf(),
+        cfg.hardware.clone(),
+        ModelConfig { heads: o.heads, ..cfg.model.clone() },
+        svc_cfg,
+    )?;
+    let gen_cfg = cpsaa::workload::LoadgenConfig {
+        seed: o.seed,
+        rps: o.rps,
+        duration: std::time::Duration::from_secs_f64(o.duration_s),
+        deadline: o.deadline_ms.map(std::time::Duration::from_millis),
+        interactive: o.interactive,
+    };
+    eprintln!(
+        "loadgen: seed {} rps {} duration {}s deadline {} interactive {} \
+         ({} layers, {} heads, {} shards, {} leaders)",
+        o.seed,
+        o.rps,
+        o.duration_s,
+        o.deadline_ms.map(|ms| format!("{ms}ms")).unwrap_or_else(|| "none".into()),
+        o.interactive,
+        o.layers,
+        o.heads,
+        o.shards,
+        o.leaders,
+    );
+    let report = lg::run(&svc, &gen_cfg, |line| eprintln!("loadgen: {line}"))?;
+
+    let p50_ms = report.latency.p50().as_secs_f64() * 1e3;
+    let p95_ms = report.latency.p95().as_secs_f64() * 1e3;
+    let p99_ms = report.latency.p99().as_secs_f64() * 1e3;
+    let mean_ms = report.latency.mean().as_secs_f64() * 1e3;
+    let max_ms = report.latency.max().as_secs_f64() * 1e3;
+    let slo_ok = o.slo_p99_ms.is_none_or(|slo| p99_ms <= slo);
+    let hard_failures = report.rejected + report.failed;
+
+    if o.json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("seed".to_string(), Json::Num(o.seed as f64));
+        obj.insert("rps".to_string(), Json::Num(o.rps));
+        obj.insert("duration_s".to_string(), Json::Num(o.duration_s));
+        obj.insert("offered".to_string(), Json::Num(report.offered as f64));
+        obj.insert("completed".to_string(), Json::Num(report.completed as f64));
+        obj.insert("shed_queue_full".to_string(), Json::Num(report.shed_queue_full as f64));
+        obj.insert("shed_deadline".to_string(), Json::Num(report.shed_deadline as f64));
+        obj.insert("rejected".to_string(), Json::Num(report.rejected as f64));
+        obj.insert("failed".to_string(), Json::Num(report.failed as f64));
+        obj.insert("wall_s".to_string(), Json::Num(report.wall.as_secs_f64()));
+        obj.insert("achieved_rps".to_string(), Json::Num(report.achieved_rps()));
+        obj.insert("p50_ms".to_string(), Json::Num(p50_ms));
+        obj.insert("p95_ms".to_string(), Json::Num(p95_ms));
+        obj.insert("p99_ms".to_string(), Json::Num(p99_ms));
+        obj.insert("mean_ms".to_string(), Json::Num(mean_ms));
+        obj.insert("max_ms".to_string(), Json::Num(max_ms));
+        obj.insert(
+            "slo_p99_ms".to_string(),
+            o.slo_p99_ms.map(Json::Num).unwrap_or(Json::Null),
+        );
+        obj.insert("slo_ok".to_string(), Json::Bool(slo_ok));
+        println!("{}", Json::Obj(obj));
+    } else {
+        println!("{}", lg::csv_header());
+        for row in &report.outcomes {
+            println!("{}", row.csv_row());
+        }
+    }
+    eprintln!(
+        "loadgen: offered {} completed {} shed {} (queue-full {} deadline {}) \
+         rejected {} failed {} over {:.2?} ({:.1} rps achieved)",
+        report.offered,
+        report.completed,
+        report.shed(),
+        report.shed_queue_full,
+        report.shed_deadline,
+        report.rejected,
+        report.failed,
+        report.wall,
+        report.achieved_rps(),
+    );
+    eprintln!(
+        "loadgen: latency mean {mean_ms:.3} ms  p50 {p50_ms:.3}  p95 {p95_ms:.3}  \
+         p99 {p99_ms:.3}  max {max_ms:.3}"
+    );
+
+    if let Some(path) = &o.junit {
+        let wall = report.wall.as_secs_f64();
+        let mut suite = JunitSuite::new("loadgen-slo-smoke");
+        suite.push(match o.slo_p99_ms {
+            Some(slo) if p99_ms > slo => JunitCase::failed(
+                "p99_slo",
+                "loadgen",
+                wall,
+                format!("p99 {p99_ms:.3} ms > SLO {slo:.3} ms"),
+            ),
+            _ => JunitCase::passed("p99_slo", "loadgen", wall),
+        });
+        suite.push(if hard_failures > 0 {
+            JunitCase::failed(
+                "all_requests_resolve",
+                "loadgen",
+                wall,
+                format!("{hard_failures} request(s) rejected or failed"),
+            )
+        } else {
+            JunitCase::passed("all_requests_resolve", "loadgen", wall)
+        });
+        suite.save(path)?;
+        eprintln!("loadgen: junit verdict written to {}", path.display());
+    }
+    if hard_failures > 0 {
+        bail!("{hard_failures} request(s) rejected or failed — see the outcome table");
+    }
+    if let Some(slo) = o.slo_p99_ms {
+        if p99_ms > slo {
+            bail!("p99 {p99_ms:.3} ms exceeds the SLO {slo:.3} ms");
+        }
+        eprintln!("loadgen: p99 {p99_ms:.3} ms within SLO {slo:.3} ms");
     }
     Ok(())
 }

@@ -28,6 +28,15 @@
 //! * **Values are schedule-invariant.** Every task writes only its own
 //!   output slot, so results are bit-identical at any worker count —
 //!   the invariant the fused-vs-unfused property grid pins.
+//! * **Two lanes, high first.** The queue is split into a high and a
+//!   normal lane ([`Lane`]). Idle workers always drain the high lane
+//!   before the normal one, so small interactive batches are not starved
+//!   behind bulk fan-outs. A job inherits the submitting thread's lane
+//!   ([`current_lane`], scoped via [`with_lane`]), and helpers adopt the
+//!   job's lane while running its tasks — nested fan-outs spawned from
+//!   inside a high-lane job land in the high lane too. Lanes reorder
+//!   *scheduling only*; values stay schedule-invariant, so bit-identity
+//!   across worker counts is unaffected.
 //!
 //! ## Sizing and the grain heuristic
 //!
@@ -40,10 +49,60 @@
 //! replacing the per-site thresholds the kernels and plan scans used to
 //! duplicate.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+
+/// Scheduling lane for a submitted fan-out. `High` jobs are drained by
+/// idle workers before any `Normal` job — the serving layer routes
+/// latency-sensitive batches here so they are not starved behind bulk
+/// work. Lanes never change values, only claim order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Lane {
+    High,
+    #[default]
+    Normal,
+}
+
+impl Lane {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Lane::High => "high",
+            Lane::Normal => "normal",
+        }
+    }
+}
+
+thread_local! {
+    static CURRENT_LANE: Cell<Lane> = const { Cell::new(Lane::Normal) };
+}
+
+/// The lane new fan-outs from this thread are submitted on.
+pub fn current_lane() -> Lane {
+    CURRENT_LANE.with(Cell::get)
+}
+
+/// Restores the previous lane on drop, so `with_lane` and `Job::help`
+/// unwind cleanly even when a task panics.
+struct LaneGuard(Lane);
+
+impl Drop for LaneGuard {
+    fn drop(&mut self) {
+        CURRENT_LANE.with(|c| c.set(self.0));
+    }
+}
+
+/// Run `f` with this thread's submission lane set to `lane`, restoring
+/// the previous lane afterwards (panic-safe). The leader loop wraps each
+/// batch execution in this so every nested fan-out (shards → heads →
+/// row ranges) inherits the batch's lane.
+pub fn with_lane<R>(lane: Lane, f: impl FnOnce() -> R) -> R {
+    let prev = CURRENT_LANE.with(|c| c.replace(lane));
+    let _restore = LaneGuard(prev);
+    f()
+}
 
 /// Work below this weight (mask cells, plan coordinates) runs serially
 /// on the caller: queueing it costs more than computing it. The one
@@ -64,6 +123,9 @@ struct Job {
     next: AtomicUsize,
     completed: AtomicUsize,
     total: usize,
+    /// The lane this job was submitted on; helpers adopt it while
+    /// claiming tasks so nested submissions inherit the priority.
+    lane: Lane,
     /// Set by the first panicking task: remaining tasks are skipped.
     poisoned: AtomicBool,
     data: *const (),
@@ -87,8 +149,12 @@ impl Job {
     }
 
     /// Claim and run task indices until none remain. `label` identifies
-    /// the helping thread in panic reports.
+    /// the helping thread in panic reports. The helper adopts the job's
+    /// lane for the duration, so fan-outs submitted from inside a task
+    /// queue at the same priority as the job itself.
     fn help(&self, label: &str) {
+        let prev = CURRENT_LANE.with(|c| c.replace(self.lane));
+        let _restore = LaneGuard(prev);
         loop {
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.total {
@@ -135,8 +201,20 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 }
 
 struct PoolState {
-    queue: VecDeque<Arc<Job>>,
+    /// Jobs submitted on [`Lane::High`]; always drained first.
+    high: VecDeque<Arc<Job>>,
+    /// Jobs submitted on [`Lane::Normal`].
+    normal: VecDeque<Arc<Job>>,
     shutdown: bool,
+}
+
+impl PoolState {
+    fn lane_queue(&mut self, lane: Lane) -> &mut VecDeque<Arc<Job>> {
+        match lane {
+            Lane::High => &mut self.high,
+            Lane::Normal => &mut self.normal,
+        }
+    }
 }
 
 struct Shared {
@@ -162,7 +240,11 @@ impl Executor {
     pub fn new(workers: usize) -> Self {
         assert!(workers >= 1, "executor needs at least one worker");
         let shared = Arc::new(Shared {
-            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            state: Mutex::new(PoolState {
+                high: VecDeque::new(),
+                normal: VecDeque::new(),
+                shutdown: false,
+            }),
             available: Condvar::new(),
         });
         for index in 0..workers - 1 {
@@ -232,10 +314,12 @@ impl Executor {
         }
 
         let ctx = Ctx { items: items.as_mut_ptr(), results: results.as_mut_ptr(), f: &f };
+        let lane = current_lane();
         let job = Arc::new(Job {
             next: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
             total,
+            lane,
             poisoned: AtomicBool::new(false),
             data: &ctx as *const Ctx<'_, T, R, F> as *const (),
             runner: run_one::<T, R, F>,
@@ -247,7 +331,7 @@ impl Executor {
         // Enqueue for the pool, then work the job from this thread too.
         {
             let mut state = self.shared.state.lock().unwrap();
-            state.queue.push_back(job.clone());
+            state.lane_queue(lane).push_back(job.clone());
         }
         self.shared.available.notify_all();
         job.help("caller");
@@ -257,6 +341,14 @@ impl Executor {
             panic!("executor worker {label} panicked: {msg}");
         }
         results.into_iter().map(|r| r.expect("claimed task left no result")).collect()
+    }
+
+    /// Current (high, normal) queue lengths, exhausted jobs included —
+    /// test instrumentation for the lane-ordering harness.
+    #[cfg(test)]
+    fn queue_depths(&self) -> (usize, usize) {
+        let state = self.shared.state.lock().unwrap();
+        (state.high.len(), state.normal.len())
     }
 }
 
@@ -269,22 +361,26 @@ impl Drop for Executor {
     }
 }
 
-/// Background worker: take the front job, help until it is exhausted,
-/// repeat. Jobs stay at the front while unexhausted so *every* idle
-/// worker piles onto the same fan-out (the flat-queue invariant).
+/// Background worker: take the front job — high lane before normal —
+/// and help until it is exhausted, repeat. Jobs stay at the front while
+/// unexhausted so *every* idle worker piles onto the same fan-out (the
+/// flat-queue invariant, now per lane).
 fn worker_loop(shared: Arc<Shared>, index: usize) {
     let label = index.to_string();
     loop {
         let job = {
             let mut state = shared.state.lock().unwrap();
             loop {
-                while state.queue.front().is_some_and(|j| j.exhausted()) {
-                    state.queue.pop_front();
+                while state.high.front().is_some_and(|j| j.exhausted()) {
+                    state.high.pop_front();
+                }
+                while state.normal.front().is_some_and(|j| j.exhausted()) {
+                    state.normal.pop_front();
                 }
                 if state.shutdown {
                     return;
                 }
-                if let Some(job) = state.queue.front() {
+                if let Some(job) = state.high.front().or_else(|| state.normal.front()) {
                     break job.clone();
                 }
                 state = shared.available.wait(state).unwrap();
@@ -484,5 +580,88 @@ mod tests {
         let b = global();
         assert!(Arc::ptr_eq(&a, &b) || a.workers() == b.workers());
         assert!(a.workers() >= 1);
+    }
+
+    #[test]
+    fn with_lane_scopes_and_restores() {
+        assert_eq!(current_lane(), Lane::Normal);
+        assert_eq!(with_lane(Lane::High, current_lane), Lane::High);
+        assert_eq!(current_lane(), Lane::Normal);
+        // Restores across a panic too (the guard is drop-based).
+        let blast = catch_unwind(AssertUnwindSafe(|| {
+            with_lane(Lane::High, || panic!("boom"))
+        }));
+        assert!(blast.is_err());
+        assert_eq!(current_lane(), Lane::Normal);
+    }
+
+    #[test]
+    fn tasks_inherit_the_submitters_lane() {
+        // Every task of a high-lane job observes the high lane no matter
+        // which thread claims it — so nested fan-outs submitted from
+        // inside those tasks land in the high queue too.
+        let exec = Executor::new(3);
+        let items: Vec<usize> = (0..8).collect();
+        let lanes = with_lane(Lane::High, || exec.map(&items, |_| current_lane()));
+        assert!(lanes.iter().all(|&l| l == Lane::High), "{lanes:?}");
+        assert_eq!(current_lane(), Lane::Normal);
+        // Workers restore their own lane after helping a high job.
+        let after = exec.map(&items, |_| current_lane());
+        assert!(after.iter().all(|&l| l == Lane::Normal), "{after:?}");
+    }
+
+    #[test]
+    fn idle_workers_drain_the_high_lane_first() {
+        // caller thread + one background worker
+        let exec = Executor::new(2);
+        // (lane, ran on a pool worker thread) in task start order
+        let order: Mutex<Vec<(Lane, bool)>> = Mutex::new(Vec::new());
+        let started = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            // Plug the pool: a 2-task normal job parks its submitter and
+            // the background worker until one high and one normal
+            // contender are queued behind it (the plug itself stays in
+            // the normal queue until a worker pops it, hence (1, 2)).
+            s.spawn(|| {
+                exec.map(&[0usize, 1], |_| {
+                    started.fetch_add(1, Ordering::SeqCst);
+                    while exec.queue_depths() != (1, 2) {
+                        std::thread::yield_now();
+                    }
+                });
+            });
+            while started.load(Ordering::SeqCst) < 2 {
+                std::thread::yield_now();
+            }
+            let record = |lane: Lane| {
+                let worker = std::thread::current()
+                    .name()
+                    .is_some_and(|n| n.starts_with("cpsaa-exec"));
+                order.lock().unwrap().push((lane, worker));
+                // Long enough that the freed worker reaches the queue
+                // while both contender jobs still have unclaimed tasks.
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            };
+            // Normal contender first, then the high one; the plug
+            // releases only once both are enqueued.
+            s.spawn(|| {
+                exec.map(&[0usize, 1, 2], |_| record(Lane::Normal));
+            });
+            while exec.queue_depths() != (0, 2) {
+                std::thread::yield_now();
+            }
+            s.spawn(|| {
+                with_lane(Lane::High, || exec.map(&[0usize, 1, 2], |_| record(Lane::High)));
+            });
+        });
+        // The freed background worker must have picked the high job even
+        // though the normal contender was enqueued first.
+        let order = order.into_inner().unwrap();
+        let first_worker_task = order.iter().find(|(_, worker)| *worker);
+        assert_eq!(
+            first_worker_task,
+            Some(&(Lane::High, true)),
+            "worker drained the wrong lane first: {order:?}"
+        );
     }
 }

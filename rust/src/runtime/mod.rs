@@ -13,4 +13,4 @@ pub mod executor;
 
 pub use artifact::{ArtifactSet, Fixtures, Manifest};
 pub use engine::{EncoderHeadsExec, Engine, EngineStats};
-pub use executor::Executor;
+pub use executor::{Executor, Lane};

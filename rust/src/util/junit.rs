@@ -1,0 +1,171 @@
+//! Minimal JUnit XML writer — the in-tree replacement for a reporting
+//! crate in this offline, zero-dependency build.
+//!
+//! Emits the single-suite subset every CI system understands
+//! (`<testsuite>` with `<testcase>` children, failures as `<failure>`
+//! elements), so gates like the loadgen SLO smoke can publish a
+//! machine-readable verdict via `actions/upload-artifact` next to their
+//! human-readable logs.
+
+use std::path::Path;
+
+use crate::util::error::{Context, Result};
+
+/// One test case: a named check with an optional failure message.
+#[derive(Clone, Debug)]
+pub struct JunitCase {
+    /// Case name, e.g. `p99_slo`.
+    pub name: String,
+    /// Grouping label rendered as the JUnit `classname`.
+    pub classname: String,
+    /// Wall-clock seconds the check took (0.0 when not meaningful).
+    pub time_s: f64,
+    /// `Some(message)` marks the case failed.
+    pub failure: Option<String>,
+}
+
+impl JunitCase {
+    pub fn passed(name: impl Into<String>, classname: impl Into<String>, time_s: f64) -> Self {
+        Self { name: name.into(), classname: classname.into(), time_s, failure: None }
+    }
+
+    pub fn failed(
+        name: impl Into<String>,
+        classname: impl Into<String>,
+        time_s: f64,
+        message: impl Into<String>,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            classname: classname.into(),
+            time_s,
+            failure: Some(message.into()),
+        }
+    }
+}
+
+/// One `<testsuite>` of cases.
+#[derive(Clone, Debug)]
+pub struct JunitSuite {
+    pub name: String,
+    pub cases: Vec<JunitCase>,
+}
+
+impl JunitSuite {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), cases: Vec::new() }
+    }
+
+    pub fn push(&mut self, case: JunitCase) {
+        self.cases.push(case);
+    }
+
+    /// Failed cases in the suite.
+    pub fn failures(&self) -> usize {
+        self.cases.iter().filter(|c| c.failure.is_some()).count()
+    }
+
+    /// Render the suite as a standalone JUnit XML document.
+    pub fn to_xml(&self) -> String {
+        let mut out = String::from("<?xml version=\"1.0\" encoding=\"UTF-8\"?>\n");
+        out.push_str(&format!(
+            "<testsuite name=\"{}\" tests=\"{}\" failures=\"{}\" errors=\"0\" skipped=\"0\">\n",
+            escape(&self.name),
+            self.cases.len(),
+            self.failures(),
+        ));
+        for case in &self.cases {
+            out.push_str(&format!(
+                "  <testcase name=\"{}\" classname=\"{}\" time=\"{:.6}\"",
+                escape(&case.name),
+                escape(&case.classname),
+                case.time_s,
+            ));
+            match &case.failure {
+                None => out.push_str("/>\n"),
+                Some(msg) => {
+                    out.push_str(&format!(
+                        ">\n    <failure message=\"{}\">{}</failure>\n  </testcase>\n",
+                        escape(msg),
+                        escape(msg),
+                    ));
+                }
+            }
+        }
+        out.push_str("</testsuite>\n");
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_xml())
+            .with_context(|| format!("writing junit xml {}", path.display()))
+    }
+}
+
+/// Escape the five XML-special characters (used in both attribute and
+/// text position, so quotes are escaped too).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            '\'' => out.push_str("&apos;"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_passing_suite() {
+        let mut suite = JunitSuite::new("slo-smoke");
+        suite.push(JunitCase::passed("p99_slo", "loadgen", 1.25));
+        suite.push(JunitCase::passed("shed_rate", "loadgen", 0.0));
+        let xml = suite.to_xml();
+        assert!(xml.starts_with("<?xml version=\"1.0\""), "{xml}");
+        assert!(xml.contains("<testsuite name=\"slo-smoke\" tests=\"2\" failures=\"0\""), "{xml}");
+        assert!(xml.contains("<testcase name=\"p99_slo\""), "{xml}");
+        assert!(xml.contains("classname=\"loadgen\" time=\"1.250000\"/>"), "{xml}");
+        assert!(!xml.contains("<failure"));
+        assert!(xml.trim_end().ends_with("</testsuite>"));
+    }
+
+    #[test]
+    fn failure_carries_message_and_count() {
+        let mut suite = JunitSuite::new("slo-smoke");
+        suite.push(JunitCase::failed("p99_slo", "loadgen", 2.0, "p99 81ms > SLO 50ms"));
+        assert_eq!(suite.failures(), 1);
+        let xml = suite.to_xml();
+        assert!(xml.contains("failures=\"1\""), "{xml}");
+        assert!(xml.contains("<failure message=\"p99 81ms &gt; SLO 50ms\">"), "{xml}");
+        assert!(xml.contains("</testcase>"));
+    }
+
+    #[test]
+    fn xml_specials_escaped_everywhere() {
+        let mut suite = JunitSuite::new("a<b>&\"c\"'d'");
+        suite.push(JunitCase::failed("n<&>", "c\"lass", 0.0, "<&\"'>"));
+        let xml = suite.to_xml();
+        assert!(xml.contains("name=\"a&lt;b&gt;&amp;&quot;c&quot;&apos;d&apos;\""), "{xml}");
+        assert!(xml.contains("message=\"&lt;&amp;&quot;&apos;&gt;\""), "{xml}");
+        assert!(!xml.contains("<&"), "raw specials must not survive: {xml}");
+    }
+
+    #[test]
+    fn save_round_trips_through_disk() {
+        let path = std::env::temp_dir().join(format!("cpsaa-junit-{}.xml", std::process::id()));
+        let mut suite = JunitSuite::new("disk");
+        suite.push(JunitCase::passed("case", "class", 0.5));
+        suite.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, suite.to_xml());
+        std::fs::remove_file(&path).ok();
+    }
+}

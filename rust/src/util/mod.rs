@@ -16,10 +16,13 @@
 //!   (N random cases + failure seed reporting).
 //! * [`par`] — scoped parallel map (one worker per item) shared by the
 //!   per-head fan-out paths.
+//! * [`junit`] — minimal JUnit XML writer so CI gates (the loadgen SLO
+//!   smoke) publish machine-readable pass/fail artifacts.
 
 pub mod bench;
 pub mod error;
 pub mod json;
+pub mod junit;
 pub mod par;
 pub mod prop;
 pub mod tomlmini;

@@ -1,0 +1,392 @@
+//! Seeded open-loop load generator for the serving stack.
+//!
+//! [`schedule`] expands a seed into a deterministic arrival plan — a
+//! Poisson process at the configured offered rate, per-request payload
+//! sizes, and interactive (high-lane) marks — entirely from
+//! [`SeededRng`], so the same seed always produces the same offered
+//! load, byte for byte. [`run`] then paces that plan against an
+//! in-process [`Service`] in open-loop fashion (submissions happen at
+//! their scheduled instants whether or not earlier replies have
+//! arrived: exactly the regime that exercises continuous batching,
+//! deadline shedding, and queue-full backpressure) and collects every
+//! typed outcome into a [`LoadgenReport`].
+//!
+//! Latencies in the report are the server-measured submit→reply
+//! durations ([`InferenceResponse::latency`]), the same quantity the
+//! service's own histogram tracks — the CI SLO smoke gates on the p99
+//! of this distribution.
+//!
+//! [`InferenceResponse::latency`]: crate::coordinator::InferenceResponse
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    LatencyHistogram, ServeError, ServeResult, Service, ShedReason, SubmitOptions,
+};
+use crate::runtime::Lane;
+use crate::tensor::SeededRng;
+use crate::util::error::Result;
+
+/// Load-generation parameters. Everything observable about the offered
+/// load derives from these fields alone.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Master seed: drives arrivals, payload sizes, lane marks, and the
+    /// per-request payload contents.
+    pub seed: u64,
+    /// Offered load — the rate of the Poisson arrival process, in
+    /// requests per second.
+    pub rps: f64,
+    /// Horizon of the arrival schedule (arrivals land strictly before
+    /// it; the run itself also waits for every reply).
+    pub duration: Duration,
+    /// Per-request deadline forwarded to [`SubmitOptions::deadline`];
+    /// `None` submits without deadlines.
+    pub deadline: Option<Duration>,
+    /// Fraction of requests marked interactive ([`Lane::High`]),
+    /// clamped to [0, 1] by construction of the uniform draw.
+    pub interactive: f64,
+}
+
+/// One planned request: when it is submitted, how big it is, and on
+/// which lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScheduledRequest {
+    pub id: u64,
+    /// Offset from the start of the run at which this request submits.
+    pub at: Duration,
+    /// Payload rows, uniform in `[1, seq_len]`.
+    pub rows: usize,
+    pub lane: Lane,
+}
+
+/// What happened to one scheduled request, in schedule order.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub id: u64,
+    /// Scheduled submit offset (not the wall-clock submit instant).
+    pub at: Duration,
+    pub rows: usize,
+    pub lane: Lane,
+    /// `ok`, `shed-queue-full`, `shed-deadline`, `rejected`, `failed`,
+    /// or `dropped` (reply channel died with the serving side).
+    pub outcome: &'static str,
+    /// Server-measured submit→reply latency; `Some` only for `ok`.
+    pub latency: Option<Duration>,
+    /// Leader that executed the request's batch; `Some` only for `ok`.
+    pub leader: Option<usize>,
+}
+
+/// Header matching [`RequestOutcome::csv_row`].
+pub fn csv_header() -> &'static str {
+    "id,at_ms,rows,lane,outcome,latency_ms,leader"
+}
+
+impl RequestOutcome {
+    /// One CSV line; empty cells where the outcome carries no latency
+    /// or leader.
+    pub fn csv_row(&self) -> String {
+        let latency = self
+            .latency
+            .map(|d| format!("{:.3}", d.as_secs_f64() * 1e3))
+            .unwrap_or_default();
+        let leader = self.leader.map(|l| l.to_string()).unwrap_or_default();
+        format!(
+            "{},{:.3},{},{},{},{latency},{leader}",
+            self.id,
+            self.at.as_secs_f64() * 1e3,
+            self.rows,
+            self.lane.as_str(),
+            self.outcome,
+        )
+    }
+}
+
+/// Everything a run observed: per-outcome counters, the completed
+/// requests' latency distribution, and the full per-request outcome
+/// table (schedule order) for the CSV dump.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    /// Requests the schedule offered (== `outcomes.len()`).
+    pub offered: usize,
+    pub completed: usize,
+    pub shed_queue_full: usize,
+    pub shed_deadline: usize,
+    pub rejected: usize,
+    pub failed: usize,
+    /// Submit of the first request to reply of the last.
+    pub wall: Duration,
+    /// Server-measured submit→reply latencies of completed requests.
+    pub latency: LatencyHistogram,
+    pub outcomes: Vec<RequestOutcome>,
+}
+
+impl LoadgenReport {
+    /// Requests shed for backpressure (queue full or deadline expired).
+    pub fn shed(&self) -> usize {
+        self.shed_queue_full + self.shed_deadline
+    }
+
+    /// Completed-request throughput over the whole run.
+    pub fn achieved_rps(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Expand the config into its deterministic arrival plan. Pure: the
+/// same `(cfg, seq_len)` always yields the same schedule, and the
+/// schedule never depends on wall-clock time or service behavior.
+pub fn schedule(cfg: &LoadgenConfig, seq_len: usize) -> Vec<ScheduledRequest> {
+    assert!(cfg.rps.is_finite() && cfg.rps > 0.0, "rps must be positive, got {}", cfg.rps);
+    assert!(seq_len > 0, "seq_len must be >= 1");
+    let mut rng = SeededRng::new(cfg.seed);
+    let horizon = cfg.duration.as_secs_f64();
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        // Exponential inter-arrival via inverse CDF: `uniform()` is in
+        // [0, 1), so `1 - u` is in (0, 1] and the log stays finite.
+        let u = rng.uniform() as f64;
+        t += -(1.0 - u).ln() / cfg.rps;
+        if t >= horizon {
+            break;
+        }
+        let rows = 1 + rng.gen_range_usize(0, seq_len);
+        let lane =
+            if (rng.uniform() as f64) < cfg.interactive { Lane::High } else { Lane::Normal };
+        out.push(ScheduledRequest {
+            id: out.len() as u64,
+            at: Duration::from_secs_f64(t),
+            rows,
+            lane,
+        });
+    }
+    out
+}
+
+/// Per-request payload stream, decorrelated from the schedule stream so
+/// neither perturbs the other as the generator evolves.
+fn payload_seed(seed: u64, id: u64) -> u64 {
+    seed ^ id.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+/// Pace the seed's schedule against `svc` and collect every outcome.
+/// Open loop: each request submits at its scheduled instant (or as soon
+/// after as the pacing thread can manage), and replies are collected
+/// only after the last submission — reply channels buffer, so late
+/// collection never throttles the offered load. `progress` receives a
+/// short status line roughly once a second of pacing.
+pub fn run(
+    svc: &Service,
+    cfg: &LoadgenConfig,
+    mut progress: impl FnMut(String),
+) -> Result<LoadgenReport> {
+    let (seq_len, d_model) = (svc.model().seq_len, svc.model().d_model);
+    let sched = schedule(cfg, seq_len);
+    let start = Instant::now();
+    let mut pending: Vec<std::sync::mpsc::Receiver<ServeResult>> =
+        Vec::with_capacity(sched.len());
+    let mut last_tick = 0u64;
+    for s in &sched {
+        let now = start.elapsed();
+        if s.at > now {
+            std::thread::sleep(s.at - now);
+        }
+        let x = SeededRng::new(payload_seed(cfg.seed, s.id)).normal_matrix(s.rows, d_model, 1.0);
+        let opts = SubmitOptions { deadline: cfg.deadline, lane: s.lane };
+        pending.push(svc.submit_with(s.id, x, opts)?);
+        let tick = start.elapsed().as_secs();
+        if tick > last_tick {
+            last_tick = tick;
+            progress(format!("t={tick}s: {}/{} submitted", pending.len(), sched.len()));
+        }
+    }
+    let mut latency = LatencyHistogram::new();
+    let mut outcomes = Vec::with_capacity(sched.len());
+    let mut completed = 0usize;
+    let mut shed_queue_full = 0usize;
+    let mut shed_deadline = 0usize;
+    let mut rejected = 0usize;
+    let mut failed = 0usize;
+    for (s, rx) in sched.iter().zip(pending) {
+        let (outcome, lat, leader) = match rx.recv() {
+            Ok(Ok(resp)) => {
+                completed += 1;
+                latency.record(resp.latency);
+                ("ok", Some(resp.latency), Some(resp.leader))
+            }
+            Ok(Err(ServeError::Shed(ShedReason::QueueFull))) => {
+                shed_queue_full += 1;
+                ("shed-queue-full", None, None)
+            }
+            Ok(Err(ServeError::Shed(ShedReason::DeadlineExpired))) => {
+                shed_deadline += 1;
+                ("shed-deadline", None, None)
+            }
+            Ok(Err(ServeError::Rejected(_))) => {
+                rejected += 1;
+                ("rejected", None, None)
+            }
+            Ok(Err(ServeError::Failed(_))) => {
+                failed += 1;
+                ("failed", None, None)
+            }
+            // The reply sender dropped without a verdict: the serving
+            // side died out from under the request.
+            Err(_) => {
+                failed += 1;
+                ("dropped", None, None)
+            }
+        };
+        outcomes.push(RequestOutcome {
+            id: s.id,
+            at: s.at,
+            rows: s.rows,
+            lane: s.lane,
+            outcome,
+            latency: lat,
+            leader,
+        });
+    }
+    Ok(LoadgenReport {
+        offered: sched.len(),
+        completed,
+        shed_queue_full,
+        shed_deadline,
+        rejected,
+        failed,
+        wall: start.elapsed(),
+        latency,
+        outcomes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, ModelConfig};
+    use crate::coordinator::ServiceConfig;
+
+    fn cfg(seed: u64) -> LoadgenConfig {
+        LoadgenConfig {
+            seed,
+            rps: 500.0,
+            duration: Duration::from_secs(2),
+            deadline: None,
+            interactive: 0.25,
+        }
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_schedule() {
+        let a = schedule(&cfg(7), 320);
+        let b = schedule(&cfg(7), 320);
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seed_changes_the_schedule() {
+        let a = schedule(&cfg(7), 320);
+        let b = schedule(&cfg(8), 320);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn schedule_stays_inside_its_contract() {
+        let c = cfg(11);
+        let sched = schedule(&c, 320);
+        // Poisson at 500 rps over 2 s: ~1000 arrivals; even a very
+        // unlucky seed stays in a wide band around the mean.
+        assert!(sched.len() > 500 && sched.len() < 1500, "{}", sched.len());
+        let mut prev = Duration::ZERO;
+        for (i, s) in sched.iter().enumerate() {
+            assert_eq!(s.id, i as u64);
+            assert!(s.at >= prev, "arrivals must be time-ordered");
+            assert!(s.at < c.duration, "arrival past the horizon");
+            assert!((1..=320).contains(&s.rows), "rows {} out of range", s.rows);
+            prev = s.at;
+        }
+        let high = sched.iter().filter(|s| s.lane == Lane::High).count();
+        assert!(high > 0 && high < sched.len(), "interactive=0.25 must mix lanes");
+        let none = LoadgenConfig { interactive: 0.0, ..c.clone() };
+        assert!(schedule(&none, 320).iter().all(|s| s.lane == Lane::Normal));
+        let all = LoadgenConfig { interactive: 1.0, ..c };
+        assert!(schedule(&all, 320).iter().all(|s| s.lane == Lane::High));
+    }
+
+    #[test]
+    fn csv_rows_match_the_header_column_count() {
+        let cols = csv_header().split(',').count();
+        let ok = RequestOutcome {
+            id: 3,
+            at: Duration::from_millis(12),
+            rows: 17,
+            lane: Lane::High,
+            outcome: "ok",
+            latency: Some(Duration::from_micros(2500)),
+            leader: Some(1),
+        };
+        let row = ok.csv_row();
+        assert_eq!(row.split(',').count(), cols, "{row}");
+        assert_eq!(row, "3,12.000,17,high,ok,2.500,1");
+        let shed = RequestOutcome {
+            outcome: "shed-queue-full",
+            latency: None,
+            leader: None,
+            lane: Lane::Normal,
+            ..ok
+        };
+        let row = shed.csv_row();
+        assert_eq!(row.split(',').count(), cols, "{row}");
+        assert_eq!(row, "3,12.000,17,normal,shed-queue-full,,");
+    }
+
+    #[test]
+    fn run_accounts_for_every_scheduled_request() {
+        let dir = std::env::temp_dir().join(format!("cpsaa-loadgen-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 16,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            ..ModelConfig::default()
+        };
+        crate::runtime::ArtifactSet::synthesize(&dir, &model, 5).unwrap();
+        let svc = Service::start(
+            dir.clone(),
+            HardwareConfig::paper(),
+            model,
+            ServiceConfig {
+                layers: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let lg = LoadgenConfig {
+            seed: 13,
+            rps: 400.0,
+            duration: Duration::from_millis(150),
+            deadline: None,
+            interactive: 0.5,
+        };
+        let mut lines = Vec::new();
+        let report = run(&svc, &lg, |l| lines.push(l)).unwrap();
+        assert_eq!(report.offered, report.outcomes.len());
+        assert!(report.offered > 0);
+        let accounted = report.completed
+            + report.shed_queue_full
+            + report.shed_deadline
+            + report.rejected
+            + report.failed;
+        assert_eq!(accounted, report.offered, "every request gets exactly one outcome");
+        // No deadline and a deep queue: nothing sheds, everything lands.
+        assert_eq!(report.completed, report.offered);
+        assert_eq!(report.latency.count(), report.completed as u64);
+        assert!(report.latency.p99() >= report.latency.p50());
+        assert!(report.achieved_rps() > 0.0);
+        drop(svc);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -7,12 +7,19 @@
 //! from the seeded RNG, and a pruning mask whose density matches the
 //! dataset's characterization (or, in `exact` mode, the mask the golden
 //! model actually generates).
+//!
+//! [`capture`] records and replays served batches bit-identically;
+//! [`loadgen`] expands a seed into a deterministic open-loop arrival
+//! schedule and drives the serving stack at a fixed offered load (the
+//! CI p99 SLO smoke runs on it).
 
 mod batch;
 pub mod capture;
+pub mod loadgen;
 mod trace;
 
 pub use batch::{Batch, BatchStats};
+pub use loadgen::{LoadgenConfig, LoadgenReport, RequestOutcome, ScheduledRequest};
 pub use capture::{
     BatchTraceRecord, Capture, CaptureConfig, CaptureRecorder, RecordedBatch, RecordedRequest,
     RecordedResponse, ReplayOverrides, ReplayReport, SimTracer,

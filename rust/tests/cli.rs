@@ -646,6 +646,170 @@ fn synth_artifacts_subcommand_serves() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Like `cpsaa`, but keeps stdout and stderr apart — loadgen promises a
+/// clean machine-readable stream on stdout.
+fn cpsaa_split(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_cpsaa"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn cpsaa");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn loadgen_csv_is_seed_deterministic_end_to_end() {
+    let art = synth_artifacts("loadgen", 2);
+    let args = [
+        "--artifacts",
+        art.to_str().unwrap(),
+        "loadgen",
+        "--seed",
+        "7",
+        "--rps",
+        "150",
+        "--duration",
+        "0.3",
+        "--layers",
+        "1",
+        "--heads",
+        "2",
+    ];
+    let (ok, csv_a, err_a) = cpsaa_split(&args);
+    assert!(ok, "{csv_a}{err_a}");
+    assert!(csv_a.starts_with("id,at_ms,rows,lane,outcome,latency_ms,leader"), "{csv_a}");
+    assert!(csv_a.lines().count() > 10, "{csv_a}");
+    // the human-readable summary stays on stderr
+    assert!(err_a.contains("latency"), "{err_a}");
+    assert!(err_a.contains("offered"), "{err_a}");
+    let (ok, csv_b, err_b) = cpsaa_split(&args);
+    assert!(ok, "{csv_b}{err_b}");
+    // Same --seed, same schedule: the id/at_ms/rows/lane columns are
+    // byte-identical run to run. Outcome, latency, and leader columns
+    // are wall-clock- and scheduling-dependent, so only the schedule
+    // prefix is compared.
+    let sched = |csv: &str| -> Vec<String> {
+        csv.lines()
+            .map(|l| l.split(',').take(4).collect::<Vec<_>>().join(","))
+            .collect()
+    };
+    assert_eq!(sched(&csv_a), sched(&csv_b));
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn loadgen_json_junit_and_slo_gate() {
+    use cpsaa::util::json::Json;
+    let art = synth_artifacts("loadgen-slo", 2);
+    let junit = std::env::temp_dir().join(format!("cpsaa-cli-junit-{}.xml", std::process::id()));
+    let base = [
+        "--artifacts",
+        art.to_str().unwrap(),
+        "loadgen",
+        "--seed",
+        "7",
+        "--rps",
+        "120",
+        "--duration",
+        "0.25",
+        "--layers",
+        "1",
+        "--heads",
+        "2",
+        "--interactive",
+        "0.5",
+        "--deadline-ms",
+        "5000",
+        "--json",
+        "--junit",
+        junit.to_str().unwrap(),
+        "--slo-p99-ms",
+    ];
+    // A generous SLO passes and emits one JSON document instead of CSV.
+    let mut args: Vec<&str> = base.to_vec();
+    args.push("60000");
+    let (ok, stdout, stderr) = cpsaa_split(&args);
+    assert!(ok, "{stdout}{stderr}");
+    assert!(!stdout.contains("id,at_ms"), "CSV must be suppressed under --json: {stdout}");
+    let doc = Json::parse(&stdout).unwrap();
+    assert!(doc.get("offered").unwrap().as_usize().unwrap() > 0);
+    assert!(doc.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(doc.get("slo_ok").unwrap(), &Json::Bool(true));
+    let xml = std::fs::read_to_string(&junit).unwrap();
+    assert!(xml.contains("<testsuite name=\"loadgen-slo-smoke\""), "{xml}");
+    assert!(xml.contains("failures=\"0\""), "{xml}");
+    assert!(xml.contains("p99_slo"), "{xml}");
+
+    // An impossible SLO exits nonzero — and the JUnit verdict written
+    // just before the gate carries the failure for CI to upload.
+    let mut args: Vec<&str> = base.to_vec();
+    args.push("0.000001");
+    let (ok, stdout, stderr) = cpsaa_split(&args);
+    assert!(!ok, "sub-microsecond SLO must fail: {stdout}{stderr}");
+    assert!(stderr.contains("exceeds the SLO"), "{stderr}");
+    let doc = Json::parse(&stdout).unwrap();
+    assert_eq!(doc.get("slo_ok").unwrap(), &Json::Bool(false));
+    let xml = std::fs::read_to_string(&junit).unwrap();
+    assert!(xml.contains("failures=\"1\""), "{xml}");
+    assert!(xml.contains("<failure message=\"p99"), "{xml}");
+
+    std::fs::remove_file(&junit).ok();
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn loadgen_sheds_everything_under_zero_queue_cap() {
+    // --queue-cap 0 is the drain drill: every live request sheds with
+    // the typed queue-full status, which is backpressure, not failure —
+    // the run still exits 0.
+    let art = synth_artifacts("loadgen-shed", 2);
+    let (ok, stdout, stderr) = cpsaa_split(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "loadgen",
+        "--seed",
+        "3",
+        "--rps",
+        "200",
+        "--duration",
+        "0.2",
+        "--layers",
+        "1",
+        "--heads",
+        "2",
+        "--queue-cap",
+        "0",
+    ]);
+    assert!(ok, "sheds are not failures: {stdout}{stderr}");
+    let rows: Vec<&str> = stdout.lines().skip(1).collect();
+    assert!(!rows.is_empty(), "{stdout}");
+    for row in &rows {
+        assert!(row.contains(",shed-queue-full,,"), "{row}");
+    }
+    assert!(stderr.contains("queue-full"), "{stderr}");
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn loadgen_rejects_bad_parameters() {
+    let art = synth_artifacts("loadgen-bad", 2);
+    let (ok, text) = cpsaa(&["--artifacts", art.to_str().unwrap(), "loadgen", "--rps", "0"]);
+    assert!(!ok);
+    assert!(text.contains("--rps"), "{text}");
+    let (ok, text) = cpsaa(&["--artifacts", art.to_str().unwrap(), "loadgen", "--duration", "-1"]);
+    assert!(!ok);
+    assert!(text.contains("--duration"), "{text}");
+    let (ok, text) =
+        cpsaa(&["--artifacts", art.to_str().unwrap(), "loadgen", "--interactive", "1.5"]);
+    assert!(!ok);
+    assert!(text.contains("--interactive"), "{text}");
+    std::fs::remove_dir_all(&art).ok();
+}
+
 #[test]
 fn check_verifies_artifacts_when_present() {
     let has_artifacts =

@@ -9,11 +9,12 @@
 //! `replay` binary path.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use cpsaa::attention::Precision;
 use cpsaa::config::{HardwareConfig, ModelConfig, SystemConfig};
-use cpsaa::coordinator::{ServeHooks, Service, ServiceConfig};
-use cpsaa::runtime::ArtifactSet;
+use cpsaa::coordinator::{ServeHooks, Service, ServiceConfig, SubmitOptions};
+use cpsaa::runtime::{ArtifactSet, Lane};
 use cpsaa::tensor::{Matrix, SeededRng};
 use cpsaa::workload::capture::{
     self, Capture, CaptureConfig, CaptureRecorder, ReplayOverrides, SimTracer,
@@ -180,6 +181,73 @@ fn replay_detects_tampered_bits() {
     bad.batches[0].requests[0].response.sim_ns += 1.0;
     capture::replay(&bad, &dir, ReplayOverrides { shards: Some(2), ..Default::default() }, None)
         .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The acceptance property for continuous batching: batch composition
+/// under live admission is decided by arrival timing and window
+/// formation — inherently nondeterministic — but whatever composition
+/// was *realized* is recorded as atomic groups, so the capture still
+/// replays bit-identically at a completely different topology.
+#[test]
+fn live_continuous_batching_capture_replays_across_topologies() {
+    let dir = std::env::temp_dir().join(format!("cpsaa-replay-live-{}", std::process::id()));
+    let m = model();
+    ArtifactSet::synthesize(&dir, &m, 61).unwrap();
+    let recorder = CaptureRecorder::new();
+    let svc = Service::start_with_hooks(
+        dir.clone(),
+        HardwareConfig::paper(),
+        m,
+        ServiceConfig {
+            layers: 2,
+            shards: 1,
+            leaders: 2,
+            max_wait: Duration::from_millis(5),
+            max_kernel_workers: Some(2),
+            ..Default::default()
+        },
+        ServeHooks { recorder: Some(recorder.clone()), tracer: None },
+    )
+    .unwrap();
+    // Live traffic through the continuous-batching admission path: a
+    // mix of normal and high-lane requests, submitted open-loop so
+    // several can share (or split across) windows however the two
+    // leaders' timing falls out.
+    let mut rng = SeededRng::new(161);
+    let mut rxs = Vec::new();
+    for id in 0..10u64 {
+        let rows = 4 + rng.gen_range_usize(0, 8);
+        let x = rng.normal_matrix(rows, 64, 1.0);
+        let lane = if id % 3 == 0 { Lane::High } else { Lane::Normal };
+        rxs.push(svc.submit_with(id, x, SubmitOptions { deadline: None, lane }).unwrap());
+    }
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let capture = recorder.into_capture(CaptureConfig {
+        model: svc.model().clone(),
+        layers: 2,
+        shards: 1,
+        leaders: 2,
+        max_kernel_workers: Some(2),
+        precision: Precision::F32,
+        force_scalar: false,
+        artifact_seed: 61,
+        system_toml: SystemConfig::paper().to_toml_string(),
+    });
+    drop(svc);
+    assert_eq!(capture.requests(), 10);
+    assert!(!capture.batches.is_empty());
+    let report = capture::replay(
+        &capture,
+        &dir,
+        ReplayOverrides { max_workers: Some(3), leaders: Some(3), shards: Some(2) },
+        None,
+    )
+    .unwrap();
+    assert_eq!(report.requests, 10);
+    assert_eq!((report.leaders, report.shards), (3, 2));
     std::fs::remove_dir_all(&dir).ok();
 }
 
