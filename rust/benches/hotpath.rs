@@ -8,10 +8,10 @@
 
 use cpsaa::attention::{self, ops, MultiHeadWeights, QuantizedRows, Weights};
 use cpsaa::config::{ModelConfig, SystemConfig};
-use cpsaa::coordinator::{Service, ServiceConfig};
-use cpsaa::runtime::{executor, ArtifactSet};
+use cpsaa::coordinator::{EncoderStack, Service, ServiceConfig};
+use cpsaa::runtime::{executor, ArtifactSet, Engine};
 use cpsaa::sim::{pipeline, sddmm, spmm, ChipSim};
-use cpsaa::sparse::{CsrMatrix, DispatchPlan, MaskMatrix, PlanSet};
+use cpsaa::sparse::{CsrMatrix, DispatchPlan, MaskMatrix, PlanSet, PruneConfig};
 use cpsaa::tensor::{simd, Matrix, SeededRng};
 use cpsaa::util::bench::Bencher;
 
@@ -309,6 +309,52 @@ fn main() {
         l4.as_secs_f64() / l1.as_secs_f64().max(1e-12)
     );
     std::fs::remove_dir_all(&serve_dir).ok();
+
+    // -- cascade plan narrowing: 4-layer stack, static vs cascade:0.5 --------
+    // The PR-9 tentpole gate: the same 4-layer encoder stack run twice,
+    // once on static per-batch plans (every layer pays full nnz) and
+    // once under `--prune cascade:0.5` (layer 0 scans, deeper layers run
+    // on the top-k narrowed coordinate stream with half the tokens and
+    // half the heads — fully-pruned heads skip their dense projections
+    // too). Distinct per-head weights so the static side pays the real
+    // per-head score passes it would serve with. CI asserts the cascade
+    // rung beats the static rung same-run (`cpsaa bench-assert-faster`).
+    let casc_model = ModelConfig {
+        seq_len: 256,
+        d_model: 64,
+        d_k: 16,
+        d_ff: 64,
+        heads: 4,
+        ..cfg.model.clone()
+    };
+    let casc_dir =
+        std::env::temp_dir().join(format!("cpsaa-bench-cascade-{}", std::process::id()));
+    let casc_set =
+        ArtifactSet::synthesize(&casc_dir, &casc_model, 9).expect("synthesize cascade artifacts");
+    let casc_engine = Engine::load(&casc_set).expect("load cascade engine");
+    let casc_w = MultiHeadWeights::synthetic(&casc_model, 4);
+    let static_stack = EncoderStack::new(
+        &casc_engine,
+        casc_w.clone(),
+        cfg.hardware.clone(),
+        casc_model.clone(),
+        4,
+    );
+    let cascade_stack =
+        EncoderStack::new(&casc_engine, casc_w, cfg.hardware.clone(), casc_model.clone(), 4)
+            .with_prune(PruneConfig::Cascade { keep: 0.5 });
+    let xs = SeededRng::new(11).normal_matrix(256, 64, 1.0);
+    let stat_t = b.run("encoder_stack4_static", || {
+        static_stack.forward(&xs).unwrap().last().unwrap().hidden.norm()
+    });
+    let casc_t = b.run("encoder_stack4_cascade50", || {
+        cascade_stack.forward(&xs).unwrap().last().unwrap().hidden.norm()
+    });
+    println!(
+        "cascade:0.5 narrowed plans vs static plans (4-layer stack): {:.2}x",
+        stat_t.as_secs_f64() / casc_t.as_secs_f64().max(1e-12)
+    );
+    std::fs::remove_dir_all(&casc_dir).ok();
 
     // -- golden model end-to-end (pruning + attention) -----------------------
     let model = cpsaa::config::ModelConfig { seq_len: 128, d_model: 256, ..cfg.model.clone() };

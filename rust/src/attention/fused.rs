@@ -30,12 +30,45 @@ pub(crate) fn dot(x: &[f32], y: &[f32]) -> f32 {
     simd::dot(x, y)
 }
 
+/// Split an optional plan-ordered nnz buffer into per-range slices
+/// aligned with `tasks`' row ranges (cascade importance retention: each
+/// task writes its own disjoint span, so contents are identical at any
+/// worker count).
+fn split_probs<'a>(
+    plan: &DispatchPlan,
+    ranges: &[std::ops::Range<usize>],
+    probs: Option<&'a mut Vec<f32>>,
+) -> Vec<Option<&'a mut [f32]>> {
+    match probs {
+        None => ranges.iter().map(|_| None).collect(),
+        Some(buf) => {
+            buf.clear();
+            buf.resize(plan.nnz(), 0.0);
+            let mut tail: &mut [f32] = buf.as_mut_slice();
+            let mut offset = 0usize;
+            ranges
+                .iter()
+                .map(|range| {
+                    let hi = plan.row_ptr()[range.end] as usize;
+                    let (head, rest) = std::mem::take(&mut tail).split_at_mut(hi - offset);
+                    tail = rest;
+                    offset = hi;
+                    Some(head)
+                })
+                .collect()
+        }
+    }
+}
+
 /// Fused attention over precomputed projections: `out[i] = softmax(scale
 /// · (m[i] · kvᵀ restricted to plan row i)) · v`, one streaming pass per
 /// row. `out` is reshaped/zeroed in place (workspace reuse); `scratch`
 /// is the serial path's per-row score buffer. Parallel pool tasks
 /// allocate their own small row scratch (≤ widest row) per call — the
-/// one hot-path allocation fusion does not eliminate.
+/// one hot-path allocation fusion does not eliminate. When `probs` is
+/// set, the post-softmax rows are also retained into it in plan order
+/// (the cascade-narrowing importance feed — values the kernel computed
+/// anyway; `None` costs nothing).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attention_rows_into(
     exec: &Executor,
@@ -47,6 +80,7 @@ pub(crate) fn attention_rows_into(
     workers: usize,
     scratch: &mut Vec<f32>,
     out: &mut Matrix,
+    probs: Option<&mut Vec<f32>>,
 ) {
     assert_eq!(m.rows(), plan.rows(), "projection rows != plan rows");
     assert_eq!(m.cols(), kv.cols(), "inner dims");
@@ -56,28 +90,32 @@ pub(crate) fn attention_rows_into(
     out.reset(plan.rows(), d_v);
     let ranges = plan.partition_rows(workers.max(1));
     if ranges.len() <= 1 {
-        fuse_range(m, kv, v, plan, scale, 0..plan.rows(), scratch, out.data_mut());
+        let probs = split_probs(plan, &[0..plan.rows()], probs).pop().unwrap_or(None);
+        fuse_range(m, kv, v, plan, scale, 0..plan.rows(), scratch, out.data_mut(), probs);
         return;
     }
     // Contiguous row ranges own disjoint output slices; each pool task
     // streams its rows independently (values worker-count invariant).
-    let mut tasks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut prob_slices = split_probs(plan, &ranges, probs).into_iter();
+    let mut tasks: Vec<(std::ops::Range<usize>, &mut [f32], Option<&mut [f32]>)> =
+        Vec::with_capacity(ranges.len());
     let mut tail: &mut [f32] = out.data_mut();
     let mut offset = 0usize;
     for range in ranges {
         let (head, rest) = std::mem::take(&mut tail).split_at_mut((range.end - offset) * d_v);
         tail = rest;
         offset = range.end;
-        tasks.push((range, head));
+        tasks.push((range, head, prob_slices.next().unwrap_or(None)));
     }
-    exec.map_consume(tasks, |(range, out_slice)| {
+    exec.map_consume(tasks, |(range, out_slice, p_slice)| {
         let mut scratch = Vec::new();
-        fuse_range(m, kv, v, plan, scale, range, &mut scratch, out_slice);
+        fuse_range(m, kv, v, plan, scale, range, &mut scratch, out_slice, p_slice);
     });
 }
 
 /// The per-row fusion loop over one contiguous row range. `out` is the
-/// range's zeroed output slice (`range.len() × v.cols()`).
+/// range's zeroed output slice (`range.len() × v.cols()`); `probs`, when
+/// present, is the range's span of the plan-ordered probability stream.
 #[allow(clippy::too_many_arguments)]
 fn fuse_range(
     m: &Matrix,
@@ -88,9 +126,11 @@ fn fuse_range(
     rows: std::ops::Range<usize>,
     scratch: &mut Vec<f32>,
     out: &mut [f32],
+    mut probs: Option<&mut [f32]>,
 ) {
     let d_v = v.cols();
     let start = rows.start;
+    let base = plan.row_ptr()[start] as usize;
     for i in rows {
         let cols = plan.row_cols(i);
         if cols.is_empty() {
@@ -104,6 +144,10 @@ fn fuse_range(
         }
         simd::scale(scratch, scale);
         softmax_row(scratch);
+        if let Some(p) = probs.as_deref_mut() {
+            let r = plan.row_range(i);
+            p[r.start - base..r.end - base].copy_from_slice(scratch);
+        }
         spmm_row_into(cols, scratch, v, &mut out[(i - start) * d_v..(i - start + 1) * d_v]);
     }
 }
@@ -126,6 +170,7 @@ pub(crate) fn attention_rows_into_i8(
     workers: usize,
     scratch: &mut Vec<f32>,
     out: &mut Matrix,
+    probs: Option<&mut Vec<f32>>,
 ) {
     assert_eq!(qm.rows(), plan.rows(), "projection rows != plan rows");
     assert_eq!(qm.cols(), qkv.cols(), "inner dims");
@@ -135,21 +180,24 @@ pub(crate) fn attention_rows_into_i8(
     out.reset(plan.rows(), d_v);
     let ranges = plan.partition_rows(workers.max(1));
     if ranges.len() <= 1 {
-        fuse_range_i8(qm, qkv, v, plan, scale, 0..plan.rows(), scratch, out.data_mut());
+        let probs = split_probs(plan, &[0..plan.rows()], probs).pop().unwrap_or(None);
+        fuse_range_i8(qm, qkv, v, plan, scale, 0..plan.rows(), scratch, out.data_mut(), probs);
         return;
     }
-    let mut tasks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::with_capacity(ranges.len());
+    let mut prob_slices = split_probs(plan, &ranges, probs).into_iter();
+    let mut tasks: Vec<(std::ops::Range<usize>, &mut [f32], Option<&mut [f32]>)> =
+        Vec::with_capacity(ranges.len());
     let mut tail: &mut [f32] = out.data_mut();
     let mut offset = 0usize;
     for range in ranges {
         let (head, rest) = std::mem::take(&mut tail).split_at_mut((range.end - offset) * d_v);
         tail = rest;
         offset = range.end;
-        tasks.push((range, head));
+        tasks.push((range, head, prob_slices.next().unwrap_or(None)));
     }
-    exec.map_consume(tasks, |(range, out_slice)| {
+    exec.map_consume(tasks, |(range, out_slice, p_slice)| {
         let mut scratch = Vec::new();
-        fuse_range_i8(qm, qkv, v, plan, scale, range, &mut scratch, out_slice);
+        fuse_range_i8(qm, qkv, v, plan, scale, range, &mut scratch, out_slice, p_slice);
     });
 }
 
@@ -164,9 +212,11 @@ fn fuse_range_i8(
     rows: std::ops::Range<usize>,
     scratch: &mut Vec<f32>,
     out: &mut [f32],
+    mut probs: Option<&mut [f32]>,
 ) {
     let d_v = v.cols();
     let start = rows.start;
+    let base = plan.row_ptr()[start] as usize;
     for i in rows {
         let cols = plan.row_cols(i);
         if cols.is_empty() {
@@ -184,6 +234,10 @@ fn fuse_range_i8(
         }
         simd::scale(scratch, scale);
         softmax_row(scratch);
+        if let Some(p) = probs.as_deref_mut() {
+            let r = plan.row_range(i);
+            p[r.start - base..r.end - base].copy_from_slice(scratch);
+        }
         spmm_row_into(cols, scratch, v, &mut out[(i - start) * d_v..(i - start + 1) * d_v]);
     }
 }

@@ -15,7 +15,7 @@
 
 use crate::config::ModelConfig;
 use crate::runtime::executor::{self, Executor};
-use crate::sparse::{CsrMatrix, CsrView, DispatchPlan, MaskMatrix, PlanSet};
+use crate::sparse::{CsrMatrix, CsrView, DispatchPlan, LayerImportance, MaskMatrix, PlanSet};
 use crate::tensor::{simd, Matrix};
 
 use super::fused::{self, dot};
@@ -180,7 +180,19 @@ pub fn cpsaa_attention_planned_ws(
     cfg: &ModelConfig,
     ws: &mut KernelWorkspace,
 ) -> Matrix {
-    cpsaa_attention_rows_fused(&executor::global(), x, x, w_s, w_v, plan, cfg, 1, Precision::F32, ws)
+    cpsaa_attention_rows_fused(
+        &executor::global(),
+        x,
+        x,
+        w_s,
+        w_v,
+        plan,
+        cfg,
+        1,
+        Precision::F32,
+        ws,
+        None,
+    )
 }
 
 /// The unfused four-pass reference chain (SDDMM → scale → softmax →
@@ -233,6 +245,7 @@ fn cpsaa_attention_rows_fused(
     budget_share: usize,
     precision: Precision,
     ws: &mut KernelWorkspace,
+    probs: Option<&mut Vec<f32>>,
 ) -> Matrix {
     let KernelWorkspace { m, v, row, .. } = ws;
     q_rows.matmul_into(w_s, m);
@@ -242,12 +255,14 @@ fn cpsaa_attention_rows_fused(
     let mut out = Matrix::default();
     match precision {
         Precision::F32 => {
-            fused::attention_rows_into(exec, m, kv, v, plan, scale, workers, row, &mut out);
+            fused::attention_rows_into(exec, m, kv, v, plan, scale, workers, row, &mut out, probs);
         }
         Precision::I8 => {
             let qm = QuantizedRows::from_matrix(m);
             let qkv = QuantizedRows::from_matrix(kv);
-            fused::attention_rows_into_i8(exec, &qm, &qkv, v, plan, scale, workers, row, &mut out);
+            fused::attention_rows_into_i8(
+                exec, &qm, &qkv, v, plan, scale, workers, row, &mut out, probs,
+            );
         }
     }
     out
@@ -284,7 +299,7 @@ pub fn multi_head_attention_planned_ws(
     // The single-shard instance of the shard kernel: Q rows = all rows,
     // full worker budget. One definition keeps the sharded/unsharded
     // bit-equivalence structural rather than maintained by hand.
-    multi_head_attention_shard(exec, x, x, w, plans, cfg, 1, Precision::F32, pool)
+    multi_head_attention_shard(exec, x, x, w, plans, cfg, 1, Precision::F32, pool, false).0
 }
 
 /// [`multi_head_attention_planned`] at an explicit [`Precision`] — the
@@ -307,7 +322,9 @@ pub fn multi_head_attention_planned_prec(
         1,
         precision,
         &WorkspacePool::new(),
+        false,
     )
+    .0
 }
 
 /// One encoder layer with multi-head fan-out: the multi-head attention
@@ -349,8 +366,35 @@ pub fn encoder_layer_heads_ws_prec(
     exec: &Executor,
     precision: Precision,
 ) -> Matrix {
-    let z = multi_head_attention_shard(exec, x, x, w, plans, cfg, 1, precision, pool);
+    let z = multi_head_attention_shard(exec, x, x, w, plans, cfg, 1, precision, pool, false).0;
     pool.with(|ws| encoder_tail(x, &z, &w.w_fc1, &w.w_fc2, ws))
+}
+
+/// [`encoder_layer_heads_ws_prec`] that additionally reduces the layer's
+/// retained softmax probabilities into a [`LayerImportance`] — the
+/// cascade-narrowing feed (§dynamic sparsity). The hidden output is
+/// bit-identical to the plain entry: retention copies values the fused
+/// kernel already computed, it never changes them. The importance
+/// reduction is serial and head-major, so it is worker-count invariant.
+#[allow(clippy::too_many_arguments)]
+pub fn encoder_layer_heads_importance(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    plans: &PlanSet,
+    cfg: &ModelConfig,
+    pool: &WorkspacePool,
+    exec: &Executor,
+    precision: Precision,
+) -> (Matrix, LayerImportance) {
+    let (z, probs) =
+        multi_head_attention_shard(exec, x, x, w, plans, cfg, 1, precision, pool, true);
+    let probs = probs.expect("probs requested");
+    let mut imp = LayerImportance::new(x.rows(), plans.heads());
+    for (h, stream) in probs.iter().enumerate() {
+        imp.add_rows(h, plans.plan(h), stream);
+    }
+    let out = pool.with(|ws| encoder_tail(x, &z, &w.w_fc1, &w.w_fc2, ws));
+    (out, imp)
 }
 
 /// One shard's multi-head attention: Q rows `x_rows` (a contiguous row
@@ -365,6 +409,11 @@ pub fn encoder_layer_heads_ws_prec(
 /// heads independently. Every row-wise op touches only the shard's
 /// rows, so the assembled shard blocks are bit-identical to the
 /// full-range kernel.
+///
+/// With `want_probs` the per-head plan-ordered softmax probability
+/// streams are retained alongside the output (the cascade-narrowing
+/// importance feed); retention copies values the kernel already
+/// computed, so the hidden output is bit-identical either way.
 #[allow(clippy::too_many_arguments)]
 fn multi_head_attention_shard(
     exec: &Executor,
@@ -376,7 +425,8 @@ fn multi_head_attention_shard(
     concurrent_shards: usize,
     precision: Precision,
     pool: &WorkspacePool,
-) -> Matrix {
+    want_probs: bool,
+) -> (Matrix, Option<Vec<Vec<f32>>>) {
     assert_eq!(w.heads.len(), plans.heads(), "one plan per head");
     let heads = w.heads.len();
     // The shared-scores fast path is f32-only; at i8 every head runs the
@@ -384,7 +434,7 @@ fn multi_head_attention_shard(
     let shared_scores = precision == Precision::F32
         && w.shared_w_s()
         && plans.plans().iter().skip(1).all(|p| p == plans.plan(0));
-    let zs: Vec<Matrix> = if shared_scores {
+    let (zs, probs): (Vec<Matrix>, Option<Vec<Vec<f32>>>) = if shared_scores {
         let plan0 = plans.plan(0);
         let workers = (exec.workers_for(plan0.nnz()) / concurrent_shards.max(1)).max(1);
         let scale = 1.0 / (cfg.d_k as f32).sqrt();
@@ -406,15 +456,28 @@ fn multi_head_attention_shard(
                     p.spmm(&hws.v)
                 })
             });
-            ws.scores = p.into_values();
-            zs
+            let values = p.into_values();
+            // Every head shares the one probability stream.
+            let probs = want_probs.then(|| vec![values.clone(); heads]);
+            ws.scores = values;
+            (zs, probs)
         })
     } else {
         let pairs: Vec<(&super::weights::HeadWeights, &DispatchPlan)> =
             w.heads.iter().zip(plans.plans()).collect();
-        exec.map(&pairs, |&(h, p)| {
+        let results = exec.map(&pairs, |&(h, p)| {
+            if p.nnz() == 0 {
+                // A fully-pruned head contributes exactly the zero
+                // block (no coordinates ⇒ no softmax mass ⇒ zero SpMM
+                // rows), so skip its projections and row pass outright:
+                // cascade head pruning sheds the head's dense work, not
+                // just its coordinates. Bit-identical to running the
+                // kernel over the empty plan.
+                return (Matrix::zeros(x_rows.rows(), h.w_v.cols()), want_probs.then(Vec::new));
+            }
             pool.with(|ws| {
-                cpsaa_attention_rows_fused(
+                let mut buf = want_probs.then(Vec::new);
+                let z = cpsaa_attention_rows_fused(
                     exec,
                     x_rows,
                     x,
@@ -425,16 +488,28 @@ fn multi_head_attention_shard(
                     heads * concurrent_shards.max(1),
                     precision,
                     ws,
-                )
+                    buf.as_mut(),
+                );
+                (z, buf)
             })
-        })
+        });
+        let mut zs = Vec::with_capacity(results.len());
+        let mut probs = want_probs.then(|| Vec::with_capacity(results.len()));
+        for (z, buf) in results {
+            zs.push(z);
+            if let Some(ps) = probs.as_mut() {
+                ps.push(buf.expect("probs requested"));
+            }
+        }
+        (zs, probs)
     };
     let blocks: Vec<&Matrix> = zs.iter().collect();
     let z = Matrix::concat_cols(&blocks);
-    match &w.w_o {
+    let out = match &w.w_o {
         Some(o) => z.matmul(o),
         None => z,
-    }
+    };
+    (out, probs)
 }
 
 /// Batch-parallel multi-head attention over a sharded plan set: shard
@@ -500,7 +575,8 @@ pub fn multi_head_attention_sharded_prec_ws(
     let blocks = exec.map(&idx, |&s| {
         let r = shards.range(s);
         let x_rows = x.row_block(r.start, r.end);
-        multi_head_attention_shard(exec, x, &x_rows, w, shards.set(s), cfg, k, precision, pool)
+        multi_head_attention_shard(exec, x, &x_rows, w, shards.set(s), cfg, k, precision, pool, false)
+            .0
     });
     assemble_row_blocks(x.rows(), &blocks, shards)
 }
@@ -548,11 +624,76 @@ pub fn encoder_layer_heads_sharded_ws_prec(
     let blocks = exec.map(&idx, |&s| {
         let r = shards.range(s);
         let x_rows = x.row_block(r.start, r.end);
-        let z =
-            multi_head_attention_shard(exec, x, &x_rows, w, shards.set(s), cfg, k, precision, pool);
+        let z = multi_head_attention_shard(
+            exec,
+            x,
+            &x_rows,
+            w,
+            shards.set(s),
+            cfg,
+            k,
+            precision,
+            pool,
+            false,
+        )
+        .0;
         pool.with(|ws| encoder_tail(&x_rows, &z, &w.w_fc1, &w.w_fc2, ws))
     });
     assemble_row_blocks(x.rows(), &blocks, shards)
+}
+
+/// [`encoder_layer_heads_sharded_ws_prec`] that additionally reduces the
+/// layer's retained softmax probabilities into a [`LayerImportance`].
+/// Each shard retains its own per-head plan-ordered streams; the
+/// reduction then walks **head-major across the ordered shard slices**
+/// (`for head { for shard { rows } }`), which reproduces the unsharded
+/// `(head, row)` accumulation order exactly — the importance is
+/// bit-identical at any shard, leader, or worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn encoder_layer_heads_sharded_importance(
+    x: &Matrix,
+    w: &MultiHeadWeights,
+    shards: &crate::sparse::ShardedPlans,
+    cfg: &ModelConfig,
+    pool: &WorkspacePool,
+    exec: &Executor,
+    precision: Precision,
+) -> (Matrix, LayerImportance) {
+    let k = shards.count();
+    assert!(k > 0, "sharded encoder layer needs at least one shard");
+    let idx: Vec<usize> = (0..k).collect();
+    let results = exec.map(&idx, |&s| {
+        let r = shards.range(s);
+        let x_rows = x.row_block(r.start, r.end);
+        let (z, probs) = multi_head_attention_shard(
+            exec,
+            x,
+            &x_rows,
+            w,
+            shards.set(s),
+            cfg,
+            k,
+            precision,
+            pool,
+            true,
+        );
+        let h = pool.with(|ws| encoder_tail(&x_rows, &z, &w.w_fc1, &w.w_fc2, ws));
+        (h, probs.expect("probs requested"))
+    });
+    let mut blocks = Vec::with_capacity(k);
+    let mut shard_probs = Vec::with_capacity(k);
+    for (h, p) in results {
+        blocks.push(h);
+        shard_probs.push(p);
+    }
+    let heads = w.heads.len();
+    let mut imp = LayerImportance::new(x.rows(), heads);
+    for h in 0..heads {
+        for (s, probs) in shard_probs.iter().enumerate() {
+            imp.add_rows(h, shards.set(s).plan(h), &probs[h]);
+        }
+    }
+    (assemble_row_blocks(x.rows(), &blocks, shards), imp)
 }
 
 /// Stitch per-shard row blocks back into one batch-shaped matrix.
@@ -611,8 +752,19 @@ pub fn encoder_layer_planned(
 ) -> Matrix {
     let mut ws = KernelWorkspace::new();
     let exec = executor::global();
-    let z =
-        cpsaa_attention_rows_fused(&exec, x, x, &w.w_s, &w.w_v, plan, cfg, 1, Precision::F32, &mut ws);
+    let z = cpsaa_attention_rows_fused(
+        &exec,
+        x,
+        x,
+        &w.w_s,
+        &w.w_v,
+        plan,
+        cfg,
+        1,
+        Precision::F32,
+        &mut ws,
+        None,
+    );
     encoder_tail(x, &z, &w.w_fc1, &w.w_fc2, &mut ws)
 }
 

@@ -2,6 +2,8 @@
 
 use std::time::Duration;
 
+use crate::runtime::Lane;
+
 /// Fixed-bucket latency histogram (log-spaced, 1 µs … 100 s).
 #[derive(Clone, Debug)]
 pub struct LatencyHistogram {
@@ -147,6 +149,29 @@ pub struct ShardLine {
     pub sim_pj: f64,
 }
 
+/// One batch's per-layer plan-evolution line. Under cascade pruning the
+/// dispatch plan shrinks between layers; these lines make the narrowing
+/// observable per batch: how many coordinates each layer actually
+/// dispatched, how many query rows / heads survived the previous
+/// narrowing step, and what the narrowing cost versus a full ReCAM
+/// re-scan would have been. Static serving records full-plan lines with
+/// zero narrowing cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanLine {
+    pub batch: u64,
+    pub layer: usize,
+    /// Masked coordinates the layer's plans dispatched (sum over heads).
+    pub nnz: usize,
+    /// Query rows still populated after the previous narrowing step.
+    pub rows_kept: usize,
+    /// Heads still populated after the previous narrowing step.
+    pub heads_kept: usize,
+    /// Simulated cost of deriving this layer's plans by narrowing (ns).
+    pub narrow_ns: f64,
+    /// Simulated cost a full ReCAM re-scan would have charged (ns).
+    pub rescan_ns: f64,
+}
+
 /// Per-leader serving accounting (index = leader thread). Leaders run
 /// independent batching loops feeding the one executor pool, so the
 /// per-leader lines make leader imbalance (one leader starving while
@@ -173,8 +198,13 @@ pub struct ServeMetrics {
     pub batches: u64,
     pub padded_rows: u64,
     pub used_rows: u64,
-    /// Submit-to-reply latency (queue wait + batching window + execution).
+    /// Submit-to-reply latency (queue wait + batching window + execution),
+    /// all lanes combined.
     pub latency: LatencyHistogram,
+    /// Submit-to-reply latency for batches executed on [`Lane::High`].
+    pub latency_high: LatencyHistogram,
+    /// Submit-to-reply latency for batches executed on [`Lane::Normal`].
+    pub latency_normal: LatencyHistogram,
     /// Requests shed at admission because the bounded queue was full.
     pub shed_queue_full: u64,
     /// Requests shed because their deadline expired before a leader
@@ -197,6 +227,14 @@ pub struct ServeMetrics {
     pub head_lines: Vec<HeadLine>,
     /// Recent per-batch shard lines, each carrying its batch id.
     pub shard_lines: Vec<ShardLine>,
+    /// Recent per-batch per-layer plan-evolution lines.
+    pub plan_lines: Vec<PlanLine>,
+    /// Simulated plan-narrowing time across batches (ns); zero under
+    /// static serving.
+    pub narrow_ns: f64,
+    /// Simulated time full ReCAM re-scans would have charged for the
+    /// same plan derivations (ns); zero under static serving.
+    pub rescan_ns: f64,
     /// Per-leader accounting, leader order; sized at service startup
     /// (len 1 under single-leader serving).
     pub leaders: Vec<LeaderMetrics>,
@@ -277,6 +315,49 @@ impl ServeMetrics {
     pub fn head_mean_densities(&self) -> Vec<f64> {
         let n = self.batches.max(1) as f64;
         self.heads.iter().map(|h| h.density_sum / n).collect()
+    }
+
+    /// Record one request's submit-to-reply latency, attributed to the
+    /// executor lane its batch ran on. Feeds both the combined
+    /// histogram and the per-lane one so interactive (`Lane::High`)
+    /// tail latency stays observable separately from batch traffic.
+    pub fn record_latency(&mut self, lane: Lane, d: Duration) {
+        self.latency.record(d);
+        match lane {
+            Lane::High => self.latency_high.record(d),
+            Lane::Normal => self.latency_normal.record(d),
+        }
+    }
+
+    /// Fold one batch's per-layer plan-evolution lines in. The slices
+    /// share layer order; `narrow_ns`/`rescan_ns` fold into the
+    /// service-wide narrowing totals.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_plans(
+        &mut self,
+        batch: u64,
+        nnz: &[usize],
+        rows_kept: &[usize],
+        heads_kept: &[usize],
+        narrow_ns: &[f64],
+        rescan_ns: &[f64],
+    ) {
+        for layer in 0..nnz.len() {
+            let narrow = narrow_ns.get(layer).copied().unwrap_or(0.0);
+            let rescan = rescan_ns.get(layer).copied().unwrap_or(0.0);
+            self.narrow_ns += narrow;
+            self.rescan_ns += rescan;
+            self.plan_lines.push(PlanLine {
+                batch,
+                layer,
+                nnz: nnz[layer],
+                rows_kept: rows_kept.get(layer).copied().unwrap_or(0),
+                heads_kept: heads_kept.get(layer).copied().unwrap_or(0),
+                narrow_ns: narrow,
+                rescan_ns: rescan,
+            });
+        }
+        trim_log(&mut self.plan_lines);
     }
 
     /// Fold one executed batch into leader `leader`'s line.
@@ -474,6 +555,45 @@ mod tests {
         // leader 1 exists (sized by the highest index) but idle
         assert_eq!(m.leaders[1], LeaderMetrics::default());
         assert_eq!(m.leaders[2].batches, 1);
+    }
+
+    #[test]
+    fn lane_latency_splits_and_combines() {
+        let mut m = ServeMetrics::default();
+        m.record_latency(Lane::High, Duration::from_micros(10));
+        m.record_latency(Lane::Normal, Duration::from_millis(5));
+        m.record_latency(Lane::Normal, Duration::from_millis(5));
+        assert_eq!(m.latency.count(), 3);
+        assert_eq!(m.latency_high.count(), 1);
+        assert_eq!(m.latency_normal.count(), 2);
+        // the high lane's tail is its own, not polluted by batch traffic
+        assert_eq!(m.latency_high.p99(), Duration::from_micros(10));
+        assert_eq!(m.latency_normal.p99(), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn plan_lines_accumulate_narrowing_totals() {
+        let mut m = ServeMetrics::default();
+        m.record_plans(3, &[900, 400], &[32, 16], &[4, 2], &[0.0, 12.5], &[0.0, 80.0]);
+        assert_eq!(m.plan_lines.len(), 2);
+        assert_eq!(
+            m.plan_lines[1],
+            PlanLine {
+                batch: 3,
+                layer: 1,
+                nnz: 400,
+                rows_kept: 16,
+                heads_kept: 2,
+                narrow_ns: 12.5,
+                rescan_ns: 80.0,
+            }
+        );
+        assert!((m.narrow_ns - 12.5).abs() < 1e-12);
+        assert!((m.rescan_ns - 80.0).abs() < 1e-12);
+        // static batches contribute zero narrowing cost
+        m.record_plans(4, &[900], &[32], &[4], &[0.0], &[0.0]);
+        assert!((m.narrow_ns - 12.5).abs() < 1e-12);
+        assert_eq!(m.plan_lines.len(), 3);
     }
 
     #[test]

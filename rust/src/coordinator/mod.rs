@@ -24,7 +24,8 @@ pub mod shard;
 
 pub use batcher::{BatchIds, BatchPlan, Batcher, PackedRequest};
 pub use metrics::{
-    HeadLine, HeadMetrics, LatencyHistogram, LeaderMetrics, ServeMetrics, ShardLine, ShardMetrics,
+    HeadLine, HeadMetrics, LatencyHistogram, LeaderMetrics, PlanLine, ServeMetrics, ShardLine,
+    ShardMetrics,
 };
 pub use pipeline::{EncoderStack, LayerOutput};
 pub use service::{

@@ -26,8 +26,9 @@ use crate::util::error::Result;
 
 use crate::attention::{MultiHeadWeights, Precision};
 use crate::config::{HardwareConfig, ModelConfig};
-use crate::runtime::Engine;
+use crate::runtime::{Engine, EncoderHeadsExec};
 use crate::sim::{ChipSim, SimTrace};
+use crate::sparse::{PlanSet, PruneConfig};
 use crate::tensor::Matrix;
 
 use super::shard;
@@ -60,6 +61,21 @@ pub struct LayerOutput {
     pub shard_rows: Vec<usize>,
     /// Masked coordinates each shard dispatched; empty when unsharded.
     pub shard_nnz: Vec<usize>,
+    /// Coordinates in the plan set that drove this layer's kernels
+    /// (summed over heads) — under cascade pruning this shrinks layer
+    /// over layer; static serving reports each layer's scanned set.
+    pub plan_nnz: usize,
+    /// Tokens alive in this layer's plans (= seq rows when not pruned).
+    pub rows_kept: usize,
+    /// Heads that still own coordinates (= all heads when not pruned).
+    pub heads_kept: usize,
+    /// Simulated cost (ns) of deriving this layer's plans by narrowing
+    /// the previous layer's coordinate stream; 0.0 for layer 0 and for
+    /// static serving.
+    pub narrow_ns: f64,
+    /// What the full per-layer ReCAM re-scan this narrowing replaced
+    /// would have cost (ns); 0.0 when nothing was narrowed.
+    pub rescan_ns: f64,
 }
 
 /// A stack of identical encoder layers (§4.5: encoders chain serially).
@@ -70,6 +86,7 @@ pub struct EncoderStack<'e> {
     layers: usize,
     shards: usize,
     precision: Precision,
+    prune: PruneConfig,
 }
 
 impl<'e> EncoderStack<'e> {
@@ -86,7 +103,15 @@ impl<'e> EncoderStack<'e> {
             "weights fan-out must match model.heads"
         );
         let sim = ChipSim::new(hw, model);
-        Self { engine, weights, sim, layers, shards: 1, precision: Precision::F32 }
+        Self {
+            engine,
+            weights,
+            sim,
+            layers,
+            shards: 1,
+            precision: Precision::F32,
+            prune: PruneConfig::Static,
+        }
     }
 
     /// Fan every batch out across `shards` logical chips (≥ 1). One
@@ -122,6 +147,20 @@ impl<'e> EncoderStack<'e> {
         self.precision
     }
 
+    /// Evolve each batch's plans across layers per `prune`.
+    /// [`PruneConfig::Cascade`] at keep-ratio 1.0 does not narrow
+    /// ([`PruneConfig::narrows`]), so it runs the literal static path —
+    /// bit-identity at keep = 1.0 holds by construction, at any
+    /// worker/leader/shard count.
+    pub fn with_prune(mut self, prune: PruneConfig) -> Self {
+        self.prune = prune;
+        self
+    }
+
+    pub fn prune(&self) -> PruneConfig {
+        self.prune
+    }
+
     /// Run one batch through every layer. Returns per-layer outputs
     /// (last entry is the final hidden state).
     ///
@@ -140,6 +179,9 @@ impl<'e> EncoderStack<'e> {
     /// The timelines describe the batch's one simulated execution, the
     /// same one every layer's cost lines reuse.
     pub fn forward_traced(&self, x: &Matrix) -> Result<(Vec<LayerOutput>, Vec<SimTrace>)> {
+        if self.prune.narrows() {
+            return self.forward_cascade(x);
+        }
         let mut outs: Vec<LayerOutput> = Vec::with_capacity(self.layers);
         let mut batch_cost: Option<BatchCost> = None;
         for layer in 0..self.layers {
@@ -154,62 +196,158 @@ impl<'e> EncoderStack<'e> {
                 self.shards,
                 self.precision,
             )?;
-            let cost = batch_cost.get_or_insert_with(|| {
-                if self.shards <= 1 {
-                    let hs = self.sim.simulate_heads_planned(&exec.plans);
-                    BatchCost {
-                        density: hs.mean_density,
-                        ns: hs.total_ns,
-                        pj: hs.energy_pj,
-                        head_ns: hs.heads.iter().map(|r| r.breakdown.total_ns).collect(),
-                        head_pj: hs.heads.iter().map(|r| r.energy_pj).collect(),
-                        head_density: exec.plans.densities(),
-                        shard_ns: Vec::new(),
-                        shard_pj: Vec::new(),
-                        shard_rows: Vec::new(),
-                        shard_nnz: Vec::new(),
-                        traces: hs.traces(),
-                    }
-                } else {
-                    // Cost the partition the engine actually executed.
-                    let sharded = exec
-                        .sharded
-                        .as_ref()
-                        .expect("sharded execution must carry its partition");
-                    let sc = shard::attribute(&self.sim, sharded);
-                    BatchCost {
-                        // Batch density stays the full plan set's (the
-                        // mask is a batch property, not a shard's).
-                        density: exec.plans.mean_density(),
-                        ns: sc.sim_ns,
-                        pj: sc.sim_pj,
-                        head_ns: sc.head_ns,
-                        head_pj: sc.head_pj,
-                        head_density: exec.plans.densities(),
-                        shard_ns: sc.shards.iter().map(|s| s.sim_ns).collect(),
-                        shard_pj: sc.shards.iter().map(|s| s.sim_pj).collect(),
-                        shard_rows: sc.shards.iter().map(|s| s.rows).collect(),
-                        shard_nnz: sc.shards.iter().map(|s| s.nnz).collect(),
-                        traces: sc.traces,
-                    }
-                }
-            });
-            outs.push(LayerOutput {
-                hidden: exec.hidden,
-                mask_density: cost.density,
-                sim_ns: cost.ns,
-                sim_pj: cost.pj,
-                head_sim_ns: cost.head_ns.clone(),
-                head_sim_pj: cost.head_pj.clone(),
-                head_density: cost.head_density.clone(),
-                shard_sim_ns: cost.shard_ns.clone(),
-                shard_sim_pj: cost.shard_pj.clone(),
-                shard_rows: cost.shard_rows.clone(),
-                shard_nnz: cost.shard_nnz.clone(),
-            });
+            let cost = batch_cost.get_or_insert_with(|| self.cost_of(&exec));
+            outs.push(layer_output(
+                exec.hidden,
+                cost,
+                PlanStats {
+                    plan_nnz: exec.plans.total_nnz(),
+                    rows_kept: exec.plans.rows(),
+                    heads_kept: exec.plans.heads(),
+                    narrow_ns: 0.0,
+                    rescan_ns: 0.0,
+                },
+            ));
         }
         let traces = batch_cost.map(|c| c.traces).unwrap_or_default();
         Ok((outs, traces))
+    }
+
+    /// The cascade path: layer 0 scans masks and builds plans as today;
+    /// every deeper layer's plans are derived by top-k narrowing the
+    /// previous layer's coordinate stream ([`PlanSet::narrow_cascade`])
+    /// — no mask generation, no ReCAM re-scan. Each layer is costed on
+    /// the plans it actually ran (they shrink layer over layer), plus
+    /// the narrowing charge; the re-scan cost it replaced rides along
+    /// for observability.
+    fn forward_cascade(&self, x: &Matrix) -> Result<(Vec<LayerOutput>, Vec<SimTrace>)> {
+        let keep = self.prune.keep().expect("narrowing implies a cascade keep-ratio");
+        let mut outs: Vec<LayerOutput> = Vec::with_capacity(self.layers);
+        let mut traces: Vec<SimTrace> = Vec::new();
+        // Plans for the layer about to run (None = scan from the input),
+        // and the stats/cost of the narrowing step that produced them.
+        let mut narrowed: Option<PlanSet> = None;
+        let mut step: Option<(usize, usize, f64, f64)> = None;
+        for layer in 0..self.layers {
+            let input = if layer == 0 { x } else { &outs[layer - 1].hidden };
+            let (exec, imp) = match narrowed.take() {
+                None => self.engine.execute_encoder_heads_importance(
+                    input,
+                    &self.weights,
+                    self.shards,
+                    self.precision,
+                )?,
+                Some(plans) => self.engine.execute_encoder_heads_planned_importance(
+                    input,
+                    &self.weights,
+                    plans,
+                    self.shards,
+                    self.precision,
+                )?,
+            };
+            let cost = self.cost_of(&exec);
+            if layer == 0 {
+                traces = cost.traces.clone();
+            }
+            let (rows_kept, heads_kept, narrow_ns, rescan_ns) = step.take().unwrap_or((
+                exec.plans.rows(),
+                exec.plans.heads(),
+                0.0,
+                0.0,
+            ));
+            if layer + 1 < self.layers {
+                let evo = self.sim.plan_evolution_cost(&exec.plans);
+                let (next, stats) = exec.plans.narrow_cascade(&imp, keep);
+                step = Some((stats.rows_kept, stats.heads_kept, evo.narrow_ns, evo.rescan_ns));
+                narrowed = Some(next);
+            }
+            outs.push(layer_output(
+                exec.hidden,
+                &cost,
+                PlanStats {
+                    plan_nnz: exec.plans.total_nnz(),
+                    rows_kept,
+                    heads_kept,
+                    narrow_ns,
+                    rescan_ns,
+                },
+            ));
+        }
+        Ok((outs, traces))
+    }
+
+    /// Cost one executed layer on the plans (and partition) it actually
+    /// ran — the static path calls this once per batch and reuses it;
+    /// the cascade path calls it per layer (its plans shrink).
+    fn cost_of(&self, exec: &EncoderHeadsExec) -> BatchCost {
+        if self.shards <= 1 {
+            let hs = self.sim.simulate_heads_planned(&exec.plans);
+            BatchCost {
+                density: hs.mean_density,
+                ns: hs.total_ns,
+                pj: hs.energy_pj,
+                head_ns: hs.heads.iter().map(|r| r.breakdown.total_ns).collect(),
+                head_pj: hs.heads.iter().map(|r| r.energy_pj).collect(),
+                head_density: exec.plans.densities(),
+                shard_ns: Vec::new(),
+                shard_pj: Vec::new(),
+                shard_rows: Vec::new(),
+                shard_nnz: Vec::new(),
+                traces: hs.traces(),
+            }
+        } else {
+            // Cost the partition the engine actually executed.
+            let sharded = exec
+                .sharded
+                .as_ref()
+                .expect("sharded execution must carry its partition");
+            let sc = shard::attribute(&self.sim, sharded);
+            BatchCost {
+                // Batch density stays the full plan set's (the
+                // mask is a batch property, not a shard's).
+                density: exec.plans.mean_density(),
+                ns: sc.sim_ns,
+                pj: sc.sim_pj,
+                head_ns: sc.head_ns,
+                head_pj: sc.head_pj,
+                head_density: exec.plans.densities(),
+                shard_ns: sc.shards.iter().map(|s| s.sim_ns).collect(),
+                shard_pj: sc.shards.iter().map(|s| s.sim_pj).collect(),
+                shard_rows: sc.shards.iter().map(|s| s.rows).collect(),
+                shard_nnz: sc.shards.iter().map(|s| s.nnz).collect(),
+                traces: sc.traces,
+            }
+        }
+    }
+}
+
+/// Per-layer plan-evolution stats riding on a [`LayerOutput`].
+struct PlanStats {
+    plan_nnz: usize,
+    rows_kept: usize,
+    heads_kept: usize,
+    narrow_ns: f64,
+    rescan_ns: f64,
+}
+
+fn layer_output(hidden: Matrix, cost: &BatchCost, stats: PlanStats) -> LayerOutput {
+    LayerOutput {
+        hidden,
+        mask_density: cost.density,
+        sim_ns: cost.ns,
+        sim_pj: cost.pj,
+        head_sim_ns: cost.head_ns.clone(),
+        head_sim_pj: cost.head_pj.clone(),
+        head_density: cost.head_density.clone(),
+        shard_sim_ns: cost.shard_ns.clone(),
+        shard_sim_pj: cost.shard_pj.clone(),
+        shard_rows: cost.shard_rows.clone(),
+        shard_nnz: cost.shard_nnz.clone(),
+        plan_nnz: stats.plan_nnz,
+        rows_kept: stats.rows_kept,
+        heads_kept: stats.heads_kept,
+        narrow_ns: stats.narrow_ns,
+        rescan_ns: stats.rescan_ns,
     }
 }
 
@@ -383,6 +521,153 @@ mod tests {
         // strictly cheaper in energy.
         assert!(b[0].sim_ns <= a[0].sim_ns, "i8 {} vs f32 {}", b[0].sim_ns, a[0].sim_ns);
         assert!(b[0].sim_pj < a[0].sim_pj, "i8 {} vs f32 {}", b[0].sim_pj, a[0].sim_pj);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cascade_stack_narrows_plans_and_charges_narrowing() {
+        let dir =
+            std::env::temp_dir().join(format!("cpsaa-pipe-cascade-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 32,
+            d_model: 64,
+            d_k: 8,
+            d_ff: 128,
+            heads: 4,
+            ..ModelConfig::default()
+        };
+        let set = ArtifactSet::synthesize(&dir, &model, 77).unwrap();
+        let engine = Engine::load(&set).unwrap();
+        let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 4).unwrap();
+        let x = crate::tensor::SeededRng::new(11).normal_matrix(32, 64, 1.0);
+        let stack = EncoderStack::new(&engine, w, HardwareConfig::paper(), model, 4)
+            .with_prune(PruneConfig::Cascade { keep: 0.5 });
+        assert_eq!(stack.prune(), PruneConfig::Cascade { keep: 0.5 });
+        let outs = stack.forward(&x).unwrap();
+        assert_eq!(outs.len(), 4);
+        // Layer 0 runs the full scanned plans and pays no narrowing.
+        assert_eq!(outs[0].rows_kept, 32);
+        assert_eq!(outs[0].heads_kept, 4);
+        assert_eq!(outs[0].narrow_ns, 0.0);
+        assert_eq!(outs[0].rescan_ns, 0.0);
+        assert!(outs[0].plan_nnz > 0);
+        // Every deeper layer runs on a narrowed coordinate stream:
+        // top-k over 32 tokens at keep 0.5 is 16 rows, over 4 heads is
+        // 2 heads, cumulative thereafter (narrowing only removes).
+        assert_eq!(outs[1].rows_kept, 16);
+        assert_eq!(outs[1].heads_kept, 2);
+        assert!(outs[1].plan_nnz < outs[0].plan_nnz, "narrowing must shed coordinates");
+        for pair in outs.windows(2).skip(1) {
+            assert!(pair[1].plan_nnz <= pair[0].plan_nnz);
+            assert!(pair[1].rows_kept <= pair[0].rows_kept);
+            assert!(pair[1].heads_kept <= pair[0].heads_kept);
+        }
+        for o in &outs[1..] {
+            assert!(o.hidden.all_finite());
+            // The narrowing charge is real and undercuts the ReCAM
+            // re-scan it replaced — the cascade's whole bargain.
+            assert!(o.narrow_ns > 0.0);
+            assert!(o.narrow_ns < o.rescan_ns, "narrow {} vs rescan {}", o.narrow_ns, o.rescan_ns);
+        }
+        // Fewer coordinates ⇒ the simulated layer itself got cheaper.
+        assert!(
+            outs.last().unwrap().sim_ns <= outs[0].sim_ns,
+            "narrowed layer costed more than the full one"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cascade_keep_one_bit_identical_to_static_at_any_shard_count() {
+        let dir =
+            std::env::temp_dir().join(format!("cpsaa-pipe-keep1-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 32,
+            d_model: 64,
+            d_k: 8,
+            d_ff: 128,
+            heads: 2,
+            ..ModelConfig::default()
+        };
+        let set = ArtifactSet::synthesize(&dir, &model, 88).unwrap();
+        let engine = Engine::load(&set).unwrap();
+        let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 2).unwrap();
+        let x = crate::tensor::SeededRng::new(13).normal_matrix(32, 64, 1.0);
+        // keep = 1.0 does not narrow, so it takes the literal static
+        // path — the exactness contract, checked unsharded and sharded.
+        assert!(!PruneConfig::Cascade { keep: 1.0 }.narrows());
+        for shards in [1usize, 3] {
+            let stat =
+                EncoderStack::new(&engine, w.clone(), HardwareConfig::paper(), model.clone(), 2)
+                    .with_shards(shards);
+            let casc =
+                EncoderStack::new(&engine, w.clone(), HardwareConfig::paper(), model.clone(), 2)
+                    .with_shards(shards)
+                    .with_prune(PruneConfig::Cascade { keep: 1.0 });
+            let a = stat.forward(&x).unwrap();
+            let b = casc.forward(&x).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (la, lb) in a.iter().zip(&b) {
+                assert_eq!(la.hidden, lb.hidden, "keep=1.0 diverged at shards={shards}");
+                assert_eq!(la.plan_nnz, lb.plan_nnz);
+                assert_eq!(la.rows_kept, lb.rows_kept);
+                assert_eq!(la.heads_kept, lb.heads_kept);
+                assert_eq!(lb.narrow_ns, 0.0);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cascade_error_bounded_and_shrinks_as_keep_rises() {
+        // The quality leg of the bench gate: against the unpruned
+        // oracle, the cascade's final hidden state stays correlated at
+        // aggressive keep-ratios and (on average over seeds) gets
+        // closer as the keep-ratio rises toward the exact 1.0 endpoint.
+        let dir =
+            std::env::temp_dir().join(format!("cpsaa-pipe-errbound-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 32,
+            d_model: 64,
+            d_k: 8,
+            d_ff: 128,
+            heads: 4,
+            ..ModelConfig::default()
+        };
+        let set = ArtifactSet::synthesize(&dir, &model, 99).unwrap();
+        let engine = Engine::load(&set).unwrap();
+        let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 4).unwrap();
+        let stack_at = |keep: f64| {
+            let s = EncoderStack::new(&engine, w.clone(), HardwareConfig::paper(), model.clone(), 3);
+            if keep < 1.0 {
+                s.with_prune(PruneConfig::Cascade { keep })
+            } else {
+                s
+            }
+        };
+        let (mut err_low, mut err_high) = (0.0f64, 0.0f64);
+        for seed in 0..6u64 {
+            let x = crate::tensor::SeededRng::new(200 + seed).normal_matrix(32, 64, 1.0);
+            let oracle = stack_at(1.0).forward(&x).unwrap().pop().unwrap().hidden;
+            let low = stack_at(0.6).forward(&x).unwrap().pop().unwrap().hidden;
+            let high = stack_at(0.95).forward(&x).unwrap().pop().unwrap().hidden;
+            assert!(low.all_finite() && high.all_finite());
+            let (e_low, e_high) = (low.rel_err(&oracle) as f64, high.rel_err(&oracle) as f64);
+            // Pruned output must stay in the oracle's neighborhood:
+            // keep=0.95 perturbs a single token of 32, keep=0.6 drops
+            // 12 tokens and one head yet the residual path keeps the
+            // diff well under the uncorrelated-outputs bound (√2).
+            assert!(e_low < 1.25, "seed {seed}: keep=0.6 rel_err {e_low}");
+            assert!(e_high < 0.75, "seed {seed}: keep=0.95 rel_err {e_high}");
+            err_low += e_low;
+            err_high += e_high;
+        }
+        assert!(
+            err_high <= err_low,
+            "mean error did not shrink as keep rose: keep=0.95 {} vs keep=0.6 {}",
+            err_high / 6.0,
+            err_low / 6.0
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

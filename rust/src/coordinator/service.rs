@@ -68,6 +68,7 @@ use crate::attention::{MultiHeadWeights, Precision};
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::runtime::executor::{self, Lane};
 use crate::runtime::{ArtifactSet, Engine};
+use crate::sparse::PruneConfig;
 use crate::tensor::Matrix;
 use crate::workload::capture::{
     BatchTraceRecord, CaptureRecorder, RecordedBatch, RecordedRequest, RecordedResponse, SimTracer,
@@ -271,6 +272,23 @@ pub struct InferenceResponse {
     /// Rows each shard owned of this request's batch (nnz-balanced);
     /// empty when unsharded.
     pub shard_rows: Vec<usize>,
+    /// Coordinates each layer's plans dispatched (sum over heads),
+    /// layer order. Constant across layers under static serving;
+    /// shrinking under cascade narrowing.
+    pub layer_nnz: Vec<usize>,
+    /// Query rows populated at each layer (full count at layer 0; the
+    /// cascade's survivors at deeper layers), layer order.
+    pub layer_rows_kept: Vec<usize>,
+    /// Heads populated at each layer, layer order.
+    pub layer_heads_kept: Vec<usize>,
+    /// Simulated plan-narrowing time across the stack (ns); zero under
+    /// static serving.
+    pub narrow_ns: f64,
+    /// Simulated time full ReCAM re-scans would have charged for the
+    /// same plan derivations (ns); zero under static serving.
+    pub rescan_ns: f64,
+    /// Plan-evolution mode this request's batch was served under.
+    pub prune: PruneConfig,
     /// The leader thread that batched and executed this request.
     pub leader: usize,
     /// Kernel arithmetic mode this request was served at.
@@ -314,6 +332,13 @@ pub struct ServiceConfig {
     /// `I8` (i8-storage / i32-accumulate SDDMM score dots, dequantized
     /// at the softmax boundary; V stays f32).
     pub precision: Precision,
+    /// How each batch's dispatch plans evolve across encoder layers:
+    /// `Static` regenerates masks per layer (today's path);
+    /// `Cascade { keep }` scans once at layer 0 and derives every deeper
+    /// layer's plans by top-k narrowing the previous layer's coordinate
+    /// stream. `Cascade { keep: 1.0 }` short-circuits to the static
+    /// path (bit-identical by construction).
+    pub prune: PruneConfig,
     /// Force the bit-identical scalar twins of the `tensor::simd` row
     /// primitives for every kernel in this process (same switch as the
     /// `CPSAA_FORCE_SCALAR` env var). Diagnostics knob: values never
@@ -336,6 +361,7 @@ impl Default for ServiceConfig {
             leaders: 1,
             max_kernel_workers: None,
             precision: Precision::F32,
+            prune: PruneConfig::Static,
             force_scalar: false,
             queue_cap: 1024,
         }
@@ -601,6 +627,7 @@ fn leader_loop(
         if cfg.shards == 0 {
             return Err(anyhow!("shards must be >= 1"));
         }
+        cfg.prune.validate().map_err(|e| anyhow!("prune: {e}"))?;
         let weights = MultiHeadWeights::load(&set.dir.join("weights.json"), model.heads)?;
         weights.validate().map_err(|e| anyhow!("bad weights for {} heads: {e}", model.heads))?;
         let engine = Engine::load(&set)?;
@@ -618,7 +645,8 @@ fn leader_loop(
     };
     let stack = EncoderStack::new(&engine, weights, hw, model.clone(), cfg.layers)
         .with_shards(cfg.shards)
-        .with_precision(cfg.precision);
+        .with_precision(cfg.precision)
+        .with_prune(cfg.prune);
     // One batcher per leader, all drawing from the service's shared
     // monotonic id source: every per-head/per-shard metric line stays
     // keyed to exactly one batch even with several leaders in flight.
@@ -788,6 +816,17 @@ fn leader_loop(
                     // layer's partition (the batch's plan set).
                     let shard_rows = outs[0].shard_rows.clone();
                     let shard_nnz = outs[0].shard_nnz.clone();
+                    // Per-layer plan evolution: constant under static
+                    // serving, shrinking under cascade narrowing.
+                    let layer_nnz: Vec<usize> = outs.iter().map(|o| o.plan_nnz).collect();
+                    let layer_rows_kept: Vec<usize> =
+                        outs.iter().map(|o| o.rows_kept).collect();
+                    let layer_heads_kept: Vec<usize> =
+                        outs.iter().map(|o| o.heads_kept).collect();
+                    let layer_narrow_ns: Vec<f64> = outs.iter().map(|o| o.narrow_ns).collect();
+                    let layer_rescan_ns: Vec<f64> = outs.iter().map(|o| o.rescan_ns).collect();
+                    let narrow_ns: f64 = layer_narrow_ns.iter().sum();
+                    let rescan_ns: f64 = layer_rescan_ns.iter().sum();
                     // Poison recovery mirrors `Service::metrics`: the
                     // aggregates stay sound, so a dead leader must not
                     // kill the survivors' recording path.
@@ -804,6 +843,14 @@ fn leader_loop(
                     if !shard_ns.is_empty() {
                         m.record_shards(plan.batch, &shard_rows, &shard_nnz, &shard_ns, &shard_pj);
                     }
+                    m.record_plans(
+                        plan.batch,
+                        &layer_nnz,
+                        &layer_rows_kept,
+                        &layer_heads_kept,
+                        &layer_narrow_ns,
+                        &layer_rescan_ns,
+                    );
                     m.record_leader(leader, plan.entries.len() as u64, sim_ns);
                     let mut captured: Vec<RecordedRequest> = Vec::new();
                     for entry in &plan.entries {
@@ -826,6 +873,11 @@ fn leader_loop(
                                     shard_sim_ns: shard_ns.clone(),
                                     shard_sim_pj: shard_pj.clone(),
                                     shard_rows: shard_rows.clone(),
+                                    layer_nnz: layer_nnz.clone(),
+                                    layer_rows_kept: layer_rows_kept.clone(),
+                                    layer_heads_kept: layer_heads_kept.clone(),
+                                    narrow_ns,
+                                    rescan_ns,
                                 },
                             });
                         }
@@ -833,7 +885,7 @@ fn leader_loop(
                             // Submit→reply: queue wait, window wait and
                             // execution all count against the SLO.
                             let latency = submitted.elapsed();
-                            m.latency.record(latency);
+                            m.record_latency(window_lane, latency);
                             let _ = reply.send(Ok(InferenceResponse {
                                 id: entry.id,
                                 hidden,
@@ -847,6 +899,12 @@ fn leader_loop(
                                 shard_sim_ns: shard_ns.clone(),
                                 shard_sim_pj: shard_pj.clone(),
                                 shard_rows: shard_rows.clone(),
+                                layer_nnz: layer_nnz.clone(),
+                                layer_rows_kept: layer_rows_kept.clone(),
+                                layer_heads_kept: layer_heads_kept.clone(),
+                                narrow_ns,
+                                rescan_ns,
+                                prune: cfg.prune,
                                 leader,
                                 precision: cfg.precision,
                             }));
@@ -1212,6 +1270,105 @@ mod tests {
         let m = svc.metrics();
         assert_eq!(m.high_lane_batches, 1);
         assert_eq!(m.batches, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cascade_serving_reports_plan_narrowing() {
+        let (dir, svc) = synth_service(
+            "cascade",
+            37,
+            ServiceConfig {
+                layers: 3,
+                prune: crate::sparse::PruneConfig::Cascade { keep: 0.5 },
+                ..Default::default()
+            },
+        );
+        let mut rng = SeededRng::new(12);
+        let resp = svc.infer(7, rng.normal_matrix(8, 32, 1.0)).unwrap();
+        assert_eq!(resp.prune, crate::sparse::PruneConfig::Cascade { keep: 0.5 });
+        assert!(resp.hidden.all_finite());
+        // 8 packed rows: layer 0 runs the full scan, layers 1–2 run on
+        // the top-⌈0.5·8⌉ = 4 surviving tokens (cumulative, so flat
+        // after the first narrowing).
+        assert_eq!(resp.layer_rows_kept, vec![8, 4, 4]);
+        assert_eq!(resp.layer_heads_kept, vec![1, 1, 1]);
+        assert_eq!(resp.layer_nnz.len(), 3);
+        assert!(resp.layer_nnz[1] <= resp.layer_nnz[0]);
+        assert!(resp.narrow_ns > 0.0, "narrowing must be charged");
+        assert!(resp.narrow_ns < resp.rescan_ns, "narrowing must undercut the re-scan");
+        // The same stats land in the serve metrics as per-layer lines.
+        let m = svc.metrics();
+        assert_eq!(m.plan_lines.len(), 3);
+        assert_eq!(
+            m.plan_lines.iter().map(|l| l.layer).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        assert_eq!(m.plan_lines[1].rows_kept, 4);
+        assert!(m.narrow_ns > 0.0 && m.narrow_ns < m.rescan_ns);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cascade_keep_one_serves_bit_identical_to_static_across_topologies() {
+        // The exactness contract at the service layer: cascade:1.0 does
+        // not narrow, so its responses — functional output *and* plan
+        // stats — match the static path to the bit, at a different
+        // leader/shard topology on top.
+        let mut rng = SeededRng::new(14);
+        let x = rng.normal_matrix(8, 32, 1.0);
+        let (dir_a, svc_a) = synth_service(
+            "keep1-static",
+            39,
+            ServiceConfig { layers: 2, leaders: 1, shards: 1, ..Default::default() },
+        );
+        let a = svc_a.infer(1, x.clone()).unwrap();
+        drop(svc_a);
+        let (dir_b, svc_b) = synth_service(
+            "keep1-cascade",
+            39,
+            ServiceConfig {
+                layers: 2,
+                leaders: 2,
+                shards: 2,
+                prune: crate::sparse::PruneConfig::Cascade { keep: 1.0 },
+                ..Default::default()
+            },
+        );
+        let b = svc_b.infer(1, x).unwrap();
+        assert_eq!(a.hidden, b.hidden, "keep=1.0 must be bit-identical to static");
+        assert_eq!(a.layer_nnz, b.layer_nnz);
+        assert_eq!(a.layer_rows_kept, b.layer_rows_kept);
+        assert_eq!(a.layer_heads_kept, b.layer_heads_kept);
+        assert_eq!((b.narrow_ns, b.rescan_ns), (0.0, 0.0));
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn cascade_zero_keep_rejected_at_startup() {
+        let dir = std::env::temp_dir().join(format!("cpsaa-svc-prune0-{}", std::process::id()));
+        let model = crate::config::ModelConfig {
+            seq_len: 16,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            ..crate::config::ModelConfig::default()
+        };
+        crate::runtime::ArtifactSet::synthesize(&dir, &model, 2).unwrap();
+        let err = match Service::start(
+            dir.clone(),
+            HardwareConfig::paper(),
+            model,
+            ServiceConfig {
+                prune: crate::sparse::PruneConfig::Cascade { keep: 0.0 },
+                ..Default::default()
+            },
+        ) {
+            Ok(_) => panic!("cascade keep = 0 must be rejected at startup"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("prune"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

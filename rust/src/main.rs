@@ -22,6 +22,7 @@ use cpsaa::coordinator::{ServeHooks, Service, ServiceConfig};
 use cpsaa::runtime::{ArtifactSet, Engine};
 use cpsaa::sim::area::AreaModel;
 use cpsaa::sim::ChipSim;
+use cpsaa::sparse::PruneConfig;
 use cpsaa::tensor::SeededRng;
 use cpsaa::workload::capture::{Capture, CaptureConfig, CaptureRecorder, ReplayOverrides, SimTracer};
 use cpsaa::workload::TraceGenerator;
@@ -39,7 +40,8 @@ COMMANDS:
                                     (fig3, table2, fig11..fig18, fig19a/b, fig20a/b, all)
   serve [--requests N] [--layers N] [--heads N] [--shards N] [--leaders N]
         [--max-workers N] [--queue-cap N] [--precision f32|i8]
-        [--force-scalar] [--record FILE] [--trace FILE]
+        [--prune static|cascade:K] [--force-scalar] [--record FILE]
+        [--trace FILE]
                                     demo serving loop over the artifact engine
                                     (multi-head fan-out across tile slices;
                                     --shards N fans each batch across N logical
@@ -48,6 +50,11 @@ COMMANDS:
                                     threads feeding one executor pool;
                                     --precision i8 quantizes the SDDMM score
                                     dots to i8 storage / i32 accumulation;
+                                    --prune cascade:K scans masks once at
+                                    layer 0 and derives deeper layers' plans
+                                    by score-driven top-k narrowing, keeping
+                                    fraction K of tokens/heads per step
+                                    (cascade:1.0 == static, bit-identical);
                                     --force-scalar pins the scalar twins of
                                     the SIMD row primitives, like the
                                     CPSAA_FORCE_SCALAR env var;
@@ -58,12 +65,17 @@ COMMANDS:
                                     --trace FILE dumps per-batch simulated
                                     stage timelines as JSON)
   loadgen [--seed N] [--rps R] [--duration S] [--deadline-ms MS]
-          [--interactive F] [--layers N] [--heads N] [--shards N]
-          [--leaders N] [--max-workers N] [--queue-cap N]
-          [--slo-p99-ms MS] [--json] [--junit FILE]
-                                    seeded open-loop load generator over the
-                                    artifact engine: Poisson arrivals at R rps
-                                    for S seconds (same --seed, same schedule),
+          [--interactive F] [--concurrency N] [--layers N] [--heads N]
+          [--shards N] [--leaders N] [--max-workers N] [--queue-cap N]
+          [--prune static|cascade:K] [--slo-p99-ms MS] [--json]
+          [--junit FILE]
+                                    seeded load generator over the artifact
+                                    engine. Open loop by default: Poisson
+                                    arrivals at R rps for S seconds (same
+                                    --seed, same schedule); --concurrency N
+                                    switches to closed loop — the same seeded
+                                    request stream with a fixed N requests in
+                                    flight instead of a fixed offered rate.
                                     --interactive F marks that fraction of
                                     requests high-lane, --deadline-ms sheds
                                     requests not packed in time; per-request
@@ -208,6 +220,12 @@ fn main() -> Result<()> {
             let queue_cap = take_flag(&mut cmd, "--queue-cap")
                 .map(|s| s.parse::<usize>())
                 .transpose()?;
+            let prune = match take_flag(&mut cmd, "--prune") {
+                Some(s) => s
+                    .parse::<PruneConfig>()
+                    .map_err(|e| anyhow!("--prune: {e}"))?,
+                None => PruneConfig::Static,
+            };
             let force_scalar = take_switch(&mut cmd, "--force-scalar");
             let record = take_flag(&mut cmd, "--record").map(PathBuf::from);
             let trace = take_flag(&mut cmd, "--trace").map(PathBuf::from);
@@ -222,6 +240,7 @@ fn main() -> Result<()> {
                 max_workers,
                 queue_cap,
                 precision,
+                prune,
                 force_scalar,
                 record,
                 trace,
@@ -248,6 +267,9 @@ fn main() -> Result<()> {
                     .map(|s| s.parse::<f64>())
                     .transpose()?
                     .unwrap_or(0.0),
+                concurrency: take_flag(&mut cmd, "--concurrency")
+                    .map(|s| s.parse::<usize>())
+                    .transpose()?,
                 layers: take_flag(&mut cmd, "--layers")
                     .map(|s| s.parse::<usize>())
                     .transpose()?
@@ -270,6 +292,12 @@ fn main() -> Result<()> {
                 queue_cap: take_flag(&mut cmd, "--queue-cap")
                     .map(|s| s.parse::<usize>())
                     .transpose()?,
+                prune: match take_flag(&mut cmd, "--prune") {
+                    Some(s) => s
+                        .parse::<PruneConfig>()
+                        .map_err(|e| anyhow!("--prune: {e}"))?,
+                    None => PruneConfig::Static,
+                },
                 slo_p99_ms: take_flag(&mut cmd, "--slo-p99-ms")
                     .map(|s| s.parse::<f64>())
                     .transpose()?,
@@ -439,6 +467,7 @@ fn serve(
     max_workers: Option<usize>,
     queue_cap: Option<usize>,
     precision: Precision,
+    prune: PruneConfig,
     force_scalar: bool,
     record: Option<PathBuf>,
     trace: Option<PathBuf>,
@@ -458,6 +487,7 @@ fn serve(
         leaders,
         max_kernel_workers: max_workers,
         precision,
+        prune,
         force_scalar,
         ..Default::default()
     };
@@ -472,7 +502,7 @@ fn serve(
         ServeHooks { recorder: recorder.clone(), tracer: tracer.clone() },
     )?;
     println!(
-        "service up (artifact shape {seq_len}x{d_model}, {layers} layers, {heads} heads, {shards} shards, {leaders} leaders, {precision} precision{})",
+        "service up (artifact shape {seq_len}x{d_model}, {layers} layers, {heads} heads, {shards} shards, {leaders} leaders, {precision} precision, {prune} plans{})",
         if force_scalar { ", scalar lanes" } else { "" }
     );
 
@@ -507,6 +537,17 @@ fn serve(
         m.latency.quantile(0.99),
         m.latency.max()
     );
+    for (lane, h) in [("high", &m.latency_high), ("normal", &m.latency_normal)] {
+        if h.count() > 0 {
+            println!(
+                "  lane {lane}: {} requests, p50 {:.2?}  p95 {:.2?}  p99 {:.2?}",
+                h.count(),
+                h.p50(),
+                h.p95(),
+                h.p99()
+            );
+        }
+    }
     println!(
         "simulated accelerator time {:.3} ms, energy {:.3} mJ ({precision} precision)",
         m.sim_ns / 1e6,
@@ -558,6 +599,25 @@ fn serve(
             );
         }
     }
+    if prune.narrows() {
+        println!(
+            "plan narrowing: {:.3} ms spent vs {:.3} ms a full re-scan would have charged",
+            m.narrow_ns / 1e6,
+            m.rescan_ns / 1e6
+        );
+        // The last batch's per-layer plan evolution.
+        let last_batch = m.plan_lines.last().map(|l| l.batch);
+        for line in m.plan_lines.iter().filter(|l| Some(l.batch) == last_batch) {
+            println!(
+                "  batch {} layer {}: {} nnz, {} rows, {} heads kept",
+                line.batch,
+                line.layer,
+                line.nnz,
+                line.rows_kept,
+                line.heads_kept
+            );
+        }
+    }
     if let Some(path) = &record {
         let recorder = recorder.expect("recorder exists when --record is set");
         let capture = recorder.into_capture(CaptureConfig {
@@ -567,6 +627,7 @@ fn serve(
             leaders,
             max_kernel_workers: max_workers,
             precision,
+            prune,
             force_scalar,
             artifact_seed,
             system_toml: cfg.to_toml_string(),
@@ -594,12 +655,16 @@ struct LoadgenCli {
     duration_s: f64,
     deadline_ms: Option<u64>,
     interactive: f64,
+    /// `Some(n)` switches to closed-loop pacing: n requests in flight,
+    /// the next submission gated on the oldest reply.
+    concurrency: Option<usize>,
     layers: usize,
     heads: usize,
     shards: usize,
     leaders: usize,
     max_workers: Option<usize>,
     queue_cap: Option<usize>,
+    prune: PruneConfig,
     slo_p99_ms: Option<f64>,
     json: bool,
     junit: Option<PathBuf>,
@@ -625,11 +690,15 @@ fn loadgen(cfg: &SystemConfig, artifacts: &Path, o: LoadgenCli) -> Result<()> {
     if !(0.0..=1.0).contains(&o.interactive) {
         bail!("--interactive must be a fraction in [0, 1], got {}", o.interactive);
     }
+    if o.concurrency == Some(0) {
+        bail!("--concurrency must be >= 1");
+    }
     let mut svc_cfg = ServiceConfig {
         layers: o.layers,
         shards: o.shards,
         leaders: o.leaders,
         max_kernel_workers: o.max_workers,
+        prune: o.prune,
         ..Default::default()
     };
     if let Some(cap) = o.queue_cap {
@@ -649,19 +718,26 @@ fn loadgen(cfg: &SystemConfig, artifacts: &Path, o: LoadgenCli) -> Result<()> {
         interactive: o.interactive,
     };
     eprintln!(
-        "loadgen: seed {} rps {} duration {}s deadline {} interactive {} \
-         ({} layers, {} heads, {} shards, {} leaders)",
+        "loadgen: seed {} rps {} duration {}s deadline {} interactive {} pacing {} \
+         ({} layers, {} heads, {} shards, {} leaders, {} plans)",
         o.seed,
         o.rps,
         o.duration_s,
         o.deadline_ms.map(|ms| format!("{ms}ms")).unwrap_or_else(|| "none".into()),
         o.interactive,
+        o.concurrency
+            .map(|n| format!("closed-loop x{n}"))
+            .unwrap_or_else(|| "open-loop".into()),
         o.layers,
         o.heads,
         o.shards,
         o.leaders,
+        o.prune,
     );
-    let report = lg::run(&svc, &gen_cfg, |line| eprintln!("loadgen: {line}"))?;
+    let report = match o.concurrency {
+        Some(n) => lg::run_closed(&svc, &gen_cfg, n, |line| eprintln!("loadgen: {line}"))?,
+        None => lg::run(&svc, &gen_cfg, |line| eprintln!("loadgen: {line}"))?,
+    };
 
     let p50_ms = report.latency.p50().as_secs_f64() * 1e3;
     let p95_ms = report.latency.p95().as_secs_f64() * 1e3;
@@ -689,6 +765,26 @@ fn loadgen(cfg: &SystemConfig, artifacts: &Path, o: LoadgenCli) -> Result<()> {
         obj.insert("p99_ms".to_string(), Json::Num(p99_ms));
         obj.insert("mean_ms".to_string(), Json::Num(mean_ms));
         obj.insert("max_ms".to_string(), Json::Num(max_ms));
+        obj.insert(
+            "concurrency".to_string(),
+            o.concurrency.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null),
+        );
+        obj.insert(
+            "completed_high".to_string(),
+            Json::Num(report.latency_high.count() as f64),
+        );
+        obj.insert(
+            "completed_normal".to_string(),
+            Json::Num(report.latency_normal.count() as f64),
+        );
+        obj.insert(
+            "p99_high_ms".to_string(),
+            Json::Num(report.latency_high.p99().as_secs_f64() * 1e3),
+        );
+        obj.insert(
+            "p99_normal_ms".to_string(),
+            Json::Num(report.latency_normal.p99().as_secs_f64() * 1e3),
+        );
         obj.insert(
             "slo_p99_ms".to_string(),
             o.slo_p99_ms.map(Json::Num).unwrap_or(Json::Null),
@@ -718,6 +814,19 @@ fn loadgen(cfg: &SystemConfig, artifacts: &Path, o: LoadgenCli) -> Result<()> {
         "loadgen: latency mean {mean_ms:.3} ms  p50 {p50_ms:.3}  p95 {p95_ms:.3}  \
          p99 {p99_ms:.3}  max {max_ms:.3}"
     );
+    for (lane, h) in
+        [("high", &report.latency_high), ("normal", &report.latency_normal)]
+    {
+        if h.count() > 0 {
+            eprintln!(
+                "loadgen: lane {lane}: {} requests  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms",
+                h.count(),
+                h.p50().as_secs_f64() * 1e3,
+                h.p95().as_secs_f64() * 1e3,
+                h.p99().as_secs_f64() * 1e3,
+            );
+        }
+    }
 
     if let Some(path) = &o.junit {
         let wall = report.wall.as_secs_f64();

@@ -15,7 +15,7 @@ use std::time::Instant;
 use crate::anyhow;
 use crate::attention::{self, MultiHeadWeights, Precision, Weights, WorkspacePool};
 use crate::config::ModelConfig;
-use crate::sparse::{MaskMatrix, PlanSet, ShardedPlans};
+use crate::sparse::{LayerImportance, MaskMatrix, PlanSet, ShardedPlans};
 use crate::tensor::Matrix;
 use crate::util::error::Result;
 
@@ -238,6 +238,90 @@ impl Engine {
         s.executions += 1;
         s.total_exec_ns += start.elapsed().as_nanos() as u64;
         Ok(EncoderHeadsExec { hidden, plans, sharded })
+    }
+
+    /// [`Engine::execute_encoder_heads_sharded_prec`] that additionally
+    /// reduces the layer's softmax probabilities into a
+    /// [`LayerImportance`] — the cascade-narrowing feed. The hidden
+    /// state is bit-identical to the plain entry (retention copies
+    /// values the kernels already computed).
+    pub fn execute_encoder_heads_importance(
+        &self,
+        x: &Matrix,
+        w: &MultiHeadWeights,
+        shards: usize,
+        precision: Precision,
+    ) -> Result<(EncoderHeadsExec, LayerImportance)> {
+        self.validate_encoder_heads_input(x, w)?;
+        let start = Instant::now();
+        let masks = attention::mask::generate_heads_in(&self.exec, x, w, &self.model);
+        let plans = PlanSet::build_in(&self.exec, &masks);
+        self.run_heads_importance(x, w, plans, shards, precision, start)
+    }
+
+    /// Execute one encoder layer over a *provided* plan set — the
+    /// cascade path for layers past the first: the coordinator narrows
+    /// the previous layer's plans (an O(nnz) coordinate-stream filter)
+    /// and this entry skips mask generation and the ReCAM scan
+    /// entirely. The plan set is re-partitioned for sharding (its nnz
+    /// distribution changed under narrowing).
+    pub fn execute_encoder_heads_planned_importance(
+        &self,
+        x: &Matrix,
+        w: &MultiHeadWeights,
+        plans: PlanSet,
+        shards: usize,
+        precision: Precision,
+    ) -> Result<(EncoderHeadsExec, LayerImportance)> {
+        self.validate_encoder_heads_input(x, w)?;
+        if plans.heads() != w.heads.len() {
+            return Err(anyhow!("plan set has {} heads, weights {}", plans.heads(), w.heads.len()));
+        }
+        if plans.rows() != x.rows() {
+            return Err(anyhow!("plan set has {} rows, input {}", plans.rows(), x.rows()));
+        }
+        let start = Instant::now();
+        self.run_heads_importance(x, w, plans, shards, precision, start)
+    }
+
+    fn run_heads_importance(
+        &self,
+        x: &Matrix,
+        w: &MultiHeadWeights,
+        plans: PlanSet,
+        shards: usize,
+        precision: Precision,
+        start: Instant,
+    ) -> Result<(EncoderHeadsExec, LayerImportance)> {
+        let cfg = &self.model;
+        let (hidden, imp, sharded) = if shards <= 1 {
+            let (hidden, imp) = attention::ops::encoder_layer_heads_importance(
+                x,
+                w,
+                &plans,
+                cfg,
+                &self.workspaces,
+                &self.exec,
+                precision,
+            );
+            (hidden, imp, None)
+        } else {
+            let sharded = plans.shard(shards);
+            let (hidden, imp) = attention::ops::encoder_layer_heads_sharded_importance(
+                x,
+                w,
+                &sharded,
+                cfg,
+                &self.workspaces,
+                &self.exec,
+                precision,
+            );
+            (hidden, imp, Some(sharded))
+        };
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.total_exec_ns += start.elapsed().as_nanos() as u64;
+        Ok((EncoderHeadsExec { hidden, plans, sharded }, imp))
     }
 
     fn validate_encoder_heads_input(&self, x: &Matrix, w: &MultiHeadWeights) -> Result<()> {

@@ -28,15 +28,21 @@
 //! * **Values are schedule-invariant.** Every task writes only its own
 //!   output slot, so results are bit-identical at any worker count —
 //!   the invariant the fused-vs-unfused property grid pins.
-//! * **Two lanes, high first.** The queue is split into a high and a
-//!   normal lane ([`Lane`]). Idle workers always drain the high lane
-//!   before the normal one, so small interactive batches are not starved
-//!   behind bulk fan-outs. A job inherits the submitting thread's lane
-//!   ([`current_lane`], scoped via [`with_lane`]), and helpers adopt the
-//!   job's lane while running its tasks — nested fan-outs spawned from
-//!   inside a high-lane job land in the high lane too. Lanes reorder
-//!   *scheduling only*; values stay schedule-invariant, so bit-identity
-//!   across worker counts is unaffected.
+//! * **Two lanes, high first, stealing both ways.** The queue is split
+//!   into a high and a normal lane ([`Lane`]). Idle workers always
+//!   drain the high lane before the normal one, and a worker whose high
+//!   queue is empty steals from normal rather than sleeping — bulk work
+//!   never idles the pool. The preference also holds *mid-job*: a
+//!   worker grinding a bulk normal fan-out re-checks the high lane
+//!   between task claims and yields back to it the moment a high job
+//!   arrives, returning to the normal job afterwards — so interactive
+//!   batches are not starved behind an already-started bulk fan-out.
+//!   A job inherits the submitting thread's lane ([`current_lane`],
+//!   scoped via [`with_lane`]), and helpers adopt the job's lane while
+//!   running its tasks — nested fan-outs spawned from inside a
+//!   high-lane job land in the high lane too. Lanes reorder *scheduling
+//!   only*; values stay schedule-invariant, so bit-identity across
+//!   worker counts is unaffected.
 //!
 //! ## Sizing and the grain heuristic
 //!
@@ -153,9 +159,22 @@ impl Job {
     /// lane for the duration, so fan-outs submitted from inside a task
     /// queue at the same priority as the job itself.
     fn help(&self, label: &str) {
+        self.help_while(label, || true);
+    }
+
+    /// [`Job::help`] with a yield point: between task claims, return to
+    /// the caller as soon as `keep_going` turns false, leaving remaining
+    /// tasks unclaimed for other helpers. The worker loop passes
+    /// "no high job pending" here for normal-lane jobs, so a bulk
+    /// fan-out can be preempted at task granularity. Claimed tasks
+    /// always run to completion — yielding never abandons work mid-task.
+    fn help_while(&self, label: &str, keep_going: impl Fn() -> bool) {
         let prev = CURRENT_LANE.with(|c| c.replace(self.lane));
         let _restore = LaneGuard(prev);
         loop {
+            if !keep_going() {
+                return;
+            }
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.total {
                 return;
@@ -220,6 +239,11 @@ impl PoolState {
 struct Shared {
     state: Mutex<PoolState>,
     available: Condvar,
+    /// High-lane jobs currently queued (exhausted-but-unpopped included;
+    /// the next worker pass cleans those up). Updated under the `state`
+    /// lock, read lock-free by normal-lane helpers deciding whether to
+    /// yield back to the high lane between task claims.
+    high_pending: AtomicUsize,
 }
 
 /// The long-lived worker pool. One instance serves the whole crate (see
@@ -246,6 +270,7 @@ impl Executor {
                 shutdown: false,
             }),
             available: Condvar::new(),
+            high_pending: AtomicUsize::new(0),
         });
         for index in 0..workers - 1 {
             let shared = shared.clone();
@@ -332,6 +357,9 @@ impl Executor {
         {
             let mut state = self.shared.state.lock().unwrap();
             state.lane_queue(lane).push_back(job.clone());
+            if lane == Lane::High {
+                self.shared.high_pending.fetch_add(1, Ordering::Relaxed);
+            }
         }
         self.shared.available.notify_all();
         job.help("caller");
@@ -361,10 +389,13 @@ impl Drop for Executor {
     }
 }
 
-/// Background worker: take the front job — high lane before normal —
-/// and help until it is exhausted, repeat. Jobs stay at the front while
-/// unexhausted so *every* idle worker piles onto the same fan-out (the
-/// flat-queue invariant, now per lane).
+/// Background worker: take the front job — high lane before normal,
+/// stealing from normal when high is empty — and help until it is
+/// exhausted, repeat. Jobs stay at the front while unexhausted so
+/// *every* idle worker piles onto the same fan-out (the flat-queue
+/// invariant, now per lane). Normal-lane jobs are helped through the
+/// yield point: the worker returns to the queue as soon as a high job
+/// is pending, runs it, and then resumes the (still-queued) normal job.
 fn worker_loop(shared: Arc<Shared>, index: usize) {
     let label = index.to_string();
     loop {
@@ -373,6 +404,7 @@ fn worker_loop(shared: Arc<Shared>, index: usize) {
             loop {
                 while state.high.front().is_some_and(|j| j.exhausted()) {
                     state.high.pop_front();
+                    shared.high_pending.fetch_sub(1, Ordering::Relaxed);
                 }
                 while state.normal.front().is_some_and(|j| j.exhausted()) {
                     state.normal.pop_front();
@@ -386,7 +418,12 @@ fn worker_loop(shared: Arc<Shared>, index: usize) {
                 state = shared.available.wait(state).unwrap();
             }
         };
-        job.help(&label);
+        match job.lane {
+            Lane::High => job.help(&label),
+            Lane::Normal => {
+                job.help_while(&label, || shared.high_pending.load(Ordering::Relaxed) == 0)
+            }
+        }
     }
 }
 
@@ -662,6 +699,79 @@ mod tests {
             first_worker_task,
             Some(&(Lane::High, true)),
             "worker drained the wrong lane first: {order:?}"
+        );
+    }
+
+    #[test]
+    fn idle_worker_with_empty_high_queue_steals_normal_work() {
+        // With nothing in the high lane, background workers must pick up
+        // normal jobs instead of sleeping until high work appears.
+        let exec = Executor::new(4);
+        let on_worker = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..32).collect();
+        let out = exec.map(&items, |&x| {
+            let worker = std::thread::current()
+                .name()
+                .is_some_and(|n| n.starts_with("cpsaa-exec"));
+            if worker {
+                on_worker.fetch_add(1, Ordering::Relaxed);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            x + 1
+        });
+        assert_eq!(out, (1..33).collect::<Vec<_>>());
+        assert!(
+            on_worker.load(Ordering::Relaxed) > 0,
+            "no background worker stole from the normal lane"
+        );
+    }
+
+    #[test]
+    fn high_job_is_not_starved_behind_a_running_bulk_normal_job() {
+        // Lane-starvation regression: the lane preference must hold at
+        // task granularity, not just at job pick time. A worker already
+        // grinding a bulk normal fan-out yields between task claims the
+        // moment a high job is queued, helps it, then resumes the normal
+        // job. Before the yield point existed, the high job here would
+        // be run solely by its submitter: the bulk job (64×5 ms across
+        // two threads ≈ 160 ms) outlives the submitter's solo pass over
+        // the high job (8×5 ms = 40 ms), so no worker would ever touch
+        // a high task.
+        let exec = Executor::new(2); // caller + one background worker
+        let normal_started = AtomicUsize::new(0);
+        let high_on_worker = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let items: Vec<usize> = (0..64).collect();
+                let out = exec.map(&items, |&x| {
+                    normal_started.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    x * 2
+                });
+                assert_eq!(out, (0..64).map(|x| x * 2).collect::<Vec<_>>());
+            });
+            // Both threads (submitter + worker) are inside the bulk job.
+            while normal_started.load(Ordering::SeqCst) < 2 {
+                std::thread::yield_now();
+            }
+            let items: Vec<usize> = (0..8).collect();
+            let out = with_lane(Lane::High, || {
+                exec.map(&items, |&x| {
+                    let worker = std::thread::current()
+                        .name()
+                        .is_some_and(|n| n.starts_with("cpsaa-exec"));
+                    if worker {
+                        high_on_worker.fetch_add(1, Ordering::SeqCst);
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    x + 100
+                })
+            });
+            assert_eq!(out, (100..108).collect::<Vec<_>>());
+        });
+        assert!(
+            high_on_worker.load(Ordering::SeqCst) > 0,
+            "background worker never yielded its normal job to the high lane"
         );
     }
 }

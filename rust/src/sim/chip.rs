@@ -7,6 +7,29 @@ use crate::workload::WorkloadTrace;
 
 use super::area::AreaModel;
 use super::pipeline::{self, Mode, PhaseBreakdown, PipelineReport, StageEvent};
+use super::recam::RecamScheduler;
+
+/// Cost of evolving a batch's plans between encoder layers, both ways
+/// the hardware could do it: the cascade's O(nnz) coordinate-stream
+/// narrowing vs the full ReCAM re-scan it replaces (re-program
+/// rows×cols mask cells, then the row search). Narrowing touches only
+/// the live coordinates — nnz ≪ rows×cols at serving densities, and it
+/// skips the mask write entirely — which is the whole perf argument for
+/// the cascade path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanEvolutionCost {
+    /// Narrowing latency (ns): stream the previous plan's coordinates
+    /// through the ReCAM search logic, `recam_size` at a time. Max over
+    /// heads (head slices filter concurrently).
+    pub narrow_ns: f64,
+    /// Narrowing energy (pJ), summed over heads.
+    pub narrow_pj: f64,
+    /// Re-scan latency (ns): mask re-program + row search. Max over
+    /// heads.
+    pub rescan_ns: f64,
+    /// Re-scan energy (pJ), summed over heads.
+    pub rescan_pj: f64,
+}
 
 /// One batch's simulation outcome.
 #[derive(Clone, Debug)]
@@ -244,6 +267,33 @@ impl ChipSim {
         let total_ns = reports.iter().map(|r| r.total_ns).fold(0.0, f64::max);
         let energy_pj = reports.iter().map(|r| r.energy_pj).sum();
         ShardedSimReport { shards: reports, total_ns, energy_pj }
+    }
+
+    /// Cost one cascade step over `prev` (the plans being narrowed):
+    /// what the narrowing filter costs vs the full per-layer ReCAM
+    /// re-scan the static path would pay. Heads evolve concurrently on
+    /// their slices (max-ns), energy sums — the same law as every other
+    /// head fan-out.
+    pub fn plan_evolution_cost(&self, prev: &PlanSet) -> PlanEvolutionCost {
+        let hw = &self.hw;
+        let mut cost = PlanEvolutionCost::default();
+        for p in prev.plans() {
+            // Narrow: the live coordinate stream passes through the
+            // ReCAM search logic recam_size entries per clock.
+            let chunks = p.nnz().div_ceil(hw.recam_size.max(1)) as f64;
+            let narrow_ns = chunks * hw.recam_search_ns;
+            let narrow_pj = chunks * hw.recam_pj_per_row;
+            // Re-scan: re-program the full mask, then the row search.
+            let s = RecamScheduler::new(p);
+            let pass = s.row_search(hw);
+            let rescan_ns = s.program_ns(hw) + pass.search_ns;
+            let rescan_pj = pass.search_pj;
+            cost.narrow_ns = cost.narrow_ns.max(narrow_ns);
+            cost.narrow_pj += narrow_pj;
+            cost.rescan_ns = cost.rescan_ns.max(rescan_ns);
+            cost.rescan_pj += rescan_pj;
+        }
+        cost
     }
 
     /// A simulator for one head's `tiles/heads` chip slice.
@@ -499,6 +549,29 @@ mod tests {
         assert_eq!(sim().with_precision(Precision::I8).precision(), Precision::I8);
         assert!(qh.total_ns <= fh.total_ns);
         assert!(qh.energy_pj < fh.energy_pj, "head slices lost the precision knob");
+    }
+
+    #[test]
+    fn narrowing_undercuts_rescan_at_serving_density() {
+        // The cascade's bargain: filtering the live coordinate stream
+        // must be much cheaper than re-programming and re-searching the
+        // full mask (nnz ≪ rows×cols at paper density 0.1).
+        let plans = PlanSet::from_plans(vec![mask(0.1).plan(); 4]);
+        let c = sim().plan_evolution_cost(&plans);
+        assert!(c.narrow_ns > 0.0 && c.rescan_ns > 0.0);
+        assert!(
+            c.narrow_ns < c.rescan_ns / 4.0,
+            "narrow {} vs rescan {}",
+            c.narrow_ns,
+            c.rescan_ns
+        );
+        assert!(c.narrow_pj < c.rescan_pj, "narrow {} vs rescan {}", c.narrow_pj, c.rescan_pj);
+        // Fewer coordinates ⇒ cheaper narrowing; the rescan floor is a
+        // function of mask shape, not occupancy.
+        let sparser = PlanSet::from_plans(vec![mask(0.01).plan(); 4]);
+        let cs = sim().plan_evolution_cost(&sparser);
+        assert!(cs.narrow_ns <= c.narrow_ns);
+        assert_eq!(cs.rescan_ns, c.rescan_ns);
     }
 
     #[test]

@@ -33,6 +33,8 @@ pub mod reram;
 pub mod sddmm;
 pub mod spmm;
 
-pub use chip::{ChipSim, HeadsSimReport, ShardedSimReport, SimReport, SimTrace, TraceReport};
+pub use chip::{
+    ChipSim, HeadsSimReport, PlanEvolutionCost, ShardedSimReport, SimReport, SimTrace, TraceReport,
+};
 pub use energy::EnergyMeter;
 pub use pipeline::{PhaseBreakdown, StageEvent};

@@ -21,9 +21,11 @@ mod csr;
 mod mask;
 mod plan;
 mod planset;
+mod prune;
 
 pub use csr::{CsrMatrix, CsrView};
 pub(crate) use csr::{softmax_row, spmm_row_into};
 pub use mask::{BlockCounts, MaskMatrix};
 pub use plan::{DispatchPlan, DISPATCH_TILE};
 pub use planset::{PlanSet, ShardedPlans};
+pub use prune::{CascadeStats, LayerImportance, PruneConfig};

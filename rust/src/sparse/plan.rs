@@ -206,6 +206,48 @@ impl DispatchPlan {
         partition_by_weights(self.rows, |i| self.row_nnz(i), parts)
     }
 
+    /// The plan filtered to the kept rows and columns — cascade
+    /// narrowing's derived schedule. One pass over the existing u32
+    /// coordinate stream keeps exactly the coordinates ⟨i, j⟩ with
+    /// `keep_rows[i] && keep_cols[j]`; the mask is never rescanned.
+    /// Dimensions are preserved (dropped query rows become empty rows,
+    /// dropped key columns simply stop appearing), so the narrowed plan
+    /// stays drop-in compatible with every kernel, simulator engine,
+    /// and shard partitioner. Keeping everything reproduces the plan
+    /// exactly (`narrow(all, all) == self`, bit for bit).
+    pub fn narrow(&self, keep_rows: &[bool], keep_cols: &[bool]) -> DispatchPlan {
+        assert_eq!(keep_rows.len(), self.rows, "keep_rows length");
+        assert_eq!(keep_cols.len(), self.cols, "keep_cols length");
+        let tile_rows = self.blocks.tile_rows;
+        let tile_cols = self.blocks.tile_cols;
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx: Vec<u32> = Vec::with_capacity(self.nnz());
+        let mut col_nnz = vec![0u32; self.cols];
+        let mut counts = vec![0u32; tile_rows * tile_cols];
+        row_ptr.push(0u32);
+        for i in 0..self.rows {
+            if keep_rows[i] {
+                let tile_row_base = (i / DISPATCH_TILE) * tile_cols;
+                for &j in self.row_cols(i) {
+                    if keep_cols[j as usize] {
+                        col_idx.push(j);
+                        col_nnz[j as usize] += 1;
+                        counts[tile_row_base + j as usize / DISPATCH_TILE] += 1;
+                    }
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        DispatchPlan {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr,
+            col_idx,
+            col_nnz,
+            blocks: BlockCounts { tile_rows, tile_cols, counts },
+        }
+    }
+
     /// The plan restricted to the contiguous row range `rows` — one
     /// shard's view of the batch: local row indices `0..rows.len()`,
     /// full key columns. The CSR topology is carried over (no rescan);
@@ -337,6 +379,75 @@ mod tests {
             }
             assert_eq!(cursor, n);
         }
+    }
+
+    #[test]
+    fn narrow_keep_all_is_identity() {
+        for density in [0.0, 0.15, 1.0] {
+            let p = mask(40, 56, density, 11).plan();
+            let all_rows = vec![true; 40];
+            let all_cols = vec![true; 56];
+            assert_eq!(p.narrow(&all_rows, &all_cols), p, "density {density}");
+        }
+    }
+
+    #[test]
+    fn narrow_matches_rebuilt_filtered_mask() {
+        let m = mask(48, 64, 0.25, 21);
+        let p = m.plan();
+        let keep_rows: Vec<bool> = (0..48).map(|i| i % 3 != 0).collect();
+        let keep_cols: Vec<bool> = (0..64).map(|j| j % 2 == 0).collect();
+        let narrowed = p.narrow(&keep_rows, &keep_cols);
+        // dimensions preserved, coordinates filtered
+        assert_eq!((narrowed.rows(), narrowed.cols()), (48, 64));
+        // the narrowed plan must equal a from-scratch scan of the
+        // filtered mask — without ever having rescanned anything
+        let mut filtered = MaskMatrix::zeros(48, 64);
+        for i in 0..48 {
+            for j in 0..64 {
+                if m.get(i, j) && keep_rows[i] && keep_cols[j] {
+                    filtered.set(i, j, true);
+                }
+            }
+        }
+        assert_eq!(narrowed, filtered.plan());
+    }
+
+    #[test]
+    fn narrow_drops_rows_and_columns() {
+        let m = mask(32, 32, 0.5, 22);
+        let p = m.plan();
+        let mut keep = vec![true; 32];
+        keep[5] = false;
+        keep[17] = false;
+        let narrowed = p.narrow(&keep, &keep);
+        assert_eq!(narrowed.row_nnz(5), 0);
+        assert_eq!(narrowed.row_nnz(17), 0);
+        assert_eq!(narrowed.col_queue_depths()[5], 0);
+        assert_eq!(narrowed.col_queue_depths()[17], 0);
+        for i in 0..32 {
+            for &j in narrowed.row_cols(i) {
+                assert!(keep[i] && keep[j as usize]);
+                assert!(m.get(i, j as usize));
+            }
+        }
+        assert_eq!(narrowed.blocks().total(), narrowed.nnz() as u64);
+        // narrowing is monotone: never grows the stream
+        assert!(narrowed.nnz() <= p.nnz());
+        // narrowing composes: filtering twice with the same keep sets is
+        // a fixpoint (cumulative cascade layers reuse the same stream)
+        assert_eq!(narrowed.narrow(&keep, &keep), narrowed);
+    }
+
+    #[test]
+    fn narrow_empty_keep_empties_the_plan() {
+        let p = mask(16, 16, 0.4, 23).plan();
+        let none = vec![false; 16];
+        let all = vec![true; 16];
+        let narrowed = p.narrow(&none, &all);
+        assert_eq!(narrowed.nnz(), 0);
+        assert_eq!((narrowed.rows(), narrowed.cols()), (16, 16));
+        assert_eq!(narrowed.density(), 0.0);
     }
 
     #[test]

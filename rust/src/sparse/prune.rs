@@ -1,0 +1,389 @@
+//! Cascade plan narrowing — score-driven top-k pruning between layers.
+//!
+//! SpAtten prunes tokens and heads *cumulatively* across encoder layers;
+//! DSA derives the mask from runtime attention scores instead of a
+//! static pattern. This module is that idea expressed on the
+//! [`DispatchPlan`] substrate: each layer's fused pass retains its
+//! plan-ordered softmax probabilities (values the kernel materializes
+//! anyway — no extra pass over K), a [`LayerImportance`] reduces them
+//! serially in plan order into per-token and per-head scores, and
+//! [`PlanSet::narrow_cascade`] filters the existing u32 coordinate
+//! stream with top-k keep sets ([`DispatchPlan::narrow`]) — the mask is
+//! never rescanned, and deeper layers skip mask generation entirely.
+//!
+//! ## Determinism contract
+//!
+//! Narrowing decisions feed the serving determinism contract (replay
+//! bit-compares pruned captures across worker/leader/shard topologies),
+//! so every reduction here is order-fixed:
+//!
+//! * probability streams are retained in plan order — per-head fused
+//!   tasks write disjoint row ranges of one buffer, so contents are
+//!   identical at any worker count;
+//! * shard slices are contiguous row ranges in order, so accumulating
+//!   head-major across shards reproduces the unsharded (head, row)
+//!   addition order exactly;
+//! * top-k selection sorts by `(importance desc, index asc)` under
+//!   `f64::total_cmp` — no partial-order ambiguity.
+//!
+//! `keep = 1.0` never reaches this module: the coordinator
+//! short-circuits it to the literal static path, so exactness at
+//! keep-ratio 1 is bit-identity by construction.
+
+use super::plan::DispatchPlan;
+use super::planset::PlanSet;
+
+/// How the serving stack evolves each batch's [`PlanSet`] across
+/// encoder layers.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum PruneConfig {
+    /// Today's path: every layer generates its own masks and scans them.
+    #[default]
+    Static,
+    /// Cascade narrowing: layer 0 scans, every deeper layer derives its
+    /// plans by top-k filtering the previous layer's coordinate stream,
+    /// keeping `keep` of the tokens and heads (cumulative).
+    Cascade {
+        /// Fraction of tokens and heads kept per narrowing step, in
+        /// `(0, 1]`.
+        keep: f64,
+    },
+}
+
+impl PruneConfig {
+    /// Whether this config actually changes execution. `Cascade { 1.0 }`
+    /// keeps everything at every step, so it short-circuits to the
+    /// static path (the exactness-at-keep-ratio-1 contract: bit-identity
+    /// by construction, at any topology).
+    pub fn narrows(&self) -> bool {
+        match self {
+            PruneConfig::Static => false,
+            PruneConfig::Cascade { keep } => *keep < 1.0,
+        }
+    }
+
+    /// The cascade keep-ratio, if any.
+    pub fn keep(&self) -> Option<f64> {
+        match self {
+            PruneConfig::Static => None,
+            PruneConfig::Cascade { keep } => Some(*keep),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if let PruneConfig::Cascade { keep } = self {
+            if !keep.is_finite() || *keep <= 0.0 || *keep > 1.0 {
+                return Err(format!("cascade keep-ratio must be in (0, 1], got {keep}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for PruneConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PruneConfig::Static => write!(f, "static"),
+            // Rust's shortest-round-trip float formatting: parses back
+            // to the identical bits, so the capture config round-trips.
+            PruneConfig::Cascade { keep } => write!(f, "cascade:{keep}"),
+        }
+    }
+}
+
+impl std::str::FromStr for PruneConfig {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let cfg = if s == "static" {
+            PruneConfig::Static
+        } else if let Some(r) = s.strip_prefix("cascade:") {
+            let keep: f64 =
+                r.parse().map_err(|_| format!("bad cascade keep-ratio {r:?}"))?;
+            PruneConfig::Cascade { keep }
+        } else {
+            return Err(format!("unknown prune mode {s:?} (expected static | cascade:<keep-ratio>)"));
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Per-token and per-head importance of one layer's attention pass,
+/// reduced serially in plan order from the retained softmax
+/// probabilities.
+///
+/// * `token[j]` — attention mass token `j` received *as a key* (its
+///   column sum of the probability matrix), summed over heads. Tokens
+///   nothing attends to are the cascade's pruning candidates.
+/// * `head[h]` — head `h`'s focus: the sum over query rows of the row's
+///   maximum probability. Diffuse heads (probability spread thin over
+///   many keys) score low and are pruned first.
+#[derive(Clone, Debug)]
+pub struct LayerImportance {
+    token: Vec<f64>,
+    head: Vec<f64>,
+}
+
+impl LayerImportance {
+    /// Start an empty accumulation over `tokens` key columns and
+    /// `heads` heads.
+    pub fn new(tokens: usize, heads: usize) -> Self {
+        Self { token: vec![0.0; tokens], head: vec![0.0; heads] }
+    }
+
+    /// Fold one plan-ordered probability stream in: `probs[plan.row_range(i)]`
+    /// holds query row `i`'s softmax row. Serial, plan order — calling
+    /// this head-major across ordered contiguous shard slices reproduces
+    /// the unsharded addition order bit for bit.
+    pub fn add_rows(&mut self, head: usize, plan: &DispatchPlan, probs: &[f32]) {
+        debug_assert_eq!(probs.len(), plan.nnz(), "probs must be the plan-ordered stream");
+        for i in 0..plan.rows() {
+            let range = plan.row_range(i);
+            let mut row_max = 0.0f64;
+            for (&j, &p) in plan.row_cols(i).iter().zip(&probs[range]) {
+                let p = p as f64;
+                self.token[j as usize] += p;
+                if p > row_max {
+                    row_max = p;
+                }
+            }
+            self.head[head] += row_max;
+        }
+    }
+
+    /// Per-token scores (column attention mass summed over heads).
+    pub fn token_scores(&self) -> &[f64] {
+        &self.token
+    }
+
+    /// Per-head focus scores.
+    pub fn head_scores(&self) -> &[f64] {
+        &self.head
+    }
+
+    /// Top-k keep sets at ratio `keep`: the `max(1, ceil(keep · n))`
+    /// highest-scoring tokens and heads. Ties break by lower index;
+    /// ordering is total (`f64::total_cmp`), so selection is
+    /// deterministic at any topology.
+    pub fn keep_masks(&self, keep: f64) -> (Vec<bool>, Vec<bool>) {
+        (top_k_mask(&self.token, keep), top_k_mask(&self.head, keep))
+    }
+}
+
+fn top_k_mask(scores: &[f64], keep: f64) -> Vec<bool> {
+    let n = scores.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = ((keep * n as f64).ceil() as usize).clamp(1, n);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+    let mut mask = vec![false; n];
+    for &i in order.iter().take(k) {
+        mask[i] = true;
+    }
+    mask
+}
+
+/// What one narrowing step kept (the per-layer plan stats surfaced in
+/// `ServeMetrics` and response lines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CascadeStats {
+    /// Tokens kept (rows == cols of the square batch mask).
+    pub rows_kept: usize,
+    /// Heads kept.
+    pub heads_kept: usize,
+}
+
+impl PlanSet {
+    /// Derive the next layer's plan set by top-k narrowing: keep the
+    /// `keep` fraction of tokens and heads ranked by `importance`, then
+    /// filter every kept head's coordinate stream with
+    /// [`DispatchPlan::narrow`] (pruned heads keep their shape but lose
+    /// every coordinate). Cumulative by construction — narrowing the
+    /// result narrows further, and the mask is never rescanned.
+    pub fn narrow_cascade(
+        &self,
+        importance: &LayerImportance,
+        keep: f64,
+    ) -> (PlanSet, CascadeStats) {
+        assert!(
+            (0.0..=1.0).contains(&keep) && keep > 0.0,
+            "keep-ratio must be in (0, 1], got {keep}"
+        );
+        let (keep_tok, keep_heads) = importance.keep_masks(keep);
+        assert_eq!(keep_tok.len(), self.plan(0).cols(), "token scores match key columns");
+        assert_eq!(keep_heads.len(), self.heads(), "head scores match heads");
+        // Dropped query rows and dropped key columns are the same token
+        // set: a pruned token neither issues nor receives attention.
+        // (Plans are square in the serving path; guard non-square uses.)
+        let keep_rows: Vec<bool> = if self.rows() == keep_tok.len() {
+            keep_tok.clone()
+        } else {
+            vec![true; self.rows()]
+        };
+        let none_rows = vec![false; self.rows()];
+        let plans: Vec<DispatchPlan> = self
+            .plans()
+            .iter()
+            .zip(&keep_heads)
+            .map(|(p, &kept)| {
+                if kept {
+                    p.narrow(&keep_rows, &keep_tok)
+                } else {
+                    p.narrow(&none_rows, &keep_tok)
+                }
+            })
+            .collect();
+        let stats = CascadeStats {
+            rows_kept: keep_tok.iter().filter(|&&k| k).count(),
+            heads_kept: keep_heads.iter().filter(|&&k| k).count(),
+        };
+        (PlanSet::from_plans(plans), stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::MaskMatrix;
+    use crate::tensor::SeededRng;
+
+    fn plan_set(heads: usize, n: usize, seed: u64) -> PlanSet {
+        let mut rng = SeededRng::new(seed);
+        let masks: Vec<MaskMatrix> = (0..heads)
+            .map(|h| MaskMatrix::from_dense(&rng.mask_matrix(n, n, 0.2 + 0.1 * h as f64)))
+            .collect();
+        PlanSet::build(&masks)
+    }
+
+    /// Uniform probability streams for a plan set (each row sums to 1).
+    fn uniform_probs(set: &PlanSet) -> Vec<Vec<f32>> {
+        set.plans()
+            .iter()
+            .map(|p| {
+                let mut v = vec![0.0f32; p.nnz()];
+                for i in 0..p.rows() {
+                    let r = p.row_range(i);
+                    let nnz = r.len().max(1) as f32;
+                    for x in &mut v[r] {
+                        *x = 1.0 / nnz;
+                    }
+                }
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prune_config_parses_and_round_trips() {
+        assert_eq!("static".parse::<PruneConfig>().unwrap(), PruneConfig::Static);
+        assert_eq!(
+            "cascade:0.5".parse::<PruneConfig>().unwrap(),
+            PruneConfig::Cascade { keep: 0.5 }
+        );
+        for cfg in [PruneConfig::Static, PruneConfig::Cascade { keep: 0.625 }] {
+            assert_eq!(cfg.to_string().parse::<PruneConfig>().unwrap(), cfg);
+        }
+        assert!("cascade:0".parse::<PruneConfig>().is_err());
+        assert!("cascade:1.5".parse::<PruneConfig>().is_err());
+        assert!("cascade:nan".parse::<PruneConfig>().is_err());
+        assert!("topk:0.5".parse::<PruneConfig>().is_err());
+        assert!(!PruneConfig::Static.narrows());
+        assert!(!PruneConfig::Cascade { keep: 1.0 }.narrows());
+        assert!(PruneConfig::Cascade { keep: 0.5 }.narrows());
+    }
+
+    #[test]
+    fn top_k_mask_ranks_and_breaks_ties_by_index() {
+        let scores = vec![0.3, 0.9, 0.3, 0.1];
+        let mask = top_k_mask(&scores, 0.5);
+        // k = 2: index 1 (0.9) then the tie at 0.3 goes to the lower
+        // index 0, never index 2
+        assert_eq!(mask, vec![true, true, false, false]);
+        // keep everything
+        assert_eq!(top_k_mask(&scores, 1.0), vec![true; 4]);
+        // floor at one survivor
+        assert_eq!(top_k_mask(&scores, 1e-9), vec![false, true, false, false]);
+    }
+
+    #[test]
+    fn importance_accumulates_column_mass() {
+        let set = plan_set(2, 16, 3);
+        let probs = uniform_probs(&set);
+        let mut imp = LayerImportance::new(16, 2);
+        for (h, p) in probs.iter().enumerate() {
+            imp.add_rows(h, set.plan(h), p);
+        }
+        // total token mass = one unit per nonempty row per head
+        let nonempty: usize = set
+            .plans()
+            .iter()
+            .map(|p| (0..p.rows()).filter(|&i| p.row_nnz(i) > 0).count())
+            .sum();
+        let total: f64 = imp.token_scores().iter().sum();
+        assert!((total - nonempty as f64).abs() < 1e-6, "{total} vs {nonempty}");
+        // head focus positive for nonempty plans
+        assert!(imp.head_scores().iter().all(|&h| h > 0.0));
+    }
+
+    #[test]
+    fn sharded_accumulation_matches_unsharded_bitwise() {
+        let set = plan_set(3, 48, 5);
+        let probs = uniform_probs(&set);
+        let mut whole = LayerImportance::new(48, 3);
+        for (h, p) in probs.iter().enumerate() {
+            whole.add_rows(h, set.plan(h), p);
+        }
+        for shards in [2usize, 3, 5] {
+            let sharded = set.shard(shards);
+            let mut acc = LayerImportance::new(48, 3);
+            // head-major over ordered shard slices = unsharded order
+            for h in 0..3 {
+                for s in 0..sharded.count() {
+                    let sub = sharded.set(s).plan(h);
+                    let r = sharded.range(s);
+                    let full = set.plan(h);
+                    let lo = full.row_range(r.start).start;
+                    let hi = full.row_range(r.end - 1).end;
+                    acc.add_rows(h, sub, &probs[h][lo..hi]);
+                }
+            }
+            for (a, b) in whole.token_scores().iter().zip(acc.token_scores()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{shards} shards");
+            }
+            for (a, b) in whole.head_scores().iter().zip(acc.head_scores()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{shards} shards");
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_cascade_prunes_tokens_and_heads() {
+        let set = plan_set(4, 32, 7);
+        let probs = uniform_probs(&set);
+        let mut imp = LayerImportance::new(32, 4);
+        for (h, p) in probs.iter().enumerate() {
+            imp.add_rows(h, set.plan(h), p);
+        }
+        let (narrowed, stats) = set.narrow_cascade(&imp, 0.5);
+        assert_eq!(narrowed.heads(), 4);
+        assert_eq!(stats.rows_kept, 16);
+        assert_eq!(stats.heads_kept, 2);
+        assert!(narrowed.total_nnz() < set.total_nnz());
+        // pruned heads lost every coordinate but kept their shape
+        let (_, keep_heads) = imp.keep_masks(0.5);
+        for (h, &kept) in keep_heads.iter().enumerate() {
+            assert_eq!(narrowed.plan(h).rows(), 32, "head {h}");
+            if !kept {
+                assert_eq!(narrowed.plan(h).nnz(), 0, "pruned head {h} must be empty");
+            }
+        }
+        // cumulative: narrowing again with the same scores is a fixpoint
+        // on the keep sets (the kept coordinates survive)
+        let (again, stats2) = narrowed.narrow_cascade(&imp, 1.0);
+        assert_eq!(again, narrowed);
+        assert_eq!(stats2.rows_kept, 32);
+    }
+}

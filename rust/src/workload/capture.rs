@@ -33,10 +33,15 @@
 //! ## Comparison contract
 //!
 //! Always compared bit-exactly: `hidden`, `mask_density`,
-//! `head_density`, `precision`, response ids. The simulated-cost fields
-//! (`sim_ns`/`sim_pj`, per-head and per-shard lines) are a function of
-//! the shard topology, so they are compared bit-exactly only when the
-//! replay runs at the recorded shard count and skipped otherwise.
+//! `head_density`, `precision`, response ids, and the per-layer plan
+//! evolution (`layer_nnz`/`layer_rows_kept`/`layer_heads_kept`,
+//! `narrow_ns`/`rescan_ns`) — cascade narrowing decisions are functions
+//! of the request stream, not the topology, so a pruned capture must
+//! narrow identically at any worker/leader/shard count. The
+//! simulated-cost fields (`sim_ns`/`sim_pj`, per-head and per-shard
+//! lines) are a function of the shard topology, so they are compared
+//! bit-exactly only when the replay runs at the recorded shard count
+//! and skipped otherwise.
 
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -49,6 +54,7 @@ use crate::attention::Precision;
 use crate::config::{ModelConfig, SystemConfig};
 use crate::coordinator::{InferenceResponse, ServeHooks, Service, ServiceConfig};
 use crate::sim::SimTrace;
+use crate::sparse::PruneConfig;
 use crate::tensor::Matrix;
 
 /// Format marker of the capture file (`"format"` key).
@@ -77,6 +83,11 @@ pub struct CaptureConfig {
     /// precision changes values, so it is part of the contract, not an
     /// override axis).
     pub precision: Precision,
+    /// Plan-evolution mode at record time (recorded and honored at
+    /// replay — narrowing changes outputs, so it is part of the
+    /// contract, not an override axis). Captures written before cascade
+    /// narrowing existed read back as `Static`.
+    pub prune: PruneConfig,
     /// Whether the scalar lane twins were forced.
     pub force_scalar: bool,
     /// Seed of the artifact set served against (replay refuses to run
@@ -101,6 +112,18 @@ pub struct RecordedResponse {
     pub shard_sim_ns: Vec<f64>,
     pub shard_sim_pj: Vec<f64>,
     pub shard_rows: Vec<usize>,
+    /// Coordinates each layer's plans dispatched, layer order (compared
+    /// always — plan evolution is topology-independent). Empty on
+    /// captures written before cascade narrowing existed.
+    pub layer_nnz: Vec<usize>,
+    /// Query rows populated at each layer, layer order.
+    pub layer_rows_kept: Vec<usize>,
+    /// Heads populated at each layer, layer order.
+    pub layer_heads_kept: Vec<usize>,
+    /// Simulated plan-narrowing time across the stack (ns).
+    pub narrow_ns: f64,
+    /// Simulated full-rescan time the narrowing avoided (ns).
+    pub rescan_ns: f64,
 }
 
 /// One admitted request: payload in packing order plus the response it
@@ -172,6 +195,7 @@ impl Capture {
                         },
                     ),
                     ("precision", Json::Str(c.precision.to_string())),
+                    ("prune", Json::Str(c.prune.to_string())),
                     ("force_scalar", Json::Bool(c.force_scalar)),
                     ("artifact_seed", num(c.artifact_seed as f64)),
                     ("system_toml", Json::Str(c.system_toml.clone())),
@@ -206,6 +230,15 @@ impl Capture {
                 .as_str()?
                 .parse::<Precision>()
                 .map_err(|e| anyhow!("capture precision: {e}"))?,
+            // Absent on captures recorded before cascade narrowing:
+            // those ran the static path.
+            prune: match c.get("prune") {
+                Ok(v) => v
+                    .as_str()?
+                    .parse::<PruneConfig>()
+                    .map_err(|e| anyhow!("capture prune: {e}"))?,
+                Err(_) => PruneConfig::Static,
+            },
             force_scalar: match c.get("force_scalar")? {
                 Json::Bool(b) => *b,
                 other => bail!("force_scalar must be a bool, got {other:?}"),
@@ -433,6 +466,7 @@ pub fn replay(
             leaders,
             max_kernel_workers,
             precision: c.precision,
+            prune: c.prune,
             force_scalar: c.force_scalar,
             ..Default::default()
         },
@@ -487,6 +521,29 @@ fn compare_response(
     ensure_matrix(batch, rec.id, "hidden", &want.hidden, &got.hidden)?;
     ensure_f64(batch, rec.id, "mask_density", want.mask_density, got.mask_density)?;
     ensure_f64s(batch, rec.id, "head_density", &want.head_density, &got.head_density)?;
+    // Plan evolution is a function of the request stream, not the
+    // topology: a cascade-pruned capture must narrow identically at any
+    // worker/leader/shard count. Skipped only for pre-cascade captures
+    // (no plan lines recorded).
+    if !want.layer_nnz.is_empty() {
+        ensure_usizes(batch, rec.id, "layer_nnz", &want.layer_nnz, &got.layer_nnz)?;
+        ensure_usizes(
+            batch,
+            rec.id,
+            "layer_rows_kept",
+            &want.layer_rows_kept,
+            &got.layer_rows_kept,
+        )?;
+        ensure_usizes(
+            batch,
+            rec.id,
+            "layer_heads_kept",
+            &want.layer_heads_kept,
+            &got.layer_heads_kept,
+        )?;
+        ensure_f64(batch, rec.id, "narrow_ns", want.narrow_ns, got.narrow_ns)?;
+        ensure_f64(batch, rec.id, "rescan_ns", want.rescan_ns, got.rescan_ns)?;
+    }
     if strict_sim {
         ensure_f64(batch, rec.id, "sim_ns", want.sim_ns, got.sim_ns)?;
         ensure_f64(batch, rec.id, "sim_pj", want.sim_pj, got.sim_pj)?;
@@ -530,6 +587,13 @@ fn ensure_matrix(batch: u64, id: u64, field: &str, want: &Matrix, got: &Matrix) 
 fn ensure_f64(batch: u64, id: u64, field: &str, want: f64, got: f64) -> Result<()> {
     if want.to_bits() != got.to_bits() {
         bail!("batch {batch} request {id}: {field} diverged (recorded {want:?}, replayed {got:?})");
+    }
+    Ok(())
+}
+
+fn ensure_usizes(batch: u64, id: u64, field: &str, want: &[usize], got: &[usize]) -> Result<()> {
+    if want != got {
+        bail!("batch {batch} request {id}: {field} {got:?} != recorded {want:?}");
     }
     Ok(())
 }
@@ -651,6 +715,11 @@ fn response_to_json(r: &RecordedResponse) -> Json {
         ("shard_sim_ns", nums(&r.shard_sim_ns)),
         ("shard_sim_pj", nums(&r.shard_sim_pj)),
         ("shard_rows", usizes(&r.shard_rows)),
+        ("layer_nnz", usizes(&r.layer_nnz)),
+        ("layer_rows_kept", usizes(&r.layer_rows_kept)),
+        ("layer_heads_kept", usizes(&r.layer_heads_kept)),
+        ("narrow_ns", num(r.narrow_ns)),
+        ("rescan_ns", num(r.rescan_ns)),
     ])
 }
 
@@ -666,6 +735,28 @@ fn response_from_json(j: &Json) -> Result<RecordedResponse> {
         shard_sim_ns: f64s_from(j.get("shard_sim_ns")?)?,
         shard_sim_pj: f64s_from(j.get("shard_sim_pj")?)?,
         shard_rows: usizes_from(j.get("shard_rows")?)?,
+        // Absent on pre-cascade captures: empty/zero, which the replay
+        // comparison treats as "no plan lines recorded".
+        layer_nnz: match j.get("layer_nnz") {
+            Ok(v) => usizes_from(v)?,
+            Err(_) => Vec::new(),
+        },
+        layer_rows_kept: match j.get("layer_rows_kept") {
+            Ok(v) => usizes_from(v)?,
+            Err(_) => Vec::new(),
+        },
+        layer_heads_kept: match j.get("layer_heads_kept") {
+            Ok(v) => usizes_from(v)?,
+            Err(_) => Vec::new(),
+        },
+        narrow_ns: match j.get("narrow_ns") {
+            Ok(v) => v.as_f64()?,
+            Err(_) => 0.0,
+        },
+        rescan_ns: match j.get("rescan_ns") {
+            Ok(v) => v.as_f64()?,
+            Err(_) => 0.0,
+        },
     })
 }
 
@@ -694,6 +785,7 @@ mod tests {
                 leaders: 1,
                 max_kernel_workers: Some(3),
                 precision: Precision::I8,
+                prune: PruneConfig::Cascade { keep: 0.5 },
                 force_scalar: false,
                 artifact_seed: 7,
                 system_toml: SystemConfig::paper().to_toml_string(),
@@ -714,6 +806,11 @@ mod tests {
                         shard_sim_ns: vec![5.0e4, 4.5e4],
                         shard_sim_pj: vec![6.25e6, 6.25e6],
                         shard_rows: vec![3, 3],
+                        layer_nnz: vec![120, 48],
+                        layer_rows_kept: vec![16, 8],
+                        layer_heads_kept: vec![2, 1],
+                        narrow_ns: 321.5,
+                        rescan_ns: 2048.0,
                     },
                 }],
             }],
@@ -744,6 +841,45 @@ mod tests {
         for (a, b) in m.data().iter().zip(back.data()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn pre_cascade_captures_read_back_with_static_defaults() {
+        // Strip the keys this PR added from a serialized capture; the
+        // parser must read it like a capture recorded before cascade
+        // narrowing existed.
+        fn strip(j: &mut Json, keys: &[&str]) {
+            match j {
+                Json::Obj(m) => {
+                    m.retain(|k, _| !keys.contains(&k.as_str()));
+                    for (_, v) in m.iter_mut() {
+                        strip(v, keys);
+                    }
+                }
+                Json::Arr(a) => {
+                    for v in a.iter_mut() {
+                        strip(v, keys);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut j = sample_capture().to_json();
+        strip(
+            &mut j,
+            &["prune", "layer_nnz", "layer_rows_kept", "layer_heads_kept", "narrow_ns", "rescan_ns"],
+        );
+        let back = Capture::parse(&j.to_string()).unwrap();
+        assert_eq!(back.config.prune, PruneConfig::Static);
+        let r = &back.batches[0].requests[0].response;
+        assert!(r.layer_nnz.is_empty());
+        assert!(r.layer_rows_kept.is_empty());
+        assert!(r.layer_heads_kept.is_empty());
+        assert_eq!(r.narrow_ns, 0.0);
+        assert_eq!(r.rescan_ns, 0.0);
+        // the untouched fields still round-trip
+        assert_eq!(back.config.precision, Precision::I8);
+        assert_eq!(back.batches[0].requests[0].id, 42);
     }
 
     #[test]

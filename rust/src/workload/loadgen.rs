@@ -9,7 +9,11 @@
 //! their scheduled instants whether or not earlier replies have
 //! arrived: exactly the regime that exercises continuous batching,
 //! deadline shedding, and queue-full backpressure) and collects every
-//! typed outcome into a [`LoadgenReport`].
+//! typed outcome into a [`LoadgenReport`]. [`run_closed`] drives the
+//! same request stream in closed-loop fashion instead: a fixed number
+//! of requests in flight, the next submission gated on the oldest
+//! outstanding reply — the regime that measures sustainable throughput
+//! rather than behavior under a fixed offered rate.
 //!
 //! Latencies in the report are the server-measured submit→reply
 //! durations ([`InferenceResponse::latency`]), the same quantity the
@@ -116,8 +120,13 @@ pub struct LoadgenReport {
     pub failed: usize,
     /// Submit of the first request to reply of the last.
     pub wall: Duration,
-    /// Server-measured submit→reply latencies of completed requests.
+    /// Server-measured submit→reply latencies of completed requests,
+    /// all lanes combined.
     pub latency: LatencyHistogram,
+    /// Latencies of completed [`Lane::High`] requests.
+    pub latency_high: LatencyHistogram,
+    /// Latencies of completed [`Lane::Normal`] requests.
+    pub latency_normal: LatencyHistogram,
     pub outcomes: Vec<RequestOutcome>,
 }
 
@@ -170,6 +179,89 @@ fn payload_seed(seed: u64, id: u64) -> u64 {
     seed ^ id.wrapping_mul(0x9e37_79b9_7f4a_7c15)
 }
 
+/// Outcome accumulator shared by the open- and closed-loop runners:
+/// classifies each reply, splits completed latencies by lane, and keeps
+/// the per-request outcome table in schedule order.
+#[derive(Default)]
+struct Tally {
+    completed: usize,
+    shed_queue_full: usize,
+    shed_deadline: usize,
+    rejected: usize,
+    failed: usize,
+    latency: LatencyHistogram,
+    latency_high: LatencyHistogram,
+    latency_normal: LatencyHistogram,
+    outcomes: Vec<RequestOutcome>,
+}
+
+impl Tally {
+    fn absorb(
+        &mut self,
+        s: &ScheduledRequest,
+        got: std::result::Result<ServeResult, std::sync::mpsc::RecvError>,
+    ) {
+        let (outcome, lat, leader) = match got {
+            Ok(Ok(resp)) => {
+                self.completed += 1;
+                self.latency.record(resp.latency);
+                match s.lane {
+                    Lane::High => self.latency_high.record(resp.latency),
+                    Lane::Normal => self.latency_normal.record(resp.latency),
+                }
+                ("ok", Some(resp.latency), Some(resp.leader))
+            }
+            Ok(Err(ServeError::Shed(ShedReason::QueueFull))) => {
+                self.shed_queue_full += 1;
+                ("shed-queue-full", None, None)
+            }
+            Ok(Err(ServeError::Shed(ShedReason::DeadlineExpired))) => {
+                self.shed_deadline += 1;
+                ("shed-deadline", None, None)
+            }
+            Ok(Err(ServeError::Rejected(_))) => {
+                self.rejected += 1;
+                ("rejected", None, None)
+            }
+            Ok(Err(ServeError::Failed(_))) => {
+                self.failed += 1;
+                ("failed", None, None)
+            }
+            // The reply sender dropped without a verdict: the serving
+            // side died out from under the request.
+            Err(_) => {
+                self.failed += 1;
+                ("dropped", None, None)
+            }
+        };
+        self.outcomes.push(RequestOutcome {
+            id: s.id,
+            at: s.at,
+            rows: s.rows,
+            lane: s.lane,
+            outcome,
+            latency: lat,
+            leader,
+        });
+    }
+
+    fn into_report(self, offered: usize, wall: Duration) -> LoadgenReport {
+        LoadgenReport {
+            offered,
+            completed: self.completed,
+            shed_queue_full: self.shed_queue_full,
+            shed_deadline: self.shed_deadline,
+            rejected: self.rejected,
+            failed: self.failed,
+            wall,
+            latency: self.latency,
+            latency_high: self.latency_high,
+            latency_normal: self.latency_normal,
+            outcomes: self.outcomes,
+        }
+    }
+}
+
 /// Pace the seed's schedule against `svc` and collect every outcome.
 /// Open loop: each request submits at its scheduled instant (or as soon
 /// after as the pacing thread can manage), and replies are collected
@@ -201,64 +293,56 @@ pub fn run(
             progress(format!("t={tick}s: {}/{} submitted", pending.len(), sched.len()));
         }
     }
-    let mut latency = LatencyHistogram::new();
-    let mut outcomes = Vec::with_capacity(sched.len());
-    let mut completed = 0usize;
-    let mut shed_queue_full = 0usize;
-    let mut shed_deadline = 0usize;
-    let mut rejected = 0usize;
-    let mut failed = 0usize;
+    let mut tally = Tally::default();
     for (s, rx) in sched.iter().zip(pending) {
-        let (outcome, lat, leader) = match rx.recv() {
-            Ok(Ok(resp)) => {
-                completed += 1;
-                latency.record(resp.latency);
-                ("ok", Some(resp.latency), Some(resp.leader))
-            }
-            Ok(Err(ServeError::Shed(ShedReason::QueueFull))) => {
-                shed_queue_full += 1;
-                ("shed-queue-full", None, None)
-            }
-            Ok(Err(ServeError::Shed(ShedReason::DeadlineExpired))) => {
-                shed_deadline += 1;
-                ("shed-deadline", None, None)
-            }
-            Ok(Err(ServeError::Rejected(_))) => {
-                rejected += 1;
-                ("rejected", None, None)
-            }
-            Ok(Err(ServeError::Failed(_))) => {
-                failed += 1;
-                ("failed", None, None)
-            }
-            // The reply sender dropped without a verdict: the serving
-            // side died out from under the request.
-            Err(_) => {
-                failed += 1;
-                ("dropped", None, None)
-            }
-        };
-        outcomes.push(RequestOutcome {
-            id: s.id,
-            at: s.at,
-            rows: s.rows,
-            lane: s.lane,
-            outcome,
-            latency: lat,
-            leader,
-        });
+        tally.absorb(s, rx.recv());
     }
-    Ok(LoadgenReport {
-        offered: sched.len(),
-        completed,
-        shed_queue_full,
-        shed_deadline,
-        rejected,
-        failed,
-        wall: start.elapsed(),
-        latency,
-        outcomes,
-    })
+    Ok(tally.into_report(sched.len(), start.elapsed()))
+}
+
+/// Drive the seed's request stream closed-loop: at most `concurrency`
+/// requests in flight, the next submission gated on the oldest
+/// outstanding reply. The request *stream* (ids, payload sizes, lanes,
+/// payload contents) is the same deterministic expansion [`run`] uses;
+/// only the pacing differs — scheduled arrival instants are ignored, so
+/// the achieved rate measures what the service sustains at that
+/// concurrency instead of how it copes with a fixed offered rate.
+pub fn run_closed(
+    svc: &Service,
+    cfg: &LoadgenConfig,
+    concurrency: usize,
+    mut progress: impl FnMut(String),
+) -> Result<LoadgenReport> {
+    if concurrency == 0 {
+        crate::bail!("concurrency must be >= 1");
+    }
+    let (seq_len, d_model) = (svc.model().seq_len, svc.model().d_model);
+    let sched = schedule(cfg, seq_len);
+    let start = Instant::now();
+    let mut tally = Tally::default();
+    let mut window: std::collections::VecDeque<(usize, std::sync::mpsc::Receiver<ServeResult>)> =
+        std::collections::VecDeque::with_capacity(concurrency);
+    let mut last_tick = 0u64;
+    for (i, s) in sched.iter().enumerate() {
+        // Replies resolve in submission order per request; waiting on
+        // the oldest outstanding one bounds in-flight at `concurrency`.
+        if window.len() == concurrency {
+            let (j, rx) = window.pop_front().expect("window non-empty at capacity");
+            tally.absorb(&sched[j], rx.recv());
+        }
+        let x = SeededRng::new(payload_seed(cfg.seed, s.id)).normal_matrix(s.rows, d_model, 1.0);
+        let opts = SubmitOptions { deadline: cfg.deadline, lane: s.lane };
+        window.push_back((i, svc.submit_with(s.id, x, opts)?));
+        let tick = start.elapsed().as_secs();
+        if tick > last_tick {
+            last_tick = tick;
+            progress(format!("t={tick}s: {}/{} submitted", i + 1, sched.len()));
+        }
+    }
+    while let Some((j, rx)) = window.pop_front() {
+        tally.absorb(&sched[j], rx.recv());
+    }
+    Ok(tally.into_report(sched.len(), start.elapsed()))
 }
 
 #[cfg(test)]
@@ -386,6 +470,63 @@ mod tests {
         assert_eq!(report.latency.count(), report.completed as u64);
         assert!(report.latency.p99() >= report.latency.p50());
         assert!(report.achieved_rps() > 0.0);
+        // Per-lane histograms partition the combined one.
+        assert_eq!(
+            report.latency_high.count() + report.latency_normal.count(),
+            report.latency.count()
+        );
+        assert!(report.latency_high.count() > 0, "interactive=0.5 must land high-lane requests");
+        drop(svc);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn closed_loop_accounts_for_every_request_and_bounds_inflight() {
+        let dir =
+            std::env::temp_dir().join(format!("cpsaa-loadgen-closed-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 16,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            ..ModelConfig::default()
+        };
+        crate::runtime::ArtifactSet::synthesize(&dir, &model, 6).unwrap();
+        let svc = Service::start(
+            dir.clone(),
+            HardwareConfig::paper(),
+            model,
+            ServiceConfig {
+                layers: 1,
+                max_wait: Duration::from_millis(1),
+                // A tight queue would shed an open-loop burst; closed
+                // loop never exceeds its concurrency, so nothing sheds.
+                queue_cap: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let lg = LoadgenConfig {
+            seed: 17,
+            rps: 400.0,
+            duration: Duration::from_millis(120),
+            deadline: None,
+            interactive: 0.25,
+        };
+        let report = run_closed(&svc, &lg, 3, |_| {}).unwrap();
+        assert!(report.offered > 0);
+        assert_eq!(report.offered, report.outcomes.len());
+        // in-flight never exceeded 3 <= queue_cap: zero sheds
+        assert_eq!(report.completed, report.offered);
+        assert_eq!(report.shed(), 0);
+        // outcome table stays in schedule order
+        for (i, o) in report.outcomes.iter().enumerate() {
+            assert_eq!(o.id, i as u64);
+        }
+        // the stream expansion is shared with the open-loop runner
+        let sched = schedule(&lg, 16);
+        assert_eq!(report.offered, sched.len());
+        assert!(run_closed(&svc, &lg, 0, |_| {}).is_err(), "concurrency 0 must be rejected");
         drop(svc);
         std::fs::remove_dir_all(&dir).ok();
     }

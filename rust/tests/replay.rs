@@ -15,6 +15,7 @@ use cpsaa::attention::Precision;
 use cpsaa::config::{HardwareConfig, ModelConfig, SystemConfig};
 use cpsaa::coordinator::{ServeHooks, Service, ServiceConfig, SubmitOptions};
 use cpsaa::runtime::{ArtifactSet, Lane};
+use cpsaa::sparse::PruneConfig;
 use cpsaa::tensor::{Matrix, SeededRng};
 use cpsaa::workload::capture::{
     self, Capture, CaptureConfig, CaptureRecorder, ReplayOverrides, SimTracer,
@@ -248,6 +249,105 @@ fn live_continuous_batching_capture_replays_across_topologies() {
     .unwrap();
     assert_eq!(report.requests, 10);
     assert_eq!((report.leaders, report.shards), (3, 2));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The cascade acceptance property: a capture recorded with
+/// `--prune cascade:0.5` at the minimal topology must replay
+/// bit-identically at a different worker/leader/shard topology. That
+/// covers both the functional outputs *and* the per-layer plan-evolution
+/// stats (nnz, rows/heads kept), which are request-stream functions —
+/// importance accumulation and top-k narrowing are topology-invariant —
+/// so the comparator holds them to the bit even when sim fields are
+/// relaxed.
+#[test]
+fn cascade_pruned_capture_replays_across_topologies() {
+    let dir = std::env::temp_dir().join(format!("cpsaa-replay-cascade-{}", std::process::id()));
+    let m = model();
+    ArtifactSet::synthesize(&dir, &m, 67).unwrap();
+    let prune = PruneConfig::Cascade { keep: 0.5 };
+    let recorder = CaptureRecorder::new();
+    let svc = Service::start_with_hooks(
+        dir.clone(),
+        HardwareConfig::paper(),
+        m,
+        ServiceConfig {
+            layers: 3,
+            shards: 1,
+            leaders: 1,
+            max_kernel_workers: Some(1),
+            prune,
+            ..Default::default()
+        },
+        ServeHooks { recorder: Some(recorder.clone()), tracer: None },
+    )
+    .unwrap();
+    let mut rng = SeededRng::new(167);
+    let mut next_id = 0u64;
+    for group_size in [2usize, 3] {
+        let reqs: Vec<(u64, Matrix)> = (0..group_size)
+            .map(|_| {
+                let id = next_id;
+                next_id += 1;
+                (id, rng.normal_matrix(8, 64, 1.0))
+            })
+            .collect();
+        for rx in svc.submit_group(reqs).unwrap() {
+            let resp = rx.recv().unwrap().unwrap();
+            // the served responses already carry the cascade evidence
+            assert_eq!(resp.prune, prune);
+            assert_eq!(resp.layer_nnz.len(), 3);
+            assert!(resp.layer_nnz[1] < resp.layer_nnz[0], "plans must narrow");
+            assert!(resp.narrow_ns > 0.0 && resp.narrow_ns < resp.rescan_ns);
+        }
+    }
+    let capture = recorder.into_capture(CaptureConfig {
+        model: svc.model().clone(),
+        layers: 3,
+        shards: 1,
+        leaders: 1,
+        max_kernel_workers: Some(1),
+        precision: Precision::F32,
+        prune,
+        force_scalar: false,
+        artifact_seed: 67,
+        system_toml: SystemConfig::paper().to_toml_string(),
+    });
+    drop(svc);
+    assert_eq!(capture.requests(), 5);
+
+    // The file round-trip keeps the prune config and plan stats...
+    let path =
+        std::env::temp_dir().join(format!("cpsaa-replay-cascade-cap-{}.json", std::process::id()));
+    capture.save(&path).unwrap();
+    let loaded = Capture::load(&path).unwrap();
+    assert_eq!(loaded, capture);
+    assert_eq!(loaded.config.prune, prune);
+
+    // ...and the replay holds them to the bit at another topology.
+    let report = capture::replay(
+        &loaded,
+        &dir,
+        ReplayOverrides { max_workers: Some(3), leaders: Some(2), shards: Some(2) },
+        None,
+    )
+    .unwrap();
+    assert_eq!(report.requests, 5);
+    assert!(!report.strict_sim);
+
+    // Tampering with a recorded plan stat is caught even under a
+    // topology change — plan evolution is not a sim-only field.
+    let mut bad = loaded.clone();
+    bad.batches[0].requests[0].response.layer_nnz[1] += 1;
+    let err = capture::replay(
+        &bad,
+        &dir,
+        ReplayOverrides { shards: Some(2), ..Default::default() },
+        None,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("layer_nnz"), "{err}");
+    std::fs::remove_file(&path).ok();
     std::fs::remove_dir_all(&dir).ok();
 }
 
