@@ -308,6 +308,48 @@ fn main() {
         "4 leader threads vs 1 (8 concurrent single-batch requests): {:.2}x wall",
         l4.as_secs_f64() / l1.as_secs_f64().max(1e-12)
     );
+
+    // -- serving: plan prefetch + content-addressed cache on vs off ----------
+    // The PR-10 tentpole gate: a repeated-shape stream of full-seq_len
+    // payloads (each request seals its own batch, so window composition
+    // is identical on both sides) served with the stage-overlapped plan
+    // pipeline on and off. With prefetch on, every repeat is a plan-cache
+    // hit — mask generation and the ReCAM scan never run; with it off,
+    // every batch rebuilds its plans inline. Responses are bit-identical
+    // either way; CI asserts the on rung beats the off rung same-run
+    // (`cpsaa bench-assert-faster`).
+    let pf_svc = |prefetch: bool| {
+        Service::start(
+            serve_dir.clone(),
+            cfg.hardware.clone(),
+            serve_model.clone(),
+            ServiceConfig {
+                layers: 1,
+                prefetch,
+                max_wait: std::time::Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .expect("start prefetch bench service")
+    };
+    let svc_on = pf_svc(true);
+    let svc_off = pf_svc(false);
+    let x_rep = SeededRng::new(21).normal_matrix(32, 64, 1.0);
+    let stream = |svc: &Service| {
+        let mut acc = 0.0f32;
+        for id in 0..4u64 {
+            acc += svc.infer(id, x_rep.clone()).expect("bench request").hidden.norm();
+        }
+        acc
+    };
+    let pf_on = b.run("serve_prefetch_on", || stream(&svc_on));
+    let pf_off = b.run("serve_prefetch_off", || stream(&svc_off));
+    println!(
+        "plan prefetch + cache vs inline plan builds (repeated-shape stream): {:.2}x",
+        pf_off.as_secs_f64() / pf_on.as_secs_f64().max(1e-12)
+    );
+    drop(svc_on);
+    drop(svc_off);
     std::fs::remove_dir_all(&serve_dir).ok();
 
     // -- cascade plan narrowing: 4-layer stack, static vs cascade:0.5 --------
@@ -342,7 +384,7 @@ fn main() {
     );
     let cascade_stack =
         EncoderStack::new(&casc_engine, casc_w, cfg.hardware.clone(), casc_model.clone(), 4)
-            .with_prune(PruneConfig::Cascade { keep: 0.5 });
+            .with_prune(PruneConfig::cascade(0.5));
     let xs = SeededRng::new(11).normal_matrix(256, 64, 1.0);
     let stat_t = b.run("encoder_stack4_static", || {
         static_stack.forward(&xs).unwrap().last().unwrap().hidden.norm()

@@ -238,6 +238,17 @@ pub struct ServeMetrics {
     /// Per-leader accounting, leader order; sized at service startup
     /// (len 1 under single-leader serving).
     pub leaders: Vec<LeaderMetrics>,
+    /// Batches whose layer-0 plans were served from the plan cache —
+    /// mask generation and the ReCAM scan were skipped entirely.
+    pub plan_cache_hits: u64,
+    /// Batches whose layer-0 plans had to be built (prefetched or
+    /// inline) because no cached entry matched their payload.
+    pub plan_cache_misses: u64,
+    /// Simulated scan time (ns) hidden behind compute by the prefetch
+    /// pipeline: for prefetch-built plans, the part of the scan that
+    /// overlapped the previous batch's execution; for cache hits, the
+    /// whole scan that was never run.
+    pub prefetch_overlapped_ns: f64,
 }
 
 impl ServeMetrics {
@@ -358,6 +369,19 @@ impl ServeMetrics {
             });
         }
         trim_log(&mut self.plan_lines);
+    }
+
+    /// Fold one batch's plan-sourcing outcome in: whether its layer-0
+    /// plans came from the cache (the whole scan skipped) or had to be
+    /// built, and how much simulated scan time the prefetch pipeline
+    /// hid behind the previous batch's compute.
+    pub fn record_plan_source(&mut self, cache_hit: bool, overlapped_ns: f64) {
+        if cache_hit {
+            self.plan_cache_hits += 1;
+        } else {
+            self.plan_cache_misses += 1;
+        }
+        self.prefetch_overlapped_ns += overlapped_ns;
     }
 
     /// Fold one executed batch into leader `leader`'s line.
@@ -594,6 +618,17 @@ mod tests {
         m.record_plans(4, &[900], &[32], &[4], &[0.0], &[0.0]);
         assert!((m.narrow_ns - 12.5).abs() < 1e-12);
         assert_eq!(m.plan_lines.len(), 3);
+    }
+
+    #[test]
+    fn plan_source_counters_accumulate() {
+        let mut m = ServeMetrics::default();
+        m.record_plan_source(false, 120.0);
+        m.record_plan_source(true, 500.0);
+        m.record_plan_source(true, 480.0);
+        assert_eq!(m.plan_cache_hits, 2);
+        assert_eq!(m.plan_cache_misses, 1);
+        assert!((m.prefetch_overlapped_ns - 1100.0).abs() < 1e-12);
     }
 
     #[test]

@@ -22,6 +22,8 @@
 //! energy ([`shard::attribute`][super::shard::attribute]). `shards == 1`
 //! runs the exact unsharded code path.
 
+use std::sync::Arc;
+
 use crate::util::error::Result;
 
 use crate::attention::{MultiHeadWeights, Precision};
@@ -157,8 +159,8 @@ impl<'e> EncoderStack<'e> {
         self
     }
 
-    pub fn prune(&self) -> PruneConfig {
-        self.prune
+    pub fn prune(&self) -> &PruneConfig {
+        &self.prune
     }
 
     /// Run one batch through every layer. Returns per-layer outputs
@@ -179,23 +181,51 @@ impl<'e> EncoderStack<'e> {
     /// The timelines describe the batch's one simulated execution, the
     /// same one every layer's cost lines reuse.
     pub fn forward_traced(&self, x: &Matrix) -> Result<(Vec<LayerOutput>, Vec<SimTrace>)> {
+        self.forward_traced_prefetched(x, None)
+    }
+
+    /// [`EncoderStack::forward_traced`] accepting the batch's layer-0
+    /// plan set prebuilt elsewhere — by the serving layer's prefetch
+    /// pipeline (scanned while the previous batch was still executing)
+    /// or its content-addressed plan cache. The plans must be exactly
+    /// what layer 0 would have scanned from `x` (they are a pure
+    /// function of the payload bits), so the output is bit-identical to
+    /// the unprefetched path; `None` builds them inline as always.
+    /// Only layer 0 is prefetchable: deeper static layers scan their
+    /// own input (the previous hidden state), and the cascade derives
+    /// deeper plans by narrowing.
+    pub fn forward_traced_prefetched(
+        &self,
+        x: &Matrix,
+        l0_plans: Option<Arc<PlanSet>>,
+    ) -> Result<(Vec<LayerOutput>, Vec<SimTrace>)> {
         if self.prune.narrows() {
-            return self.forward_cascade(x);
+            return self.forward_cascade(x, l0_plans);
         }
         let mut outs: Vec<LayerOutput> = Vec::with_capacity(self.layers);
         let mut batch_cost: Option<BatchCost> = None;
+        let mut prebuilt = l0_plans;
         for layer in 0..self.layers {
             // Layer N reads layer N−1's hidden state in place — no
             // input clone; kernel scratch comes from the engine's
             // workspace pool, so the stack allocates nothing per layer
             // beyond the hidden states it returns.
             let input = if layer == 0 { x } else { &outs[layer - 1].hidden };
-            let exec = self.engine.execute_encoder_heads_sharded_prec(
-                input,
-                &self.weights,
-                self.shards,
-                self.precision,
-            )?;
+            let exec = match prebuilt.take().filter(|_| layer == 0) {
+                Some(plans) => self.engine.execute_encoder_heads_preplanned_prec(
+                    input,
+                    &self.weights,
+                    plans,
+                    self.shards,
+                    self.precision,
+                )?,
+                None => self.engine.execute_encoder_heads_sharded_prec(
+                    input,
+                    &self.weights,
+                    self.shards,
+                    self.precision,
+                )?,
+            };
             let cost = batch_cost.get_or_insert_with(|| self.cost_of(&exec));
             outs.push(layer_output(
                 exec.hidden,
@@ -220,17 +250,21 @@ impl<'e> EncoderStack<'e> {
     /// the plans it actually ran (they shrink layer over layer), plus
     /// the narrowing charge; the re-scan cost it replaced rides along
     /// for observability.
-    fn forward_cascade(&self, x: &Matrix) -> Result<(Vec<LayerOutput>, Vec<SimTrace>)> {
-        let keep = self.prune.keep().expect("narrowing implies a cascade keep-ratio");
+    fn forward_cascade(
+        &self,
+        x: &Matrix,
+        l0_plans: Option<Arc<PlanSet>>,
+    ) -> Result<(Vec<LayerOutput>, Vec<SimTrace>)> {
         let mut outs: Vec<LayerOutput> = Vec::with_capacity(self.layers);
         let mut traces: Vec<SimTrace> = Vec::new();
-        // Plans for the layer about to run (None = scan from the input),
-        // and the stats/cost of the narrowing step that produced them.
-        let mut narrowed: Option<PlanSet> = None;
+        // Plans for the layer about to run (None = scan from the input;
+        // layer 0 may arrive prebuilt from the prefetch pipeline), and
+        // the stats/cost of the narrowing step that produced them.
+        let mut planned: Option<Arc<PlanSet>> = l0_plans;
         let mut step: Option<(usize, usize, f64, f64)> = None;
         for layer in 0..self.layers {
             let input = if layer == 0 { x } else { &outs[layer - 1].hidden };
-            let (exec, imp) = match narrowed.take() {
+            let (exec, imp) = match planned.take() {
                 None => self.engine.execute_encoder_heads_importance(
                     input,
                     &self.weights,
@@ -256,10 +290,27 @@ impl<'e> EncoderStack<'e> {
                 0.0,
             ));
             if layer + 1 < self.layers {
-                let evo = self.sim.plan_evolution_cost(&exec.plans);
-                let (next, stats) = exec.plans.narrow_cascade(&imp, keep);
-                step = Some((stats.rows_kept, stats.heads_kept, evo.narrow_ns, evo.rescan_ns));
-                narrowed = Some(next);
+                // Narrowing step `layer` derives layer `layer + 1`'s
+                // plans at that step's keep-ratio (schedules clamp to
+                // their last entry).
+                let keep = self
+                    .prune
+                    .keep_at(layer)
+                    .expect("narrowing implies a cascade keep schedule");
+                if keep < 1.0 {
+                    let evo = self.sim.plan_evolution_cost(&exec.plans);
+                    let (next, stats) = exec.plans.narrow_cascade(&imp, keep);
+                    step =
+                        Some((stats.rows_kept, stats.heads_kept, evo.narrow_ns, evo.rescan_ns));
+                    planned = Some(Arc::new(next));
+                } else {
+                    // A keep-1.0 step retains everything: reuse the
+                    // plans untouched (no filter pass to charge) and
+                    // carry the last narrowing step's keep counts
+                    // forward — the live-token set did not change.
+                    step = Some((rows_kept, heads_kept, 0.0, 0.0));
+                    planned = Some(exec.plans.clone());
+                }
             }
             outs.push(layer_output(
                 exec.hidden,
@@ -541,8 +592,8 @@ mod tests {
         let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 4).unwrap();
         let x = crate::tensor::SeededRng::new(11).normal_matrix(32, 64, 1.0);
         let stack = EncoderStack::new(&engine, w, HardwareConfig::paper(), model, 4)
-            .with_prune(PruneConfig::Cascade { keep: 0.5 });
-        assert_eq!(stack.prune(), PruneConfig::Cascade { keep: 0.5 });
+            .with_prune(PruneConfig::cascade(0.5));
+        assert_eq!(*stack.prune(), PruneConfig::cascade(0.5));
         let outs = stack.forward(&x).unwrap();
         assert_eq!(outs.len(), 4);
         // Layer 0 runs the full scanned plans and pays no narrowing.
@@ -578,6 +629,91 @@ mod tests {
     }
 
     #[test]
+    fn cascade_schedule_applies_per_layer_keeps_and_clamps_to_the_last() {
+        let dir =
+            std::env::temp_dir().join(format!("cpsaa-pipe-sched-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 32,
+            d_model: 64,
+            d_k: 8,
+            d_ff: 128,
+            heads: 4,
+            ..ModelConfig::default()
+        };
+        let set = ArtifactSet::synthesize(&dir, &model, 66).unwrap();
+        let engine = Engine::load(&set).unwrap();
+        let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 4).unwrap();
+        let x = crate::tensor::SeededRng::new(17).normal_matrix(32, 64, 1.0);
+        // Narrowing step 0 runs at 0.5; steps 1 and 2 clamp to the
+        // schedule's last entry (1.0), so the coordinate stream stops
+        // shrinking after layer 1.
+        let stack = EncoderStack::new(&engine, w, HardwareConfig::paper(), model, 4)
+            .with_prune(PruneConfig::cascade_schedule(vec![0.5, 1.0]));
+        let outs = stack.forward(&x).unwrap();
+        assert_eq!(outs.len(), 4);
+        assert_eq!(outs[0].rows_kept, 32);
+        assert_eq!(outs[0].heads_kept, 4);
+        assert_eq!(outs[1].rows_kept, 16);
+        assert_eq!(outs[1].heads_kept, 2);
+        assert!(outs[1].plan_nnz < outs[0].plan_nnz);
+        for o in &outs[2..] {
+            assert_eq!(o.rows_kept, outs[1].rows_kept, "keep 1.0 steps must not narrow");
+            assert_eq!(o.heads_kept, outs[1].heads_kept);
+            assert_eq!(o.plan_nnz, outs[1].plan_nnz);
+            assert!(o.hidden.all_finite());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prefetched_layer0_plans_serve_bit_identically() {
+        // The prefetch pipeline's whole contract: handing the stack a
+        // plan set built elsewhere (detached executor job or the plan
+        // cache) changes nothing about the outputs — static or cascade,
+        // unsharded or sharded.
+        let dir =
+            std::env::temp_dir().join(format!("cpsaa-pipe-prefetch-{}", std::process::id()));
+        let model = ModelConfig {
+            seq_len: 32,
+            d_model: 64,
+            d_k: 8,
+            d_ff: 128,
+            heads: 4,
+            ..ModelConfig::default()
+        };
+        let set = ArtifactSet::synthesize(&dir, &model, 49).unwrap();
+        let engine = Engine::load(&set).unwrap();
+        let w = MultiHeadWeights::load(&set.dir.join("weights.json"), 4).unwrap();
+        let x = crate::tensor::SeededRng::new(23).normal_matrix(32, 64, 1.0);
+        for prune in [PruneConfig::Static, PruneConfig::cascade(0.5)] {
+            for shards in [1usize, 3] {
+                let stack = EncoderStack::new(
+                    &engine,
+                    w.clone(),
+                    HardwareConfig::paper(),
+                    model.clone(),
+                    3,
+                )
+                .with_shards(shards)
+                .with_prune(prune.clone());
+                let plans = engine.prepare_plans(&x, &w).unwrap();
+                let (inline, t_inline) = stack.forward_traced(&x).unwrap();
+                let (pre, t_pre) =
+                    stack.forward_traced_prefetched(&x, Some(plans)).unwrap();
+                assert_eq!(inline.len(), pre.len());
+                for (a, b) in inline.iter().zip(&pre) {
+                    assert_eq!(a.hidden, b.hidden, "prefetched hidden diverged ({prune})");
+                    assert_eq!(a.plan_nnz, b.plan_nnz);
+                    assert_eq!(a.sim_ns, b.sim_ns);
+                    assert_eq!(a.sim_pj, b.sim_pj);
+                }
+                assert_eq!(t_inline.len(), t_pre.len());
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn cascade_keep_one_bit_identical_to_static_at_any_shard_count() {
         let dir =
             std::env::temp_dir().join(format!("cpsaa-pipe-keep1-{}", std::process::id()));
@@ -595,7 +731,7 @@ mod tests {
         let x = crate::tensor::SeededRng::new(13).normal_matrix(32, 64, 1.0);
         // keep = 1.0 does not narrow, so it takes the literal static
         // path — the exactness contract, checked unsharded and sharded.
-        assert!(!PruneConfig::Cascade { keep: 1.0 }.narrows());
+        assert!(!PruneConfig::cascade(1.0).narrows());
         for shards in [1usize, 3] {
             let stat =
                 EncoderStack::new(&engine, w.clone(), HardwareConfig::paper(), model.clone(), 2)
@@ -603,7 +739,7 @@ mod tests {
             let casc =
                 EncoderStack::new(&engine, w.clone(), HardwareConfig::paper(), model.clone(), 2)
                     .with_shards(shards)
-                    .with_prune(PruneConfig::Cascade { keep: 1.0 });
+                    .with_prune(PruneConfig::cascade(1.0));
             let a = stat.forward(&x).unwrap();
             let b = casc.forward(&x).unwrap();
             assert_eq!(a.len(), b.len());
@@ -640,7 +776,7 @@ mod tests {
         let stack_at = |keep: f64| {
             let s = EncoderStack::new(&engine, w.clone(), HardwareConfig::paper(), model.clone(), 3);
             if keep < 1.0 {
-                s.with_prune(PruneConfig::Cascade { keep })
+                s.with_prune(PruneConfig::cascade(keep))
             } else {
                 s
             }

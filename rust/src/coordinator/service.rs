@@ -55,8 +55,30 @@
 //! concurrently, and costs merge as max-ns across chips / sum-pJ.
 //! Responses and metrics gain per-shard lines. `shards == 1` is
 //! bit-identical to unsharded serving.
+//!
+//! ## Stage-overlapped serving: plan prefetch + plan cache
+//!
+//! With `ServiceConfig::prefetch` on (the default), each leader runs a
+//! two-stage software pipeline over its batches (CPSAA §3 overlapped
+//! mode): as soon as a window is sealed, a detached `Lane::Normal`
+//! executor job generates the batch's head masks and builds its layer-0
+//! [`PlanSet`][crate::sparse::PlanSet] while the *previous* batch's
+//! encoder stack is still executing — batch N+1's ReCAM scan hides
+//! behind batch N's compute. A bounded content-addressed LRU
+//! ([`PlanCache`], shared across leaders) short-circuits the build
+//! entirely for repeated payloads: a hit returns the shared
+//! `Arc<PlanSet>` and the batch skips mask generation and the scan.
+//! Plans are a pure function of (payload bits, frozen weights, model
+//! config), so prefetched, cached, and inline-built plans are bitwise
+//! equal and every response stays bit-identical with prefetch on or
+//! off — the overlap surfaces only in the `plan_cache_hits` /
+//! `plan_cache_misses` / `prefetch_overlapped_ns` metrics. Window
+//! composition is preserved: the pipeline seals the next window early
+//! only when doing so cannot change what the blocking path would have
+//! packed (a full window's rows already queued, a group boundary, or a
+//! closed queue).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -66,9 +88,10 @@ use crate::util::error::{Context, Result};
 
 use crate::attention::{MultiHeadWeights, Precision};
 use crate::config::{HardwareConfig, ModelConfig};
-use crate::runtime::executor::{self, Lane};
+use crate::runtime::executor::{self, JoinHandle, Lane};
 use crate::runtime::{ArtifactSet, Engine};
-use crate::sparse::PruneConfig;
+use crate::sim::ChipSim;
+use crate::sparse::{PlanCache, PlanKey, PlanSet, PruneConfig};
 use crate::tensor::Matrix;
 use crate::workload::capture::{
     BatchTraceRecord, CaptureRecorder, RecordedBatch, RecordedRequest, RecordedResponse, SimTracer,
@@ -334,10 +357,12 @@ pub struct ServiceConfig {
     pub precision: Precision,
     /// How each batch's dispatch plans evolve across encoder layers:
     /// `Static` regenerates masks per layer (today's path);
-    /// `Cascade { keep }` scans once at layer 0 and derives every deeper
-    /// layer's plans by top-k narrowing the previous layer's coordinate
-    /// stream. `Cascade { keep: 1.0 }` short-circuits to the static
-    /// path (bit-identical by construction).
+    /// `Cascade { keeps }` scans once at layer 0 and derives every
+    /// deeper layer's plans by top-k narrowing the previous layer's
+    /// coordinate stream, applying the per-layer keep schedule (last
+    /// entry repeats once the schedule runs out). A schedule of all
+    /// `1.0` short-circuits to the static path (bit-identical by
+    /// construction).
     pub prune: PruneConfig,
     /// Force the bit-identical scalar twins of the `tensor::simd` row
     /// primitives for every kernel in this process (same switch as the
@@ -350,6 +375,16 @@ pub struct ServiceConfig {
     /// (the replay ingest path) bypass the cap. `0` is legal and sheds
     /// every live submission — a drain/drill mode.
     pub queue_cap: usize,
+    /// Stage-overlapped serving (default on): prefetch each sealed
+    /// batch's layer-0 plan build behind the previous batch's
+    /// execution, and serve repeated payloads from the plan cache.
+    /// Responses are bit-identical either way; `false` builds plans
+    /// inline exactly as the historical path did.
+    pub prefetch: bool,
+    /// Entries in the content-addressed plan cache shared across
+    /// leaders (`0` disables caching while keeping the prefetch
+    /// pipeline). Ignored when `prefetch` is off.
+    pub plan_cache: usize,
 }
 
 impl Default for ServiceConfig {
@@ -364,6 +399,8 @@ impl Default for ServiceConfig {
             prune: PruneConfig::Static,
             force_scalar: false,
             queue_cap: 1024,
+            prefetch: true,
+            plan_cache: 32,
         }
     }
 }
@@ -436,6 +473,14 @@ impl Service {
             ..Default::default()
         }));
         let ids = BatchIds::new();
+        // One content-addressed plan cache shared by every leader, so a
+        // payload one leader scanned hits for all of them. Sized 0 when
+        // prefetch is off: the historical inline path never consults it.
+        let plan_cache = Arc::new(Mutex::new(PlanCache::new(if cfg.prefetch {
+            cfg.plan_cache
+        } else {
+            0
+        })));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<ModelConfig>>();
         for leader in 0..cfg.leaders {
             let artifact_dir = artifact_dir.clone();
@@ -445,6 +490,7 @@ impl Service {
             let queue = queue.clone();
             let metrics = metrics.clone();
             let ids = ids.clone();
+            let plan_cache = plan_cache.clone();
             let ready_tx = ready_tx.clone();
             let hooks = hooks.clone();
             std::thread::Builder::new()
@@ -459,6 +505,7 @@ impl Service {
                         queue,
                         metrics,
                         ids,
+                        plan_cache,
                         ready_tx,
                         hooks,
                     )
@@ -591,6 +638,24 @@ impl Service {
     }
 }
 
+/// How one pending batch will get its layer-0 plans.
+enum PlanTicket {
+    /// Served from the content-addressed cache — the scan never runs.
+    Cached(Arc<PlanSet>),
+    /// Being built by a detached `Lane::Normal` executor job while
+    /// earlier batches execute; inserted under its key on join.
+    Built(JoinHandle<Arc<PlanSet>>, PlanKey),
+}
+
+/// A sealed window waiting its turn in the leader's two-stage pipeline:
+/// packed batches (each with its plan ticket already in flight) plus
+/// the reply routes for its members.
+struct PendingWindow {
+    lane: Lane,
+    batches: Vec<(super::batcher::BatchPlan, Option<PlanTicket>)>,
+    replies: HashMap<u64, (mpsc::Sender<ServeResult>, Instant)>,
+}
+
 #[allow(clippy::too_many_arguments)]
 fn leader_loop(
     leader: usize,
@@ -601,6 +666,7 @@ fn leader_loop(
     queue: Arc<AdmissionQueue>,
     metrics: Arc<Mutex<ServeMetrics>>,
     ids: BatchIds,
+    plan_cache: Arc<Mutex<PlanCache>>,
     ready: mpsc::Sender<Result<ModelConfig>>,
     hooks: ServeHooks,
 ) {
@@ -643,10 +709,19 @@ fn leader_loop(
             return;
         }
     };
+    // Everything the detached prefetch job needs: it cannot borrow the
+    // engine (interior `RefCell` stats make it `!Sync`), so it captures
+    // the pool, the weights, and the model and runs the same static
+    // build the engine would ([`Engine::build_plans_in`]).
+    let exec_pool = executor::global();
+    let prefetch_weights = Arc::new(weights.clone());
+    // Costs the pruning-stage scan the pipeline hides (or the cache
+    // skips) — feeds only the `prefetch_overlapped_ns` counter.
+    let chip = ChipSim::new(hw.clone(), model.clone());
     let stack = EncoderStack::new(&engine, weights, hw, model.clone(), cfg.layers)
         .with_shards(cfg.shards)
         .with_precision(cfg.precision)
-        .with_prune(cfg.prune);
+        .with_prune(cfg.prune.clone());
     // One batcher per leader, all drawing from the service's shared
     // monotonic id source: every per-head/per-shard metric line stays
     // keyed to exactly one batch even with several leaders in flight.
@@ -663,102 +738,134 @@ fn leader_loop(
         let _ = req.reply.send(Err(ServeError::Shed(ShedReason::DeadlineExpired)));
     };
 
-    loop {
-        // Claim the window token for one batching window; competing
-        // leaders block here while this one forms a window, then take
-        // over the moment this leader moves on to execution. Admission
-        // never takes this lock — requests keep arriving while every
-        // leader executes, and the next window picks them up
-        // (continuous batching).
-        let window = {
-            // A leader that panicked while holding the token poisons
-            // it, but the queue it guards stays sound — surviving
-            // leaders keep claiming windows instead of shutting the
-            // whole service down.
-            let _forming = queue.window.lock().unwrap_or_else(|e| e.into_inner());
-            let mut state = queue.lock_state();
-            // Wait for the first window member, shedding any expired
-            // request that surfaces; exit once closed and drained.
-            let first = loop {
-                match state.items.pop_front() {
-                    // A pre-composed group seals its window
-                    // immediately: its composition was decided by the
-                    // sender (replay), not by arrival timing.
-                    Some(Admitted::Group(group)) => {
-                        state.depth -= group.len();
-                        break Admitted::Group(group);
+    // Form one batching window by claiming the window token; competing
+    // leaders block (or, non-blocking, skip) while one forms a window,
+    // then take over the moment it moves on to execution. Admission
+    // never takes this lock — requests keep arriving while every leader
+    // executes, and the next window picks them up (continuous
+    // batching). `block = true` is the historical path: wait for a
+    // first member, co-batch within `max_wait`; `None` means the queue
+    // closed and drained. `block = false` never waits and seals only
+    // when composition is already decided — a group boundary, a full
+    // window of queued rows, or a closed queue — so the prefetch
+    // pipeline cannot change what the blocking path would have packed.
+    let form = |block: bool| -> Option<Vec<InferenceRequest>> {
+        // A leader that panicked while holding the token poisons it,
+        // but the queue it guards stays sound — surviving leaders keep
+        // claiming windows instead of shutting the whole service down.
+        let _forming = if block {
+            queue.window.lock().unwrap_or_else(|e| e.into_inner())
+        } else {
+            match queue.window.try_lock() {
+                Ok(g) => g,
+                Err(std::sync::TryLockError::Poisoned(e)) => e.into_inner(),
+                Err(std::sync::TryLockError::WouldBlock) => return None,
+            }
+        };
+        let mut state = queue.lock_state();
+        if !block {
+            let mut rows = 0usize;
+            let mut sealable = state.closed && !state.items.is_empty();
+            for item in state.items.iter() {
+                match item {
+                    Admitted::Group(_) => {
+                        sealable = true;
+                        break;
                     }
-                    Some(Admitted::One(req)) => {
-                        state.depth -= 1;
-                        if req.deadline.is_some_and(|d| Instant::now() >= d) {
-                            shed_expired(req);
-                            continue;
+                    Admitted::One(r) => {
+                        rows += r.x.rows();
+                        if rows >= model.seq_len {
+                            sealable = true;
+                            break;
                         }
-                        break Admitted::One(req);
-                    }
-                    None => {
-                        if state.closed {
-                            return;
-                        }
-                        state = queue.arrived.wait(state).unwrap_or_else(|e| e.into_inner());
                     }
                 }
-            };
-            match first {
-                Admitted::Group(group) => group,
-                Admitted::One(first) => {
-                    let mut window = vec![first];
-                    let mut rows = window[0].x.rows();
-                    let seal_at = Instant::now() + cfg.max_wait;
-                    while rows < model.seq_len {
-                        match state.items.front() {
-                            // Live requests join the open window (expired
-                            // ones shed at the moment of packing).
-                            Some(Admitted::One(_)) => {
-                                let Some(Admitted::One(req)) = state.items.pop_front() else {
-                                    unreachable!("front() said One");
-                                };
-                                state.depth -= 1;
-                                if req.deadline.is_some_and(|d| Instant::now() >= d) {
-                                    shed_expired(req);
-                                    continue;
-                                }
-                                rows += req.x.rows();
-                                window.push(req);
-                            }
-                            // A group never merges with live traffic:
-                            // seal this window; the group forms the next.
-                            Some(Admitted::Group(_)) => break,
-                            None => {
-                                if state.closed {
-                                    break;
-                                }
-                                let remaining =
-                                    seal_at.saturating_duration_since(Instant::now());
-                                if remaining.is_zero() {
-                                    break;
-                                }
-                                let (guard, _timeout) = queue
-                                    .arrived
-                                    .wait_timeout(state, remaining)
-                                    .unwrap_or_else(|e| e.into_inner());
-                                state = guard;
-                            }
-                        }
+            }
+            if !sealable {
+                return None;
+            }
+        }
+        // Wait for the first window member, shedding any expired
+        // request that surfaces; exit once closed and drained.
+        let first = loop {
+            match state.items.pop_front() {
+                // A pre-composed group seals its window immediately:
+                // its composition was decided by the sender (replay),
+                // not by arrival timing.
+                Some(Admitted::Group(group)) => {
+                    state.depth -= group.len();
+                    return Some(group);
+                }
+                Some(Admitted::One(req)) => {
+                    state.depth -= 1;
+                    if req.deadline.is_some_and(|d| Instant::now() >= d) {
+                        shed_expired(req);
+                        continue;
                     }
-                    window
+                    break req;
+                }
+                None => {
+                    if !block || state.closed {
+                        return None;
+                    }
+                    state = queue.arrived.wait(state).unwrap_or_else(|e| e.into_inner());
                 }
             }
         };
+        let mut window = vec![first];
+        let mut rows = window[0].x.rows();
+        let seal_at = Instant::now() + cfg.max_wait;
+        while rows < model.seq_len {
+            match state.items.front() {
+                // Live requests join the open window (expired ones shed
+                // at the moment of packing).
+                Some(Admitted::One(_)) => {
+                    let Some(Admitted::One(req)) = state.items.pop_front() else {
+                        unreachable!("front() said One");
+                    };
+                    state.depth -= 1;
+                    if req.deadline.is_some_and(|d| Instant::now() >= d) {
+                        shed_expired(req);
+                        continue;
+                    }
+                    rows += req.x.rows();
+                    window.push(req);
+                }
+                // A group never merges with live traffic: seal this
+                // window; the group forms the next.
+                Some(Admitted::Group(_)) => break,
+                None => {
+                    if !block || state.closed {
+                        break;
+                    }
+                    let remaining = seal_at.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        break;
+                    }
+                    let (guard, _timeout) = queue
+                        .arrived
+                        .wait_timeout(state, remaining)
+                        .unwrap_or_else(|e| e.into_inner());
+                    state = guard;
+                }
+            }
+        }
+        Some(window)
+    };
 
+    // Seal a window into the pipeline: pack its batches and start each
+    // batch's plan ticket — a cache probe, else a detached build job
+    // whose mask generation + ReCAM scan run while earlier batches
+    // execute.
+    let mut prepare = |window: Vec<InferenceRequest>| -> PendingWindow {
         // One interactive member lifts the whole window onto the
         // executor's high lane: its co-batched neighbors ride along.
-        let window_lane = if window.iter().any(|r| r.lane == Lane::High) {
+        let lane = if window.iter().any(|r| r.lane == Lane::High) {
             Lane::High
         } else {
             Lane::Normal
         };
-        let mut replies = std::collections::HashMap::new();
+        let mut replies = HashMap::new();
         for req in window {
             match batcher.push(req.id, req.x) {
                 Ok(()) => {
@@ -769,13 +876,93 @@ fn leader_loop(
                 }
             }
         }
+        let batches = batcher
+            .drain()
+            .into_iter()
+            .map(|plan| {
+                let ticket = cfg.prefetch.then(|| {
+                    let key = PlanKey::for_batch(&plan.x, model.heads.max(1), &cfg.prune);
+                    let cached = plan_cache.lock().unwrap_or_else(|e| e.into_inner()).get(&key);
+                    match cached {
+                        Some(plans) => PlanTicket::Cached(plans),
+                        None => {
+                            let exec = exec_pool.clone();
+                            let w = prefetch_weights.clone();
+                            let mcfg = model.clone();
+                            let x = plan.x.clone();
+                            let handle = executor::with_lane(Lane::Normal, || {
+                                exec_pool
+                                    .spawn(move || Engine::build_plans_in(&exec, &x, &w, &mcfg))
+                            });
+                            PlanTicket::Built(handle, key)
+                        }
+                    }
+                });
+                (plan, ticket)
+            })
+            .collect();
+        PendingWindow { lane, batches, replies }
+    };
 
-        for plan in batcher.drain() {
+    // Stage-2 state: windows sealed early (their plan builds already in
+    // flight) wait here for their turn to execute.
+    let mut pending: VecDeque<PendingWindow> = VecDeque::new();
+    // Simulated compute of the previously executed batch — what the
+    // next batch's prefetched scan hides behind.
+    let mut prev_sim_ns = 0.0f64;
+
+    loop {
+        let PendingWindow { lane: window_lane, batches, mut replies } =
+            match pending.pop_front() {
+                Some(w) => w,
+                None => match form(true) {
+                    Some(w) => prepare(w),
+                    None => return,
+                },
+            };
+
+        for (plan, ticket) in batches {
+            // Overlap point: while this batch is about to execute, seal
+            // the next window (if its composition is already decided)
+            // so its plan scan runs behind this batch's compute.
+            if cfg.prefetch && pending.is_empty() {
+                if let Some(w) = form(false) {
+                    pending.push_back(prepare(w));
+                }
+            }
+            // Resolve this batch's plans: a cache hit skipped the scan
+            // entirely; a prefetched build overlapped it with the
+            // previous batch's compute; `None` builds inline (prefetch
+            // off) exactly as the historical path did.
+            let prebuilt = match ticket {
+                None => None,
+                Some(PlanTicket::Cached(plans)) => {
+                    let scan_ns = chip.scan_overlap_cost(&plans, 0.0).scan_ns;
+                    let mut m = metrics.lock().unwrap_or_else(|e| e.into_inner());
+                    m.record_plan_source(true, scan_ns);
+                    drop(m);
+                    Some(plans)
+                }
+                Some(PlanTicket::Built(handle, key)) => {
+                    let plans = handle.join();
+                    plan_cache
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .insert(key, plans.clone());
+                    let oc = chip.scan_overlap_cost(&plans, prev_sim_ns);
+                    let mut m = metrics.lock().unwrap_or_else(|e| e.into_inner());
+                    m.record_plan_source(false, oc.hidden_ns);
+                    drop(m);
+                    Some(plans)
+                }
+            };
             // The lane is scoped around the whole execution: every
             // nested fan-out the stack submits (shards → heads → row
             // ranges) inherits it. Lanes reorder scheduling only, so
             // outputs stay bit-identical either way.
-            let executed = executor::with_lane(window_lane, || stack.forward_traced(&plan.x));
+            let executed = executor::with_lane(window_lane, || {
+                stack.forward_traced_prefetched(&plan.x, prebuilt)
+            });
             match executed {
                 Ok((outs, traces)) => {
                     if let Some(tracer) = &hooks.tracer {
@@ -784,6 +971,7 @@ fn leader_loop(
                     let last = outs.last().expect("≥1 layer");
                     let sim_ns: f64 = outs.iter().map(|o| o.sim_ns).sum();
                     let sim_pj: f64 = outs.iter().map(|o| o.sim_pj).sum();
+                    prev_sim_ns = sim_ns;
                     let density =
                         outs.iter().map(|o| o.mask_density).sum::<f64>() / outs.len() as f64;
                     // Per-head and per-shard lines across the whole
@@ -904,7 +1092,7 @@ fn leader_loop(
                                 layer_heads_kept: layer_heads_kept.clone(),
                                 narrow_ns,
                                 rescan_ns,
-                                prune: cfg.prune,
+                                prune: cfg.prune.clone(),
                                 leader,
                                 precision: cfg.precision,
                             }));
@@ -1280,13 +1468,13 @@ mod tests {
             37,
             ServiceConfig {
                 layers: 3,
-                prune: crate::sparse::PruneConfig::Cascade { keep: 0.5 },
+                prune: crate::sparse::PruneConfig::cascade(0.5),
                 ..Default::default()
             },
         );
         let mut rng = SeededRng::new(12);
         let resp = svc.infer(7, rng.normal_matrix(8, 32, 1.0)).unwrap();
-        assert_eq!(resp.prune, crate::sparse::PruneConfig::Cascade { keep: 0.5 });
+        assert_eq!(resp.prune, crate::sparse::PruneConfig::cascade(0.5));
         assert!(resp.hidden.all_finite());
         // 8 packed rows: layer 0 runs the full scan, layers 1–2 run on
         // the top-⌈0.5·8⌉ = 4 surviving tokens (cumulative, so flat
@@ -1331,7 +1519,7 @@ mod tests {
                 layers: 2,
                 leaders: 2,
                 shards: 2,
-                prune: crate::sparse::PruneConfig::Cascade { keep: 1.0 },
+                prune: crate::sparse::PruneConfig::cascade(1.0),
                 ..Default::default()
             },
         );
@@ -1361,7 +1549,7 @@ mod tests {
             HardwareConfig::paper(),
             model,
             ServiceConfig {
-                prune: crate::sparse::PruneConfig::Cascade { keep: 0.0 },
+                prune: crate::sparse::PruneConfig::cascade(0.0),
                 ..Default::default()
             },
         ) {
@@ -1369,6 +1557,101 @@ mod tests {
             Err(e) => e,
         };
         assert!(err.to_string().contains("prune"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cascade_schedule_bad_entry_rejected_at_startup() {
+        // A per-layer keep schedule is validated entry-by-entry at
+        // startup, not discovered mid-serve: `cascade:0.5,0.0` must be
+        // refused before any leader accepts traffic.
+        let dir = std::env::temp_dir()
+            .join(format!("cpsaa-svc-sched0-{}", std::process::id()));
+        let model = crate::config::ModelConfig {
+            seq_len: 16,
+            d_model: 32,
+            d_k: 8,
+            d_ff: 64,
+            ..crate::config::ModelConfig::default()
+        };
+        crate::runtime::ArtifactSet::synthesize(&dir, &model, 2).unwrap();
+        let err = match Service::start(
+            dir.clone(),
+            HardwareConfig::paper(),
+            model,
+            ServiceConfig {
+                prune: crate::sparse::PruneConfig::cascade_schedule(vec![0.5, 0.0]),
+                ..Default::default()
+            },
+        ) {
+            Ok(_) => panic!("cascade schedule with a 0.0 entry must be rejected at startup"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("prune"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prefetch_off_serves_bit_identical_to_prefetch_on() {
+        // The tentpole exactness contract at the service layer: plans
+        // are a pure function of (payload bits, weights, config), so
+        // prefetched/cached plans change only *when* the scan runs,
+        // never what it produces.
+        let mut rng = SeededRng::new(18);
+        let x = rng.normal_matrix(8, 32, 1.0);
+        let (dir_on, svc_on) = synth_service(
+            "prefetch-on",
+            41,
+            ServiceConfig { layers: 2, prefetch: true, ..Default::default() },
+        );
+        let on_first = svc_on.infer(1, x.clone()).unwrap();
+        let on_repeat = svc_on.infer(2, x.clone()).unwrap();
+        let m_on = svc_on.metrics();
+        drop(svc_on);
+        let (dir_off, svc_off) = synth_service(
+            "prefetch-off",
+            41,
+            ServiceConfig { layers: 2, prefetch: false, ..Default::default() },
+        );
+        let off = svc_off.infer(1, x).unwrap();
+        let m_off = svc_off.metrics();
+        assert_eq!(on_first.hidden, off.hidden, "prefetch must be bit-invisible");
+        assert_eq!(on_repeat.hidden, off.hidden, "a cache hit must be bit-invisible");
+        assert_eq!(on_first.layer_nnz, off.layer_nnz);
+        assert_eq!(on_first.layer_rows_kept, off.layer_rows_kept);
+        // The win is visible only in the counters: the repeated payload
+        // hit the cache (skipping its whole scan), the first one's
+        // build was prefetched; the off service never touched either.
+        assert_eq!((m_on.plan_cache_hits, m_on.plan_cache_misses), (1, 1));
+        assert!(m_on.prefetch_overlapped_ns > 0.0, "a hit banks the whole scan");
+        assert_eq!((m_off.plan_cache_hits, m_off.plan_cache_misses), (0, 0));
+        assert_eq!(m_off.prefetch_overlapped_ns, 0.0);
+        std::fs::remove_dir_all(&dir_on).ok();
+        std::fs::remove_dir_all(&dir_off).ok();
+    }
+
+    #[test]
+    fn plan_cache_eviction_rebuilds_bitwise_equal_plans() {
+        // cap = 1: payload B evicts payload A; A's rebuilt plans must
+        // reproduce its first response to the bit, and the re-repeat
+        // must hit the cache again.
+        let (dir, svc) = synth_service(
+            "evict",
+            43,
+            ServiceConfig { layers: 1, plan_cache: 1, ..Default::default() },
+        );
+        let mut rng = SeededRng::new(20);
+        let a = rng.normal_matrix(8, 32, 1.0);
+        let b = rng.normal_matrix(8, 32, 1.0);
+        let first = svc.infer(1, a.clone()).unwrap();
+        let _evict = svc.infer(2, b).unwrap();
+        let rebuilt = svc.infer(3, a.clone()).unwrap();
+        let hit = svc.infer(4, a).unwrap();
+        assert_eq!(first.hidden, rebuilt.hidden, "evicted shape must rebuild bitwise equal");
+        assert_eq!(rebuilt.hidden, hit.hidden);
+        assert_eq!(first.layer_nnz, rebuilt.layer_nnz);
+        let m = svc.metrics();
+        assert_eq!((m.plan_cache_hits, m.plan_cache_misses), (1, 3));
         std::fs::remove_dir_all(&dir).ok();
     }
 

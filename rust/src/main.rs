@@ -40,8 +40,8 @@ COMMANDS:
                                     (fig3, table2, fig11..fig18, fig19a/b, fig20a/b, all)
   serve [--requests N] [--layers N] [--heads N] [--shards N] [--leaders N]
         [--max-workers N] [--queue-cap N] [--precision f32|i8]
-        [--prune static|cascade:K] [--force-scalar] [--record FILE]
-        [--trace FILE]
+        [--prune static|cascade:K1,K2,...] [--force-scalar]
+        [--prefetch on|off] [--record FILE] [--trace FILE]
                                     demo serving loop over the artifact engine
                                     (multi-head fan-out across tile slices;
                                     --shards N fans each batch across N logical
@@ -50,11 +50,19 @@ COMMANDS:
                                     threads feeding one executor pool;
                                     --precision i8 quantizes the SDDMM score
                                     dots to i8 storage / i32 accumulation;
-                                    --prune cascade:K scans masks once at
-                                    layer 0 and derives deeper layers' plans
-                                    by score-driven top-k narrowing, keeping
-                                    fraction K of tokens/heads per step
-                                    (cascade:1.0 == static, bit-identical);
+                                    --prune cascade:K1,K2,... scans masks once
+                                    at layer 0 and derives deeper layers' plans
+                                    by score-driven top-k narrowing, applying
+                                    the per-layer keep schedule (the last entry
+                                    repeats for deeper layers; a single K
+                                    applies everywhere; cascade:1.0 == static,
+                                    bit-identical);
+                                    --prefetch on|off (default on) overlaps
+                                    each sealed batch's mask generation + plan
+                                    scan with the previous batch's execution
+                                    and serves repeated payloads from a
+                                    content-addressed plan cache — responses
+                                    are bit-identical either way;
                                     --force-scalar pins the scalar twins of
                                     the SIMD row primitives, like the
                                     CPSAA_FORCE_SCALAR env var;
@@ -67,8 +75,8 @@ COMMANDS:
   loadgen [--seed N] [--rps R] [--duration S] [--deadline-ms MS]
           [--interactive F] [--concurrency N] [--layers N] [--heads N]
           [--shards N] [--leaders N] [--max-workers N] [--queue-cap N]
-          [--prune static|cascade:K] [--slo-p99-ms MS] [--json]
-          [--junit FILE]
+          [--prune static|cascade:K1,K2,...] [--prefetch on|off]
+          [--slo-p99-ms MS] [--json] [--junit FILE]
                                     seeded load generator over the artifact
                                     engine. Open loop by default: Poisson
                                     arrivals at R rps for S seconds (same
@@ -84,12 +92,14 @@ COMMANDS:
                                     stderr; --junit FILE writes a JUnit XML
                                     verdict; exits nonzero if p99 exceeds
                                     --slo-p99-ms or any request fails
-  replay FILE [--max-workers N] [--leaders N] [--shards N] [--trace FILE]
+  replay FILE [--max-workers N] [--leaders N] [--shards N]
+              [--prefetch on|off] [--trace FILE]
                                     re-serve a `serve --record` capture and
                                     assert byte-identical responses; topology
-                                    overrides exercise the determinism
-                                    contract (outputs must not change by a
-                                    bit at any worker/leader/shard count)
+                                    and prefetch overrides exercise the
+                                    determinism contract (outputs must not
+                                    change by a bit at any worker/leader/
+                                    shard count, prefetch on or off)
   synth-artifacts DIR [--seed N]    synthesize a serving artifact set from the
                                     [model] config (no Python/JAX needed)
   inference [DATASET] [--layers N] [--heads N]
@@ -156,6 +166,18 @@ fn take_switch(args: &mut Vec<String>, flag: &str) -> bool {
         true
     } else {
         false
+    }
+}
+
+/// Pull `--prefetch on|off` out of a subcommand arg list.
+fn take_prefetch(args: &mut Vec<String>) -> Result<Option<bool>> {
+    match take_flag(args, "--prefetch") {
+        None => Ok(None),
+        Some(s) => match s.as_str() {
+            "on" => Ok(Some(true)),
+            "off" => Ok(Some(false)),
+            other => Err(anyhow!("--prefetch must be on or off, got {other:?}")),
+        },
     }
 }
 
@@ -227,6 +249,7 @@ fn main() -> Result<()> {
                 None => PruneConfig::Static,
             };
             let force_scalar = take_switch(&mut cmd, "--force-scalar");
+            let prefetch = take_prefetch(&mut cmd)?;
             let record = take_flag(&mut cmd, "--record").map(PathBuf::from);
             let trace = take_flag(&mut cmd, "--trace").map(PathBuf::from);
             serve(
@@ -242,6 +265,7 @@ fn main() -> Result<()> {
                 precision,
                 prune,
                 force_scalar,
+                prefetch,
                 record,
                 trace,
             )
@@ -301,6 +325,7 @@ fn main() -> Result<()> {
                 slo_p99_ms: take_flag(&mut cmd, "--slo-p99-ms")
                     .map(|s| s.parse::<f64>())
                     .transpose()?,
+                prefetch: take_prefetch(&mut cmd)?,
                 json: take_switch(&mut cmd, "--json"),
                 junit: take_flag(&mut cmd, "--junit").map(PathBuf::from),
             };
@@ -317,6 +342,7 @@ fn main() -> Result<()> {
                 shards: take_flag(&mut cmd, "--shards")
                     .map(|s| s.parse::<usize>())
                     .transpose()?,
+                prefetch: take_prefetch(&mut cmd)?,
             };
             let trace = take_flag(&mut cmd, "--trace").map(PathBuf::from);
             let capture =
@@ -469,6 +495,7 @@ fn serve(
     precision: Precision,
     prune: PruneConfig,
     force_scalar: bool,
+    prefetch: Option<bool>,
     record: Option<PathBuf>,
     trace: Option<PathBuf>,
 ) -> Result<()> {
@@ -487,12 +514,15 @@ fn serve(
         leaders,
         max_kernel_workers: max_workers,
         precision,
-        prune,
+        prune: prune.clone(),
         force_scalar,
         ..Default::default()
     };
     if let Some(cap) = queue_cap {
         svc_cfg.queue_cap = cap;
+    }
+    if let Some(on) = prefetch {
+        svc_cfg.prefetch = on;
     }
     let svc = Service::start_with_hooks(
         artifacts.to_path_buf(),
@@ -552,6 +582,12 @@ fn serve(
         "simulated accelerator time {:.3} ms, energy {:.3} mJ ({precision} precision)",
         m.sim_ns / 1e6,
         m.sim_pj * 1e-9
+    );
+    println!(
+        "plan pipeline: {} cache hits / {} misses, {:.3} ms of scan hidden or skipped",
+        m.plan_cache_hits,
+        m.plan_cache_misses,
+        m.prefetch_overlapped_ns / 1e6
     );
     if m.leaders.len() > 1 {
         for (l, lm) in m.leaders.iter().enumerate() {
@@ -666,6 +702,8 @@ struct LoadgenCli {
     queue_cap: Option<usize>,
     prune: PruneConfig,
     slo_p99_ms: Option<f64>,
+    /// `--prefetch on|off`; `None` keeps the service default (on).
+    prefetch: Option<bool>,
     json: bool,
     junit: Option<PathBuf>,
 }
@@ -698,11 +736,14 @@ fn loadgen(cfg: &SystemConfig, artifacts: &Path, o: LoadgenCli) -> Result<()> {
         shards: o.shards,
         leaders: o.leaders,
         max_kernel_workers: o.max_workers,
-        prune: o.prune,
+        prune: o.prune.clone(),
         ..Default::default()
     };
     if let Some(cap) = o.queue_cap {
         svc_cfg.queue_cap = cap;
+    }
+    if let Some(on) = o.prefetch {
+        svc_cfg.prefetch = on;
     }
     let svc = Service::start(
         artifacts.to_path_buf(),
@@ -738,6 +779,9 @@ fn loadgen(cfg: &SystemConfig, artifacts: &Path, o: LoadgenCli) -> Result<()> {
         Some(n) => lg::run_closed(&svc, &gen_cfg, n, |line| eprintln!("loadgen: {line}"))?,
         None => lg::run(&svc, &gen_cfg, |line| eprintln!("loadgen: {line}"))?,
     };
+    // The plan-pipeline counters live on the service, not the
+    // generator's per-request outcomes (they are per-batch facts).
+    let sm = svc.metrics();
 
     let p50_ms = report.latency.p50().as_secs_f64() * 1e3;
     let p95_ms = report.latency.p95().as_secs_f64() * 1e3;
@@ -790,6 +834,15 @@ fn loadgen(cfg: &SystemConfig, artifacts: &Path, o: LoadgenCli) -> Result<()> {
             o.slo_p99_ms.map(Json::Num).unwrap_or(Json::Null),
         );
         obj.insert("slo_ok".to_string(), Json::Bool(slo_ok));
+        obj.insert("plan_cache_hits".to_string(), Json::Num(sm.plan_cache_hits as f64));
+        obj.insert(
+            "plan_cache_misses".to_string(),
+            Json::Num(sm.plan_cache_misses as f64),
+        );
+        obj.insert(
+            "prefetch_overlapped_ms".to_string(),
+            Json::Num(sm.prefetch_overlapped_ns / 1e6),
+        );
         println!("{}", Json::Obj(obj));
     } else {
         println!("{}", lg::csv_header());
@@ -813,6 +866,12 @@ fn loadgen(cfg: &SystemConfig, artifacts: &Path, o: LoadgenCli) -> Result<()> {
     eprintln!(
         "loadgen: latency mean {mean_ms:.3} ms  p50 {p50_ms:.3}  p95 {p95_ms:.3}  \
          p99 {p99_ms:.3}  max {max_ms:.3}"
+    );
+    eprintln!(
+        "loadgen: plan pipeline {} cache hits / {} misses, {:.3} ms of scan hidden or skipped",
+        sm.plan_cache_hits,
+        sm.plan_cache_misses,
+        sm.prefetch_overlapped_ns / 1e6,
     );
     for (lane, h) in
         [("high", &report.latency_high), ("normal", &report.latency_normal)]

@@ -29,10 +29,13 @@ const KNOWN_GRAPHS: [&str; 5] =
 /// One multi-head encoder-layer execution: the functional hidden state
 /// plus the per-head dispatch plans (one ReCAM scan per head mask) that
 /// drove the kernels — the coordinator reuses the first layer's set for
-/// the batch's hardware accounting instead of re-scanning.
+/// the batch's hardware accounting instead of re-scanning. Plans are
+/// `Arc`-shared: the serving layer's plan cache and prefetch stage hand
+/// the same scan to many consumers (kernels, cost attribution, cache
+/// entries) without cloning the coordinate streams.
 pub struct EncoderHeadsExec {
     pub hidden: Matrix,
-    pub plans: PlanSet,
+    pub plans: Arc<PlanSet>,
     /// The shard partition that drove a sharded execution (`None` on
     /// the unsharded path) — the coordinator reuses it for the batch's
     /// multi-chip cost attribution instead of re-partitioning.
@@ -205,11 +208,82 @@ impl Engine {
         shards: usize,
         precision: Precision,
     ) -> Result<EncoderHeadsExec> {
-        let cfg = &self.model;
         self.validate_encoder_heads_input(x, w)?;
         let start = Instant::now();
-        let masks = attention::mask::generate_heads_in(&self.exec, x, w, cfg);
-        let plans = PlanSet::build_in(&self.exec, &masks);
+        let plans = self.build_plans(x, w);
+        self.run_heads_planned(x, w, plans, shards, precision, start)
+    }
+
+    /// [`Engine::execute_encoder_heads_sharded_prec`] over a *provided*
+    /// plan set — the prefetch/cache path: the serving layer built (or
+    /// cached) the batch's layer-0 plans ahead of time, so this entry
+    /// skips mask generation and the ReCAM scan. Because plans are a
+    /// pure function of the payload bits and the frozen weights, the
+    /// result is bit-identical to the self-scanning entry whenever the
+    /// provided set came from [`Engine::prepare_plans`] on the same
+    /// inputs.
+    pub fn execute_encoder_heads_preplanned_prec(
+        &self,
+        x: &Matrix,
+        w: &MultiHeadWeights,
+        plans: Arc<PlanSet>,
+        shards: usize,
+        precision: Precision,
+    ) -> Result<EncoderHeadsExec> {
+        self.validate_encoder_heads_input(x, w)?;
+        self.validate_plans(&plans, x, w)?;
+        let start = Instant::now();
+        self.run_heads_planned(x, w, plans, shards, precision, start)
+    }
+
+    /// Build the layer-0 plan set for a batch without executing it —
+    /// the prefetch stage (mask generation + one ReCAM scan per head),
+    /// runnable ahead of the kernels. The same computation the
+    /// self-scanning entries perform, so the result is bit-identical to
+    /// what execution would have built.
+    pub fn prepare_plans(&self, x: &Matrix, w: &MultiHeadWeights) -> Result<Arc<PlanSet>> {
+        self.validate_encoder_heads_input(x, w)?;
+        Ok(self.build_plans(x, w))
+    }
+
+    /// [`Engine::prepare_plans`] without the engine: mask generation +
+    /// plan scan on an explicit pool — the form the detached prefetch
+    /// job uses (it cannot borrow the leader's engine across threads).
+    /// Must stay the exact computation [`Engine::build_plans`] performs.
+    pub fn build_plans_in(
+        exec: &Executor,
+        x: &Matrix,
+        w: &MultiHeadWeights,
+        cfg: &ModelConfig,
+    ) -> Arc<PlanSet> {
+        let masks = attention::mask::generate_heads_in(exec, x, w, cfg);
+        Arc::new(PlanSet::build_in(exec, &masks))
+    }
+
+    fn build_plans(&self, x: &Matrix, w: &MultiHeadWeights) -> Arc<PlanSet> {
+        Self::build_plans_in(&self.exec, x, w, &self.model)
+    }
+
+    fn validate_plans(&self, plans: &PlanSet, x: &Matrix, w: &MultiHeadWeights) -> Result<()> {
+        if plans.heads() != w.heads.len() {
+            return Err(anyhow!("plan set has {} heads, weights {}", plans.heads(), w.heads.len()));
+        }
+        if plans.rows() != x.rows() {
+            return Err(anyhow!("plan set has {} rows, input {}", plans.rows(), x.rows()));
+        }
+        Ok(())
+    }
+
+    fn run_heads_planned(
+        &self,
+        x: &Matrix,
+        w: &MultiHeadWeights,
+        plans: Arc<PlanSet>,
+        shards: usize,
+        precision: Precision,
+        start: Instant,
+    ) -> Result<EncoderHeadsExec> {
+        let cfg = &self.model;
         let (hidden, sharded) = if shards <= 1 {
             let hidden = attention::ops::encoder_layer_heads_ws_prec(
                 x,
@@ -254,32 +328,27 @@ impl Engine {
     ) -> Result<(EncoderHeadsExec, LayerImportance)> {
         self.validate_encoder_heads_input(x, w)?;
         let start = Instant::now();
-        let masks = attention::mask::generate_heads_in(&self.exec, x, w, &self.model);
-        let plans = PlanSet::build_in(&self.exec, &masks);
+        let plans = self.build_plans(x, w);
         self.run_heads_importance(x, w, plans, shards, precision, start)
     }
 
     /// Execute one encoder layer over a *provided* plan set — the
-    /// cascade path for layers past the first: the coordinator narrows
-    /// the previous layer's plans (an O(nnz) coordinate-stream filter)
-    /// and this entry skips mask generation and the ReCAM scan
-    /// entirely. The plan set is re-partitioned for sharding (its nnz
-    /// distribution changed under narrowing).
+    /// cascade path for layers past the first (the coordinator narrows
+    /// the previous layer's plans, an O(nnz) coordinate-stream filter)
+    /// and for a prefetched/cached layer 0; either way this entry skips
+    /// mask generation and the ReCAM scan entirely. The plan set is
+    /// re-partitioned for sharding (its nnz distribution changed under
+    /// narrowing).
     pub fn execute_encoder_heads_planned_importance(
         &self,
         x: &Matrix,
         w: &MultiHeadWeights,
-        plans: PlanSet,
+        plans: Arc<PlanSet>,
         shards: usize,
         precision: Precision,
     ) -> Result<(EncoderHeadsExec, LayerImportance)> {
         self.validate_encoder_heads_input(x, w)?;
-        if plans.heads() != w.heads.len() {
-            return Err(anyhow!("plan set has {} heads, weights {}", plans.heads(), w.heads.len()));
-        }
-        if plans.rows() != x.rows() {
-            return Err(anyhow!("plan set has {} rows, input {}", plans.rows(), x.rows()));
-        }
+        self.validate_plans(&plans, x, w)?;
         let start = Instant::now();
         self.run_heads_importance(x, w, plans, shards, precision, start)
     }
@@ -288,7 +357,7 @@ impl Engine {
         &self,
         x: &Matrix,
         w: &MultiHeadWeights,
-        plans: PlanSet,
+        plans: Arc<PlanSet>,
         shards: usize,
         precision: Precision,
         start: Instant,

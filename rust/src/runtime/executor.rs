@@ -371,12 +371,102 @@ impl Executor {
         results.into_iter().map(|r| r.expect("claimed task left no result")).collect()
     }
 
+    /// Submit a single detached task and return immediately — the
+    /// fire-and-forget primitive behind plan prefetch. The task is a
+    /// one-index [`Job`] on the submitting thread's lane, run by the
+    /// first idle worker; the caller keeps driving its own work (the
+    /// overlap) and collects the result later via [`JoinHandle::join`].
+    /// A 1-worker pool degrades gracefully: nobody picks the job up, so
+    /// it runs on the joining thread — correct, just with no overlap.
+    ///
+    /// Unlike `map`/`map_consume`, the closure is `'static`: it owns its
+    /// inputs (the prefetch path clones the payload), because the
+    /// submitting call returns while the task may still be queued.
+    pub fn spawn<R: Send + 'static>(
+        &self,
+        f: impl FnOnce() -> R + Send + 'static,
+    ) -> JoinHandle<R> {
+        let ctx: Box<SpawnCtx<R>> = Box::new(SpawnCtx {
+            f: Mutex::new(Some(Box::new(f))),
+            out: Mutex::new(None),
+        });
+        unsafe fn run_spawned<R>(data: *const (), _i: usize) {
+            let ctx = &*data.cast::<SpawnCtx<R>>();
+            let f = ctx.f.lock().unwrap().take().expect("spawned task claimed twice");
+            let out = f();
+            *ctx.out.lock().unwrap() = Some(out);
+        }
+        let lane = current_lane();
+        let job = Arc::new(Job {
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            total: 1,
+            lane,
+            poisoned: AtomicBool::new(false),
+            data: &*ctx as *const SpawnCtx<R> as *const (),
+            runner: run_spawned::<R>,
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut state = self.shared.state.lock().unwrap();
+            state.lane_queue(lane).push_back(job.clone());
+            if lane == Lane::High {
+                self.shared.high_pending.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.shared.available.notify_all();
+        JoinHandle { job, ctx }
+    }
+
     /// Current (high, normal) queue lengths, exhausted jobs included —
     /// test instrumentation for the lane-ordering harness.
     #[cfg(test)]
     fn queue_depths(&self) -> (usize, usize) {
         let state = self.shared.state.lock().unwrap();
         (state.high.len(), state.normal.len())
+    }
+}
+
+/// Heap context of one [`Executor::spawn`] task: the closure before the
+/// run, the result after. Owned by the [`JoinHandle`]; the job's raw
+/// `data` pointer targets this box, which outlives every worker access
+/// because the handle's drop blocks until the task has completed.
+struct SpawnCtx<R> {
+    f: Mutex<Option<Box<dyn FnOnce() -> R + Send>>>,
+    out: Mutex<Option<R>>,
+}
+
+/// Handle to a detached [`Executor::spawn`] task. [`JoinHandle::join`]
+/// returns the task's value (running it on the joining thread if no
+/// worker claimed it yet) and re-raises the task's panic, mirroring
+/// `map`'s propagation. Dropping without joining still waits for the
+/// task — the scope-style safety invariant, kept even for detached work.
+pub struct JoinHandle<R> {
+    job: Arc<Job>,
+    ctx: Box<SpawnCtx<R>>,
+}
+
+impl<R> JoinHandle<R> {
+    /// Block until the task has run — claiming it on this thread if it
+    /// is still queued — and return its value.
+    pub fn join(self) -> R {
+        self.job.help("joiner");
+        self.job.wait();
+        if let Some((label, msg)) = self.job.panic.lock().unwrap().take() {
+            panic!("executor worker {label} panicked: {msg}");
+        }
+        self.ctx.out.lock().unwrap().take().expect("spawned task left no result")
+    }
+}
+
+impl<R> Drop for JoinHandle<R> {
+    fn drop(&mut self) {
+        // `join` consumed the panic slot already when it ran; a bare
+        // drop just ensures the task is finished before the ctx frees.
+        self.job.help("joiner");
+        self.job.wait();
     }
 }
 
@@ -724,6 +814,50 @@ mod tests {
             on_worker.load(Ordering::Relaxed) > 0,
             "no background worker stole from the normal lane"
         );
+    }
+
+    #[test]
+    fn spawn_runs_detached_and_joins_with_the_value() {
+        let exec = Executor::new(4);
+        let handle = exec.spawn(|| (0..100u64).sum::<u64>());
+        // The caller is free to do other work; the join returns the
+        // task's value regardless of which thread ended up running it.
+        assert_eq!(handle.join(), 4950);
+    }
+
+    #[test]
+    fn spawn_on_a_serial_pool_runs_on_the_joiner() {
+        let exec = Executor::new(1);
+        let here = std::thread::current().id();
+        let handle = exec.spawn(move || std::thread::current().id() == here);
+        assert!(handle.join(), "workers=1 must degrade to run-on-join");
+    }
+
+    #[test]
+    fn spawn_drop_without_join_still_completes_the_task() {
+        let exec = Executor::new(2);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let flag = ran.clone();
+        drop(exec.spawn(move || {
+            flag.fetch_add(1, Ordering::SeqCst);
+        }));
+        // Drop blocks until the task has run — never abandons it.
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "executor worker")]
+    fn spawn_join_re_raises_the_task_panic() {
+        let exec = Executor::new(2);
+        exec.spawn(|| panic!("boom")).join();
+    }
+
+    #[test]
+    fn spawn_inherits_the_submitters_lane() {
+        let exec = Executor::new(1);
+        let lane = with_lane(Lane::High, || exec.spawn(current_lane)).join();
+        assert_eq!(lane, Lane::High);
+        assert_eq!(exec.spawn(current_lane).join(), Lane::Normal);
     }
 
     #[test]

@@ -31,6 +31,24 @@ pub struct PlanEvolutionCost {
     pub rescan_pj: f64,
 }
 
+/// Cost of one batch's pruning-stage ReCAM scan when the serving layer
+/// prefetches it behind the previous batch's compute (CPSAA §3
+/// overlapped mode). Instead of charging `scan + compute` serially, the
+/// pipeline charges `max(scan, prior compute remainder)` — i.e. the
+/// prior compute plus only the scan's *exposed* tail.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapCost {
+    /// Full pruning-stage scan latency (ns): mask program + row search,
+    /// max over heads (head slices scan concurrently).
+    pub scan_ns: f64,
+    /// The part of the scan hidden behind the prior batch's compute
+    /// (ns): `min(scan_ns, prior_compute_ns)`.
+    pub hidden_ns: f64,
+    /// The part still exposed past the prior compute (ns):
+    /// `scan_ns - hidden_ns`.
+    pub exposed_ns: f64,
+}
+
 /// One batch's simulation outcome.
 #[derive(Clone, Debug)]
 pub struct SimReport {
@@ -294,6 +312,22 @@ impl ChipSim {
             cost.rescan_pj += rescan_pj;
         }
         cost
+    }
+
+    /// Cost one batch's pruning-stage scan against the compute still
+    /// running from the previous batch: how much of the scan hides
+    /// behind `prior_compute_ns` and how much stays exposed. With no
+    /// prior compute (pipeline cold, first batch) nothing hides and the
+    /// full scan is exposed — the serial charge.
+    pub fn scan_overlap_cost(&self, plans: &PlanSet, prior_compute_ns: f64) -> OverlapCost {
+        let hw = &self.hw;
+        let mut scan_ns = 0.0f64;
+        for p in plans.plans() {
+            let s = RecamScheduler::new(p);
+            scan_ns = scan_ns.max(s.program_ns(hw) + s.row_search(hw).search_ns);
+        }
+        let hidden_ns = scan_ns.min(prior_compute_ns.max(0.0));
+        OverlapCost { scan_ns, hidden_ns, exposed_ns: scan_ns - hidden_ns }
     }
 
     /// A simulator for one head's `tiles/heads` chip slice.
@@ -572,6 +606,30 @@ mod tests {
         let cs = sim().plan_evolution_cost(&sparser);
         assert!(cs.narrow_ns <= c.narrow_ns);
         assert_eq!(cs.rescan_ns, c.rescan_ns);
+    }
+
+    #[test]
+    fn scan_overlap_splits_hidden_and_exposed() {
+        let plans = PlanSet::from_plans(vec![mask(0.1).plan(); 4]);
+        // Cold pipeline: nothing to hide behind — the serial charge.
+        let cold = sim().scan_overlap_cost(&plans, 0.0);
+        assert!(cold.scan_ns > 0.0);
+        assert_eq!(cold.hidden_ns, 0.0);
+        assert_eq!(cold.exposed_ns, cold.scan_ns);
+        // Prior compute longer than the scan hides it entirely.
+        let deep = sim().scan_overlap_cost(&plans, cold.scan_ns * 10.0);
+        assert_eq!(deep.scan_ns, cold.scan_ns);
+        assert_eq!(deep.hidden_ns, deep.scan_ns);
+        assert_eq!(deep.exposed_ns, 0.0);
+        // Partial overlap: hidden + exposed always reassemble the scan,
+        // and the exposed tail is exactly what outlives the compute.
+        let part = sim().scan_overlap_cost(&plans, cold.scan_ns * 0.25);
+        assert_eq!(part.hidden_ns, cold.scan_ns * 0.25);
+        assert!((part.hidden_ns + part.exposed_ns - part.scan_ns).abs() < 1e-9);
+        // The full scan matches what plan_evolution_cost charges for a
+        // rescan — same program + row-search arm, max over heads.
+        let evo = sim().plan_evolution_cost(&plans);
+        assert_eq!(cold.scan_ns, evo.rescan_ns);
     }
 
     #[test]

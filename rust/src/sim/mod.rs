@@ -34,7 +34,8 @@ pub mod sddmm;
 pub mod spmm;
 
 pub use chip::{
-    ChipSim, HeadsSimReport, PlanEvolutionCost, ShardedSimReport, SimReport, SimTrace, TraceReport,
+    ChipSim, HeadsSimReport, OverlapCost, PlanEvolutionCost, ShardedSimReport, SimReport, SimTrace,
+    TraceReport,
 };
 pub use energy::EnergyMeter;
 pub use pipeline::{PhaseBreakdown, StageEvent};

@@ -1,0 +1,215 @@
+//! Content-addressed plan cache — skip the ReCAM scan for repeated
+//! request shapes.
+//!
+//! A batch's layer-0 [`PlanSet`] is a pure function of the payload bits
+//! (mask generation reads `x` and the frozen mask weights, the scan
+//! reads only the masks), so two batches with bit-identical payloads
+//! build bit-identical plans. The serving layer exploits that with a
+//! bounded LRU keyed by a content hash of the payload: a hit returns
+//! the shared `Arc<PlanSet>` and the batch skips mask generation and
+//! the scan entirely; a miss builds (or prefetches) the plans and
+//! inserts them for the next identical shape.
+//!
+//! Bit-identity is the hard contract: the cache key is a 128-bit hash
+//! (two independent FNV-1a-64 streams) over the exact `f32` bit
+//! patterns plus every shape input, so a collision would need two
+//! distinct payloads agreeing on both 64-bit digests — negligible at
+//! any realistic cache size — and a hit hands back a plan set that is
+//! bitwise equal to what a rebuild would produce, keeping responses
+//! identical whether they were served from the cache or not.
+
+use std::sync::Arc;
+
+use super::planset::PlanSet;
+use super::prune::PruneConfig;
+use crate::tensor::Matrix;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+/// Second-stream seed: a different offset basis makes the two digests
+/// independent enough that a simultaneous collision needs 2^128 luck.
+const FNV_OFFSET_B: u64 = 0x6c62_272e_07bb_0142;
+
+/// Two independent FNV-1a-64 digests over one byte stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Digest(u64, u64);
+
+impl Digest {
+    fn new() -> Self {
+        Digest(FNV_OFFSET, FNV_OFFSET_B)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+            self.1 = (self.1 ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+}
+
+/// Content address of one batch's layer-0 plan set: the payload shape
+/// in the clear plus the 128-bit digest of everything the plans are a
+/// function of — payload `f32` bit patterns, row/column counts, head
+/// count, and the prune config (as its canonical string form).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanKey {
+    rows: usize,
+    cols: usize,
+    heads: usize,
+    hash: (u64, u64),
+}
+
+impl PlanKey {
+    /// Key the batch payload `x` under `heads` heads and `prune`.
+    pub fn for_batch(x: &Matrix, heads: usize, prune: &PruneConfig) -> Self {
+        let mut d = Digest::new();
+        d.write_u64(x.rows() as u64);
+        d.write_u64(x.cols() as u64);
+        d.write_u64(heads as u64);
+        d.write(prune.to_string().as_bytes());
+        for &v in x.data() {
+            d.write(&v.to_bits().to_le_bytes());
+        }
+        Self { rows: x.rows(), cols: x.cols(), heads, hash: (d.0, d.1) }
+    }
+}
+
+/// Bounded move-to-front LRU of `PlanKey → Arc<PlanSet>`. Capacity 0
+/// disables caching (every lookup misses, inserts are dropped). The
+/// entry list is a plain `Vec` — capacities are small (default 32) and
+/// the linear probe is trivially cheaper than one mask scan it saves.
+#[derive(Debug)]
+pub struct PlanCache {
+    cap: usize,
+    /// Most-recently used first.
+    entries: Vec<(PlanKey, Arc<PlanSet>)>,
+}
+
+impl PlanCache {
+    pub fn new(cap: usize) -> Self {
+        Self { cap, entries: Vec::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The cached plans for `key`, refreshed to most-recently used.
+    pub fn get(&mut self, key: &PlanKey) -> Option<Arc<PlanSet>> {
+        let idx = self.entries.iter().position(|(k, _)| k == key)?;
+        let entry = self.entries.remove(idx);
+        let plans = entry.1.clone();
+        self.entries.insert(0, entry);
+        Some(plans)
+    }
+
+    /// Insert (or refresh) `key`, evicting the least-recently used
+    /// entry past capacity.
+    pub fn insert(&mut self, key: PlanKey, plans: Arc<PlanSet>) {
+        if self.cap == 0 {
+            return;
+        }
+        if let Some(idx) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(idx);
+        }
+        self.entries.insert(0, (key, plans));
+        self.entries.truncate(self.cap);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::MaskMatrix;
+    use crate::tensor::SeededRng;
+
+    fn plans(seed: u64) -> Arc<PlanSet> {
+        let mut rng = SeededRng::new(seed);
+        let masks = vec![MaskMatrix::from_dense(&rng.mask_matrix(8, 8, 0.3))];
+        Arc::new(PlanSet::build(&masks))
+    }
+
+    fn key(seed: u64) -> PlanKey {
+        let x = SeededRng::new(seed).normal_matrix(8, 16, 1.0);
+        PlanKey::for_batch(&x, 2, &PruneConfig::Static)
+    }
+
+    #[test]
+    fn key_is_a_function_of_the_payload_bits() {
+        let x = SeededRng::new(5).normal_matrix(8, 16, 1.0);
+        let a = PlanKey::for_batch(&x, 2, &PruneConfig::Static);
+        let b = PlanKey::for_batch(&x.clone(), 2, &PruneConfig::Static);
+        assert_eq!(a, b, "identical payloads must collide on purpose");
+        // one flipped mantissa bit changes the key
+        let mut data = x.data().to_vec();
+        data[3] = f32::from_bits(data[3].to_bits() ^ 1);
+        let y = Matrix::from_vec(8, 16, data);
+        assert_ne!(PlanKey::for_batch(&y, 2, &PruneConfig::Static), a);
+        // so do the shape inputs the plans depend on
+        assert_ne!(PlanKey::for_batch(&x, 4, &PruneConfig::Static), a);
+        assert_ne!(PlanKey::for_batch(&x, 2, &PruneConfig::cascade(0.5)), a);
+    }
+
+    #[test]
+    fn lru_hits_refresh_and_capacity_evicts_the_tail() {
+        let mut cache = PlanCache::new(2);
+        let (ka, kb, kc) = (key(1), key(2), key(3));
+        cache.insert(ka, plans(1));
+        cache.insert(kb, plans(2));
+        assert_eq!(cache.len(), 2);
+        // touching A makes B the eviction candidate...
+        assert!(cache.get(&ka).is_some());
+        cache.insert(kc, plans(3));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&kb).is_none(), "B was least-recently used");
+        assert!(cache.get(&ka).is_some());
+        assert!(cache.get(&kc).is_some());
+    }
+
+    #[test]
+    fn reinsert_refreshes_instead_of_duplicating() {
+        let mut cache = PlanCache::new(2);
+        let (ka, kb) = (key(1), key(2));
+        cache.insert(ka, plans(1));
+        cache.insert(kb, plans(2));
+        cache.insert(ka, plans(1));
+        assert_eq!(cache.len(), 2);
+        // A was refreshed to the front, so B evicts next
+        cache.insert(key(3), plans(3));
+        assert!(cache.get(&ka).is_some());
+        assert!(cache.get(&kb).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_disables_the_cache() {
+        let mut cache = PlanCache::new(0);
+        cache.insert(key(1), plans(1));
+        assert!(cache.is_empty());
+        assert!(cache.get(&key(1)).is_none());
+        assert_eq!(cache.capacity(), 0);
+    }
+
+    #[test]
+    fn cached_plans_are_bitwise_equal_to_a_rebuild() {
+        // The bit-identity contract at the cache layer: what comes out
+        // of the cache compares equal (PartialEq is structural over the
+        // full CSR topology) to building the same plans from scratch.
+        let mut cache = PlanCache::new(4);
+        let k = key(9);
+        cache.insert(k, plans(9));
+        let cached = cache.get(&k).unwrap();
+        assert_eq!(*cached, *plans(9));
+    }
+}

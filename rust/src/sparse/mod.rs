@@ -17,12 +17,14 @@
 //! consumed the same way (per-head kernels, per-head tile-slice costing,
 //! per-head serving metrics).
 
+mod cache;
 mod csr;
 mod mask;
 mod plan;
 mod planset;
 mod prune;
 
+pub use cache::{PlanCache, PlanKey};
 pub use csr::{CsrMatrix, CsrView};
 pub(crate) use csr::{softmax_row, spmm_row_into};
 pub use mask::{BlockCounts, MaskMatrix};

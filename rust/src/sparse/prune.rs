@@ -35,45 +35,69 @@ use super::planset::PlanSet;
 
 /// How the serving stack evolves each batch's [`PlanSet`] across
 /// encoder layers.
-#[derive(Clone, Copy, Debug, PartialEq, Default)]
+#[derive(Clone, Debug, PartialEq, Default)]
 pub enum PruneConfig {
     /// Today's path: every layer generates its own masks and scans them.
     #[default]
     Static,
     /// Cascade narrowing: layer 0 scans, every deeper layer derives its
-    /// plans by top-k filtering the previous layer's coordinate stream,
-    /// keeping `keep` of the tokens and heads (cumulative).
+    /// plans by top-k filtering the previous layer's coordinate stream
+    /// (cumulative). `keeps` is the per-step keep schedule: narrowing
+    /// step `i` (into layer `i + 1`) keeps `keeps[i]` of the tokens and
+    /// heads, clamping to the last entry past the end of the list — so
+    /// `cascade:0.9,0.7,0.5` narrows layer 1 to 0.9, layer 2 to 0.7,
+    /// and every deeper layer to 0.5, while the single-entry
+    /// `cascade:K` keeps the historical uniform-ratio behavior.
     Cascade {
-        /// Fraction of tokens and heads kept per narrowing step, in
-        /// `(0, 1]`.
-        keep: f64,
+        /// Per-step keep fractions, each in `(0, 1]`, non-empty.
+        keeps: Vec<f64>,
     },
 }
 
 impl PruneConfig {
-    /// Whether this config actually changes execution. `Cascade { 1.0 }`
-    /// keeps everything at every step, so it short-circuits to the
-    /// static path (the exactness-at-keep-ratio-1 contract: bit-identity
-    /// by construction, at any topology).
+    /// A uniform cascade: every narrowing step keeps the same fraction
+    /// (the historical `cascade:K` config).
+    pub fn cascade(keep: f64) -> Self {
+        PruneConfig::Cascade { keeps: vec![keep] }
+    }
+
+    /// A per-layer cascade schedule (`cascade:K0,K1,...`).
+    pub fn cascade_schedule(keeps: Vec<f64>) -> Self {
+        PruneConfig::Cascade { keeps }
+    }
+
+    /// Whether this config actually changes execution. A cascade whose
+    /// every step keeps 1.0 retains everything, so it short-circuits to
+    /// the static path (the exactness-at-keep-ratio-1 contract:
+    /// bit-identity by construction, at any topology).
     pub fn narrows(&self) -> bool {
         match self {
             PruneConfig::Static => false,
-            PruneConfig::Cascade { keep } => *keep < 1.0,
+            PruneConfig::Cascade { keeps } => keeps.iter().any(|&k| k < 1.0),
         }
     }
 
-    /// The cascade keep-ratio, if any.
-    pub fn keep(&self) -> Option<f64> {
+    /// The keep-ratio of narrowing step `step` (the step deriving layer
+    /// `step + 1`'s plans), clamping to the schedule's last entry.
+    /// `None` for the static config.
+    pub fn keep_at(&self, step: usize) -> Option<f64> {
         match self {
             PruneConfig::Static => None,
-            PruneConfig::Cascade { keep } => Some(*keep),
+            PruneConfig::Cascade { keeps } => {
+                Some(keeps[step.min(keeps.len().saturating_sub(1))])
+            }
         }
     }
 
     pub fn validate(&self) -> Result<(), String> {
-        if let PruneConfig::Cascade { keep } = self {
-            if !keep.is_finite() || *keep <= 0.0 || *keep > 1.0 {
-                return Err(format!("cascade keep-ratio must be in (0, 1], got {keep}"));
+        if let PruneConfig::Cascade { keeps } = self {
+            if keeps.is_empty() {
+                return Err("cascade keep schedule must not be empty".into());
+            }
+            for &keep in keeps {
+                if !keep.is_finite() || keep <= 0.0 || keep > 1.0 {
+                    return Err(format!("cascade keep-ratio must be in (0, 1], got {keep}"));
+                }
             }
         }
         Ok(())
@@ -84,9 +108,20 @@ impl std::fmt::Display for PruneConfig {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             PruneConfig::Static => write!(f, "static"),
-            // Rust's shortest-round-trip float formatting: parses back
-            // to the identical bits, so the capture config round-trips.
-            PruneConfig::Cascade { keep } => write!(f, "cascade:{keep}"),
+            // Rust's shortest-round-trip float formatting: each entry
+            // parses back to the identical bits, so the capture config
+            // round-trips (single-entry schedules print as the
+            // historical `cascade:K`).
+            PruneConfig::Cascade { keeps } => {
+                write!(f, "cascade:")?;
+                for (i, k) in keeps.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{k}")?;
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -98,11 +133,15 @@ impl std::str::FromStr for PruneConfig {
         let cfg = if s == "static" {
             PruneConfig::Static
         } else if let Some(r) = s.strip_prefix("cascade:") {
-            let keep: f64 =
-                r.parse().map_err(|_| format!("bad cascade keep-ratio {r:?}"))?;
-            PruneConfig::Cascade { keep }
+            let keeps: Vec<f64> = r
+                .split(',')
+                .map(|k| k.parse().map_err(|_| format!("bad cascade keep-ratio {k:?}")))
+                .collect::<Result<_, _>>()?;
+            PruneConfig::Cascade { keeps }
         } else {
-            return Err(format!("unknown prune mode {s:?} (expected static | cascade:<keep-ratio>)"));
+            return Err(format!(
+                "unknown prune mode {s:?} (expected static | cascade:<keep>[,<keep>...])"
+            ));
         };
         cfg.validate()?;
         Ok(cfg)
@@ -279,11 +318,12 @@ mod tests {
     #[test]
     fn prune_config_parses_and_round_trips() {
         assert_eq!("static".parse::<PruneConfig>().unwrap(), PruneConfig::Static);
-        assert_eq!(
-            "cascade:0.5".parse::<PruneConfig>().unwrap(),
-            PruneConfig::Cascade { keep: 0.5 }
-        );
-        for cfg in [PruneConfig::Static, PruneConfig::Cascade { keep: 0.625 }] {
+        assert_eq!("cascade:0.5".parse::<PruneConfig>().unwrap(), PruneConfig::cascade(0.5));
+        for cfg in [
+            PruneConfig::Static,
+            PruneConfig::cascade(0.625),
+            PruneConfig::cascade_schedule(vec![0.9, 0.7, 0.5]),
+        ] {
             assert_eq!(cfg.to_string().parse::<PruneConfig>().unwrap(), cfg);
         }
         assert!("cascade:0".parse::<PruneConfig>().is_err());
@@ -291,8 +331,31 @@ mod tests {
         assert!("cascade:nan".parse::<PruneConfig>().is_err());
         assert!("topk:0.5".parse::<PruneConfig>().is_err());
         assert!(!PruneConfig::Static.narrows());
-        assert!(!PruneConfig::Cascade { keep: 1.0 }.narrows());
-        assert!(PruneConfig::Cascade { keep: 0.5 }.narrows());
+        assert!(!PruneConfig::cascade(1.0).narrows());
+        assert!(PruneConfig::cascade(0.5).narrows());
+    }
+
+    #[test]
+    fn prune_schedule_parses_validates_and_clamps() {
+        // a full schedule parses entry by entry...
+        let cfg = "cascade:0.9,0.7,0.5".parse::<PruneConfig>().unwrap();
+        assert_eq!(cfg, PruneConfig::cascade_schedule(vec![0.9, 0.7, 0.5]));
+        // ...indexes per narrowing step, clamping to the last entry
+        assert_eq!(cfg.keep_at(0), Some(0.9));
+        assert_eq!(cfg.keep_at(1), Some(0.7));
+        assert_eq!(cfg.keep_at(2), Some(0.5));
+        assert_eq!(cfg.keep_at(7), Some(0.5));
+        assert_eq!(PruneConfig::Static.keep_at(0), None);
+        // narrows() looks at the whole schedule: all-ones is static
+        assert!(!PruneConfig::cascade_schedule(vec![1.0, 1.0]).narrows());
+        assert!(PruneConfig::cascade_schedule(vec![1.0, 0.5]).narrows());
+        // any bad entry fails validation at parse time
+        assert!("cascade:0.9,0".parse::<PruneConfig>().is_err());
+        assert!("cascade:0.9,1.5".parse::<PruneConfig>().is_err());
+        assert!("cascade:0.9,,0.5".parse::<PruneConfig>().is_err());
+        assert!("cascade:".parse::<PruneConfig>().is_err());
+        assert!(PruneConfig::cascade_schedule(vec![]).validate().is_err());
+        assert!(PruneConfig::cascade_schedule(vec![0.9, f64::NAN]).validate().is_err());
     }
 
     #[test]

@@ -401,6 +401,11 @@ pub struct ReplayOverrides {
     pub max_workers: Option<usize>,
     pub leaders: Option<usize>,
     pub shards: Option<usize>,
+    /// Stage-overlapped serving during the replay run. Prefetch and the
+    /// plan cache change only *when* plans are built, never their bits,
+    /// so — like topology — it is an override axis, not part of the
+    /// recorded contract. `None` keeps the service default (on).
+    pub prefetch: Option<bool>,
 }
 
 /// Outcome of a successful replay.
@@ -456,6 +461,7 @@ pub fn replay(
     let shards = overrides.shards.unwrap_or(c.shards);
     let leaders = overrides.leaders.unwrap_or(c.leaders);
     let max_kernel_workers = overrides.max_workers.or(c.max_kernel_workers);
+    let defaults = ServiceConfig::default();
     let svc = Service::start_with_hooks(
         artifact_dir.to_path_buf(),
         sys.hardware.clone(),
@@ -466,9 +472,10 @@ pub fn replay(
             leaders,
             max_kernel_workers,
             precision: c.precision,
-            prune: c.prune,
+            prune: c.prune.clone(),
             force_scalar: c.force_scalar,
-            ..Default::default()
+            prefetch: overrides.prefetch.unwrap_or(defaults.prefetch),
+            ..defaults
         },
         ServeHooks { recorder: None, tracer },
     )?;
@@ -785,7 +792,7 @@ mod tests {
                 leaders: 1,
                 max_kernel_workers: Some(3),
                 precision: Precision::I8,
-                prune: PruneConfig::Cascade { keep: 0.5 },
+                prune: PruneConfig::cascade(0.5),
                 force_scalar: false,
                 artifact_seed: 7,
                 system_toml: SystemConfig::paper().to_toml_string(),

@@ -342,6 +342,8 @@ fn bench_compare_accepts_committed_baseline() {
     assert!(body.contains("attention_320x512_spawn"), "baseline lost scoped-spawn rung");
     assert!(body.contains("serve_leaders1"), "baseline lost single-leader serve rung");
     assert!(body.contains("serve_leaders4"), "baseline lost multi-leader serve rung");
+    assert!(body.contains("serve_prefetch_on"), "baseline lost prefetch-on serve rung");
+    assert!(body.contains("serve_prefetch_off"), "baseline lost prefetch-off serve rung");
     assert!(body.contains("attention_320x512_simd"), "baseline lost simd-lane rung");
     assert!(body.contains("attention_320x512_scalar"), "baseline lost scalar-twin rung");
     assert!(body.contains("sddmm_f32_320x512"), "baseline lost f32 sddmm rung");
@@ -582,8 +584,104 @@ fn record_then_replay_across_topologies_end_to_end() {
     assert!(text.contains("replay OK"), "{text}");
     assert!(text.contains("sim costs compared"), "{text}");
 
+    // The capture was recorded with the plan pipeline on (the default);
+    // replaying with it forced off must stay bit-identical too.
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "replay",
+        cap.to_str().unwrap(),
+        "--prefetch",
+        "off",
+        "--leaders",
+        "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("replay OK"), "{text}");
+
     std::fs::remove_file(&cap).ok();
     std::fs::remove_file(&trace).ok();
+    std::fs::remove_dir_all(&art).ok();
+}
+
+#[test]
+fn serve_prefetch_flag_and_cascade_schedule_end_to_end() {
+    // `--prefetch off` disables the stage-overlapped plan pipeline (the
+    // summary's counters stay zero) and `--prune cascade:K1,K2,...`
+    // applies a per-layer keep schedule; bad values for either flag are
+    // startup errors, not mid-serve surprises.
+    let art = synth_artifacts("prefetch", 2);
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "2",
+        "--layers",
+        "3",
+        "--heads",
+        "2",
+        "--prune",
+        "cascade:0.9,0.7,0.5",
+        "--prefetch",
+        "off",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("cascade:0.9,0.7,0.5 plans"), "{text}");
+    assert!(text.contains("plan pipeline: 0 cache hits / 0 misses"), "{text}");
+    assert!(text.contains("plan narrowing"), "{text}");
+
+    // Prefetch on (the default): every batch is accounted as a cache
+    // hit or a miss.
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "2",
+        "--layers",
+        "1",
+        "--heads",
+        "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("plan pipeline:"), "{text}");
+    assert!(!text.contains("plan pipeline: 0 cache hits / 0 misses"), "{text}");
+
+    // Bad values are usage errors.
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "1",
+        "--prefetch",
+        "maybe",
+    ]);
+    assert!(!ok, "{text}");
+    assert!(text.contains("--prefetch"), "{text}");
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "1",
+        "--prune",
+        "cascade:0.5,oops",
+    ]);
+    assert!(!ok, "{text}");
+    assert!(text.contains("--prune"), "{text}");
+    let (ok, text) = cpsaa(&[
+        "--artifacts",
+        art.to_str().unwrap(),
+        "serve",
+        "--requests",
+        "1",
+        "--prune",
+        "cascade:0.5,0.0",
+    ]);
+    assert!(!ok, "{text}");
+    assert!(text.contains("prune"), "{text}");
     std::fs::remove_dir_all(&art).ok();
 }
 
@@ -739,6 +837,12 @@ fn loadgen_json_junit_and_slo_gate() {
     assert!(doc.get("offered").unwrap().as_usize().unwrap() > 0);
     assert!(doc.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
     assert_eq!(doc.get("slo_ok").unwrap(), &Json::Bool(true));
+    // Plan-pipeline counters ride along in the JSON document. Payloads are
+    // random, so every batch is a cache miss; the hit count merely has to
+    // be present (and the overlap clock non-negative).
+    assert!(doc.get("plan_cache_misses").unwrap().as_usize().unwrap() >= 1, "{stdout}");
+    assert!(doc.get("plan_cache_hits").is_some(), "{stdout}");
+    assert!(doc.get("prefetch_overlapped_ms").unwrap().as_f64().unwrap() >= 0.0, "{stdout}");
     let xml = std::fs::read_to_string(&junit).unwrap();
     assert!(xml.contains("<testsuite name=\"loadgen-slo-smoke\""), "{xml}");
     assert!(xml.contains("failures=\"0\""), "{xml}");

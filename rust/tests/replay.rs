@@ -77,6 +77,7 @@ fn record_capture(tag: &str, seed: u64, precision: Precision) -> (PathBuf, Captu
         leaders: 1,
         max_kernel_workers: Some(1),
         precision,
+        prune: PruneConfig::Static,
         force_scalar: false,
         artifact_seed: seed,
         system_toml: SystemConfig::paper().to_toml_string(),
@@ -103,7 +104,7 @@ fn capture_replays_bit_identically_across_topologies() {
     let report = capture::replay(
         &capture,
         &dir,
-        ReplayOverrides { max_workers: Some(3), leaders: Some(4), shards: Some(2) },
+        ReplayOverrides { max_workers: Some(3), leaders: Some(4), shards: Some(2), prefetch: None },
         Some(tracer.clone()),
     )
     .unwrap();
@@ -148,7 +149,7 @@ fn i8_capture_replays_bit_identically() {
     let report = capture::replay(
         &capture,
         &dir,
-        ReplayOverrides { max_workers: Some(2), leaders: Some(3), shards: Some(2) },
+        ReplayOverrides { max_workers: Some(2), leaders: Some(3), shards: Some(2), prefetch: None },
         None,
     )
     .unwrap();
@@ -233,6 +234,7 @@ fn live_continuous_batching_capture_replays_across_topologies() {
         leaders: 2,
         max_kernel_workers: Some(2),
         precision: Precision::F32,
+        prune: PruneConfig::Static,
         force_scalar: false,
         artifact_seed: 61,
         system_toml: SystemConfig::paper().to_toml_string(),
@@ -243,7 +245,7 @@ fn live_continuous_batching_capture_replays_across_topologies() {
     let report = capture::replay(
         &capture,
         &dir,
-        ReplayOverrides { max_workers: Some(3), leaders: Some(3), shards: Some(2) },
+        ReplayOverrides { max_workers: Some(3), leaders: Some(3), shards: Some(2), prefetch: None },
         None,
     )
     .unwrap();
@@ -265,7 +267,7 @@ fn cascade_pruned_capture_replays_across_topologies() {
     let dir = std::env::temp_dir().join(format!("cpsaa-replay-cascade-{}", std::process::id()));
     let m = model();
     ArtifactSet::synthesize(&dir, &m, 67).unwrap();
-    let prune = PruneConfig::Cascade { keep: 0.5 };
+    let prune = PruneConfig::cascade(0.5);
     let recorder = CaptureRecorder::new();
     let svc = Service::start_with_hooks(
         dir.clone(),
@@ -276,7 +278,7 @@ fn cascade_pruned_capture_replays_across_topologies() {
             shards: 1,
             leaders: 1,
             max_kernel_workers: Some(1),
-            prune,
+            prune: prune.clone(),
             ..Default::default()
         },
         ServeHooks { recorder: Some(recorder.clone()), tracer: None },
@@ -308,7 +310,7 @@ fn cascade_pruned_capture_replays_across_topologies() {
         leaders: 1,
         max_kernel_workers: Some(1),
         precision: Precision::F32,
-        prune,
+        prune: prune.clone(),
         force_scalar: false,
         artifact_seed: 67,
         system_toml: SystemConfig::paper().to_toml_string(),
@@ -328,7 +330,7 @@ fn cascade_pruned_capture_replays_across_topologies() {
     let report = capture::replay(
         &loaded,
         &dir,
-        ReplayOverrides { max_workers: Some(3), leaders: Some(2), shards: Some(2) },
+        ReplayOverrides { max_workers: Some(3), leaders: Some(2), shards: Some(2), prefetch: None },
         None,
     )
     .unwrap();
@@ -348,6 +350,103 @@ fn cascade_pruned_capture_replays_across_topologies() {
     .unwrap_err();
     assert!(err.to_string().contains("layer_nnz"), "{err}");
     std::fs::remove_file(&path).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The stage-overlap acceptance property: the plan prefetch pipeline
+/// and the content-addressed plan cache change only *when* plans are
+/// built, never their bits. A capture recorded with the pipeline on
+/// (the service default) must replay bit-identically with it forced
+/// off, and one recorded with it off must replay with it on — both
+/// under a simultaneous worker/leader/shard topology change.
+#[test]
+fn prefetch_direction_is_bit_invisible_to_replay() {
+    // Recorded with prefetch on (the default)...
+    let (dir, capture) = record_capture("prefetch-on", 71, Precision::F32);
+    // ...replayed with the pipeline disabled, at another topology.
+    let report = capture::replay(
+        &capture,
+        &dir,
+        ReplayOverrides {
+            max_workers: Some(3),
+            leaders: Some(3),
+            shards: Some(2),
+            prefetch: Some(false),
+        },
+        None,
+    )
+    .unwrap();
+    assert_eq!(report.requests, 6);
+    // The identity-topology replay with prefetch off additionally holds
+    // every simulated-cost field to the bit.
+    let report = capture::replay(
+        &capture,
+        &dir,
+        ReplayOverrides { prefetch: Some(false), ..Default::default() },
+        None,
+    )
+    .unwrap();
+    assert!(report.strict_sim);
+    assert_eq!(report.requests, 6);
+    std::fs::remove_dir_all(&dir).ok();
+
+    // The reverse direction: recorded with the pipeline off, with
+    // repeated identical payloads so the prefetch-on replay exercises
+    // real plan-cache hits rather than only cold builds...
+    let dir =
+        std::env::temp_dir().join(format!("cpsaa-replay-prefetch-off-{}", std::process::id()));
+    let m = model();
+    ArtifactSet::synthesize(&dir, &m, 73).unwrap();
+    let recorder = CaptureRecorder::new();
+    let svc = Service::start_with_hooks(
+        dir.clone(),
+        HardwareConfig::paper(),
+        m,
+        ServiceConfig {
+            layers: 2,
+            max_kernel_workers: Some(1),
+            prefetch: false,
+            ..Default::default()
+        },
+        ServeHooks { recorder: Some(recorder.clone()), tracer: None },
+    )
+    .unwrap();
+    let x = SeededRng::new(173).normal_matrix(8, 64, 1.0);
+    // Two groups with identical payload bits: the second replayed batch
+    // packs the exact matrix the first did, so it is a plan-cache hit.
+    for group in [vec![(0u64, x.clone()), (1, x.clone())], vec![(2, x.clone()), (3, x.clone())]] {
+        for rx in svc.submit_group(group).unwrap() {
+            rx.recv().unwrap().unwrap();
+        }
+    }
+    let capture = recorder.into_capture(CaptureConfig {
+        model: svc.model().clone(),
+        layers: 2,
+        shards: 1,
+        leaders: 1,
+        max_kernel_workers: Some(1),
+        precision: Precision::F32,
+        prune: PruneConfig::Static,
+        force_scalar: false,
+        artifact_seed: 73,
+        system_toml: SystemConfig::paper().to_toml_string(),
+    });
+    drop(svc);
+    assert_eq!(capture.requests(), 4);
+    // ...replayed with it on, across a topology change.
+    let report = capture::replay(
+        &capture,
+        &dir,
+        ReplayOverrides {
+            max_workers: Some(3),
+            leaders: Some(3),
+            shards: Some(2),
+            prefetch: Some(true),
+        },
+        None,
+    )
+    .unwrap();
+    assert_eq!(report.requests, 4);
     std::fs::remove_dir_all(&dir).ok();
 }
 
